@@ -1,0 +1,96 @@
+//! §1's motivation, quantified: MPI jobs are gangs — one rank's OOM kills
+//! the whole application. Under the VPA baseline a single under-provisioned
+//! rank repeatedly restarts all ranks from scratch; ARC-V (swap + top-down
+//! limits) never OOMs, so the gang never loses progress.
+//!
+//!   cargo run --release --example mpi_gang
+
+use arcv::coordinator::controller::run_to_completion;
+use arcv::coordinator::gang::GangSupervisor;
+use arcv::policy::arcv::{ArcvParams, ArcvPolicy};
+use arcv::policy::vpa::VpaSimPolicy;
+use arcv::policy::VerticalPolicy;
+use arcv::simkube::{Cluster, Node, PodId, ResourceSpec, SwapDevice};
+use arcv::workloads::{build, AppId};
+
+const RANKS: usize = 4;
+
+fn build_gang(
+    cluster: &mut Cluster,
+    initial_frac: f64,
+) -> Vec<(PodId, f64)> {
+    // 4 sputniPIC ranks with slightly skewed memory (rank 0 holds extra
+    // field data — the usual MPI imbalance)
+    (0..RANKS)
+        .map(|rank| {
+            let model = build(AppId::Sputnipic, 100 + rank as u64);
+            let skew = 1.0 + 0.15 * (rank == 0) as u8 as f64;
+            let init = model.max_gb * initial_frac * skew;
+            let id = cluster.create_pod(
+                &format!("sputnipic-rank{rank}"),
+                ResourceSpec::memory_exact(init),
+                Box::new(model),
+            );
+            (id, init)
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== {RANKS}-rank MPI gang (sputniPIC): VPA vs ARC-V ===\n");
+
+    // --- VPA: no swap, 20% initial → rank OOMs amplify to gang restarts
+    let mut c = Cluster::single_node(Node::new("w0", 256.0, SwapDevice::disabled()));
+    let members = build_gang(&mut c, 0.2);
+    let mut sup = GangSupervisor::new();
+    sup.supervise(
+        "job",
+        members
+            .iter()
+            .map(|&(id, init)| {
+                (id, Box::new(VpaSimPolicy::new(init)) as Box<dyn VerticalPolicy>)
+            })
+            .collect(),
+    );
+    let ticks = run_to_completion(&mut c, &mut sup, 200_000);
+    let g = sup.gang("job").unwrap();
+    let rank_restarts: u32 = members.iter().map(|&(id, _)| c.pod(id).restarts).sum();
+    println!(
+        "VPA   : wall {:>6}s (nominal 210s)  gang restarts {:>2}  rank restarts {:>3}  done={}",
+        ticks,
+        g.gang_restarts,
+        rank_restarts,
+        sup.gang_done(&c, "job"),
+    );
+
+    // --- ARC-V: swap on, 120% initial → zero OOMs, zero lost progress
+    let mut c = Cluster::single_node(Node::new("w0", 256.0, SwapDevice::hdd(128.0)));
+    let members = build_gang(&mut c, 1.2);
+    let mut sup = GangSupervisor::new();
+    sup.supervise(
+        "job",
+        members
+            .iter()
+            .map(|&(id, init)| {
+                (
+                    id,
+                    Box::new(ArcvPolicy::new(init, ArcvParams::default()))
+                        as Box<dyn VerticalPolicy>,
+                )
+            })
+            .collect(),
+    );
+    let ticks = run_to_completion(&mut c, &mut sup, 200_000);
+    let g = sup.gang("job").unwrap();
+    println!(
+        "ARC-V : wall {:>6}s (nominal 210s)  gang restarts {:>2}  rank restarts {:>3}  done={}",
+        ticks,
+        g.gang_restarts,
+        members.iter().map(|&(id, _)| c.pod(id).restarts).sum::<u32>(),
+        sup.gang_done(&c, "job"),
+    );
+    println!(
+        "\nthe §1 amplification: under VPA every rank's OOM restarts ALL {RANKS} ranks \
+         from scratch;\nARC-V's OOM-free operation keeps the gang's progress intact."
+    );
+}

@@ -1,0 +1,83 @@
+//! §5 "Use cases": ARC-V's savings enable multi-tenancy. Six Table 1
+//! applications co-locate on ONE paper-spec 256 GB node; the fleet
+//! controller right-sizes each pod, freeing allocatable memory that static
+//! reservations would hold for the whole run.
+//!
+//!   cargo run --release --example multi_tenant
+
+use arcv::coordinator::controller::Tick;
+use arcv::coordinator::fleet::FleetController;
+use arcv::policy::arcv::{ArcvParams, NativeFleet};
+use arcv::simkube::{Cluster, Node, ResourceSpec};
+use arcv::util::plot::line;
+use arcv::workloads::{build, AppId};
+
+fn main() {
+    let apps = [
+        AppId::Minife,    // 63.7 GB peak
+        AppId::Bfs,       // 48.4 GB peak
+        AppId::Kripke,    // 5.5 GB
+        AppId::Cm1,       // 415 MB
+        AppId::Lulesh,    // 696 MB
+        AppId::Lammps,    // 23.7 MB
+    ];
+    let mut cluster = Cluster::single_node(Node::cloudlab("worker-0"));
+    let params = ArcvParams::default();
+    let mut ctl = FleetController::new(Box::new(NativeFleet::new(64, params.window)), params);
+
+    let mut static_sum = 0.0;
+    let mut ids = Vec::new();
+    for (i, app) in apps.iter().enumerate() {
+        let model = build(*app, 42 + i as u64);
+        let init = model.max_gb * 1.2;
+        static_sum += init;
+        let id = cluster.create_pod(app.name(), ResourceSpec::memory_exact(init), Box::new(model));
+        ctl.manage(id, init);
+        ids.push((id, *app));
+    }
+    println!(
+        "co-locating {} pods on one 256 GB node (static reservations would hold {:.1} GB)",
+        apps.len(),
+        static_sum
+    );
+
+    let mut reserved_series = Vec::new();
+    while !cluster.all_done() && cluster.now < 60_000 {
+        cluster.step();
+        ctl.tick(&mut cluster);
+        if cluster.now % 5 == 0 {
+            reserved_series.push(cluster.nodes[0].reserved_gb);
+        }
+    }
+
+    println!();
+    for (id, app) in &ids {
+        let p = cluster.pod(*id);
+        println!(
+            "  {:<10} {:?} in {:>5} s  ooms={} final-limit={:>8.3} GB",
+            app.name(),
+            p.phase,
+            p.wall_running_secs,
+            cluster.events.count_ooms(*id),
+            p.effective_limit_gb,
+        );
+    }
+
+    let avg_reserved = reserved_series.iter().sum::<f64>() / reserved_series.len() as f64;
+    let min_reserved = reserved_series.iter().cloned().fold(f64::MAX, f64::min);
+    println!();
+    print!(
+        "{}",
+        line(
+            "node reserved memory over time (GB) — ARC-V frees headroom as pods shrink/finish",
+            &reserved_series,
+            96,
+            12,
+        )
+    );
+    println!(
+        "\nstatic reservations: {static_sum:.1} GB for the whole run\n\
+         ARC-V reservations:  avg {avg_reserved:.1} GB, min {min_reserved:.1} GB\n\
+         freed headroom lets the scheduler admit more work (the paper's Kripke+CM1+LULESH+LAMMPS case)"
+    );
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas sources AOT-lowered to HLO text.
+
+Nothing in this package is imported at runtime; the Rust coordinator loads
+the artifacts this package produces (``make artifacts``).
+"""

@@ -1,0 +1,148 @@
+"""AOT lowering: JAX/Pallas decision step → HLO *text* artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per fleet-size variant:
+
+- ``arcv_step_p{P}_w{W}.hlo.txt``  — the full L2 decision step
+- ``forecast_p{P}_w{W}.hlo.txt``   — the standalone L1 forecast kernel
+  (used by the perf_tick bench to time the kernel path in isolation)
+- ``manifest.json``                — shapes + entry layouts for the Rust
+  loader (rust/src/runtime/artifacts.rs)
+
+HLO **text** is the interchange format, not ``lowered.compile()`` or proto
+``.serialize()``: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction
+ids that the image's xla_extension 0.5.1 (the version the published ``xla``
+crate binds) rejects with ``proto.id() <= INT_MAX``; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import forecast as fkern
+
+# (P pods, W window samples) variants compiled into artifacts. W = 12 is the
+# paper's 60 s decision window at a 5 s sampling period; P = 64 covers the
+# nine-app evaluation fleet with headroom, P = 256 feeds the perf bench.
+VARIANTS = [(64, 12), (256, 12)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``constant({...})``, which the text parser then
+    reads back as zeros — the Pallas forecast kernel's design-matrix
+    pseudo-inverse (12×2) silently became a zero matrix without it.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "constant({...})" in text:
+        raise RuntimeError(
+            "HLO text contains an elided constant — the Rust loader would "
+            "read it as zeros; fix the printer options"
+        )
+    return text
+
+
+def lower_step(p: int, w: int) -> str:
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+    lowered = jax.jit(model.arcv_step_tuple).lower(
+        spec((p, w)), spec((p,)), spec((p, model.STATE_LEN)),
+        spec((model.PARAMS_LEN,)),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_forecast(p: int, w: int) -> str:
+    def fn(windows, horizon):
+        return (fkern.forecast(windows, horizon),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((p, w), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: dict = {
+        "state_len": model.STATE_LEN,
+        "params_len": model.PARAMS_LEN,
+        "default_params": [float(x) for x in model.default_params()],
+        "artifacts": [],
+    }
+    for p, w in VARIANTS:
+        step_name = f"arcv_step_p{p}_w{w}.hlo.txt"
+        fc_name = f"forecast_p{p}_w{w}.hlo.txt"
+        step_path = os.path.join(args.out, step_name)
+        fc_path = os.path.join(args.out, fc_name)
+
+        text = lower_step(p, w)
+        with open(step_path, "w") as f:
+            f.write(text)
+        print(f"wrote {step_path} ({len(text)} chars)")
+
+        text = lower_forecast(p, w)
+        with open(fc_path, "w") as f:
+            f.write(text)
+        print(f"wrote {fc_path} ({len(text)} chars)")
+
+        manifest["artifacts"].append(
+            {
+                "kind": "arcv_step",
+                "file": step_name,
+                "pods": p,
+                "window": w,
+                "inputs": [
+                    {"name": "windows", "shape": [p, w]},
+                    {"name": "swap", "shape": [p]},
+                    {"name": "state", "shape": [p, model.STATE_LEN]},
+                    {"name": "params", "shape": [model.PARAMS_LEN]},
+                ],
+                "outputs": [
+                    {"name": "new_state", "shape": [p, model.STATE_LEN]},
+                    {"name": "signals", "shape": [p]},
+                ],
+            }
+        )
+        manifest["artifacts"].append(
+            {
+                "kind": "forecast",
+                "file": fc_name,
+                "pods": p,
+                "window": w,
+                "inputs": [
+                    {"name": "windows", "shape": [p, w]},
+                    {"name": "horizon", "shape": []},
+                ],
+                "outputs": [{"name": "forecast", "shape": [p]}],
+            }
+        )
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1 Pallas kernels for the ARC-V fleet decision step.
+
+- :mod:`.forecast` — batched windowed least-squares forecast (MXU matmul
+  against the constant design-matrix pseudo-inverse).
+- :mod:`.signals` — sortedness-based memory-signal detector + window stats.
+- :mod:`.ref` — pure-jnp oracles for both.
+"""
+
+from . import forecast, fused, ref, signals  # noqa: F401

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: batched windowed least-squares forecast.
+
+The ARC-V "Growing" policy forecasts memory consumption 60 s ahead with a
+linear regression over the sampled window (paper §3.3 / §4.2).  For a fleet
+of ``P`` pods sampled on a uniform 5 s grid the design matrix ``X = [t, 1]``
+(``t = 0..W-1``) is identical for every pod, so its Moore-Penrose
+pseudo-inverse ``X^+ (2 x W)`` is a *compile-time constant* and the whole
+fleet regression collapses into one matmul::
+
+    coef[P, 2] = windows[P, W] @ X^+.T[W, 2]      # [slope, intercept]
+
+On a real TPU this is MXU-shaped work: pods tile into VMEM-resident
+``(block_p, W)`` slabs (BlockSpec below) and the constant ``X^+`` stays
+resident; here it runs under ``interpret=True`` because the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Default pod-block size for the BlockSpec grid. 128 matches the MXU/lane
+# width on TPU; the interpret path accepts any divisor of the padded batch.
+DEFAULT_BLOCK_P = 128
+
+
+def design_pinv(window: int) -> np.ndarray:
+    """Pseudo-inverse of the uniform-grid design matrix, shape ``(2, window)``.
+
+    Rows are ``[slope, intercept]`` weights: ``coef = pinv @ samples``.
+    Computed in float64 then cast so the constant folded into the HLO is as
+    accurate as f32 allows.
+    """
+    t = np.arange(window, dtype=np.float64)
+    x = np.stack([t, np.ones_like(t)], axis=1)  # (W, 2)
+    pinv = np.linalg.pinv(x)  # (2, W)
+    return pinv.astype(np.float32)
+
+
+def _forecast_kernel(w_ref, pinv_ref, coef_ref):
+    """Per-block body: ``(block_p, W) @ (W, 2) -> (block_p, 2)``."""
+    w = w_ref[...]
+    pinv_t = pinv_ref[...]  # (W, 2) — transposed constant
+    # preferred_element_type keeps the accumulate in f32 even if inputs are
+    # ever narrowed to bf16 on a real TPU build.
+    coef_ref[...] = jnp.dot(w, pinv_t, preferred_element_type=jnp.float32)
+
+
+def _pad_rows(a: jax.Array, multiple: int) -> jax.Array:
+    rows = a.shape[0]
+    rem = rows % multiple
+    if rem == 0:
+        return a
+    pad = multiple - rem
+    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def fit(windows: jax.Array, *, block_p: int = DEFAULT_BLOCK_P) -> jax.Array:
+    """Least-squares ``[slope, intercept]`` per pod window.
+
+    Args:
+      windows: ``(P, W)`` f32 memory samples on a uniform grid.
+      block_p: pod-block size for the Pallas grid.
+
+    Returns:
+      ``(P, 2)`` f32 coefficients ``[slope per sample, intercept]``.
+    """
+    p, w = windows.shape
+    block_p = min(block_p, max(p, 1))
+    pinv_t = jnp.asarray(design_pinv(w).T)  # (W, 2)
+    padded = _pad_rows(windows.astype(jnp.float32), block_p)
+    grid = (padded.shape[0] // block_p,)
+    coef = pl.pallas_call(
+        _forecast_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, w), lambda i: (i, 0)),
+            pl.BlockSpec((w, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_p, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded.shape[0], 2), jnp.float32),
+        interpret=True,
+    )(padded, pinv_t)
+    return coef[:p]
+
+
+def forecast(windows: jax.Array, horizon: jax.Array | float,
+             *, block_p: int = DEFAULT_BLOCK_P) -> jax.Array:
+    """Forecast each pod's usage ``horizon`` samples past the window end.
+
+    ``horizon`` is measured in sample periods (the paper's 60 s at a 5 s
+    sampling period is ``horizon = 12``). Returns ``(P,)`` f32.
+    """
+    coef = fit(windows, block_p=block_p)
+    w = windows.shape[1]
+    t_eval = (w - 1) + jnp.asarray(horizon, jnp.float32)
+    return coef[:, 0] * t_eval + coef[:, 1]

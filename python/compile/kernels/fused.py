@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: the fused decision front-end (§Perf optimization).
+
+The decision step needs, per pod window: the memory signal, the window
+stats, and the least-squares coefficients. Computing them with the two
+standalone kernels (:mod:`.signals`, :mod:`.forecast`) costs two grid
+sweeps over the same ``(P, W)`` slab — two HBM→VMEM loads on a real TPU
+and two interpret-mode dispatch loops on CPU. This kernel fuses all three
+products into one pass:
+
+    windows (block_p, W) ──┬── rel-diff scan ──► signal (block_p, 1)
+                           ├── reductions   ──► stats  (block_p, 4)
+                           └── @ pinvᵀ (MXU) ──► coef   (block_p, 2)
+
+EXPERIMENTS.md §Perf records the before/after; the standalone kernels stay
+for isolation tests and the perf comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .forecast import design_pinv
+from .signals import SIG_I, SIG_II, SIG_NONE
+
+DEFAULT_BLOCK_P = 128
+_EPS = 1e-9
+
+
+def _fused_kernel(w_ref, sf_ref, pinv_ref, sig_ref, stats_ref, coef_ref):
+    w = w_ref[...]  # (block_p, W)
+    sf = sf_ref[0, 0]
+
+    # signal classification (VPU)
+    prev = w[:, :-1]
+    nxt = w[:, 1:]
+    rel = (nxt - prev) / jnp.maximum(jnp.abs(prev), _EPS)
+    dec = jnp.any(rel < -sf, axis=1)
+    inc = jnp.any(rel > sf, axis=1)
+    sig = jnp.where(dec, SIG_II, jnp.where(inc, SIG_I, SIG_NONE))
+    sig_ref[...] = sig[:, None].astype(jnp.float32)
+
+    # window stats (VPU reductions over the same registers)
+    stats_ref[...] = jnp.stack(
+        [
+            jnp.min(w, axis=1),
+            jnp.max(w, axis=1),
+            w[:, -1],
+            jnp.mean(w, axis=1),
+        ],
+        axis=1,
+    ).astype(jnp.float32)
+
+    # regression coefficients (MXU): (block_p, W) @ (W, 2)
+    coef_ref[...] = jnp.dot(w, pinv_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pad_rows(a: jax.Array, multiple: int) -> jax.Array:
+    rem = a.shape[0] % multiple
+    if rem == 0:
+        return a
+    return jnp.pad(a, ((0, multiple - rem), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def decide_front(windows: jax.Array, stability: jax.Array | float,
+                 *, block_p: int = DEFAULT_BLOCK_P):
+    """One-pass signal + stats + least-squares coefficients.
+
+    Args:
+      windows: ``(P, W)`` f32 usage samples (W >= 2), oldest first.
+      stability: the ±band (paper default 0.02), traced scalar.
+      block_p: pod-block size for the Pallas grid.
+
+    Returns:
+      ``(signals, stats, coef)``: ``(P,)`` f32 in {0,1,2}; ``(P, 4)`` f32
+      ``[min,max,last,mean]``; ``(P, 2)`` f32 ``[slope, intercept]``.
+    """
+    p, w = windows.shape
+    if w < 2:
+        raise ValueError("fused front-end needs a window of at least 2 samples")
+    block_p = min(block_p, max(p, 1))
+    sf = jnp.asarray(stability, jnp.float32).reshape(1, 1)
+    pinv_t = jnp.asarray(design_pinv(w).T)  # (W, 2), compile-time constant
+    padded = _pad_rows(windows.astype(jnp.float32), block_p)
+    grid = (padded.shape[0] // block_p,)
+    sig, stats, coef = pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((w, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((padded.shape[0], 4), jnp.float32),
+            jax.ShapeDtypeStruct((padded.shape[0], 2), jnp.float32),
+        ],
+        interpret=True,
+    )(padded, sf, pinv_t)
+    return sig[:p, 0], stats[:p], coef[:p]

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+Every kernel in this package has a reference here written with nothing but
+``jnp`` ops in the most obvious formulation; pytest + hypothesis assert
+allclose across shapes and value regimes (python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-9
+
+
+def fit_ref(windows):
+    """Per-row least squares [slope, intercept] via explicit normal equations."""
+    windows = jnp.asarray(windows, jnp.float32)
+    _, w = windows.shape
+    t = jnp.arange(w, dtype=jnp.float32)
+    tbar = jnp.mean(t)
+    ybar = jnp.mean(windows, axis=1)
+    cov = jnp.mean(windows * t[None, :], axis=1) - tbar * ybar
+    var = jnp.mean(t * t) - tbar * tbar
+    slope = cov / var
+    intercept = ybar - slope * tbar
+    return jnp.stack([slope, intercept], axis=1)
+
+
+def forecast_ref(windows, horizon):
+    coef = fit_ref(windows)
+    w = jnp.asarray(windows).shape[1]
+    t_eval = (w - 1) + jnp.asarray(horizon, jnp.float32)
+    return coef[:, 0] * t_eval + coef[:, 1]
+
+
+def fit_np(windows):
+    """numpy.polyfit oracle (float64) — the independent second opinion."""
+    windows = np.asarray(windows, np.float64)
+    t = np.arange(windows.shape[1], dtype=np.float64)
+    out = np.empty((windows.shape[0], 2), np.float64)
+    for i, row in enumerate(windows):
+        slope, intercept = np.polyfit(t, row, 1)
+        out[i] = (slope, intercept)
+    return out
+
+
+def detect_ref(windows, stability):
+    """Sortedness-based signal detection, the obvious formulation."""
+    windows = jnp.asarray(windows, jnp.float32)
+    sf = jnp.asarray(stability, jnp.float32)
+    prev = windows[:, :-1]
+    nxt = windows[:, 1:]
+    rel = (nxt - prev) / jnp.maximum(jnp.abs(prev), _EPS)
+    dec = jnp.any(rel < -sf, axis=1)
+    inc = jnp.any(rel > sf, axis=1)
+    sig = jnp.where(dec, 2.0, jnp.where(inc, 1.0, 0.0))
+    stats = jnp.stack(
+        [
+            jnp.min(windows, axis=1),
+            jnp.max(windows, axis=1),
+            windows[:, -1],
+            jnp.mean(windows, axis=1),
+        ],
+        axis=1,
+    )
+    return sig, stats

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: the ARC-V memory-signal detector (paper §4.2).
+
+The published implementation abandoned regression for *sortedness*: within a
+sampling window, any relative decrease beyond the stability band means the
+window is not sorted ascending (memory **signal II**, consumption decreased);
+a sorted window with at least one relative increase beyond the band is
+**signal I** (consumption grew); a window whose elements are all equal within
+the +/-2 % band raises **no signal** (stability).
+
+The kernel fuses the signal classification with the window statistics the
+state machine needs (min / max / last / mean), one VMEM pass per pod block.
+Elementwise + small reductions: VPU work on a real TPU, run here under
+``interpret=True`` (see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Signal encoding shared with the Rust coordinator (rust/src/policy/arcv).
+SIG_NONE = 0.0
+SIG_I = 1.0  # increase detected
+SIG_II = 2.0  # decrease detected
+
+DEFAULT_BLOCK_P = 128
+_EPS = 1e-9
+
+
+def _signals_kernel(w_ref, sf_ref, sig_ref, stats_ref):
+    w = w_ref[...]  # (block_p, W)
+    sf = sf_ref[0, 0]
+    prev = w[:, :-1]
+    nxt = w[:, 1:]
+    rel = (nxt - prev) / jnp.maximum(jnp.abs(prev), _EPS)
+    dec = jnp.any(rel < -sf, axis=1)
+    inc = jnp.any(rel > sf, axis=1)
+    sig = jnp.where(dec, SIG_II, jnp.where(inc, SIG_I, SIG_NONE))
+    sig_ref[...] = sig[:, None].astype(jnp.float32)
+    stats_ref[...] = jnp.stack(
+        [
+            jnp.min(w, axis=1),
+            jnp.max(w, axis=1),
+            w[:, -1],
+            jnp.mean(w, axis=1),
+        ],
+        axis=1,
+    ).astype(jnp.float32)
+
+
+def _pad_rows(a: jax.Array, multiple: int) -> jax.Array:
+    rows = a.shape[0]
+    rem = rows % multiple
+    if rem == 0:
+        return a
+    return jnp.pad(a, ((0, multiple - rem), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def detect(windows: jax.Array, stability: jax.Array | float,
+           *, block_p: int = DEFAULT_BLOCK_P) -> tuple[jax.Array, jax.Array]:
+    """Classify each pod's window into signal none / I / II plus stats.
+
+    Args:
+      windows: ``(P, W)`` f32 memory samples (W >= 2).
+      stability: the stability factor (paper default 0.02), traced scalar.
+      block_p: pod-block size for the Pallas grid.
+
+    Returns:
+      ``(signals, stats)`` — ``(P,)`` f32 in {0, 1, 2} and ``(P, 4)`` f32
+      ``[min, max, last, mean]``.
+    """
+    p, w = windows.shape
+    if w < 2:
+        raise ValueError("signal detection needs a window of at least 2 samples")
+    block_p = min(block_p, max(p, 1))
+    sf = jnp.asarray(stability, jnp.float32).reshape(1, 1)
+    padded = _pad_rows(windows.astype(jnp.float32), block_p)
+    grid = (padded.shape[0] // block_p,)
+    sig, stats = pl.pallas_call(
+        _signals_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, 4), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((padded.shape[0], 4), jnp.float32),
+        ],
+        interpret=True,
+    )(padded, sf)
+    return sig[:p, 0], stats[:p]

@@ -1,0 +1,192 @@
+"""L2: the fleet-batched ARC-V decision step (paper §3.3 + §4.2) in JAX.
+
+One call = one controller decision tick (the paper's 60 s decision timeout)
+for a fleet of ``P`` pods at once.  The function is pure and branchless
+(where-selects over the state one-hot) so it lowers to a single fusable HLO
+module; the Pallas kernels in :mod:`compile.kernels` provide the two hot
+spots (signal detection, least-squares forecast).
+
+This module is the *semantic contract* with the Rust coordinator: the packed
+state layout, parameter order, and every transition rule here are mirrored
+byte-for-byte by ``rust/src/policy/arcv`` (native) and pinned by the golden
+tests (python/tests/test_golden.py ↔ rust/tests/golden_step.rs).
+
+Packed per-pod state ``st[P, 6]`` (all f32):
+
+====  =====================================================================
+idx   meaning
+====  =====================================================================
+0     state id: 0 = Growing, 1 = Dynamic, 2 = Stable
+1     no-signal streak (consecutive decision ticks without a signal)
+2     stable persistence (consecutive ticks spent in Stable)
+3     global max usage observed so far (GB)
+4     current memory recommendation/limit (GB)
+5     reserved (kept 0; round shape for TPU layout)
+====  =====================================================================
+
+Parameter vector ``params[10]`` (f32):
+
+====  ============================================  paper default
+idx   meaning
+====  ============================================  =============
+0     stability factor                              0.02
+1     forecast gap threshold (rel. rec-need gap)    0.10
+2     forecast horizon, in sample periods           12 (= 60 s / 5 s)
+3     stable decay per persistence tick             0.10
+4     stable floor ratio over live need             1.02
+5     dynamic cooldown (no-signal ticks → Stable)   3
+6     stable_after (no-signal ticks → Stable)       3
+7     growing forecast margin                       1.05
+8     minimum recommendation (GB)                   0.01
+9     reserved                                      0
+====  ============================================  =============
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused as fkernels
+from .kernels import signals as skern
+
+# State ids (shared with rust/src/policy/arcv/state.rs).
+GROWING = 0.0
+DYNAMIC = 1.0
+STABLE = 2.0
+
+STATE_LEN = 6
+PARAMS_LEN = 10
+
+_EPS = 1e-9
+
+
+def default_params() -> jnp.ndarray:
+    """The paper-default parameter vector (see module docstring table)."""
+    return jnp.asarray(
+        [0.02, 0.10, 12.0, 0.10, 1.02, 3.0, 3.0, 1.05, 0.01, 0.0],
+        jnp.float32,
+    )
+
+
+def arcv_step(windows: jax.Array, swap: jax.Array, state: jax.Array,
+              params: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One fleet decision tick.
+
+    Args:
+      windows: ``(P, W)`` f32 — per-pod sampled memory usage (GB), oldest
+        first; the newest sample is the live usage.
+      swap: ``(P,)`` f32 — per-pod swap residency (GB).
+      state: ``(P, 6)`` f32 packed controller state (see module docstring).
+      params: ``(10,)`` f32 policy parameters.
+
+    Returns:
+      ``(new_state, signals)`` — updated ``(P, 6)`` state (index 4 holds the
+      new recommendation) and the ``(P,)`` signal codes {0 none, 1 I, 2 II}
+      for event logging.
+    """
+    windows = windows.astype(jnp.float32)
+    swap = swap.astype(jnp.float32)
+    state = state.astype(jnp.float32)
+    params = params.astype(jnp.float32)
+
+    sf = params[0]
+    gap_thresh = params[1]
+    horizon = params[2]
+    decay = params[3]
+    floor_ratio = params[4]
+    dyn_cooldown = params[5]
+    stable_after = params[6]
+    margin = params[7]
+    min_rec = params[8]
+
+    # fused L1 front-end: one pass produces signal + stats + regression
+    # coefficients (§Perf; the standalone kernels in .signals/.forecast
+    # compute identical values and remain as isolation oracles)
+    sig, stats, coef = fkernels.decide_front(windows, sf)
+    t_eval = (windows.shape[1] - 1) + horizon
+    fc = coef[:, 0] * t_eval + coef[:, 1]
+
+    st = state[:, 0]
+    nosig = state[:, 1]
+    persist = state[:, 2]
+    gmax = state[:, 3]
+    rec = state[:, 4]
+
+    usage = stats[:, 2]  # newest sample
+    win_max = stats[:, 1]
+    need = usage + swap
+    gmax_new = jnp.maximum(gmax, win_max)
+
+    is_grow = st == GROWING
+    is_dyn = st == DYNAMIC
+    is_stab = st == STABLE
+    sig_none = sig == skern.SIG_NONE
+    sig_i = sig == skern.SIG_I
+    sig_ii = sig == skern.SIG_II
+
+    # ---- no-signal streak & stable persistence ----------------------------
+    nosig_new = jnp.where(sig_none, nosig + 1.0, 0.0)
+    persist_new = jnp.where(is_stab & sig_none, persist + 1.0, 0.0)
+
+    # ---- state transitions (Fig 3) -----------------------------------------
+    # Growing: II → Dynamic; enough silence → Stable; else stay.
+    grow_next = jnp.where(
+        sig_ii, DYNAMIC, jnp.where(nosig_new >= stable_after, STABLE, GROWING)
+    )
+    # Dynamic: any signal keeps it Dynamic; cooldown of silence → Stable.
+    # Dynamic → Growing is forbidden (§3.3).
+    dyn_next = jnp.where(nosig_new >= dyn_cooldown, STABLE, DYNAMIC)
+    # Stable: I → Growing, II → Dynamic, silence persists.
+    stab_next = jnp.where(sig_i, GROWING, jnp.where(sig_ii, DYNAMIC, STABLE))
+    st_new = jnp.where(is_grow, grow_next, jnp.where(is_dyn, dyn_next, stab_next))
+
+    # Streaks reset when the state changes.
+    changed = st_new != st
+    nosig_new = jnp.where(changed, 0.0, nosig_new)
+    persist_new = jnp.where(changed, 0.0, persist_new)
+
+    # ---- per-state recommendations -----------------------------------------
+    # Growing + signal I: forecast when the rec is within `gap_thresh` of the
+    # live need, with swap folded in so paged-out memory can return (§3.3).
+    # The adjustment only ever ADDS headroom (max with the current rec):
+    # decreases are the business of the Stable/Dynamic policies.
+    gap = (rec - need) / jnp.maximum(need, _EPS)
+    fc_rec = jnp.maximum(need * floor_ratio, (fc + swap) * margin)
+    grow_rec = jnp.where(sig_i & (gap < gap_thresh), jnp.maximum(rec, fc_rec), rec)
+
+    # Dynamic: "very conservative regarding the memory limits as there can
+    # be steep spikes" (§3.3) — never below the global max achieved, plus
+    # the safety margin (bursts often exceed all previous peaks).
+    dyn_rec = jnp.maximum(gmax_new, need) * margin
+
+    # Stable + silence: decay 10 % per persistence tick down to 102 % of the
+    # live need; any signal freezes the decay for this tick (the state
+    # transition handles the rest).
+    stab_decayed = jnp.maximum(rec * (1.0 - decay), need * floor_ratio)
+    stab_rec = jnp.where(sig_none, stab_decayed, rec)
+
+    rec_state = jnp.where(is_grow, grow_rec, jnp.where(is_dyn, dyn_rec, stab_rec))
+    # Entering Dynamic from anywhere applies the conservative floor now.
+    rec_state = jnp.where(st_new == DYNAMIC, jnp.maximum(rec_state, dyn_rec), rec_state)
+    # Never recommend below the live need or the configured minimum.
+    rec_new = jnp.maximum(jnp.maximum(rec_state, need), min_rec)
+
+    new_state = jnp.stack(
+        [
+            st_new,
+            nosig_new,
+            persist_new,
+            gmax_new,
+            rec_new,
+            jnp.zeros_like(st_new),
+        ],
+        axis=1,
+    )
+    return new_state, sig
+
+
+def arcv_step_tuple(windows, swap, state, params):
+    """Tuple-returning wrapper for AOT lowering (PJRT wants a flat tuple)."""
+    new_state, sig = arcv_step(windows, swap, state, params)
+    return new_state, sig

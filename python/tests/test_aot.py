@@ -1,0 +1,66 @@
+"""AOT path smoke tests: lowering emits parseable HLO text with the
+documented entry layout, and the lowered module computes the same values
+as the eager decision step."""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_lower_step_emits_hlo_text():
+    text = aot.lower_step(8, 12)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # 4 parameters with the right shapes
+    assert "f32[8,12]" in text      # windows
+    assert "f32[8,6]" in text       # state
+    assert "f32[10]" in text        # params
+    # tuple return (return_tuple=True)
+    assert re.search(r"ROOT\s+\S+\s+=\s+\(", text)
+
+
+def test_lower_forecast_emits_hlo_text():
+    text = aot.lower_forecast(8, 12)
+    assert text.startswith("HloModule")
+    assert "f32[8,12]" in text
+
+
+def test_no_64bit_ids_issue_markers():
+    # The text format never carries instruction ids, which is exactly why we
+    # ship text: xla_extension 0.5.1 rejects jax>=0.5's 64-bit proto ids.
+    text = aot.lower_step(8, 12)
+    assert ".serialize" not in text
+
+
+def test_lowered_module_matches_eager():
+    p, w = 8, 12
+    rng = np.random.default_rng(5)
+    wins = rng.uniform(0.5, 20.0, size=(p, w)).astype(np.float32)
+    swap = rng.uniform(0.0, 0.5, size=(p,)).astype(np.float32)
+    state = np.zeros((p, model.STATE_LEN), np.float32)
+    state[:, 4] = wins.max(axis=1) * 1.2
+    params = np.asarray(model.default_params())
+
+    eager_ns, eager_sig = model.arcv_step(
+        jnp.asarray(wins), jnp.asarray(swap), jnp.asarray(state),
+        jnp.asarray(params),
+    )
+    compiled = jax.jit(model.arcv_step_tuple).lower(
+        jax.ShapeDtypeStruct((p, w), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((p, model.STATE_LEN), jnp.float32),
+        jax.ShapeDtypeStruct((model.PARAMS_LEN,), jnp.float32),
+    ).compile()
+    comp_ns, comp_sig = compiled(wins, swap, state, params)
+    np.testing.assert_allclose(comp_ns, eager_ns, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(comp_sig), np.asarray(eager_sig))
+
+
+def test_manifest_variants_are_consistent():
+    assert len(aot.VARIANTS) >= 2
+    for p, w in aot.VARIANTS:
+        assert p > 0 and w >= 2

@@ -1,0 +1,48 @@
+"""The fused decision front-end must equal the standalone kernels exactly
+(it is a perf optimization, not a semantic change)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import forecast as fkern
+from compile.kernels import fused
+from compile.kernels import signals as skern
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+def _windows(p, w, seed):
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(0.01, 64.0, size=(p, 1))
+    jitter = rng.uniform(-0.25, 0.25, size=(p, w))
+    return np.maximum(base * (1.0 + jitter), 1e-3).astype(np.float32)
+
+
+@given(st.integers(1, 40), st.integers(2, 24), st.integers(0, 2**31 - 1),
+       st.floats(0.005, 0.1))
+def test_fused_equals_standalone(p, w, seed, sf):
+    wins = jnp.asarray(_windows(p, w, seed))
+    f_sig, f_stats, f_coef = fused.decide_front(wins, sf)
+    s_sig, s_stats = skern.detect(wins, sf)
+    coef = fkern.fit(wins)
+    np.testing.assert_array_equal(np.asarray(f_sig), np.asarray(s_sig))
+    np.testing.assert_allclose(f_stats, s_stats, rtol=1e-6)
+    np.testing.assert_allclose(f_coef, coef, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_p", [1, 8, 64, 256])
+def test_fused_block_invariance(block_p):
+    wins = jnp.asarray(_windows(100, 12, 3))
+    a = fused.decide_front(wins, 0.02, block_p=block_p)
+    b = fused.decide_front(wins, 0.02, block_p=128)
+    for x, y in zip(a, b):
+        # different block shapes change f32 reduction order by a few ULP
+        np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-6)
+
+
+def test_fused_rejects_tiny_window():
+    with pytest.raises(ValueError):
+        fused.decide_front(jnp.zeros((2, 1)), 0.02)

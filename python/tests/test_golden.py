@@ -1,0 +1,86 @@
+"""Cross-language golden fixtures: pin the L2 decision step's semantics.
+
+Running this test (re)generates ``rust/tests/golden/arcv_step.json`` with
+deterministic inputs → outputs of the JAX decision step; the Rust native
+policy replays the same inputs and must match (rust/tests/golden_step.rs).
+The fixture is committed so `cargo test` never depends on python.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+GOLDEN = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "rust", "tests", "golden", "arcv_step.json",
+)
+
+W = 12
+N_CASES = 64
+
+
+def _inputs():
+    rng = np.random.default_rng(20250710)
+    wins = np.empty((N_CASES, W), np.float32)
+    for i in range(N_CASES):
+        kind = i % 4
+        base = rng.uniform(0.05, 50.0)
+        if kind == 0:  # growth
+            slope = rng.uniform(0.0, 0.2) * base
+            wins[i] = base + slope * np.arange(W)
+        elif kind == 1:  # flat (within band)
+            wins[i] = base * (1.0 + rng.uniform(-0.005, 0.005, W))
+        elif kind == 2:  # drop somewhere
+            w = base * (1.0 + 0.1 * np.arange(W) / W)
+            w[rng.integers(1, W)] *= rng.uniform(0.3, 0.7)
+            wins[i] = w
+        else:  # noisy / dynamic
+            wins[i] = base * (1.0 + rng.uniform(-0.3, 0.3, W))
+    wins = np.maximum(wins, 1e-3).astype(np.float32)
+    swap = (rng.uniform(0.0, 1.0, N_CASES) * (rng.random(N_CASES) < 0.3)).astype(
+        np.float32
+    )
+    states = np.zeros((N_CASES, model.STATE_LEN), np.float32)
+    states[:, 0] = rng.integers(0, 3, N_CASES)
+    states[:, 1] = rng.integers(0, 4, N_CASES)
+    states[:, 2] = rng.integers(0, 4, N_CASES)
+    states[:, 3] = np.max(wins, axis=1) * rng.uniform(0.8, 1.5, N_CASES)
+    states[:, 4] = np.max(wins, axis=1) * rng.uniform(1.0, 2.0, N_CASES)
+    return wins, swap, states
+
+
+def test_write_and_verify_golden():
+    wins, swap, states = _inputs()
+    params = model.default_params()
+    ns, sig = model.arcv_step(
+        jnp.asarray(wins), jnp.asarray(swap), jnp.asarray(states), params
+    )
+    ns = np.asarray(ns, np.float64)
+    sig = np.asarray(sig, np.float64)
+    assert np.all(np.isfinite(ns))
+
+    payload = {
+        "window": W,
+        "params": [float(x) for x in np.asarray(params)],
+        "cases": [
+            {
+                "window_samples": [float(x) for x in wins[i]],
+                "swap": float(swap[i]),
+                "state_in": [float(x) for x in states[i]],
+                "state_out": [float(x) for x in ns[i]],
+                "signal": float(sig[i]),
+            }
+            for i in range(N_CASES)
+        ],
+    }
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    with open(GOLDEN, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    # sanity on the distribution: all three signals and states appear
+    assert {0.0, 1.0, 2.0} <= set(sig.tolist())
+    assert {0.0, 1.0, 2.0} <= set(ns[:, 0].tolist())

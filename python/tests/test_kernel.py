@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+hypothesis sweeps shapes and value regimes; assert_allclose against ref.py
+and, for the regression, against numpy.polyfit as an independent oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import forecast as fkern
+from compile.kernels import ref
+from compile.kernels import signals as skern
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def _windows_strategy(max_p=40, max_w=32):
+    """(P, W) float32 windows in the GB regime the controller feeds."""
+    return st.tuples(
+        st.integers(1, max_p),
+        st.integers(2, max_w),
+        st.integers(0, 2**31 - 1),
+    ).map(_materialize)
+
+
+def _materialize(args):
+    p, w, seed = args
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(0.01, 64.0, size=(p, 1))
+    jitter = rng.uniform(-0.2, 0.2, size=(p, w))
+    trend = rng.uniform(-0.5, 0.5, size=(p, 1)) * np.arange(w)[None, :]
+    return np.maximum(base + base * jitter + trend, 1e-3).astype(np.float32)
+
+
+# ---------------------------------------------------------------- forecast --
+
+
+@given(_windows_strategy())
+def test_fit_matches_ref(windows):
+    got = fkern.fit(jnp.asarray(windows))
+    want = ref.fit_ref(windows)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(_windows_strategy(max_p=12, max_w=16))
+def test_fit_matches_polyfit(windows):
+    got = np.asarray(fkern.fit(jnp.asarray(windows)), np.float64)
+    want = ref.fit_np(windows)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+@given(_windows_strategy(), st.floats(0.0, 32.0))
+def test_forecast_matches_ref(windows, horizon):
+    got = fkern.forecast(jnp.asarray(windows), horizon)
+    want = ref.forecast_ref(windows, horizon)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_fit_exact_on_perfect_line():
+    w = 12
+    t = np.arange(w, dtype=np.float32)
+    windows = np.stack([3.0 * t + 1.0, -0.5 * t + 40.0, 0.0 * t + 7.0])
+    coef = np.asarray(fkern.fit(jnp.asarray(windows)))
+    np.testing.assert_allclose(coef[:, 0], [3.0, -0.5, 0.0], atol=1e-4)
+    np.testing.assert_allclose(coef[:, 1], [1.0, 40.0, 7.0], atol=1e-3)
+
+
+def test_forecast_extrapolates_line():
+    w, h = 12, 12  # 60 s window, 60 s horizon at 5 s sampling
+    t = np.arange(w, dtype=np.float32)
+    windows = (2.0 * t + 5.0)[None, :]
+    got = float(fkern.forecast(jnp.asarray(windows), float(h))[0])
+    assert got == pytest.approx(2.0 * (w - 1 + h) + 5.0, rel=1e-4)
+
+
+@pytest.mark.parametrize("block_p", [1, 8, 64, 128, 256])
+def test_fit_block_shape_invariance(block_p):
+    rng = np.random.default_rng(7)
+    windows = rng.uniform(0.1, 10.0, size=(100, 12)).astype(np.float32)
+    got = fkern.fit(jnp.asarray(windows), block_p=block_p)
+    want = ref.fit_ref(windows)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_design_pinv_is_true_pseudoinverse():
+    for w in (2, 5, 12, 64):
+        pinv = ref.np.asarray(fkern.design_pinv(w), np.float64)
+        t = np.arange(w, dtype=np.float64)
+        x = np.stack([t, np.ones_like(t)], axis=1)
+        np.testing.assert_allclose(pinv @ x, np.eye(2), atol=1e-4)
+
+
+# ----------------------------------------------------------------- signals --
+
+
+@given(_windows_strategy(), st.floats(0.005, 0.2))
+def test_detect_matches_ref(windows, sf):
+    got_sig, got_stats = skern.detect(jnp.asarray(windows), sf)
+    want_sig, want_stats = ref.detect_ref(windows, sf)
+    np.testing.assert_array_equal(np.asarray(got_sig), np.asarray(want_sig))
+    np.testing.assert_allclose(got_stats, want_stats, rtol=1e-5, atol=1e-6)
+
+
+def test_detect_flat_window_is_no_signal():
+    windows = np.full((3, 12), 4.2, np.float32)
+    sig, stats = skern.detect(jnp.asarray(windows), 0.02)
+    assert np.all(np.asarray(sig) == skern.SIG_NONE)
+    np.testing.assert_allclose(stats[:, 0], 4.2, rtol=1e-6)  # min
+    np.testing.assert_allclose(stats[:, 1], 4.2, rtol=1e-6)  # max
+
+
+def test_detect_within_band_is_no_signal():
+    # +/-0.8% wiggle keeps every consecutive relative delta inside the
+    # paper's 2% stability band (the band applies sample-to-sample).
+    base = 10.0
+    w = base * (1.0 + 0.008 * np.array([0, 1, -1, 1, 0, -1, 1, 0, -1, 0, 1, 0]))
+    sig, _ = skern.detect(jnp.asarray(w[None, :].astype(np.float32)), 0.02)
+    assert float(sig[0]) == skern.SIG_NONE
+
+
+def test_detect_monotonic_growth_is_signal_i():
+    w = np.linspace(1.0, 2.0, 12, dtype=np.float32)[None, :]
+    sig, _ = skern.detect(jnp.asarray(w), 0.02)
+    assert float(sig[0]) == skern.SIG_I
+
+
+def test_detect_any_drop_is_signal_ii():
+    w = np.linspace(1.0, 2.0, 12, dtype=np.float32)
+    w[7] = 0.5  # one out-of-order element breaks sortedness
+    sig, _ = skern.detect(jnp.asarray(w[None, :]), 0.02)
+    assert float(sig[0]) == skern.SIG_II
+
+
+def test_detect_decrease_dominates_increase():
+    # Both a rise and a drop beyond band: II (decrease) wins, per §4.2
+    # (non-sorted order means signal II).
+    w = np.array([[1.0, 2.0, 1.0, 2.0]], np.float32)
+    sig, _ = skern.detect(jnp.asarray(w), 0.02)
+    assert float(sig[0]) == skern.SIG_II
+
+
+def test_detect_stats_layout():
+    w = np.array([[3.0, 1.0, 4.0, 1.5]], np.float32)
+    _, stats = skern.detect(jnp.asarray(w), 0.02)
+    np.testing.assert_allclose(
+        np.asarray(stats[0]), [1.0, 4.0, 1.5, np.mean(w)], rtol=1e-6
+    )
+
+
+def test_detect_rejects_tiny_window():
+    with pytest.raises(ValueError):
+        skern.detect(jnp.zeros((2, 1)), 0.02)
+
+
+@pytest.mark.parametrize("block_p", [1, 8, 64, 256])
+def test_detect_block_shape_invariance(block_p):
+    rng = np.random.default_rng(11)
+    windows = rng.uniform(0.1, 10.0, size=(50, 12)).astype(np.float32)
+    got_sig, got_stats = skern.detect(jnp.asarray(windows), 0.02, block_p=block_p)
+    want_sig, want_stats = ref.detect_ref(windows, 0.02)
+    np.testing.assert_array_equal(np.asarray(got_sig), np.asarray(want_sig))
+    np.testing.assert_allclose(got_stats, want_stats, rtol=1e-5)

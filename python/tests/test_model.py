@@ -1,0 +1,193 @@
+"""L2 semantics: the fleet decision step implements §3.3 / Fig 3 / §4.2."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+W = 12
+P0 = model.default_params()
+
+
+def mkstate(st=model.GROWING, nosig=0.0, persist=0.0, gmax=0.0, rec=1.0):
+    return jnp.asarray([[st, nosig, persist, gmax, rec, 0.0]], jnp.float32)
+
+
+def step(window, state, swap=0.0, params=P0):
+    win = jnp.asarray(np.asarray(window, np.float32)[None, :])
+    sw = jnp.asarray([swap], jnp.float32)
+    ns, sig = model.arcv_step(win, sw, state, params)
+    return np.asarray(ns[0]), float(sig[0])
+
+
+def grow_window(start=1.0, slope=0.1):
+    return start + slope * np.arange(W)
+
+
+def flat_window(v=2.0):
+    return np.full(W, v)
+
+
+def drop_window(start=4.0):
+    w = np.full(W, start)
+    w[6:] = start * 0.5
+    return w
+
+
+# ------------------------------------------------------------- transitions --
+
+
+def test_growing_signal_ii_moves_to_dynamic():
+    ns, sig = step(drop_window(), mkstate(st=model.GROWING, rec=5.0))
+    assert sig == 2.0
+    assert ns[0] == model.DYNAMIC
+
+
+def test_growing_signal_i_stays_growing():
+    ns, sig = step(grow_window(), mkstate(st=model.GROWING, rec=5.0))
+    assert sig == 1.0
+    assert ns[0] == model.GROWING
+
+
+def test_growing_to_stable_needs_streak():
+    st = mkstate(st=model.GROWING, nosig=0.0, rec=5.0)
+    for i in range(int(float(P0[6]))):
+        ns, sig = step(flat_window(), st)
+        st = jnp.asarray(ns[None, :])
+        assert sig == 0.0
+    assert ns[0] == model.STABLE
+
+
+def test_growing_single_quiet_tick_not_enough():
+    ns, _ = step(flat_window(), mkstate(st=model.GROWING, nosig=0.0, rec=5.0))
+    assert ns[0] == model.GROWING
+    assert ns[1] == 1.0  # streak advanced
+
+
+def test_dynamic_to_growing_is_forbidden():
+    # Even a strong growth signal keeps a Dynamic pod Dynamic (§3.3).
+    ns, sig = step(grow_window(), mkstate(st=model.DYNAMIC, rec=5.0, gmax=3.0))
+    assert sig == 1.0
+    assert ns[0] == model.DYNAMIC
+
+
+def test_dynamic_cooldown_to_stable():
+    st = mkstate(st=model.DYNAMIC, rec=5.0, gmax=3.0)
+    for _ in range(int(float(P0[5]))):
+        ns, _ = step(flat_window(), st)
+        st = jnp.asarray(ns[None, :])
+    assert ns[0] == model.STABLE
+
+
+def test_dynamic_signal_resets_cooldown():
+    st = mkstate(st=model.DYNAMIC, nosig=2.0, rec=9.0, gmax=3.0)
+    ns, _ = step(drop_window(), st)
+    assert ns[0] == model.DYNAMIC
+    assert ns[1] == 0.0
+
+
+def test_stable_signal_i_moves_to_growing():
+    ns, _ = step(grow_window(), mkstate(st=model.STABLE, rec=5.0))
+    assert ns[0] == model.GROWING
+
+
+def test_stable_signal_ii_moves_to_dynamic():
+    ns, _ = step(drop_window(), mkstate(st=model.STABLE, rec=5.0))
+    assert ns[0] == model.DYNAMIC
+
+
+# --------------------------------------------------------- recommendations --
+
+
+def test_stable_decays_toward_usage_floor():
+    usage = 2.0
+    rec = 10.0
+    ns, _ = step(flat_window(usage), mkstate(st=model.STABLE, rec=rec))
+    assert ns[4] == pytest.approx(rec * 0.9, rel=1e-5)
+
+
+def test_stable_decay_floors_at_102_percent():
+    usage = 2.0
+    ns, _ = step(flat_window(usage), mkstate(st=model.STABLE, rec=usage * 1.03))
+    assert ns[4] == pytest.approx(usage * 1.02, rel=1e-5)
+    # and it never goes below the floor on further ticks
+    ns2, _ = step(flat_window(usage), jnp.asarray(ns[None, :]))
+    assert ns2[4] == pytest.approx(usage * 1.02, rel=1e-5)
+
+
+def test_growing_forecast_raises_rec_when_gap_small():
+    w = grow_window(start=1.0, slope=0.1)
+    live = w[-1]
+    rec = live * 1.05  # inside the 10% gap threshold
+    ns, _ = step(w, mkstate(st=model.GROWING, rec=rec))
+    # linear forecast 12 samples ahead: 1.0 + 0.1*(11+12) = 3.3, with margin
+    assert ns[4] == pytest.approx(3.3 * 1.05, rel=1e-3)
+
+
+def test_growing_large_gap_keeps_rec():
+    w = grow_window(start=1.0, slope=0.1)
+    rec = 50.0  # huge headroom: no forecast adjustment
+    ns, _ = step(w, mkstate(st=model.GROWING, rec=rec))
+    assert ns[4] == pytest.approx(rec, rel=1e-6)
+
+
+def test_dynamic_floor_is_global_max_with_margin():
+    gmax = 8.0
+    ns, _ = step(flat_window(2.0), mkstate(st=model.DYNAMIC, rec=12.0, gmax=gmax))
+    # §3.3 conservatism: the floor is the global max plus the safety margin
+    assert ns[4] == pytest.approx(gmax * 1.05, rel=1e-6)
+
+
+def test_global_max_tracks_window_max():
+    w = grow_window(start=1.0, slope=0.5)
+    ns, _ = step(w, mkstate(st=model.GROWING, rec=50.0, gmax=2.0))
+    assert ns[3] == pytest.approx(w.max(), rel=1e-6)
+
+
+def test_swap_is_added_to_need():
+    usage, swap = 2.0, 1.5
+    ns, _ = step(flat_window(usage), mkstate(st=model.STABLE, rec=2.05), swap=swap)
+    # floor = (usage + swap) * 1.02, and rec can never sit below need
+    assert ns[4] >= usage + swap
+
+
+def test_rec_never_below_live_need():
+    ns, _ = step(flat_window(6.0), mkstate(st=model.STABLE, rec=1.0))
+    assert ns[4] >= 6.0
+
+
+# ------------------------------------------------------------------- batch --
+
+
+def test_batch_pods_are_independent():
+    rng = np.random.default_rng(3)
+    wins = rng.uniform(0.5, 8.0, size=(16, W)).astype(np.float32)
+    swap = rng.uniform(0.0, 0.5, size=(16,)).astype(np.float32)
+    states = np.zeros((16, model.STATE_LEN), np.float32)
+    states[:, 0] = rng.integers(0, 3, 16)
+    states[:, 3] = rng.uniform(0.0, 10.0, 16)
+    states[:, 4] = rng.uniform(1.0, 20.0, 16)
+
+    full_ns, full_sig = model.arcv_step(
+        jnp.asarray(wins), jnp.asarray(swap), jnp.asarray(states), P0
+    )
+    for i in range(16):
+        one_ns, one_sig = model.arcv_step(
+            jnp.asarray(wins[i : i + 1]),
+            jnp.asarray(swap[i : i + 1]),
+            jnp.asarray(states[i : i + 1]),
+            P0,
+        )
+        np.testing.assert_allclose(full_ns[i], one_ns[0], rtol=1e-5, atol=1e-6)
+        assert float(full_sig[i]) == float(one_sig[0])
+
+
+def test_outputs_are_finite_and_shaped():
+    wins = jnp.ones((64, W)) * 3.0
+    ns, sig = model.arcv_step(
+        wins, jnp.zeros(64), jnp.zeros((64, model.STATE_LEN)), P0
+    )
+    assert ns.shape == (64, model.STATE_LEN)
+    assert sig.shape == (64,)
+    assert bool(jnp.all(jnp.isfinite(ns)))

@@ -1,0 +1,81 @@
+"""Hypothesis property sweep over the L2 decision step — the same
+invariants the Rust side checks with util::prop (rust/tests/properties.rs),
+asserted on the JAX implementation so both layers stay pinned."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+settings.register_profile("ci", max_examples=60, deadline=None)
+settings.load_profile("ci")
+
+W = 12
+P0 = model.default_params()
+
+
+def _case(seed):
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(0.05, 64.0)
+    win = np.maximum(base * (1.0 + rng.uniform(-0.5, 0.5, W)), 1e-3).astype(np.float32)
+    swap = np.float32(rng.uniform(0.0, 4.0) * (rng.random() < 0.3))
+    st_in = np.zeros(model.STATE_LEN, np.float32)
+    st_in[0] = rng.integers(0, 3)
+    st_in[1] = rng.integers(0, 5)
+    st_in[2] = rng.integers(0, 5)
+    st_in[3] = rng.uniform(0.0, 100.0)
+    st_in[4] = rng.uniform(0.01, 120.0)
+    return win, swap, st_in
+
+
+def _step(win, swap, st_in):
+    ns, sig = model.arcv_step(
+        jnp.asarray(win[None, :]),
+        jnp.asarray([swap]),
+        jnp.asarray(st_in[None, :]),
+        P0,
+    )
+    return np.asarray(ns[0]), float(sig[0])
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_rec_always_covers_need(seed):
+    win, swap, st_in = _case(seed)
+    ns, _ = _step(win, swap, st_in)
+    assert ns[4] + 1e-5 >= win[-1] + swap
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_gmax_monotone(seed):
+    win, swap, st_in = _case(seed)
+    ns, _ = _step(win, swap, st_in)
+    assert ns[3] + 1e-6 >= st_in[3]
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_dynamic_never_goes_growing(seed):
+    win, swap, st_in = _case(seed)
+    st_in[0] = model.DYNAMIC
+    ns, _ = _step(win, swap, st_in)
+    assert ns[0] != model.GROWING
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_outputs_valid_and_finite(seed):
+    win, swap, st_in = _case(seed)
+    ns, sig = _step(win, swap, st_in)
+    assert np.all(np.isfinite(ns))
+    assert ns[0] in (0.0, 1.0, 2.0)
+    assert sig in (0.0, 1.0, 2.0)
+    assert ns[1] >= 0.0 and ns[2] >= 0.0
+    assert ns[1] <= st_in[1] + 1.0  # streak grows by at most one
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_step_is_pure(seed):
+    win, swap, st_in = _case(seed)
+    a = _step(win, swap, st_in)
+    b = _step(win, swap, st_in)
+    np.testing.assert_array_equal(a[0], b[0])
+    assert a[1] == b[1]

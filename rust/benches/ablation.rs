@@ -1,0 +1,145 @@
+//! Ablation bench — the design-choice studies DESIGN.md calls out:
+//!
+//! - `fig1`   static bare-metal allocation vs elastic ARC-V (the paper's
+//!            Figure 1 concept, quantified)
+//! - `params` stability-factor sweep (§4.2)
+//! - `window` measurement-window sweep (§4.2)
+//! - `oracle` ARC-V vs the clairvoyant lower bound
+//! - `swap`   device-class study on MiniFE (HDD vs SSD vs none, §3.2)
+//!
+//!   cargo bench --bench ablation [-- <scene>]   (default: all)
+
+use arcv::harness::{run, run_line, ExperimentConfig, PolicyKind, SwapKind};
+use arcv::policy::arcv::ArcvParams;
+use arcv::util::plot::bars;
+use arcv::workloads::AppId;
+
+fn main() {
+    let scene = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "all".to_string());
+    if scene == "fig1" || scene == "all" {
+        fig1();
+    }
+    if scene == "params" || scene == "all" {
+        params_sweep();
+    }
+    if scene == "window" || scene == "all" {
+        window_sweep();
+    }
+    if scene == "oracle" || scene == "all" {
+        oracle_gap();
+    }
+    if scene == "swap" || scene == "all" {
+        swap_study();
+    }
+}
+
+fn fig1() {
+    println!("=== Fig 1 concept: static HPC allocation vs elastic ARC-V (kripke) ===\n");
+    // static: reserve the whole paper node (256GB) for the job
+    let mut cfg = ExperimentConfig::arcv_env(AppId::Kripke);
+    cfg.initial_frac = 256.0 / 5.5; // whole node
+    let fixed = run(&cfg, PolicyKind::Fixed);
+    let arcv = run(
+        &ExperimentConfig::arcv_env(AppId::Kripke),
+        PolicyKind::ArcvNative(ArcvParams::default()),
+    );
+    println!("  {}", run_line(&fixed));
+    println!("  {}", run_line(&arcv));
+    println!(
+        "\n  bare-metal reserves {:.1} GB·s; ARC-V provisions {:.1} GB·s -> {:.1}x saving\n",
+        fixed.provisioned_gbs,
+        arcv.provisioned_gbs,
+        fixed.provisioned_gbs / arcv.provisioned_gbs
+    );
+}
+
+fn params_sweep() {
+    println!("=== §4.2 ablation: stability factor (kripke + lulesh) ===\n");
+    let mut rows = Vec::new();
+    for sf in [0.005, 0.01, 0.02, 0.05, 0.10] {
+        let mut p = ArcvParams::default();
+        p.stability = sf;
+        for app in [AppId::Kripke, AppId::Lulesh] {
+            let r = run(&ExperimentConfig::arcv_env(app), PolicyKind::ArcvNative(p));
+            rows.push((
+                format!("{}/sf={:.1}%", app.name(), sf * 100.0),
+                r.provisioned_gbs / r.used_gbs,
+            ));
+            println!(
+                "  sf={:<5} {:<8} fp/used={:.3} ooms={} wall={}s",
+                sf,
+                app.name(),
+                r.provisioned_gbs / r.used_gbs,
+                r.oom_count,
+                r.wall_secs
+            );
+        }
+    }
+    let refs: Vec<(&str, f64)> = rows.iter().map(|(s, v)| (s.as_str(), *v)).collect();
+    print!("\n{}", bars("provisioned/used ratio (lower = tighter)", &refs, 40));
+    println!();
+}
+
+fn window_sweep() {
+    println!("=== §4.2 ablation: measurement window (kripke) ===\n");
+    for w in [6usize, 12, 24] {
+        let mut p = ArcvParams::default();
+        p.window = w;
+        p.horizon_samples = w as f64;
+        let r = run(&ExperimentConfig::arcv_env(AppId::Kripke), PolicyKind::ArcvNative(p));
+        println!(
+            "  window={:<3} fp={:.1} GB·s overhead={:+.2}% ooms={}",
+            w,
+            r.provisioned_gbs,
+            (r.wall_secs as f64 / 650.0 - 1.0) * 100.0,
+            r.oom_count
+        );
+    }
+    println!();
+}
+
+fn oracle_gap() {
+    println!("=== ablation: ARC-V vs clairvoyant oracle ===\n");
+    for app in [AppId::Kripke, AppId::Cm1, AppId::Lulesh, AppId::Sputnipic] {
+        let arcv = run(
+            &ExperimentConfig::arcv_env(app),
+            PolicyKind::ArcvNative(ArcvParams::default()),
+        );
+        let oracle = run(&ExperimentConfig::arcv_env(app), PolicyKind::Oracle);
+        println!(
+            "  {:<10} arcv={:>10.1} GB·s oracle={:>10.1} GB·s gap={:.2}x",
+            app.name(),
+            arcv.provisioned_gbs,
+            oracle.provisioned_gbs,
+            arcv.provisioned_gbs / oracle.provisioned_gbs
+        );
+    }
+    println!();
+}
+
+fn swap_study() {
+    println!("=== §3.2 ablation: swap device class on MiniFE's end spike ===\n");
+    for (label, swap) in [
+        ("hdd(0.1GB/s)", SwapKind::Hdd(128.0)),
+        ("ssd(1GB/s)", SwapKind::Ssd(128.0)),
+        ("disabled", SwapKind::Disabled),
+    ] {
+        let mut cfg = ExperimentConfig::arcv_env(AppId::Minife);
+        cfg.initial_frac = 0.9; // limit below the end spike -> swap matters
+        cfg.swap = swap;
+        cfg.budget_mult = 30.0;
+        let r = run(&cfg, PolicyKind::ArcvNative(ArcvParams::default()));
+        println!(
+            "  {:<14} wall={:>5}s (nominal 352s) ooms={} restarts={} {}",
+            label,
+            r.wall_secs,
+            r.oom_count,
+            r.restarts,
+            if r.completed { "done" } else { "TIMEOUT" }
+        );
+    }
+    println!("\n  (without swap the spike OOMs; device bandwidth sets the overhead)");
+}

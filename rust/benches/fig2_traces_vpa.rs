@@ -1,0 +1,78 @@
+//! Bench: regenerate **Figure 2** — the 5 s-sampled memory-consumption
+//! series of all nine applications with the VPA Recommender's line
+//! (updates disabled), reproducing the slow-adaptation behaviour §2.3
+//! reports. CSV series land in bench_out/fig2_<app>.csv.
+//!
+//!   cargo bench --bench fig2_traces_vpa
+
+use arcv::policy::vpa::HistogramRecommender;
+use arcv::util::csv::CsvWriter;
+use arcv::util::plot::multi_line;
+use arcv::workloads::{build, Trace, TABLE1};
+
+fn main() {
+    std::fs::create_dir_all("bench_out").ok();
+    println!("=== Figure 2: memory consumption + VPA recommendation ===");
+    for row in &TABLE1 {
+        let model = build(row.app, 42);
+        let trace = Trace::from_model(&model, 5.0);
+
+        // The VPA Recommender consumes the same samples it would scrape.
+        let mut rec = HistogramRecommender::new();
+        let mut rec_series = Vec::with_capacity(trace.samples.len());
+        for (i, &u) in trace.samples.iter().enumerate() {
+            rec.add_sample(i as u64 * 5, u);
+            rec_series.push(rec.recommend_gb());
+        }
+
+        let mut csv = CsvWriter::new(&["t_secs", "usage_gb", "vpa_recommendation_gb"]);
+        for (i, (&u, &r)) in trace.samples.iter().zip(&rec_series).enumerate() {
+            csv.frow(&[i as f64 * 5.0, u, r]);
+        }
+        let path = format!("bench_out/fig2_{}.csv", row.app.name());
+        csv.save(&path).expect("write fig2 csv");
+
+        println!();
+        print!(
+            "{}",
+            multi_line(
+                &format!(
+                    "{} — usage vs VPA recommendation (GB, {} samples) -> {}",
+                    row.app.name(),
+                    trace.samples.len(),
+                    path
+                ),
+                &[("usage", &trace.samples), ("vpa-rec", &rec_series)],
+                100,
+                14,
+            )
+        );
+
+        // §2.3's core claim: VPA "relies on historical patterns, which are
+        // inconsistent in HPC workloads due to varying input characteristics".
+        // Feed the recommender a full run, then replay the same app with a
+        // 30% larger input: the historical recommendation undershoots and,
+        // if enforced (§4.1 semantics: static until OOM, +20% per restart),
+        // the app OOMs repeatedly.
+        let hist_rec = rec.recommend_gb();
+        let mut enforced = hist_rec;
+        let mut ooms = 0;
+        for &u in &trace.samples {
+            let scaled = u * 1.3; // next input is 30% bigger
+            if scaled > enforced {
+                ooms += 1;
+                enforced = scaled * 1.2; // the §4.1 restart bump
+            }
+        }
+        println!(
+            "  next-run (1.3x input): historical rec {:.2} GB -> {} enforced OOM restarts ({})",
+            hist_rec,
+            ooms,
+            if ooms > 0 {
+                "history misleads on varying inputs, as §2.3 reports"
+            } else {
+                "covered"
+            }
+        );
+    }
+}

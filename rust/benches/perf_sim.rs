@@ -1,0 +1,88 @@
+//! Perf bench: simulator + controller throughput (ticks/second) — the L3
+//! numbers for EXPERIMENTS.md §Perf. The controller must be a negligible
+//! fraction of the tick budget (the paper's <3 % overhead claim is about
+//! the real cluster; here we check our own coordinator cost).
+//!
+//!   cargo bench --bench perf_sim
+
+use arcv::coordinator::controller::{Controller, Tick};
+use arcv::coordinator::fleet::FleetController;
+use arcv::policy::arcv::{ArcvParams, ArcvPolicy, NativeFleet};
+use arcv::simkube::cluster::Cluster;
+use arcv::simkube::node::Node;
+use arcv::simkube::resources::ResourceSpec;
+use arcv::simkube::swap::SwapDevice;
+use arcv::util::bench::bench;
+use arcv::workloads::{build, AppId};
+
+fn cluster_with_pods(n_pods: usize) -> (Cluster, Vec<usize>) {
+    let mut c = Cluster::new(
+        (0..((n_pods + 15) / 16).max(1))
+            .map(|i| Node::new(&format!("w{i}"), 1024.0, SwapDevice::hdd(256.0)))
+            .collect(),
+        Default::default(),
+    );
+    let apps = AppId::all();
+    let ids = (0..n_pods)
+        .map(|i| {
+            let m = build(apps[i % apps.len()], i as u64);
+            let init = m.max_gb * 1.2;
+            c.create_pod(&format!("p{i}"), ResourceSpec::memory_exact(init), Box::new(m))
+        })
+        .collect();
+    (c, ids)
+}
+
+fn main() {
+    println!("=== bare simulator throughput (no controller) ===");
+    for n in [1usize, 4, 16, 64] {
+        let (mut c, _) = cluster_with_pods(n);
+        let r = bench(&format!("sim/step pods={n}"), 50, 2000, || c.step());
+        println!(
+            "    -> {:.2} M pod-ticks/s",
+            r.per_sec(n as f64) / 1e6
+        );
+    }
+
+    println!("\n=== simulator + per-pod ARC-V controller ===");
+    for n in [1usize, 4, 16, 64] {
+        let (mut c, ids) = cluster_with_pods(n);
+        let mut ctl = Controller::new();
+        for &id in &ids {
+            let init = c.pod(id).effective_limit_gb;
+            ctl.manage(id, Box::new(ArcvPolicy::new(init, ArcvParams::default())));
+        }
+        bench(&format!("sim+arcv/step pods={n}"), 50, 2000, || {
+            c.step();
+            ctl.tick(&mut c);
+        });
+    }
+
+    println!("\n=== simulator + fleet controller (native backend) ===");
+    for n in [1usize, 4, 16, 64] {
+        let (mut c, ids) = cluster_with_pods(n);
+        let params = ArcvParams::default();
+        let mut ctl = FleetController::new(Box::new(NativeFleet::new(64, params.window)), params);
+        for &id in &ids {
+            let init = c.pod(id).effective_limit_gb;
+            ctl.manage(id, init);
+        }
+        bench(&format!("sim+fleet/step pods={n}"), 50, 2000, || {
+            c.step();
+            ctl.tick(&mut c);
+        });
+    }
+
+    println!("\n=== end-to-end experiment wall time (kripke, 650 sim-seconds) ===");
+    use arcv::harness::{run, ExperimentConfig, PolicyKind};
+    let r = bench("e2e/kripke+arcv full run", 1, 12, || {
+        run(
+            &ExperimentConfig::arcv_env(AppId::Kripke),
+            PolicyKind::ArcvNative(ArcvParams::default()),
+        )
+    });
+    println!(
+        "    -> {:.0} sim-seconds/wall-second",
+        650.0 / (r.mean_ns * 1e-9)
+    );
+}

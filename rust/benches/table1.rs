@@ -1,0 +1,55 @@
+//! Bench: regenerate **Table 1** — pattern class, execution time, max
+//! memory, and memory footprint for all nine applications — and time the
+//! trace generator itself.
+//!
+//!   cargo bench --bench table1
+
+use arcv::util::bench::bench_auto;
+use arcv::util::units::fmt_gb;
+use arcv::workloads::{build, check, Trace, TABLE1};
+
+fn main() {
+    println!("=== Table 1 reproduction (paper values in parentheses) ===\n");
+    println!(
+        "{:<12} {:>7} {:>12} {:>22} {:>26}",
+        "Application", "Pattern", "Exec Time", "Max. Memory", "Memory Footprint"
+    );
+    println!("{}", "-".repeat(84));
+    let mut all_ok = true;
+    for row in &TABLE1 {
+        let rep = check(row, 42);
+        all_ok &= rep.within(0.05);
+        println!(
+            "{:<12} {:>4}({}) {:>8}s ({:>5}s) {:>10} ({:>8}) {:>11.2} TB·s ({:>6.2} TB)",
+            row.app.name(),
+            rep.measured_pattern,
+            row.pattern,
+            row.exec_secs as u64,
+            row.exec_secs as u64,
+            fmt_gb(rep.measured_max_gb),
+            fmt_gb(row.max_gb),
+            rep.measured_footprint_gbs / 1000.0,
+            row.footprint_gbs / 1000.0,
+        );
+    }
+    println!(
+        "\ncalibration: {}",
+        if all_ok { "all rows within ±5%" } else { "OUT OF TOLERANCE" }
+    );
+
+    println!("\n=== trace-generation performance ===\n");
+    for row in &TABLE1 {
+        let model = build(row.app, 42);
+        let r = bench_auto(&format!("trace/{}", row.app.name()), 80.0, || {
+            Trace::from_model(&model, 5.0)
+        });
+        let samples = (row.exec_secs / 5.0) as f64;
+        println!(
+            "    -> {:.1} M samples/s",
+            r.per_sec(samples) / 1e6
+        );
+    }
+    if !all_ok {
+        std::process::exit(1);
+    }
+}

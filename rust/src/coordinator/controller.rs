@@ -1,0 +1,161 @@
+//! The controller: scrapes sampled metrics, drives per-pod policies, and
+//! applies their actions through the cluster API — the process the paper
+//! runs "on another node ... requiring only Kubernetes access permissions"
+//! (§5 Overhead).
+
+use crate::policy::{Action, VerticalPolicy};
+use crate::simkube::cluster::Cluster;
+use crate::simkube::pod::{PodId, PodPhase};
+
+/// Anything that reacts to a cluster tick (per-pod or fleet controllers,
+/// and the remote bridge).
+pub trait Tick {
+    fn tick(&mut self, cluster: &mut Cluster);
+}
+
+/// One policy instance per pod.
+pub struct Controller {
+    entries: Vec<(PodId, Box<dyn VerticalPolicy>)>,
+    /// (time, pod, recommendation) history for reporting.
+    pub rec_log: Vec<(u64, PodId, f64)>,
+}
+
+impl Controller {
+    pub fn new() -> Self {
+        Self {
+            entries: Vec::new(),
+            rec_log: Vec::new(),
+        }
+    }
+
+    pub fn manage(&mut self, pod: PodId, policy: Box<dyn VerticalPolicy>) {
+        self.entries.push((pod, policy));
+    }
+
+    pub fn policy_of(&self, pod: PodId) -> Option<&dyn VerticalPolicy> {
+        self.entries
+            .iter()
+            .find(|(p, _)| *p == pod)
+            .map(|(_, pol)| pol.as_ref())
+    }
+}
+
+impl Default for Controller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tick for Controller {
+    fn tick(&mut self, cluster: &mut Cluster) {
+        let now = cluster.now;
+        let sampling = cluster.metrics.is_sampling_tick(now);
+        for (pod, policy) in &mut self.entries {
+            let phase = cluster.pod(*pod).phase;
+
+            // OOM recovery first (policy decides the restart size)
+            if phase == PodPhase::OomKilled {
+                let usage = cluster.pod(*pod).usage.usage_gb;
+                if let Action::RestartWith(gb) = policy.on_oom(now, usage) {
+                    cluster.restart_pod(*pod, gb);
+                }
+                continue;
+            }
+            if phase != PodPhase::Running {
+                continue;
+            }
+
+            // scrape on sampling ticks
+            if sampling {
+                if let Some(s) = cluster.metrics.last(*pod) {
+                    if s.time == now {
+                        policy.observe(now, &s);
+                    }
+                }
+            }
+
+            match policy.decide(now) {
+                Action::Resize(gb) => {
+                    cluster.patch_pod_memory(*pod, gb);
+                    self.rec_log.push((now, *pod, gb));
+                }
+                Action::RestartWith(gb) => {
+                    cluster.restart_pod(*pod, gb);
+                    self.rec_log.push((now, *pod, gb));
+                }
+                Action::None => {}
+            }
+        }
+    }
+}
+
+/// Drive a cluster + controller to completion (or `max_ticks`). Returns
+/// ticks executed.
+pub fn run_to_completion(
+    cluster: &mut Cluster,
+    controller: &mut dyn Tick,
+    max_ticks: u64,
+) -> u64 {
+    let start = cluster.now;
+    while cluster.now - start < max_ticks && !cluster.all_done() {
+        cluster.step();
+        controller.tick(cluster);
+    }
+    cluster.now - start
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::arcv::{ArcvParams, ArcvPolicy};
+    use crate::policy::vpa::VpaSimPolicy;
+    use crate::simkube::node::Node;
+    use crate::simkube::pod::testutil::ramp;
+    use crate::simkube::resources::ResourceSpec;
+    use crate::simkube::swap::SwapDevice;
+
+    #[test]
+    fn vpa_controller_restarts_through_ooms_to_completion() {
+        let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::disabled()));
+        // ramp 1→3GB over 300s, initial limit 20% of max
+        let id = c.create_pod("app", ResourceSpec::memory_exact(0.6), ramp(1.0, 3.0, 300.0));
+        let mut ctl = Controller::new();
+        ctl.manage(id, Box::new(VpaSimPolicy::new(0.6)));
+        let ticks = run_to_completion(&mut c, &mut ctl, 100_000);
+        assert!(c.pod(id).is_done(), "must finish eventually");
+        assert!(c.pod(id).restarts > 3, "needs several +20% steps");
+        assert!(ticks > 300, "restarts cost wall time: {ticks}");
+    }
+
+    #[test]
+    fn arcv_controller_shrinks_flat_app_without_ooms() {
+        let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(32.0)));
+        let id = c.create_pod("app", ResourceSpec::memory_exact(12.0), ramp(4.0, 4.0, 900.0));
+        let mut ctl = Controller::new();
+        ctl.manage(id, Box::new(ArcvPolicy::new(12.0, ArcvParams::default())));
+        run_to_completion(&mut c, &mut ctl, 100_000);
+        assert!(c.pod(id).is_done());
+        assert_eq!(c.events.count_ooms(id), 0);
+        // footprint must beat the static 12GB allocation substantially
+        let static_fp = 12.0 * c.pod(id).wall_running_secs as f64;
+        assert!(
+            c.pod(id).provisioned_gb_secs < static_fp * 0.75,
+            "saved: {} vs {static_fp}",
+            c.pod(id).provisioned_gb_secs
+        );
+        // final limit near 102% of 4GB
+        let lim = c.pod(id).effective_limit_gb;
+        assert!(lim < 4.6, "final limit {lim}");
+    }
+
+    #[test]
+    fn controller_logs_recommendations() {
+        let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(32.0)));
+        let id = c.create_pod("app", ResourceSpec::memory_exact(10.0), ramp(2.0, 2.0, 600.0));
+        let mut ctl = Controller::new();
+        ctl.manage(id, Box::new(ArcvPolicy::new(10.0, ArcvParams::default())));
+        run_to_completion(&mut c, &mut ctl, 10_000);
+        assert!(!ctl.rec_log.is_empty());
+        assert!(ctl.rec_log.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+}

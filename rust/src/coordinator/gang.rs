@@ -1,0 +1,227 @@
+//! MPI gang semantics (paper §1): HPC applications are tightly coupled —
+//! "the default behavior of MPI-based applications means that a failure in
+//! a single node may cause the entire application to fail."
+//!
+//! A [`GangSupervisor`] groups the pods of one MPI job: if any member is
+//! OOM-killed or evicted, the *whole gang* is restarted from scratch (no
+//! checkpointing), each member with the policy-chosen new allocation.
+//! This is the failure amplification that makes per-pod OOMs so expensive
+//! for HPC and motivates ARC-V's top-down, OOM-free approach.
+
+use super::controller::Tick;
+use crate::policy::{Action, VerticalPolicy};
+use crate::simkube::cluster::Cluster;
+use crate::simkube::pod::{PodId, PodPhase};
+
+pub struct Gang {
+    pub name: String,
+    pub members: Vec<PodId>,
+    /// One policy per member (rank memory profiles may differ).
+    policies: Vec<Box<dyn VerticalPolicy>>,
+    /// Gang-level restart count (every member restarts together).
+    pub gang_restarts: u32,
+}
+
+pub struct GangSupervisor {
+    pub gangs: Vec<Gang>,
+}
+
+impl GangSupervisor {
+    pub fn new() -> Self {
+        Self { gangs: Vec::new() }
+    }
+
+    pub fn supervise(
+        &mut self,
+        name: &str,
+        members: Vec<(PodId, Box<dyn VerticalPolicy>)>,
+    ) {
+        let (ids, policies): (Vec<_>, Vec<_>) = members.into_iter().unzip();
+        self.gangs.push(Gang {
+            name: name.to_string(),
+            members: ids,
+            policies,
+            gang_restarts: 0,
+        });
+    }
+
+    pub fn gang(&self, name: &str) -> Option<&Gang> {
+        self.gangs.iter().find(|g| g.name == name)
+    }
+
+    /// A gang finishes only when every rank finished (barrier semantics).
+    pub fn gang_done(&self, cluster: &Cluster, name: &str) -> bool {
+        self.gang(name)
+            .map(|g| g.members.iter().all(|&m| cluster.pod(m).is_done()))
+            .unwrap_or(false)
+    }
+}
+
+impl Default for GangSupervisor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tick for GangSupervisor {
+    fn tick(&mut self, cluster: &mut Cluster) {
+        let now = cluster.now;
+        let sampling = cluster.metrics.is_sampling_tick(now);
+        for gang in &mut self.gangs {
+            // 1. failure amplification: any killed member dooms the gang
+            let failed: Vec<usize> = gang
+                .members
+                .iter()
+                .enumerate()
+                .filter(|(_, &m)| {
+                    matches!(
+                        cluster.pod(m).phase,
+                        PodPhase::OomKilled | PodPhase::Evicted
+                    )
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if !failed.is_empty() {
+                gang.gang_restarts += 1;
+                for (i, &m) in gang.members.iter().enumerate() {
+                    let usage = cluster.pod(m).usage.usage_gb.max(
+                        cluster.pod(m).effective_limit_gb.min(1e6), // fallback scale
+                    );
+                    let new_mem = match gang.policies[i].on_oom(now, usage) {
+                        Action::RestartWith(gb) => gb,
+                        _ => cluster.pod(m).effective_limit_gb,
+                    };
+                    // every rank restarts from scratch — even healthy ones
+                    cluster.restart_pod(m, new_mem);
+                }
+                continue;
+            }
+
+            // 2. normal operation: scrape + per-rank decisions
+            for (i, &m) in gang.members.iter().enumerate() {
+                if cluster.pod(m).phase != PodPhase::Running {
+                    continue;
+                }
+                if sampling {
+                    if let Some(s) = cluster.metrics.last(m) {
+                        if s.time == now {
+                            gang.policies[i].observe(now, &s);
+                        }
+                    }
+                }
+                match gang.policies[i].decide(now) {
+                    Action::Resize(gb) => cluster.patch_pod_memory(m, gb),
+                    Action::RestartWith(gb) => cluster.restart_pod(m, gb),
+                    Action::None => {}
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::controller::run_to_completion;
+    use crate::policy::arcv::{ArcvParams, ArcvPolicy};
+    use crate::policy::vpa::VpaSimPolicy;
+    use crate::simkube::node::Node;
+    use crate::simkube::pod::testutil::ramp;
+    use crate::simkube::resources::ResourceSpec;
+    use crate::simkube::swap::SwapDevice;
+
+    fn two_rank_cluster(
+        limits: (f64, f64),
+        ramps: ((f64, f64, f64), (f64, f64, f64)),
+    ) -> (Cluster, PodId, PodId) {
+        let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::disabled()));
+        let r0 = c.create_pod(
+            "job-rank0",
+            ResourceSpec::memory_exact(limits.0),
+            ramp(ramps.0 .0, ramps.0 .1, ramps.0 .2),
+        );
+        let r1 = c.create_pod(
+            "job-rank1",
+            ResourceSpec::memory_exact(limits.1),
+            ramp(ramps.1 .0, ramps.1 .1, ramps.1 .2),
+        );
+        (c, r0, r1)
+    }
+
+    #[test]
+    fn one_rank_oom_restarts_the_whole_gang() {
+        // rank1 breaches its limit at ~50% progress; rank0 is healthy
+        let (mut c, r0, r1) =
+            two_rank_cluster((4.0, 1.5), ((1.0, 2.0, 200.0), (1.0, 3.0, 200.0)));
+        let mut sup = GangSupervisor::new();
+        sup.supervise(
+            "job",
+            vec![
+                (r0, Box::new(VpaSimPolicy::new(4.0)) as Box<dyn VerticalPolicy>),
+                (r1, Box::new(VpaSimPolicy::new(1.5))),
+            ],
+        );
+        run_to_completion(&mut c, &mut sup, 50_000);
+        assert!(sup.gang_done(&c, "job"));
+        let g = sup.gang("job").unwrap();
+        assert!(g.gang_restarts >= 1, "gang restarted");
+        // the HEALTHY rank0 was restarted too — the §1 failure amplification
+        assert!(c.pod(r0).restarts >= 1, "healthy rank dragged down");
+        assert_eq!(c.pod(r0).restarts, c.pod(r1).restarts);
+    }
+
+    #[test]
+    fn gang_under_arcv_with_swap_never_restarts() {
+        let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(32.0)));
+        let r0 = c.create_pod(
+            "job-rank0",
+            ResourceSpec::memory_exact(2.6),
+            ramp(1.0, 2.0, 300.0),
+        );
+        let r1 = c.create_pod(
+            "job-rank1",
+            ResourceSpec::memory_exact(3.8),
+            ramp(1.0, 3.0, 300.0),
+        );
+        let mut sup = GangSupervisor::new();
+        sup.supervise(
+            "job",
+            vec![
+                (
+                    r0,
+                    Box::new(ArcvPolicy::new(2.6, ArcvParams::default()))
+                        as Box<dyn VerticalPolicy>,
+                ),
+                (r1, Box::new(ArcvPolicy::new(3.8, ArcvParams::default()))),
+            ],
+        );
+        run_to_completion(&mut c, &mut sup, 50_000);
+        assert!(sup.gang_done(&c, "job"));
+        assert_eq!(sup.gang("job").unwrap().gang_restarts, 0);
+        assert_eq!(c.pod(r0).restarts + c.pod(r1).restarts, 0);
+    }
+
+    #[test]
+    fn gang_completion_requires_all_ranks() {
+        let (mut c, _r0, _r1) =
+            two_rank_cluster((4.0, 4.0), ((1.0, 1.0, 50.0), (1.0, 1.0, 150.0)));
+        let mut sup = GangSupervisor::new();
+        let g0 = c.pods[0].id;
+        let g1 = c.pods[1].id;
+        sup.supervise(
+            "job",
+            vec![
+                (g0, Box::new(VpaSimPolicy::new(4.0)) as Box<dyn VerticalPolicy>),
+                (g1, Box::new(VpaSimPolicy::new(4.0))),
+            ],
+        );
+        // after 100s rank0 is done but rank1 is not
+        for _ in 0..100 {
+            c.step();
+            sup.tick(&mut c);
+        }
+        assert!(!sup.gang_done(&c, "job"));
+        run_to_completion(&mut c, &mut sup, 10_000);
+        assert!(sup.gang_done(&c, "job"));
+    }
+}

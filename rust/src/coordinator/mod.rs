@@ -1,0 +1,13 @@
+//! The controller runtime (system S12): per-pod and fleet-batched
+//! controllers, the simulation driver, and the threaded "remote node"
+//! deployment shape.
+
+pub mod controller;
+pub mod gang;
+pub mod fleet;
+pub mod remote;
+
+pub use gang::{Gang, GangSupervisor};
+pub use controller::{run_to_completion, Controller, Tick};
+pub use fleet::FleetController;
+pub use remote::{run_remote, RemoteController};

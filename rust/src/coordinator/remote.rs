@@ -1,0 +1,191 @@
+//! The "remote" deployment shape (§5 Overhead): the controller runs in its
+//! own thread of control — a stand-in for the paper's separate node — and
+//! talks to the cluster only through message channels: sampled metrics in,
+//! patch/restart commands out. Decisions therefore act on slightly stale
+//! data and land one tick later, exactly the asynchrony a real deployment
+//! has (tokio is not in the vendored crate set; std threads + mpsc).
+
+use crate::policy::{Action, VerticalPolicy};
+use crate::simkube::cluster::Cluster;
+use crate::simkube::metrics::Sample;
+use crate::simkube::pod::{PodId, PodPhase};
+use std::sync::mpsc;
+use std::thread;
+
+#[derive(Clone, Debug)]
+pub enum Upstream {
+    /// Sampled metrics for one pod.
+    Metrics { now: u64, pod: PodId, sample: Sample },
+    /// The pod was OOM-killed.
+    Oom { now: u64, pod: PodId, usage_gb: f64 },
+    /// A plain clock tick (drives decision timeouts).
+    Tick { now: u64 },
+    Shutdown,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum Command {
+    Patch { pod: PodId, mem_gb: f64 },
+    Restart { pod: PodId, mem_gb: f64 },
+}
+
+/// The controller half: owns the policies, consumes Upstream, emits
+/// Commands. Runs on its own thread via [`spawn`].
+pub struct RemoteController {
+    policies: Vec<(PodId, Box<dyn VerticalPolicy>)>,
+}
+
+impl RemoteController {
+    pub fn new(policies: Vec<(PodId, Box<dyn VerticalPolicy>)>) -> Self {
+        Self { policies }
+    }
+
+    fn handle(&mut self, msg: Upstream, out: &mpsc::Sender<Command>) -> bool {
+        match msg {
+            Upstream::Metrics { now, pod, sample } => {
+                if let Some((_, p)) = self.policies.iter_mut().find(|(id, _)| *id == pod) {
+                    p.observe(now, &sample);
+                }
+            }
+            Upstream::Oom { now, pod, usage_gb } => {
+                if let Some((_, p)) = self.policies.iter_mut().find(|(id, _)| *id == pod) {
+                    if let Action::RestartWith(gb) = p.on_oom(now, usage_gb) {
+                        let _ = out.send(Command::Restart { pod, mem_gb: gb });
+                    }
+                }
+            }
+            Upstream::Tick { now } => {
+                for (pod, p) in &mut self.policies {
+                    match p.decide(now) {
+                        Action::Resize(gb) => {
+                            let _ = out.send(Command::Patch { pod: *pod, mem_gb: gb });
+                        }
+                        Action::RestartWith(gb) => {
+                            let _ = out.send(Command::Restart { pod: *pod, mem_gb: gb });
+                        }
+                        Action::None => {}
+                    }
+                }
+            }
+            Upstream::Shutdown => return false,
+        }
+        true
+    }
+}
+
+pub struct RemoteHandle {
+    pub tx: mpsc::Sender<Upstream>,
+    pub rx: mpsc::Receiver<Command>,
+    join: thread::JoinHandle<()>,
+}
+
+impl RemoteHandle {
+    pub fn shutdown(self) {
+        let _ = self.tx.send(Upstream::Shutdown);
+        let _ = self.join.join();
+    }
+}
+
+/// Launch the controller thread.
+pub fn spawn(mut controller: RemoteController) -> RemoteHandle {
+    let (up_tx, up_rx) = mpsc::channel::<Upstream>();
+    let (cmd_tx, cmd_rx) = mpsc::channel::<Command>();
+    let join = thread::spawn(move || {
+        while let Ok(msg) = up_rx.recv() {
+            if !controller.handle(msg, &cmd_tx) {
+                break;
+            }
+        }
+    });
+    RemoteHandle {
+        tx: up_tx,
+        rx: cmd_rx,
+        join,
+    }
+}
+
+/// Drive a cluster with a remote controller to completion. Commands are
+/// applied at the tick after they arrive (transport delay ≥ 1 s).
+pub fn run_remote(
+    cluster: &mut Cluster,
+    policies: Vec<(PodId, Box<dyn VerticalPolicy>)>,
+    max_ticks: u64,
+) -> u64 {
+    let pods: Vec<PodId> = policies.iter().map(|(id, _)| *id).collect();
+    let handle = spawn(RemoteController::new(policies));
+    let start = cluster.now;
+    let mut oom_reported: Vec<u32> = vec![0; cluster.pods.len()];
+
+    while cluster.now - start < max_ticks && !cluster.all_done() {
+        cluster.step();
+        let now = cluster.now;
+
+        // apply commands that arrived since the last tick
+        while let Ok(cmd) = handle.rx.try_recv() {
+            match cmd {
+                Command::Patch { pod, mem_gb } => {
+                    if cluster.pod(pod).is_running() {
+                        cluster.patch_pod_memory(pod, mem_gb);
+                    }
+                }
+                Command::Restart { pod, mem_gb } => {
+                    if cluster.pod(pod).phase == PodPhase::OomKilled {
+                        cluster.restart_pod(pod, mem_gb);
+                    }
+                }
+            }
+        }
+
+        // publish metrics + OOMs + the clock
+        for &pod in &pods {
+            let p = cluster.pod(pod);
+            if p.phase == PodPhase::OomKilled && p.oom_kills > oom_reported[pod] {
+                oom_reported[pod] = p.oom_kills;
+                let _ = handle.tx.send(Upstream::Oom {
+                    now,
+                    pod,
+                    usage_gb: p.usage.usage_gb,
+                });
+            }
+            if cluster.metrics.is_sampling_tick(now) {
+                if let Some(s) = cluster.metrics.last(pod) {
+                    if s.time == now {
+                        let _ = handle.tx.send(Upstream::Metrics { now, pod, sample: s });
+                    }
+                }
+            }
+        }
+        let _ = handle.tx.send(Upstream::Tick { now });
+
+        // lockstep: give the controller thread a chance to drain; the
+        // 1-tick apply delay above models the real transport latency.
+        std::thread::yield_now();
+    }
+    handle.shutdown();
+    cluster.now - start
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::arcv::{ArcvParams, ArcvPolicy};
+    use crate::simkube::node::Node;
+    use crate::simkube::pod::testutil::ramp;
+    use crate::simkube::resources::ResourceSpec;
+    use crate::simkube::swap::SwapDevice;
+
+    #[test]
+    fn remote_controller_completes_and_saves_memory() {
+        let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(32.0)));
+        let id = c.create_pod("flat", ResourceSpec::memory_exact(12.0), ramp(4.0, 4.0, 600.0));
+        let policies: Vec<(PodId, Box<dyn VerticalPolicy>)> = vec![(
+            id,
+            Box::new(ArcvPolicy::new(12.0, ArcvParams::default())),
+        )];
+        // Remote decisions are asynchronous: drain generously.
+        let ticks = run_remote(&mut c, policies, 60_000);
+        assert!(c.pod(id).is_done(), "done after {ticks} ticks");
+        assert_eq!(c.events.count_ooms(id), 0);
+        assert!(c.pod(id).effective_limit_gb < 12.0, "was resized down");
+    }
+}

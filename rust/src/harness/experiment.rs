@@ -1,0 +1,289 @@
+//! The experiment runner: one (application × policy × environment) run on
+//! the simulator, producing the numbers Fig 4 / Fig 5 / §5 report.
+
+use crate::coordinator::controller::{Controller, Tick};
+use crate::coordinator::fleet::FleetController;
+use crate::policy::arcv::{ArcvParams, ArcvPolicy, DecisionBackend};
+use crate::policy::fixed::FixedPolicy;
+use crate::policy::oracle::OraclePolicy;
+use crate::policy::vpa::{UpdateMode, VpaFullPolicy, VpaSimPolicy};
+use crate::simkube::cluster::{Cluster, ClusterConfig};
+use crate::simkube::node::Node;
+use crate::simkube::pod::PodPhase;
+use crate::simkube::resources::ResourceSpec;
+use crate::simkube::swap::SwapDevice;
+use crate::workloads::{build, AppId};
+
+/// Which policy drives the run.
+pub enum PolicyKind {
+    /// ARC-V, per-pod native policy.
+    ArcvNative(ArcvParams),
+    /// ARC-V, fleet-batched through a decision backend (native or XLA).
+    ArcvFleet(ArcvParams, Box<dyn DecisionBackend>),
+    /// The paper's §4.1 VPA simulator.
+    VpaSim,
+    /// Full VPA recommender, updates off (Fig 2's green line).
+    VpaRecommendOnly,
+    /// Static allocation at `initial` (bare-metal style).
+    Fixed,
+    /// Clairvoyant oracle (ablation lower bound).
+    Oracle,
+}
+
+/// The stock VPA's default minimum memory recommendation (250 Mi) — the
+/// reason tiny apps like LAMMPS end up >10x over-provisioned under VPA
+/// (paper §5 "Memory provisioning").
+pub const VPA_MIN_REC_GB: f64 = 0.25;
+
+impl PolicyKind {
+    /// Floor on the initial allocation this policy would ever request.
+    pub fn min_initial_gb(&self) -> f64 {
+        match self {
+            PolicyKind::VpaSim | PolicyKind::VpaRecommendOnly => VPA_MIN_REC_GB,
+            _ => 0.0,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::ArcvNative(_) => "arcv",
+            PolicyKind::ArcvFleet(_, b) => {
+                if b.name() == "xla" {
+                    "arcv-xla"
+                } else {
+                    "arcv-fleet"
+                }
+            }
+            PolicyKind::VpaSim => "vpa-sim",
+            PolicyKind::VpaRecommendOnly => "vpa-rec",
+            PolicyKind::Fixed => "fixed",
+            PolicyKind::Oracle => "oracle",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SwapKind {
+    Disabled,
+    Hdd(f64),
+    Ssd(f64),
+}
+
+impl SwapKind {
+    fn device(&self) -> SwapDevice {
+        match self {
+            SwapKind::Disabled => SwapDevice::disabled(),
+            SwapKind::Hdd(gb) => SwapDevice::hdd(*gb),
+            SwapKind::Ssd(gb) => SwapDevice::ssd(*gb),
+        }
+    }
+}
+
+pub struct ExperimentConfig {
+    pub app: AppId,
+    pub seed: u64,
+    /// Initial request/limit as a fraction of the app's max memory
+    /// (DESIGN.md §6.1: ARC-V 1.2, VPA-sim 0.2).
+    pub initial_frac: f64,
+    pub swap: SwapKind,
+    pub node_capacity_gb: f64,
+    /// Hard tick budget as a multiple of the app's nominal exec time.
+    pub budget_mult: f64,
+}
+
+impl ExperimentConfig {
+    pub fn new(app: AppId) -> Self {
+        Self {
+            app,
+            seed: 42,
+            initial_frac: 1.2,
+            swap: SwapKind::Hdd(128.0),
+            node_capacity_gb: 256.0,
+            budget_mult: 60.0,
+        }
+    }
+
+    /// The paper's ARC-V environment: swap on, init at 120 % of max.
+    pub fn arcv_env(app: AppId) -> Self {
+        Self::new(app)
+    }
+
+    /// The paper's VPA-sim environment: no swap (OOMs restart), init at
+    /// 20 % of max.
+    pub fn vpa_env(app: AppId) -> Self {
+        Self {
+            initial_frac: 0.2,
+            swap: SwapKind::Disabled,
+            ..Self::new(app)
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub app: AppId,
+    pub policy: String,
+    /// Wall-clock seconds until completion (includes restarts/thrash).
+    pub wall_secs: u64,
+    /// ∫ provisioned limit dt (GB·s) — the paper's footprint metric.
+    pub provisioned_gbs: f64,
+    /// ∫ actual usage dt (GB·s).
+    pub used_gbs: f64,
+    pub oom_count: usize,
+    pub restarts: u32,
+    pub completed: bool,
+    /// (t, recommendation/limit GB) — Fig 5's red line.
+    pub limit_series: Vec<(u64, f64)>,
+    /// (t, usage GB) — Fig 5's blue line.
+    pub usage_series: Vec<(u64, f64)>,
+    /// (t, swap GB).
+    pub swap_series: Vec<(u64, f64)>,
+}
+
+/// Run one experiment to completion (or budget).
+pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
+    let model = build(cfg.app, cfg.seed);
+    let exec_secs = model.exec_secs;
+    let max_gb = model.max_gb;
+    let initial_gb = (max_gb * cfg.initial_frac).max(kind.min_initial_gb());
+    let label = kind.label().to_string();
+
+    let node = Node::new("w0", cfg.node_capacity_gb, cfg.swap.device());
+    let mut cluster = Cluster::new(vec![node], ClusterConfig::default());
+    let pod = cluster.create_pod(
+        cfg.app.name(),
+        ResourceSpec::memory_exact(initial_gb),
+        Box::new(model),
+    );
+
+    let budget = (exec_secs * cfg.budget_mult) as u64;
+    let mut controller: Box<dyn Tick> = match kind {
+        PolicyKind::ArcvNative(params) => {
+            let mut c = Controller::new();
+            c.manage(pod, Box::new(ArcvPolicy::new(initial_gb, params)));
+            Box::new(c)
+        }
+        PolicyKind::ArcvFleet(params, backend) => {
+            let mut c = FleetController::new(backend, params);
+            c.manage(pod, initial_gb);
+            Box::new(c)
+        }
+        PolicyKind::VpaSim => {
+            let mut c = Controller::new();
+            c.manage(pod, Box::new(VpaSimPolicy::new(initial_gb)));
+            Box::new(c)
+        }
+        PolicyKind::VpaRecommendOnly => {
+            let mut c = Controller::new();
+            c.manage(pod, Box::new(VpaFullPolicy::new(UpdateMode::Off)));
+            Box::new(c)
+        }
+        PolicyKind::Fixed => {
+            let mut c = Controller::new();
+            c.manage(pod, Box::new(FixedPolicy::new(initial_gb)));
+            Box::new(c)
+        }
+        PolicyKind::Oracle => {
+            let m2 = build(cfg.app, cfg.seed);
+            use crate::simkube::pod::MemoryProcess;
+            let trace: Vec<f64> = (0..=exec_secs as usize)
+                .map(|t| m2.usage_gb(t as f64))
+                .collect();
+            let mut c = Controller::new();
+            c.manage(
+                pod,
+                Box::new(OraclePolicy::new(trace, 10, 1.02, 60)),
+            );
+            Box::new(c)
+        }
+    };
+
+    // Drive, recording series at sampling ticks.
+    let mut limit_series = Vec::new();
+    let mut usage_series = Vec::new();
+    let mut swap_series = Vec::new();
+    let start = cluster.now;
+    while cluster.now - start < budget && !cluster.all_done() {
+        cluster.step();
+        controller.tick(&mut cluster);
+        if cluster.metrics.is_sampling_tick(cluster.now) {
+            let p = cluster.pod(pod);
+            if p.phase == PodPhase::Running {
+                let lim = if p.effective_limit_gb.is_finite() {
+                    p.effective_limit_gb
+                } else {
+                    p.usage.usage_gb
+                };
+                limit_series.push((cluster.now, lim));
+                usage_series.push((cluster.now, p.usage.usage_gb));
+                swap_series.push((cluster.now, p.usage.swap_gb));
+            }
+        }
+    }
+
+    let p = cluster.pod(pod);
+    RunResult {
+        app: cfg.app,
+        policy: label,
+        wall_secs: cluster.now - start,
+        provisioned_gbs: p.provisioned_gb_secs,
+        used_gbs: p.used_gb_secs,
+        oom_count: cluster.events.count_ooms(pod),
+        restarts: p.restarts,
+        completed: p.is_done(),
+        limit_series,
+        usage_series,
+        swap_series,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arcv_run_on_kripke_completes_with_savings() {
+        let cfg = ExperimentConfig::arcv_env(AppId::Kripke);
+        let r = run(&cfg, PolicyKind::ArcvNative(ArcvParams::default()));
+        assert!(r.completed);
+        assert_eq!(r.oom_count, 0);
+        // overhead below 3% of nominal exec (paper §5)
+        assert!(r.wall_secs as f64 <= 650.0 * 1.03, "wall={}", r.wall_secs);
+        // footprint beats the static initial allocation
+        let static_fp = 5.5 * 1.2 * r.wall_secs as f64;
+        assert!(r.provisioned_gbs < static_fp, "{} < {static_fp}", r.provisioned_gbs);
+    }
+
+    #[test]
+    fn vpa_run_on_cm1_restarts_many_times() {
+        let cfg = ExperimentConfig::vpa_env(AppId::Cm1);
+        let r = run(&cfg, PolicyKind::VpaSim);
+        assert!(r.completed, "finishes after enough +20% steps");
+        // CM1's initial is the VPA 250MB minimum; 0.25·1.2³ > 415MB
+        assert!(r.restarts >= 3, "restarts={}", r.restarts);
+        assert!(r.wall_secs > 913, "restarts cost time: {}", r.wall_secs);
+    }
+
+    #[test]
+    fn fixed_run_matches_nominal_exec_time() {
+        let cfg = ExperimentConfig::arcv_env(AppId::Sputnipic);
+        let r = run(&cfg, PolicyKind::Fixed);
+        assert!(r.completed);
+        assert_eq!(r.wall_secs, 210);
+        assert_eq!(r.restarts, 0);
+    }
+
+    #[test]
+    fn oracle_beats_arcv_footprint() {
+        let cfg = ExperimentConfig::arcv_env(AppId::Kripke);
+        let arcv = run(&cfg, PolicyKind::ArcvNative(ArcvParams::default()));
+        let oracle = run(&cfg, PolicyKind::Oracle);
+        assert!(oracle.completed);
+        assert!(
+            oracle.provisioned_gbs <= arcv.provisioned_gbs * 1.05,
+            "oracle {} vs arcv {}",
+            oracle.provisioned_gbs,
+            arcv.provisioned_gbs
+        );
+    }
+}

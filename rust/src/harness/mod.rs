@@ -1,0 +1,9 @@
+//! Experiment harness (system S13): runners, reports, sweeps.
+
+pub mod experiment;
+pub mod report;
+pub mod sweep;
+
+pub use experiment::{run, ExperimentConfig, PolicyKind, RunResult, SwapKind};
+pub use report::{ratio_row, ratio_table, ratios_csv, run_line, RatioRow};
+pub use sweep::{stability_variants, sweep_params, window_variants, SweepPoint};

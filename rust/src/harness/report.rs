@@ -1,0 +1,144 @@
+//! Report formatting: the paper's tables and ratio charts as terminal text
+//! + CSV (what each bench prints).
+
+use super::experiment::RunResult;
+use crate::util::csv::CsvWriter;
+use std::fmt::Write as _;
+
+/// The Fig 4 (left) row: VPA/ARC-V ratios per application.
+#[derive(Clone, Debug)]
+pub struct RatioRow {
+    pub app: String,
+    pub footprint_ratio: f64,
+    pub exectime_ratio: f64,
+    pub vpa_restarts: u32,
+    pub arcv_ooms: usize,
+    pub arcv_overhead_pct: f64,
+}
+
+pub fn ratio_row(vpa: &RunResult, arcv: &RunResult, nominal_secs: f64) -> RatioRow {
+    RatioRow {
+        app: arcv.app.name().to_string(),
+        footprint_ratio: vpa.provisioned_gbs / arcv.provisioned_gbs.max(1e-9),
+        exectime_ratio: vpa.wall_secs as f64 / arcv.wall_secs.max(1) as f64,
+        vpa_restarts: vpa.restarts,
+        arcv_ooms: arcv.oom_count,
+        arcv_overhead_pct: (arcv.wall_secs as f64 / nominal_secs - 1.0) * 100.0,
+    }
+}
+
+pub fn ratio_table(rows: &[RatioRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<12} {:>16} {:>16} {:>13} {:>10} {:>14}",
+        "app", "footprint(V/A)", "exec-time(V/A)", "vpa-restarts", "arcv-oom", "arcv-ovhd(%)"
+    );
+    let _ = writeln!(out, "{}", "-".repeat(86));
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<12} {:>16.2} {:>16.2} {:>13} {:>10} {:>14.2}",
+            r.app, r.footprint_ratio, r.exectime_ratio, r.vpa_restarts, r.arcv_ooms,
+            r.arcv_overhead_pct
+        );
+    }
+    out
+}
+
+pub fn ratios_csv(rows: &[RatioRow]) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "app",
+        "footprint_ratio",
+        "exectime_ratio",
+        "vpa_restarts",
+        "arcv_ooms",
+        "arcv_overhead_pct",
+    ]);
+    for r in rows {
+        w.row(&[
+            r.app.clone(),
+            format!("{}", r.footprint_ratio),
+            format!("{}", r.exectime_ratio),
+            format!("{}", r.vpa_restarts),
+            format!("{}", r.arcv_ooms),
+            format!("{}", r.arcv_overhead_pct),
+        ]);
+    }
+    w
+}
+
+/// Summarize one run as a single line.
+pub fn run_line(r: &RunResult) -> String {
+    format!(
+        "{:<10} {:<10} wall={:>6}s footprint={:>10.1} GB·s used={:>10.1} GB·s ooms={} restarts={} {}",
+        r.app.name(),
+        r.policy,
+        r.wall_secs,
+        r.provisioned_gbs,
+        r.used_gbs,
+        r.oom_count,
+        r.restarts,
+        if r.completed { "done" } else { "TIMEOUT" },
+    )
+}
+
+/// Series → CSV with a series label column (figure data files).
+pub fn series_csv(label: &str, series: &[(u64, f64)]) -> CsvWriter {
+    let mut w = CsvWriter::new(&["series", "t_secs", "value_gb"]);
+    for (t, v) in series {
+        w.row(&[label.to_string(), format!("{t}"), format!("{v}")]);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::AppId;
+
+    fn rr(policy: &str, wall: u64, fp: f64, restarts: u32) -> RunResult {
+        RunResult {
+            app: AppId::Cm1,
+            policy: policy.into(),
+            wall_secs: wall,
+            provisioned_gbs: fp,
+            used_gbs: fp * 0.6,
+            oom_count: 0,
+            restarts,
+            completed: true,
+            limit_series: vec![],
+            usage_series: vec![],
+            swap_series: vec![],
+        }
+    }
+
+    #[test]
+    fn ratios_compute() {
+        let vpa = rr("vpa-sim", 2000, 500.0, 8);
+        let arcv = rr("arcv", 920, 250.0, 0);
+        let row = ratio_row(&vpa, &arcv, 913.0);
+        assert!((row.footprint_ratio - 2.0).abs() < 1e-9);
+        assert!((row.exectime_ratio - 2000.0 / 920.0).abs() < 1e-9);
+        assert!((row.arcv_overhead_pct - (920.0 / 913.0 - 1.0) * 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let rows = vec![
+            ratio_row(&rr("v", 100, 10.0, 1), &rr("a", 50, 5.0, 0), 50.0),
+            ratio_row(&rr("v", 200, 30.0, 2), &rr("a", 100, 10.0, 0), 100.0),
+        ];
+        let t = ratio_table(&rows);
+        assert_eq!(t.lines().count(), 4);
+        assert!(t.contains("footprint"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let rows = vec![ratio_row(&rr("v", 100, 10.0, 1), &rr("a", 50, 5.0, 0), 50.0)];
+        let w = ratios_csv(&rows);
+        assert_eq!(w.len(), 1);
+        assert!(w.to_string().starts_with("app,"));
+    }
+}

@@ -1,0 +1,102 @@
+//! Parameter sweeps over the ARC-V knobs (§4.2 calls out the stability
+//! factor, the window size, and the decision timeout as the levers) — the
+//! `ablation` bench uses this.
+
+use super::experiment::{run, ExperimentConfig, PolicyKind, RunResult};
+use crate::policy::arcv::ArcvParams;
+use crate::workloads::AppId;
+
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub label: String,
+    pub params: ArcvParams,
+    pub result: RunResult,
+}
+
+/// Run ARC-V over `apps` for each parameter variant; returns all points.
+pub fn sweep_params(
+    apps: &[AppId],
+    variants: &[(&str, ArcvParams)],
+    seed: u64,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for app in apps {
+        for (label, params) in variants {
+            let mut cfg = ExperimentConfig::arcv_env(*app);
+            cfg.seed = seed;
+            let result = run(&cfg, PolicyKind::ArcvNative(*params));
+            out.push(SweepPoint {
+                label: format!("{}/{}", app.name(), label),
+                params: *params,
+                result,
+            });
+        }
+    }
+    out
+}
+
+/// Convenience: the §4.2 stability-factor sweep.
+pub fn stability_variants() -> Vec<(&'static str, ArcvParams)> {
+    [0.005, 0.01, 0.02, 0.05, 0.10]
+        .into_iter()
+        .map(|sf| {
+            let mut p = ArcvParams::default();
+            p.stability = sf;
+            (
+                match sf {
+                    x if x == 0.005 => "sf=0.5%",
+                    x if x == 0.01 => "sf=1%",
+                    x if x == 0.02 => "sf=2%",
+                    x if x == 0.05 => "sf=5%",
+                    _ => "sf=10%",
+                },
+                p,
+            )
+        })
+        .collect()
+}
+
+/// Window-size sweep (§4.2: "the number of collected metrics ... is also a
+/// factor").
+pub fn window_variants() -> Vec<(&'static str, ArcvParams)> {
+    [6usize, 12, 24]
+        .into_iter()
+        .map(|w| {
+            let mut p = ArcvParams::default();
+            p.window = w;
+            p.horizon_samples = w as f64;
+            (
+                match w {
+                    6 => "w=6",
+                    12 => "w=12",
+                    _ => "w=24",
+                },
+                p,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_all_points() {
+        let pts = sweep_params(
+            &[AppId::Sputnipic],
+            &stability_variants()[..2],
+            7,
+        );
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(p.result.completed, "{}", p.label);
+        }
+    }
+
+    #[test]
+    fn variants_have_expected_counts() {
+        assert_eq!(stability_variants().len(), 5);
+        assert_eq!(window_variants().len(), 3);
+    }
+}

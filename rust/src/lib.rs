@@ -1,0 +1,27 @@
+//! **arcv** — a full reproduction of *ARC-V: Vertical Resource Adaptivity
+//! for HPC Workloads in Containerized Environments* (CS.DC 2025).
+//!
+//! Three-layer architecture (DESIGN.md §2): this crate is Layer 3 — the
+//! Rust coordinator, cluster substrate, workload models, policies, and
+//! experiment harness. Layers 2/1 (the JAX decision graph and its Pallas
+//! kernels) live in `python/compile` and reach this crate only as AOT
+//! HLO-text artifacts executed through [`runtime`].
+//!
+//! Quick map:
+//! - [`simkube`] — discrete-time Kubernetes-like cluster (kubelet, QoS,
+//!   in-place resize with §3.2 delays, swap, scheduler, metrics pipeline);
+//! - [`workloads`] — the nine HPC application memory models of Table 1;
+//! - [`policy`] — ARC-V (native + fleet backends), the VPA baselines,
+//!   fixed and oracle references;
+//! - [`runtime`] — PJRT loader/executor for the AOT artifacts;
+//! - [`coordinator`] — controllers wiring policies to the cluster API;
+//! - [`harness`] — experiment runner + reports for every paper figure;
+//! - [`util`] — offline-build support (PRNG, JSON/CSV, args, mini-bench,
+//!   mini-proptest, plots).
+pub mod coordinator;
+pub mod harness;
+pub mod policy;
+pub mod runtime;
+pub mod simkube;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,216 @@
+//! `arcv` — the ARC-V coordinator CLI.
+//!
+//! Subcommands:
+//!   run        one experiment: --app × --policy on the cluster simulator
+//!   evaluate   the full 9-app VPA-vs-ARC-V comparison (Fig 4's numbers)
+//!   calibrate  verify workload models against Table 1
+//!   trace      dump an application's 5 s memory trace as CSV
+//!   artifacts  show the AOT artifact manifest + PJRT platform
+
+use arcv::harness::{ratio_row, ratio_table, run, run_line, ExperimentConfig, PolicyKind};
+use arcv::policy::arcv::{ArcvParams, NativeFleet};
+use arcv::runtime::{Engine, Manifest, XlaFleet};
+use arcv::util::args::ArgSpec;
+use arcv::util::units::fmt_gb;
+use arcv::workloads::{build, check_all, AppId, Trace, TABLE1};
+
+fn main() {
+    let spec = ArgSpec::new("arcv — ARC-V vertical resource adaptivity (paper reproduction)")
+        .positional("command", "run | evaluate | calibrate | trace | artifacts")
+        .opt("app", "kripke", "application (one of the nine Table 1 apps)")
+        .opt("policy", "arcv", "arcv | arcv-fleet | arcv-xla | vpa-sim | vpa-rec | fixed | oracle")
+        .opt("seed", "42", "workload noise seed")
+        .opt("initial-frac", "", "initial limit as fraction of app max (default: policy-specific)")
+        .opt("swap", "hdd", "node swap device: hdd | ssd | off")
+        .opt("out", "", "write series/CSV output to this path")
+        .flag("quiet", "suppress per-run series output");
+    let args = spec.parse_env();
+
+    match args.positional(0).unwrap_or("run") {
+        "run" => cmd_run(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "calibrate" => cmd_calibrate(),
+        "trace" => cmd_trace(&args),
+        "artifacts" => cmd_artifacts(),
+        other => {
+            eprintln!("unknown command {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_app(args: &arcv::util::args::Args) -> AppId {
+    AppId::parse(args.get("app")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
+}
+
+fn make_cfg(args: &arcv::util::args::Args, app: AppId, policy: &str) -> ExperimentConfig {
+    let mut cfg = if policy.starts_with("vpa") {
+        ExperimentConfig::vpa_env(app)
+    } else {
+        ExperimentConfig::arcv_env(app)
+    };
+    cfg.seed = args.get_u64("seed");
+    if !args.get("initial-frac").is_empty() {
+        cfg.initial_frac = args.get_f64("initial-frac");
+    }
+    cfg.swap = match args.get("swap") {
+        "off" => arcv::harness::SwapKind::Disabled,
+        "ssd" => arcv::harness::SwapKind::Ssd(128.0),
+        _ => arcv::harness::SwapKind::Hdd(128.0),
+    };
+    cfg
+}
+
+fn make_policy(policy: &str) -> PolicyKind {
+    let params = ArcvParams::default();
+    match policy {
+        "arcv" => PolicyKind::ArcvNative(params),
+        "arcv-fleet" => PolicyKind::ArcvFleet(params, Box::new(NativeFleet::new(64, params.window))),
+        "arcv-xla" => {
+            let manifest = Manifest::discover().unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2);
+            });
+            let engine = Engine::cpu().expect("PJRT CPU client");
+            let fleet = XlaFleet::from_manifest(&engine, &manifest, 64).expect("load artifact");
+            PolicyKind::ArcvFleet(params, Box::new(fleet))
+        }
+        "vpa-sim" => PolicyKind::VpaSim,
+        "vpa-rec" => PolicyKind::VpaRecommendOnly,
+        "fixed" => PolicyKind::Fixed,
+        "oracle" => PolicyKind::Oracle,
+        other => {
+            eprintln!("unknown policy {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &arcv::util::args::Args) {
+    let app = parse_app(args);
+    let policy = args.get("policy").to_string();
+    let cfg = make_cfg(args, app, &policy);
+    let r = run(&cfg, make_policy(&policy));
+    println!("{}", run_line(&r));
+    if !args.has_flag("quiet") {
+        let usage: Vec<f64> = r.usage_series.iter().map(|&(_, v)| v).collect();
+        let limit: Vec<f64> = r.limit_series.iter().map(|&(_, v)| v).collect();
+        print!(
+            "{}",
+            arcv::util::plot::multi_line(
+                &format!("{} under {} (usage vs limit, GB)", app, r.policy),
+                &[("usage", &usage), ("limit", &limit)],
+                96,
+                18,
+            )
+        );
+    }
+    if !args.get("out").is_empty() {
+        let mut csv = arcv::util::csv::CsvWriter::new(&["t_secs", "usage_gb", "limit_gb", "swap_gb"]);
+        for ((tu, u), ((_, l), (_, s))) in r
+            .usage_series
+            .iter()
+            .zip(r.limit_series.iter().zip(r.swap_series.iter()))
+        {
+            csv.frow(&[*tu as f64, *u, *l, *s]);
+        }
+        csv.save(args.get("out")).expect("write csv");
+        println!("wrote {}", args.get("out"));
+    }
+}
+
+fn cmd_evaluate(args: &arcv::util::args::Args) {
+    let seed = args.get_u64("seed");
+    let mut rows = Vec::new();
+    println!("Running the 9-application evaluation (VPA-sim vs ARC-V) ...");
+    for row in &TABLE1 {
+        let mut vcfg = ExperimentConfig::vpa_env(row.app);
+        vcfg.seed = seed;
+        let vpa = run(&vcfg, PolicyKind::VpaSim);
+        let mut acfg = ExperimentConfig::arcv_env(row.app);
+        acfg.seed = seed;
+        let arcv_r = run(&acfg, PolicyKind::ArcvNative(ArcvParams::default()));
+        println!("  {}", run_line(&vpa));
+        println!("  {}", run_line(&arcv_r));
+        rows.push(ratio_row(&vpa, &arcv_r, row.exec_secs));
+    }
+    println!("\nFig 4 (left) — VPA/ARC-V ratios:\n{}", ratio_table(&rows));
+    if !args.get("out").is_empty() {
+        arcv::harness::ratios_csv(&rows)
+            .save(args.get("out"))
+            .expect("write csv");
+        println!("wrote {}", args.get("out"));
+    }
+}
+
+fn cmd_calibrate() {
+    println!(
+        "{:<12} {:>8} {:>12} {:>14} {:>9} {:>8}",
+        "app", "pattern", "max (meas)", "footprint", "max-err", "fp-err"
+    );
+    let mut ok = true;
+    for (row, rep) in TABLE1.iter().zip(check_all(42)) {
+        ok &= rep.within(0.05);
+        println!(
+            "{:<12} {:>5}->{} {:>12} {:>11.2} TB {:>8.2}% {:>7.2}%",
+            row.app.name(),
+            row.pattern,
+            rep.measured_pattern,
+            fmt_gb(rep.measured_max_gb),
+            rep.measured_footprint_gbs / 1000.0,
+            rep.max_rel_err * 100.0,
+            rep.footprint_rel_err * 100.0,
+        );
+    }
+    println!("\ncalibration {}", if ok { "OK (within ±5%)" } else { "FAILED" });
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+fn cmd_trace(args: &arcv::util::args::Args) {
+    let app = parse_app(args);
+    let model = build(app, args.get_u64("seed"));
+    let trace = Trace::from_model(&model, 5.0);
+    if args.get("out").is_empty() {
+        print!("{}", trace.to_csv());
+    } else {
+        std::fs::write(args.get("out"), trace.to_csv()).expect("write trace");
+        println!(
+            "wrote {} ({} samples, max {}, footprint {:.2} TB·s)",
+            args.get("out"),
+            trace.samples.len(),
+            fmt_gb(trace.max_gb()),
+            trace.footprint_gbs() / 1000.0
+        );
+    }
+}
+
+fn cmd_artifacts() {
+    match Manifest::discover() {
+        Ok(m) => {
+            println!("artifacts dir: {}", m.dir.display());
+            println!("state_len={} params_len={}", m.state_len, m.params_len);
+            for a in &m.artifacts {
+                println!(
+                    "  {:<10} pods={:<4} window={:<3} {}",
+                    a.kind,
+                    a.pods,
+                    a.window,
+                    a.file.file_name().unwrap().to_string_lossy()
+                );
+            }
+            match Engine::cpu() {
+                Ok(e) => println!("PJRT platform: {}", e.platform()),
+                Err(e) => println!("PJRT unavailable: {e}"),
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}

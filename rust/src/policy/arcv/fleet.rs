@@ -1,0 +1,167 @@
+//! Fleet-batched decision backends.
+//!
+//! The coordinator batches every pod's decision into one step call
+//! (`windows[P,W]`, `swap[P]`, packed `states[P,6]`, `params[10]` →
+//! new states + signals). Two interchangeable backends exist:
+//!
+//! - [`NativeFleet`] — loops the native state machine (this module);
+//! - `runtime::engine::XlaFleet` — executes the AOT artifact on PJRT.
+//!
+//! `fleet_equivalence` in rust/tests pins them to each other.
+
+use super::params::ArcvParams;
+use super::state::{PodState, STATE_LEN};
+
+/// A batched ARC-V decision step.
+///
+/// Not `Send`: the XLA backend wraps a PJRT client that is single-threaded
+/// by construction; fleet controllers run on the coordinator thread.
+pub trait DecisionBackend {
+    /// Max pods per call.
+    fn batch(&self) -> usize;
+    /// Window length W.
+    fn window(&self) -> usize;
+    /// Execute one decision tick for `n ≤ batch()` pods.
+    ///
+    /// Layouts: `windows` is `n×W` row-major, `states` is `n×6` row-major
+    /// (updated in place), returned vector holds the `n` signal codes.
+    fn step(
+        &mut self,
+        n: usize,
+        windows: &[f32],
+        swap: &[f32],
+        states: &mut [f32],
+        params: &ArcvParams,
+    ) -> anyhow::Result<Vec<f32>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend: the readable reference implementation.
+pub struct NativeFleet {
+    batch: usize,
+    window: usize,
+    scratch: Vec<f64>,
+}
+
+impl NativeFleet {
+    pub fn new(batch: usize, window: usize) -> Self {
+        Self {
+            batch,
+            window,
+            scratch: vec![0.0; window],
+        }
+    }
+}
+
+impl DecisionBackend for NativeFleet {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+
+    fn step(
+        &mut self,
+        n: usize,
+        windows: &[f32],
+        swap: &[f32],
+        states: &mut [f32],
+        params: &ArcvParams,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(n <= self.batch, "n={n} exceeds batch {}", self.batch);
+        let w = self.window;
+        anyhow::ensure!(windows.len() >= n * w, "windows buffer too small");
+        anyhow::ensure!(states.len() >= n * STATE_LEN, "states buffer too small");
+        let mut signals = Vec::with_capacity(n);
+        for i in 0..n {
+            for j in 0..w {
+                self.scratch[j] = windows[i * w + j] as f64;
+            }
+            let st_slice = &mut states[i * STATE_LEN..(i + 1) * STATE_LEN];
+            let mut st = PodState::unpack(st_slice);
+            let sig = st.step(&self.scratch, swap[i] as f64, params);
+            st.pack(st_slice);
+            signals.push(sig.code() as f32);
+        }
+        Ok(signals)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::state::State;
+    use super::*;
+
+    #[test]
+    fn batched_matches_sequential_single_pod_steps() {
+        let w = 12;
+        let n = 8;
+        let params = ArcvParams::default();
+        let mut windows = vec![0f32; n * w];
+        let mut swap = vec![0f32; n];
+        let mut states = vec![0f32; n * STATE_LEN];
+        for i in 0..n {
+            for j in 0..w {
+                windows[i * w + j] = 1.0 + (i as f32) * 0.5 + (j as f32) * 0.05 * (i % 3) as f32;
+            }
+            swap[i] = if i % 4 == 0 { 0.3 } else { 0.0 };
+            let st = PodState::initial(4.0 + i as f64);
+            st.pack(&mut states[i * STATE_LEN..(i + 1) * STATE_LEN]);
+        }
+        let mut expected_states = states.clone();
+        let mut expected_sigs = Vec::new();
+        for i in 0..n {
+            let sl = &mut expected_states[i * STATE_LEN..(i + 1) * STATE_LEN];
+            let mut st = PodState::unpack(sl);
+            let win: Vec<f64> = (0..w).map(|j| windows[i * w + j] as f64).collect();
+            let sig = st.step(&win, swap[i] as f64, &params);
+            st.pack(sl);
+            expected_sigs.push(sig.code() as f32);
+        }
+
+        let mut fleet = NativeFleet::new(n, w);
+        let sigs = fleet.step(n, &windows, &swap, &mut states, &params).unwrap();
+        assert_eq!(sigs, expected_sigs);
+        for (a, b) in states.iter().zip(&expected_states) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn partial_batch_is_fine() {
+        let mut fleet = NativeFleet::new(64, 12);
+        let windows = vec![2.0f32; 3 * 12];
+        let swap = vec![0f32; 3];
+        let mut states = vec![0f32; 3 * STATE_LEN];
+        for i in 0..3 {
+            PodState::initial(5.0).pack(&mut states[i * STATE_LEN..(i + 1) * STATE_LEN]);
+        }
+        let sigs = fleet
+            .step(3, &windows, &swap, &mut states, &ArcvParams::default())
+            .unwrap();
+        assert_eq!(sigs, vec![0.0; 3]); // flat → no signal
+        let st = PodState::unpack(&states[..STATE_LEN]);
+        assert_eq!(st.state, State::Growing); // one quiet tick isn't enough
+        assert_eq!(st.nosig, 1.0);
+    }
+
+    #[test]
+    fn oversized_n_errors() {
+        let mut fleet = NativeFleet::new(2, 12);
+        let r = fleet.step(
+            3,
+            &vec![0.0; 36],
+            &vec![0.0; 3],
+            &mut vec![0.0; 18],
+            &ArcvParams::default(),
+        );
+        assert!(r.is_err());
+    }
+}

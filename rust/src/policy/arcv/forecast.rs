@@ -1,0 +1,60 @@
+//! Native least-squares forecast — mirrors the L1 Pallas forecast kernel
+//! (python/compile/kernels/forecast.py): OLS over the uniform sample grid,
+//! evaluated `horizon` sample periods past the window end.
+
+use crate::util::stats::linreg;
+
+/// [slope per sample, intercept] of the window's OLS line.
+pub fn fit(window: &[f64]) -> (f64, f64) {
+    linreg(window)
+}
+
+/// Usage forecast `horizon_samples` periods past the last sample.
+pub fn forecast(window: &[f64], horizon_samples: f64) -> f64 {
+    let (slope, intercept) = fit(window);
+    let t_eval = (window.len() as f64 - 1.0) + horizon_samples;
+    slope * t_eval + intercept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extrapolates_perfect_line() {
+        // y = 2t + 5, window of 12, horizon 12 (the paper's 60s at 5s)
+        let w: Vec<f64> = (0..12).map(|t| 2.0 * t as f64 + 5.0).collect();
+        let f = forecast(&w, 12.0);
+        assert!((f - (2.0 * 23.0 + 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_window_forecasts_flat() {
+        assert!((forecast(&[7.0; 12], 12.0) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_horizon_returns_fit_at_end() {
+        let w: Vec<f64> = (0..12).map(|t| 1.0 + 0.5 * t as f64).collect();
+        assert!((forecast(&w, 0.0) - w[11]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_kernel_design_matrix() {
+        // same closed form as design_pinv in the Pallas kernel
+        let w = [3.0, 3.5, 3.2, 4.0, 4.4, 4.1, 5.0, 5.2, 5.1, 5.9, 6.2, 6.0];
+        let (m, b) = fit(&w);
+        // verify against the normal equations computed longhand
+        let n = w.len() as f64;
+        let tbar = (n - 1.0) / 2.0;
+        let ybar: f64 = w.iter().sum::<f64>() / n;
+        let cov: f64 = w
+            .iter()
+            .enumerate()
+            .map(|(i, &y)| (i as f64 - tbar) * (y - ybar))
+            .sum();
+        let var: f64 = (0..w.len()).map(|i| (i as f64 - tbar).powi(2)).sum();
+        assert!((m - cov / var).abs() < 1e-12);
+        assert!((b - (ybar - m * tbar)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! ARC-V — the Adaptive Resource Controller, Vertical (paper §3.3/§4.2).
+//!
+//! Two implementations of the same semantics, pinned together by tests:
+//! the per-pod native policy ([`native::ArcvPolicy`]) and the fleet-batched
+//! backends ([`fleet::DecisionBackend`]: native loop or the AOT XLA
+//! artifact via `runtime::engine`).
+
+pub mod fleet;
+pub mod forecast;
+pub mod native;
+pub mod params;
+pub mod signals;
+pub mod state;
+
+pub use fleet::{DecisionBackend, NativeFleet};
+pub use native::ArcvPolicy;
+pub use params::{ArcvParams, PARAMS_LEN};
+pub use signals::{detect, Signal, WindowStats};
+pub use state::{PodState, State, STATE_LEN};

@@ -1,0 +1,188 @@
+//! ARC-V as a per-pod [`VerticalPolicy`]: window management, the 60 s
+//! initialization grace period, the 60 s decision timeout, and patch
+//! issuance on top of the core state machine.
+
+use super::params::ArcvParams;
+use super::signals::Signal;
+use super::state::{PodState, State};
+use crate::policy::{Action, VerticalPolicy};
+use crate::simkube::metrics::Sample;
+use crate::util::ring::RingBuffer;
+
+pub struct ArcvPolicy {
+    pub params: ArcvParams,
+    window: RingBuffer,
+    state: PodState,
+    swap_gb: f64,
+    started_at: Option<u64>,
+    last_decision: u64,
+    /// Signals history for event analysis (decision tick, signal).
+    pub signal_log: Vec<(u64, Signal)>,
+    scratch: Vec<f64>,
+}
+
+impl ArcvPolicy {
+    pub fn new(initial_rec_gb: f64, params: ArcvParams) -> Self {
+        let window = RingBuffer::new(params.window.max(2));
+        let scratch = vec![0.0; params.window.max(2)];
+        Self {
+            params,
+            window,
+            state: PodState::initial(initial_rec_gb),
+            swap_gb: 0.0,
+            started_at: None,
+            last_decision: 0,
+            signal_log: Vec::new(),
+            scratch,
+        }
+    }
+
+    pub fn state(&self) -> &PodState {
+        &self.state
+    }
+
+    pub fn machine_state(&self) -> State {
+        self.state.state
+    }
+}
+
+impl VerticalPolicy for ArcvPolicy {
+    fn name(&self) -> &str {
+        "arcv"
+    }
+
+    fn observe(&mut self, now: u64, sample: &Sample) {
+        self.started_at.get_or_insert(now);
+        self.window.push(sample.usage_gb);
+        self.swap_gb = sample.swap_gb;
+    }
+
+    fn decide(&mut self, now: u64) -> Action {
+        let Some(t0) = self.started_at else {
+            return Action::None;
+        };
+        // initialization assumption (§4.2): no decisions in the grace phase
+        if now < t0 + self.params.init_phase_secs {
+            return Action::None;
+        }
+        // the 60s decision timeout between state-change decisions
+        if now < self.last_decision + self.params.decision_interval_secs {
+            return Action::None;
+        }
+        if self.window.len() < self.params.window {
+            return Action::None;
+        }
+        self.last_decision = now;
+        let n = self
+            .window
+            .copy_last_into(self.params.window, &mut self.scratch);
+        let prev_rec = self.state.rec;
+        let sig = self.state.step(&self.scratch[..n], self.swap_gb, &self.params);
+        self.signal_log.push((now, sig));
+        if (self.state.rec - prev_rec).abs() / prev_rec.max(1e-9) > 1e-4 {
+            Action::Resize(self.state.rec)
+        } else {
+            Action::None
+        }
+    }
+
+    fn on_oom(&mut self, _now: u64, usage_at_oom_gb: f64) -> Action {
+        // With swap enabled this should never trigger; as a safety net,
+        // restart with conservative headroom over the worst seen.
+        let rec = (self.state.gmax.max(usage_at_oom_gb)) * 1.2;
+        self.state.rec = rec;
+        Action::RestartWith(rec)
+    }
+
+    fn recommendation_gb(&self) -> Option<f64> {
+        Some(self.state.rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(usage: f64, swap: f64) -> Sample {
+        Sample {
+            time: 0,
+            usage_gb: usage,
+            rss_gb: usage - swap,
+            swap_gb: swap,
+            limit_gb: 100.0,
+        }
+    }
+
+    fn feed(policy: &mut ArcvPolicy, t0: u64, usages: &[f64]) -> Vec<(u64, Action)> {
+        // 5s sampling, decide() every second like the coordinator does
+        let mut actions = Vec::new();
+        let mut now = t0;
+        for &u in usages {
+            policy.observe(now, &sample(u, 0.0));
+            for _ in 0..5 {
+                now += 1;
+                let a = policy.decide(now);
+                if a != Action::None {
+                    actions.push((now, a));
+                }
+            }
+        }
+        actions
+    }
+
+    #[test]
+    fn silent_during_init_phase() {
+        let mut p = ArcvPolicy::new(10.0, ArcvParams::default());
+        let acts = feed(&mut p, 0, &vec![2.0; 11]); // 55s < 60s init
+        assert!(acts.is_empty());
+    }
+
+    #[test]
+    fn stable_app_gets_shrunk() {
+        let mut p = ArcvPolicy::new(10.0, ArcvParams::default());
+        let acts = feed(&mut p, 0, &vec![2.0; 280]); // 1400s of flat usage
+        assert!(!acts.is_empty());
+        // recommendations must be monotonically non-increasing toward floor
+        let recs: Vec<f64> = acts
+            .iter()
+            .filter_map(|(_, a)| match a {
+                Action::Resize(r) => Some(*r),
+                _ => None,
+            })
+            .collect();
+        assert!(recs.windows(2).all(|w| w[1] <= w[0] + 1e-9));
+        assert!((recs.last().unwrap() - 2.0 * 1.02).abs() / 2.0 < 0.02);
+    }
+
+    #[test]
+    fn decisions_respect_interval() {
+        let mut p = ArcvPolicy::new(10.0, ArcvParams::default());
+        let acts = feed(&mut p, 0, &vec![2.0; 280]);
+        for w in acts.windows(2) {
+            assert!(w[1].0 - w[0].0 >= 60, "decisions too close: {w:?}");
+        }
+    }
+
+    #[test]
+    fn growing_app_gets_forecast_headroom() {
+        let mut p = ArcvPolicy::new(1.15, ArcvParams::default());
+        // geometric growth at 2.5%/sample — above the 2% stability band,
+        // so every window raises signal I
+        let usages: Vec<f64> = (0..60).map(|i| 1.025f64.powi(i)).collect();
+        let last = *usages.last().unwrap();
+        feed(&mut p, 0, &usages);
+        assert_eq!(p.machine_state(), State::Growing);
+        // rec must stay ahead of live usage the whole time
+        assert!(p.state().rec >= last * 0.95, "rec={} last={last}", p.state().rec);
+    }
+
+    #[test]
+    fn oom_fallback_restarts_with_headroom() {
+        let mut p = ArcvPolicy::new(2.0, ArcvParams::default());
+        p.observe(0, &sample(1.9, 0.0));
+        match p.on_oom(10, 2.1) {
+            Action::RestartWith(r) => assert!((r - 2.1 * 1.2).abs() < 1e-9),
+            a => panic!("expected restart, got {a:?}"),
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! ARC-V policy parameters (paper §4.2) — one struct, mirrored exactly by
+//! the L2 artifact's parameter vector (python/compile/model.py docstring).
+
+/// Number of scalar parameters the AOT artifact expects.
+pub const PARAMS_LEN: usize = 10;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArcvParams {
+    /// Stability factor: relative band treated as "no change" (paper: 2 %).
+    pub stability: f64,
+    /// Forecast only when (rec − need)/need is below this (Growing state).
+    pub gap_thresh: f64,
+    /// Forecast horizon in sample periods (60 s at 5 s sampling = 12).
+    pub horizon_samples: f64,
+    /// Stable-state decay per persistence tick (paper: 10 %).
+    pub stable_decay: f64,
+    /// Stable floor as a ratio over live need (paper: 102 %).
+    pub floor_ratio: f64,
+    /// Consecutive no-signal decisions for Dynamic → Stable.
+    pub dyn_cooldown: f64,
+    /// Consecutive no-signal decisions for Growing → Stable.
+    pub stable_after: f64,
+    /// Headroom multiplier applied to the Growing forecast.
+    pub margin: f64,
+    /// Smallest recommendation ever issued (GB).
+    pub min_rec_gb: f64,
+
+    // ---- L3-only knobs (not part of the artifact vector) ----
+    /// Samples per decision window (W).
+    pub window: usize,
+    /// Seconds between controller decisions (paper: 60 s timeout).
+    pub decision_interval_secs: u64,
+    /// Initialization grace period before the first decision (paper: 60 s).
+    pub init_phase_secs: u64,
+}
+
+impl Default for ArcvParams {
+    fn default() -> Self {
+        Self {
+            stability: 0.02,
+            gap_thresh: 0.10,
+            horizon_samples: 12.0,
+            stable_decay: 0.10,
+            floor_ratio: 1.02,
+            dyn_cooldown: 3.0,
+            stable_after: 3.0,
+            margin: 1.05,
+            min_rec_gb: 0.01,
+            window: 12,
+            decision_interval_secs: 60,
+            init_phase_secs: 60,
+        }
+    }
+}
+
+impl ArcvParams {
+    /// The artifact parameter vector (order fixed by compile/model.py).
+    pub fn to_vec(&self) -> [f32; PARAMS_LEN] {
+        [
+            self.stability as f32,
+            self.gap_thresh as f32,
+            self.horizon_samples as f32,
+            self.stable_decay as f32,
+            self.floor_ratio as f32,
+            self.dyn_cooldown as f32,
+            self.stable_after as f32,
+            self.margin as f32,
+            self.min_rec_gb as f32,
+            0.0,
+        ]
+    }
+
+    pub fn from_vec(v: &[f64], window: usize) -> Self {
+        assert!(v.len() >= 9, "need at least 9 parameters");
+        Self {
+            stability: v[0],
+            gap_thresh: v[1],
+            horizon_samples: v[2],
+            stable_decay: v[3],
+            floor_ratio: v[4],
+            dyn_cooldown: v[5],
+            stable_after: v[6],
+            margin: v[7],
+            min_rec_gb: v[8],
+            window,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = ArcvParams::default();
+        assert_eq!(p.stability, 0.02);
+        assert_eq!(p.stable_decay, 0.10);
+        assert_eq!(p.floor_ratio, 1.02);
+        assert_eq!(p.decision_interval_secs, 60);
+        assert_eq!(p.init_phase_secs, 60);
+        assert_eq!(p.window, 12);
+        // 60s horizon at 5s sampling
+        assert_eq!(p.horizon_samples, 12.0);
+    }
+
+    #[test]
+    fn vec_round_trip() {
+        let p = ArcvParams::default();
+        let v: Vec<f64> = p.to_vec().iter().map(|&x| x as f64).collect();
+        let q = ArcvParams::from_vec(&v, p.window);
+        // f32 round-trip: equal within f32 precision
+        assert!((p.stability - q.stability).abs() < 1e-6);
+        assert!((p.floor_ratio - q.floor_ratio).abs() < 1e-6);
+        assert!((p.margin - q.margin).abs() < 1e-6);
+        assert_eq!(p.window, q.window);
+        assert_eq!(q.dyn_cooldown, 3.0);
+    }
+}

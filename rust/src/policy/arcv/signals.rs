@@ -1,0 +1,152 @@
+//! Native memory-signal detector — the §4.2 sortedness test, mirroring the
+//! L1 Pallas kernel (python/compile/kernels/signals.py) exactly.
+
+/// Signal codes, shared with the artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Signal {
+    /// All consecutive deltas within the stability band.
+    None,
+    /// Sorted ascending with at least one rise beyond the band.
+    I,
+    /// Any drop beyond the band (window not sorted).
+    II,
+}
+
+impl Signal {
+    pub fn code(&self) -> f64 {
+        match self {
+            Signal::None => 0.0,
+            Signal::I => 1.0,
+            Signal::II => 2.0,
+        }
+    }
+
+    pub fn from_code(c: f64) -> Signal {
+        if c >= 1.5 {
+            Signal::II
+        } else if c >= 0.5 {
+            Signal::I
+        } else {
+            Signal::None
+        }
+    }
+}
+
+const EPS: f64 = 1e-9;
+
+/// Window statistics the state machine consumes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowStats {
+    pub min: f64,
+    pub max: f64,
+    pub last: f64,
+    pub mean: f64,
+}
+
+/// Classify a usage window; `stability` is the ±band (paper: 0.02).
+/// Decrease dominates (a non-sorted window is signal II regardless of
+/// rises), matching the kernel.
+pub fn detect(window: &[f64], stability: f64) -> (Signal, WindowStats) {
+    assert!(window.len() >= 2, "signal detection needs >= 2 samples");
+    let mut dec = false;
+    let mut inc = false;
+    for w in window.windows(2) {
+        let rel = (w[1] - w[0]) / w[0].abs().max(EPS);
+        if rel < -stability {
+            dec = true;
+        } else if rel > stability {
+            inc = true;
+        }
+    }
+    let sig = if dec {
+        Signal::II
+    } else if inc {
+        Signal::I
+    } else {
+        Signal::None
+    };
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    let mut sum = 0.0;
+    for &x in window {
+        min = min.min(x);
+        max = max.max(x);
+        sum += x;
+    }
+    (
+        sig,
+        WindowStats {
+            min,
+            max,
+            last: *window.last().unwrap(),
+            mean: sum / window.len() as f64,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_is_none() {
+        let (s, st) = detect(&[4.2; 12], 0.02);
+        assert_eq!(s, Signal::None);
+        assert_eq!(st.min, 4.2);
+        assert_eq!(st.max, 4.2);
+    }
+
+    #[test]
+    fn monotonic_growth_is_i() {
+        let w: Vec<f64> = (0..12).map(|i| 1.0 + 0.1 * i as f64).collect();
+        assert_eq!(detect(&w, 0.02).0, Signal::I);
+    }
+
+    #[test]
+    fn any_big_drop_is_ii() {
+        let mut w: Vec<f64> = (0..12).map(|i| 1.0 + 0.1 * i as f64).collect();
+        w[7] = 0.5;
+        assert_eq!(detect(&w, 0.02).0, Signal::II);
+    }
+
+    #[test]
+    fn drops_within_band_ignored() {
+        let w = [1.0, 0.99, 1.0, 0.995, 1.0];
+        assert_eq!(detect(&w, 0.02).0, Signal::None);
+    }
+
+    #[test]
+    fn band_is_relative_to_previous_sample() {
+        // a drop from 100 to 97 is -3% → II even though absolute delta small
+        assert_eq!(detect(&[100.0, 97.0], 0.02).0, Signal::II);
+        // from 100 to 98.5 is -1.5% → within band
+        assert_eq!(detect(&[100.0, 98.5], 0.02).0, Signal::None);
+    }
+
+    #[test]
+    fn decrease_dominates() {
+        assert_eq!(detect(&[1.0, 2.0, 1.0, 2.0], 0.02).0, Signal::II);
+    }
+
+    #[test]
+    fn stats_layout_matches_kernel() {
+        let (_, st) = detect(&[3.0, 1.0, 4.0, 1.5], 0.02);
+        assert_eq!(st.min, 1.0);
+        assert_eq!(st.max, 4.0);
+        assert_eq!(st.last, 1.5);
+        assert!((st.mean - 2.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn code_round_trip() {
+        for s in [Signal::None, Signal::I, Signal::II] {
+            assert_eq!(Signal::from_code(s.code()), s);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_window_panics() {
+        detect(&[1.0], 0.02);
+    }
+}

@@ -1,0 +1,343 @@
+//! The ARC-V state machine (paper §3.3, Fig 3) — native mirror of the L2
+//! decision step in python/compile/model.py. The packed-state layout and
+//! every transition rule match the artifact; the cross-language golden test
+//! (rust/tests/golden_step.rs) pins the two together.
+
+use super::forecast::forecast;
+use super::params::ArcvParams;
+use super::signals::{detect, Signal};
+
+pub const STATE_LEN: usize = 6;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum State {
+    Growing,
+    Dynamic,
+    Stable,
+}
+
+impl State {
+    pub fn code(&self) -> f64 {
+        match self {
+            State::Growing => 0.0,
+            State::Dynamic => 1.0,
+            State::Stable => 2.0,
+        }
+    }
+
+    pub fn from_code(c: f64) -> State {
+        if c >= 1.5 {
+            State::Stable
+        } else if c >= 0.5 {
+            State::Dynamic
+        } else {
+            State::Growing
+        }
+    }
+}
+
+impl std::fmt::Display for State {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            State::Growing => "Growing",
+            State::Dynamic => "Dynamic",
+            State::Stable => "Stable",
+        })
+    }
+}
+
+/// Per-pod controller state (the packed vector of the artifact).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PodState {
+    pub state: State,
+    /// Consecutive decision ticks without a signal.
+    pub nosig: f64,
+    /// Consecutive ticks persisted in Stable.
+    pub persist: f64,
+    /// Global max usage observed (GB).
+    pub gmax: f64,
+    /// Current recommendation (GB).
+    pub rec: f64,
+}
+
+const EPS: f64 = 1e-9;
+
+impl PodState {
+    /// Fresh state: applications start in Growing (they have an
+    /// initialization phase, §3.3) with the initial allocation as rec.
+    pub fn initial(rec_gb: f64) -> Self {
+        Self {
+            state: State::Growing,
+            nosig: 0.0,
+            persist: 0.0,
+            gmax: 0.0,
+            rec: rec_gb,
+        }
+    }
+
+    /// Pack into the artifact's 6-float layout.
+    pub fn pack(&self, out: &mut [f32]) {
+        out[0] = self.state.code() as f32;
+        out[1] = self.nosig as f32;
+        out[2] = self.persist as f32;
+        out[3] = self.gmax as f32;
+        out[4] = self.rec as f32;
+        out[5] = 0.0;
+    }
+
+    pub fn unpack(v: &[f32]) -> Self {
+        Self {
+            state: State::from_code(v[0] as f64),
+            nosig: v[1] as f64,
+            persist: v[2] as f64,
+            gmax: v[3] as f64,
+            rec: v[4] as f64,
+        }
+    }
+
+    /// One decision tick. `window` is the last W usage samples (GB, oldest
+    /// first, W ≥ 2), `swap_gb` the pod's current swap residency.
+    /// Returns the detected signal (for event logging).
+    pub fn step(&mut self, window: &[f64], swap_gb: f64, p: &ArcvParams) -> Signal {
+        let (sig, stats) = detect(window, p.stability);
+        let fc = forecast(window, p.horizon_samples);
+
+        let usage = stats.last;
+        let need = usage + swap_gb;
+        let gmax_new = self.gmax.max(stats.max);
+
+        let sig_none = sig == Signal::None;
+        let sig_i = sig == Signal::I;
+        let sig_ii = sig == Signal::II;
+
+        // ---- streaks (computed as in the artifact: before transitions) ----
+        let mut nosig_new = if sig_none { self.nosig + 1.0 } else { 0.0 };
+        let mut persist_new = if self.state == State::Stable && sig_none {
+            self.persist + 1.0
+        } else {
+            0.0
+        };
+
+        // ---- transitions (Fig 3) ----
+        let st_new = match self.state {
+            State::Growing => {
+                if sig_ii {
+                    State::Dynamic
+                } else if nosig_new >= p.stable_after {
+                    State::Stable
+                } else {
+                    State::Growing
+                }
+            }
+            // Dynamic → Growing is forbidden (§3.3)
+            State::Dynamic => {
+                if nosig_new >= p.dyn_cooldown {
+                    State::Stable
+                } else {
+                    State::Dynamic
+                }
+            }
+            State::Stable => {
+                if sig_i {
+                    State::Growing
+                } else if sig_ii {
+                    State::Dynamic
+                } else {
+                    State::Stable
+                }
+            }
+        };
+        if st_new != self.state {
+            nosig_new = 0.0;
+            persist_new = 0.0;
+        }
+
+        // ---- per-state recommendation ----
+        // The Growing adjustment only ever ADDS headroom (max with the
+        // current rec): decreases belong to the Stable/Dynamic policies.
+        let gap = (self.rec - need) / need.max(EPS);
+        let fc_rec = (need * p.floor_ratio).max((fc + swap_gb) * p.margin);
+        let grow_rec = if sig_i && gap < p.gap_thresh {
+            self.rec.max(fc_rec)
+        } else {
+            self.rec
+        };
+        // Dynamic is "very conservative ... as there can be steep spikes"
+        // (§3.3): the global-max floor plus the safety margin, since bursts
+        // often exceed all previous peaks.
+        let dyn_rec = gmax_new.max(need) * p.margin;
+        let stab_decayed = (self.rec * (1.0 - p.stable_decay)).max(need * p.floor_ratio);
+        let stab_rec = if sig_none { stab_decayed } else { self.rec };
+
+        let mut rec_state = match self.state {
+            State::Growing => grow_rec,
+            State::Dynamic => dyn_rec,
+            State::Stable => stab_rec,
+        };
+        // entering Dynamic applies the conservative floor immediately
+        if st_new == State::Dynamic {
+            rec_state = rec_state.max(dyn_rec);
+        }
+        let rec_new = rec_state.max(need).max(p.min_rec_gb);
+
+        self.state = st_new;
+        self.nosig = nosig_new;
+        self.persist = persist_new;
+        self.gmax = gmax_new;
+        self.rec = rec_new;
+        sig
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> ArcvParams {
+        ArcvParams::default()
+    }
+
+    fn grow_window() -> Vec<f64> {
+        (0..12).map(|i| 1.0 + 0.1 * i as f64).collect()
+    }
+
+    fn flat_window(v: f64) -> Vec<f64> {
+        vec![v; 12]
+    }
+
+    fn drop_window() -> Vec<f64> {
+        let mut w = vec![4.0; 12];
+        for x in w.iter_mut().skip(6) {
+            *x = 2.0;
+        }
+        w
+    }
+
+    #[test]
+    fn growing_sig_ii_goes_dynamic() {
+        let mut s = PodState::initial(5.0);
+        let sig = s.step(&drop_window(), 0.0, &p());
+        assert_eq!(sig, Signal::II);
+        assert_eq!(s.state, State::Dynamic);
+        assert_eq!(s.nosig, 0.0);
+    }
+
+    #[test]
+    fn growing_needs_streak_for_stable() {
+        let mut s = PodState::initial(5.0);
+        for i in 0..3 {
+            s.step(&flat_window(2.0), 0.0, &p());
+            if i < 2 {
+                assert_eq!(s.state, State::Growing, "tick {i}");
+            }
+        }
+        assert_eq!(s.state, State::Stable);
+    }
+
+    #[test]
+    fn dynamic_never_goes_growing() {
+        let mut s = PodState::initial(5.0);
+        s.state = State::Dynamic;
+        s.gmax = 3.0;
+        let sig = s.step(&grow_window(), 0.0, &p());
+        assert_eq!(sig, Signal::I);
+        assert_eq!(s.state, State::Dynamic);
+    }
+
+    #[test]
+    fn dynamic_cooldown_to_stable_then_signals_out() {
+        let mut s = PodState::initial(9.0);
+        s.state = State::Dynamic;
+        s.gmax = 3.0;
+        for _ in 0..3 {
+            s.step(&flat_window(2.0), 0.0, &p());
+        }
+        assert_eq!(s.state, State::Stable);
+        s.step(&grow_window(), 0.0, &p());
+        assert_eq!(s.state, State::Growing);
+    }
+
+    #[test]
+    fn stable_decays_10_percent_to_floor() {
+        let mut s = PodState::initial(10.0);
+        s.state = State::Stable;
+        s.step(&flat_window(2.0), 0.0, &p());
+        assert!((s.rec - 9.0).abs() < 1e-9);
+        // keep decaying to 102% of usage, never below
+        for _ in 0..30 {
+            s.step(&flat_window(2.0), 0.0, &p());
+        }
+        assert!((s.rec - 2.0 * 1.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn growing_forecast_extends_rec_when_gap_small() {
+        let w = grow_window(); // live = 2.1, slope 0.1/sample
+        let mut s = PodState::initial(2.2); // gap < 10%
+        s.step(&w, 0.0, &p());
+        // forecast at t=11+12: 1.0 + 0.1*23 = 3.3, ×1.05 margin
+        assert!((s.rec - 3.3 * 1.05).abs() < 1e-6, "rec={}", s.rec);
+        assert_eq!(s.state, State::Growing);
+    }
+
+    #[test]
+    fn growing_large_gap_keeps_rec() {
+        let mut s = PodState::initial(50.0);
+        s.step(&grow_window(), 0.0, &p());
+        assert_eq!(s.rec, 50.0);
+    }
+
+    #[test]
+    fn dynamic_floor_is_global_max_with_margin() {
+        let mut s = PodState::initial(12.0);
+        s.state = State::Dynamic;
+        s.gmax = 8.0;
+        s.step(&flat_window(2.0), 0.0, &p());
+        assert!((s.rec - 8.0 * 1.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn swap_usage_raises_need() {
+        let mut s = PodState::initial(2.05);
+        s.state = State::Stable;
+        s.step(&flat_window(2.0), 1.5, &p());
+        // need = 3.5; rec must cover it
+        assert!(s.rec >= 3.5);
+    }
+
+    #[test]
+    fn rec_never_below_need_or_min() {
+        let mut s = PodState::initial(0.001);
+        s.step(&flat_window(6.0), 0.0, &p());
+        assert!(s.rec >= 6.0);
+        let mut tiny = PodState::initial(0.0001);
+        tiny.step(&flat_window(0.0001), 0.0, &p());
+        assert!(tiny.rec >= p().min_rec_gb);
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        let s = PodState {
+            state: State::Dynamic,
+            nosig: 2.0,
+            persist: 1.0,
+            gmax: 7.5,
+            rec: 9.25,
+        };
+        let mut buf = [0f32; STATE_LEN];
+        s.pack(&mut buf);
+        let t = PodState::unpack(&buf);
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    fn gmax_is_monotonic() {
+        let mut s = PodState::initial(10.0);
+        s.step(&flat_window(5.0), 0.0, &p());
+        assert_eq!(s.gmax, 5.0);
+        s.step(&flat_window(2.0), 0.0, &p());
+        assert_eq!(s.gmax, 5.0); // never decreases
+        s.step(&flat_window(8.0), 0.0, &p());
+        assert_eq!(s.gmax, 8.0);
+    }
+}

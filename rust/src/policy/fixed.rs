@@ -1,0 +1,53 @@
+//! Static full-allocation baseline — the traditional HPC provisioning of
+//! Fig 1 (left): the whole reservation is held for the entire run, never
+//! resized. Used by the Fig 1 ablation scene and the overhead accounting.
+
+use super::{Action, VerticalPolicy};
+use crate::simkube::metrics::Sample;
+
+pub struct FixedPolicy {
+    limit_gb: f64,
+}
+
+impl FixedPolicy {
+    pub fn new(limit_gb: f64) -> Self {
+        Self { limit_gb }
+    }
+}
+
+impl VerticalPolicy for FixedPolicy {
+    fn name(&self) -> &str {
+        "fixed"
+    }
+
+    fn observe(&mut self, _now: u64, _sample: &Sample) {}
+
+    fn decide(&mut self, _now: u64) -> Action {
+        Action::None
+    }
+
+    fn on_oom(&mut self, _now: u64, usage_at_oom_gb: f64) -> Action {
+        // A fixed allocation that OOMs is simply under-provisioned; restart
+        // unchanged is futile, so give it what it asked plus slack.
+        Action::RestartWith(usage_at_oom_gb * 1.5)
+    }
+
+    fn recommendation_gb(&self) -> Option<f64> {
+        Some(self.limit_gb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_acts() {
+        let mut p = FixedPolicy::new(256.0);
+        p.observe(0, &Sample::default());
+        for t in 0..1000 {
+            assert_eq!(p.decide(t), Action::None);
+        }
+        assert_eq!(p.recommendation_gb(), Some(256.0));
+    }
+}

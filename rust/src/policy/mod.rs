@@ -1,0 +1,47 @@
+//! Vertical autoscaling policies (systems S9–S11).
+//!
+//! Everything that decides a pod's memory allocation implements
+//! [`VerticalPolicy`]; the coordinator feeds it sampled metrics and applies
+//! the actions it returns through the cluster API. Implementations:
+//!
+//! - [`arcv`] — the paper's contribution (native state machine + the
+//!   XLA-artifact fleet backend),
+//! - [`vpa`] — the Kubernetes VPA: the paper's §4.1 simulator and a fuller
+//!   decaying-histogram recommender,
+//! - [`fixed`] — static bare-metal-style allocation (Fig 1 left),
+//! - [`oracle`] — clairvoyant lower bound for ablations.
+
+pub mod arcv;
+pub mod fixed;
+pub mod oracle;
+pub mod vpa;
+
+use crate::simkube::metrics::Sample;
+
+/// What a policy wants done to its pod.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    None,
+    /// In-place resize of memory request+limit to this many GB (§3.2).
+    Resize(f64),
+    /// Evict and restart with this memory (the VPA Updater path).
+    RestartWith(f64),
+}
+
+pub trait VerticalPolicy: Send {
+    fn name(&self) -> &str;
+
+    /// Called on every sampling tick (5 s) with fresh cAdvisor metrics.
+    fn observe(&mut self, now: u64, sample: &Sample);
+
+    /// Called every second; the policy decides internally whether its
+    /// decision timeout elapsed. Return the action to apply now.
+    fn decide(&mut self, now: u64) -> Action;
+
+    /// Called when the pod was OOM-killed (only possible when the node has
+    /// no swap). The returned action is typically a restart.
+    fn on_oom(&mut self, now: u64, usage_at_oom_gb: f64) -> Action;
+
+    /// Current recommendation (GB) for reporting, if the policy has one.
+    fn recommendation_gb(&self) -> Option<f64>;
+}

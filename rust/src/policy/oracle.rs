@@ -1,0 +1,114 @@
+//! Clairvoyant oracle policy: knows the full usage trace ahead of time and
+//! provisions the minimum limit that avoids both OOM and swap. The tightest
+//! achievable footprint — the lower bound the ablation bench compares
+//! ARC-V's savings against.
+
+use super::{Action, VerticalPolicy};
+use crate::simkube::metrics::Sample;
+
+pub struct OraclePolicy {
+    /// usage at 1 s resolution, GB
+    trace: Vec<f64>,
+    /// how far ahead the oracle provisions (covers resize sync latency)
+    lead_secs: usize,
+    /// multiplicative headroom
+    margin: f64,
+    decision_interval: u64,
+    last_decision: u64,
+    current: f64,
+}
+
+impl OraclePolicy {
+    pub fn new(trace: Vec<f64>, lead_secs: usize, margin: f64, decision_interval: u64) -> Self {
+        assert!(!trace.is_empty());
+        Self {
+            trace,
+            lead_secs,
+            margin,
+            decision_interval,
+            last_decision: 0,
+            current: f64::NAN,
+        }
+    }
+
+    fn needed_at(&self, now: u64) -> f64 {
+        let a = (now as usize).min(self.trace.len() - 1);
+        let b = (a + self.lead_secs + self.decision_interval as usize).min(self.trace.len() - 1);
+        let peak = self.trace[a..=b].iter().cloned().fold(f64::MIN, f64::max);
+        peak * self.margin
+    }
+}
+
+impl VerticalPolicy for OraclePolicy {
+    fn name(&self) -> &str {
+        "oracle"
+    }
+
+    fn observe(&mut self, _now: u64, _sample: &Sample) {}
+
+    fn decide(&mut self, now: u64) -> Action {
+        if now < self.last_decision + self.decision_interval {
+            return Action::None;
+        }
+        self.last_decision = now;
+        let need = self.needed_at(now);
+        if self.current.is_nan() || (need - self.current).abs() / self.current > 1e-4 {
+            self.current = need;
+            Action::Resize(need)
+        } else {
+            Action::None
+        }
+    }
+
+    fn on_oom(&mut self, _now: u64, usage_at_oom_gb: f64) -> Action {
+        Action::RestartWith(usage_at_oom_gb * self.margin.max(1.1))
+    }
+
+    fn recommendation_gb(&self) -> Option<f64> {
+        if self.current.is_nan() {
+            None
+        } else {
+            Some(self.current)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn provisions_future_peak() {
+        // peak of 8 at t=70 must be provisioned by the decision at t=60
+        let mut trace = vec![2.0; 200];
+        trace[70] = 8.0;
+        let mut p = OraclePolicy::new(trace, 15, 1.02, 60);
+        match p.decide(60) {
+            Action::Resize(r) => assert!((r - 8.0 * 1.02).abs() < 1e-9),
+            a => panic!("{a:?}"),
+        }
+    }
+
+    #[test]
+    fn respects_decision_interval() {
+        let mut p = OraclePolicy::new(vec![2.0; 500], 15, 1.02, 60);
+        assert_ne!(p.decide(60), Action::None);
+        assert_eq!(p.decide(61), Action::None);
+        assert_eq!(p.decide(119), Action::None);
+        // at 120 nothing changed → still None (stable trace)
+        assert_eq!(p.decide(120), Action::None);
+    }
+
+    #[test]
+    fn tracks_decreasing_trace_down() {
+        let mut trace = vec![8.0; 100];
+        trace.extend(vec![2.0; 400]);
+        let mut p = OraclePolicy::new(trace, 15, 1.02, 60);
+        p.decide(60);
+        let hi = p.recommendation_gb().unwrap();
+        p.decide(200);
+        let lo = p.recommendation_gb().unwrap();
+        assert!(lo < hi);
+        assert!((lo - 2.0 * 1.02).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,7 @@
+//! Kubernetes Vertical Pod Autoscaler baselines (paper §2.3 / §4.1).
+
+pub mod recommender;
+pub mod simulator;
+
+pub use recommender::{HistogramRecommender, UpdateMode, VpaFullPolicy};
+pub use simulator::VpaSimPolicy;

@@ -1,0 +1,219 @@
+//! A fuller VPA Recommender: exponentially-bucketed decaying histogram with
+//! percentile targeting — the model behind Fig 2's recommendation line.
+//!
+//! Mirrors the upstream autoscaler's design: samples land in buckets that
+//! grow by 5 % per step; weights decay with a half-life (upstream: 24 h);
+//! the recommendation is a target percentile (p90 target / p95 upper bound)
+//! plus a 15 % safety margin. Slow adaptation on HPC's bursty inputs is
+//! exactly the limitation §2.3 reports.
+
+use crate::policy::{Action, VerticalPolicy};
+use crate::simkube::metrics::Sample;
+
+pub struct HistogramRecommender {
+    /// bucket i covers [first·ratio^i, first·ratio^(i+1))
+    first_gb: f64,
+    ratio: f64,
+    weights: Vec<f64>,
+    total_weight: f64,
+    half_life_secs: f64,
+    /// reference time for decay normalization
+    ref_time: u64,
+    pub percentile: f64,
+    pub safety_margin: f64,
+}
+
+impl HistogramRecommender {
+    pub fn new() -> Self {
+        Self {
+            first_gb: 0.001,
+            ratio: 1.05,
+            weights: vec![0.0; 400],
+            total_weight: 0.0,
+            half_life_secs: 24.0 * 3600.0,
+            ref_time: 0,
+            percentile: 0.95,
+            safety_margin: 0.15,
+        }
+    }
+
+    fn bucket_of(&self, gb: f64) -> usize {
+        if gb <= self.first_gb {
+            return 0;
+        }
+        let i = (gb / self.first_gb).ln() / self.ratio.ln();
+        (i.floor() as usize).min(self.weights.len() - 1)
+    }
+
+    fn bucket_upper(&self, i: usize) -> f64 {
+        self.first_gb * self.ratio.powi(i as i32 + 1)
+    }
+
+    pub fn add_sample(&mut self, now: u64, gb: f64) {
+        // newer samples weigh more: weight = 2^((now - ref)/half_life)
+        let w = 2f64.powf((now.saturating_sub(self.ref_time)) as f64 / self.half_life_secs);
+        let b = self.bucket_of(gb);
+        self.weights[b] += w;
+        self.total_weight += w;
+    }
+
+    pub fn percentile_gb(&self, q: f64) -> f64 {
+        if self.total_weight <= 0.0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.total_weight;
+        let mut acc = 0.0;
+        for (i, &w) in self.weights.iter().enumerate() {
+            acc += w;
+            if acc >= target {
+                return self.bucket_upper(i);
+            }
+        }
+        self.bucket_upper(self.weights.len() - 1)
+    }
+
+    /// The recommendation: target percentile + safety margin.
+    pub fn recommend_gb(&self) -> f64 {
+        self.percentile_gb(self.percentile) * (1.0 + self.safety_margin)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_weight == 0.0
+    }
+}
+
+impl Default for HistogramRecommender {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Whether the Updater acts on recommendations (Fig 2 runs with Off).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateMode {
+    /// Recommend only (updates disabled — Fig 2's setup).
+    Off,
+    /// Evict + restart when usage exceeds the recommendation (the stock
+    /// Updater; disruptive for HPC, §2.3).
+    Recreate,
+}
+
+pub struct VpaFullPolicy {
+    pub recommender: HistogramRecommender,
+    pub mode: UpdateMode,
+    min_rec_gb: f64,
+}
+
+impl VpaFullPolicy {
+    pub fn new(mode: UpdateMode) -> Self {
+        Self {
+            recommender: HistogramRecommender::new(),
+            mode,
+            min_rec_gb: 0.01,
+        }
+    }
+}
+
+impl VerticalPolicy for VpaFullPolicy {
+    fn name(&self) -> &str {
+        "vpa-full"
+    }
+
+    fn observe(&mut self, now: u64, sample: &Sample) {
+        self.recommender.add_sample(now, sample.usage_gb);
+    }
+
+    fn decide(&mut self, _now: u64) -> Action {
+        Action::None // the Recommender never patches in place
+    }
+
+    fn on_oom(&mut self, _now: u64, usage_at_oom_gb: f64) -> Action {
+        let rec = self
+            .recommender
+            .recommend_gb()
+            .max(usage_at_oom_gb * 1.2)
+            .max(self.min_rec_gb);
+        Action::RestartWith(rec)
+    }
+
+    fn recommendation_gb(&self) -> Option<f64> {
+        if self.recommender.is_empty() {
+            None
+        } else {
+            Some(self.recommender.recommend_gb().max(self.min_rec_gb))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recommendation_tracks_steady_usage() {
+        let mut r = HistogramRecommender::new();
+        for t in 0..1000 {
+            r.add_sample(t * 5, 4.0);
+        }
+        let rec = r.recommend_gb();
+        // p95 of constant 4.0 is the bucket upper ≥ 4.0, + 15% margin
+        assert!(rec >= 4.0 * 1.15 && rec <= 4.0 * 1.05 * 1.15 * 1.05, "rec={rec}");
+    }
+
+    #[test]
+    fn percentile_orders_buckets() {
+        let mut r = HistogramRecommender::new();
+        for t in 0..90 {
+            r.add_sample(t, 1.0);
+        }
+        for t in 90..100 {
+            r.add_sample(t, 10.0);
+        }
+        assert!(r.percentile_gb(0.5) < 2.0);
+        assert!(r.percentile_gb(0.99) > 9.0);
+    }
+
+    #[test]
+    fn newer_samples_dominate_old_ones() {
+        let mut r = HistogramRecommender::new();
+        // a day of low usage, then a day of high usage
+        for t in 0..1000 {
+            r.add_sample(t * 86, 1.0);
+        }
+        for t in 1000..2000 {
+            r.add_sample(t * 86, 8.0);
+        }
+        // p50 should now sit in the high region (recent weight > old)
+        assert!(r.percentile_gb(0.5) > 4.0);
+    }
+
+    #[test]
+    fn slow_adaptation_on_spikes_matches_2_3() {
+        // a single spike leaves p95 nearly untouched → the VPA is slow to
+        // adapt, the exact HPC failure mode the paper reports
+        let mut r = HistogramRecommender::new();
+        for t in 0..500 {
+            r.add_sample(t * 5, 2.0);
+        }
+        r.add_sample(2501, 60.0);
+        assert!(r.recommend_gb() < 4.0);
+    }
+
+    #[test]
+    fn full_policy_exposes_recommendation() {
+        let mut p = VpaFullPolicy::new(UpdateMode::Off);
+        assert_eq!(p.recommendation_gb(), None);
+        p.observe(
+            0,
+            &Sample {
+                time: 0,
+                usage_gb: 3.0,
+                rss_gb: 3.0,
+                swap_gb: 0.0,
+                limit_gb: 8.0,
+            },
+        );
+        assert!(p.recommendation_gb().unwrap() > 3.0);
+        assert_eq!(p.decide(100), Action::None);
+    }
+}

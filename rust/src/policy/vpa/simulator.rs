@@ -1,0 +1,102 @@
+//! The paper's VPA simulator (§4.1) — the Fig 4 comparison baseline.
+//!
+//! Procedure, verbatim from the paper:
+//! 1. the first recommendation is the configured initial value (the paper
+//!    replaces VPA's bottom-up zero start, which could never run the app);
+//! 2. recommendations are static while usage stays below them;
+//! 3. usage above the recommendation is an OOM: the application restarts
+//!    (from scratch — no checkpointing) with a recommendation 20 % higher
+//!    than what it requested right before the kill.
+
+use crate::policy::{Action, VerticalPolicy};
+use crate::simkube::metrics::Sample;
+
+pub struct VpaSimPolicy {
+    rec_gb: f64,
+    /// The VPA restart margin (default 20 %, per the VPA design docs).
+    pub oom_margin: f64,
+    ooms: u32,
+}
+
+impl VpaSimPolicy {
+    pub fn new(initial_rec_gb: f64) -> Self {
+        Self {
+            rec_gb: initial_rec_gb,
+            oom_margin: 0.20,
+            ooms: 0,
+        }
+    }
+
+    pub fn oom_count(&self) -> u32 {
+        self.ooms
+    }
+}
+
+impl VerticalPolicy for VpaSimPolicy {
+    fn name(&self) -> &str {
+        "vpa-sim"
+    }
+
+    fn observe(&mut self, _now: u64, _sample: &Sample) {
+        // static between OOMs — the simulator's defining property
+    }
+
+    fn decide(&mut self, _now: u64) -> Action {
+        Action::None
+    }
+
+    fn on_oom(&mut self, _now: u64, usage_at_oom_gb: f64) -> Action {
+        self.ooms += 1;
+        // "20% higher than what was requested immediately before restart"
+        self.rec_gb = self.rec_gb.max(usage_at_oom_gb) * (1.0 + self.oom_margin);
+        Action::RestartWith(self.rec_gb)
+    }
+
+    fn recommendation_gb(&self) -> Option<f64> {
+        Some(self.rec_gb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_until_oom() {
+        let mut p = VpaSimPolicy::new(2.0);
+        p.observe(0, &Sample::default());
+        assert_eq!(p.decide(60), Action::None);
+        assert_eq!(p.recommendation_gb(), Some(2.0));
+    }
+
+    #[test]
+    fn oom_staircase_is_20_percent() {
+        let mut p = VpaSimPolicy::new(1.0);
+        // usage just crossed the rec
+        match p.on_oom(10, 1.01) {
+            Action::RestartWith(r) => assert!((r - 1.212).abs() < 1e-9),
+            a => panic!("{a:?}"),
+        }
+        // a second OOM compounds from the new rec
+        match p.on_oom(30, 1.25) {
+            Action::RestartWith(r) => assert!((r - 1.5).abs() < 1e-9),
+            a => panic!("{a:?}"),
+        }
+        assert_eq!(p.oom_count(), 2);
+    }
+
+    #[test]
+    fn restarts_needed_to_cover_max() {
+        // From 20% of max, each OOM multiplies by 1.2 — the Fig 4 right
+        // staircase needs ~9 restarts to reach 100%.
+        let mut p = VpaSimPolicy::new(0.2);
+        let mut restarts = 0;
+        while p.recommendation_gb().unwrap() < 1.0 {
+            let rec = p.recommendation_gb().unwrap();
+            p.on_oom(0, rec);
+            restarts += 1;
+            assert!(restarts < 20);
+        }
+        assert_eq!(restarts, 9); // 0.2 · 1.2⁹ ≈ 1.03
+    }
+}

@@ -1,0 +1,161 @@
+//! Artifact discovery: locate `artifacts/` and parse `manifest.json`
+//! (written by python/compile/aot.py at build time).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub kind: String,
+    pub file: PathBuf,
+    pub pods: usize,
+    pub window: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub state_len: usize,
+    pub params_len: usize,
+    pub default_params: Vec<f64>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+/// Locate the artifacts directory: `$ARCV_ARTIFACTS`, else `./artifacts`,
+/// else `<repo>/artifacts` walking up from the current exe/cwd.
+pub fn find_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("ARCV_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").is_file() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").is_file() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        let state_len = j
+            .get("state_len")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing state_len"))?;
+        let params_len = j
+            .get("params_len")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing params_len"))?;
+        let default_params = j
+            .get("default_params")
+            .and_then(Json::as_f64_vec)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing default_params"))?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+        {
+            artifacts.push(ArtifactInfo {
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                file: dir.join(a.get("file").and_then(Json::as_str).unwrap_or_default()),
+                pods: a.get("pods").and_then(Json::as_usize).unwrap_or(0),
+                window: a.get("window").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            state_len,
+            params_len,
+            default_params,
+            artifacts,
+        })
+    }
+
+    /// Discover + load in one call.
+    pub fn discover() -> anyhow::Result<Manifest> {
+        let dir = find_dir().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifacts/manifest.json not found — run `make artifacts` \
+                 (or set ARCV_ARTIFACTS)"
+            )
+        })?;
+        Self::load(&dir)
+    }
+
+    /// Smallest arcv_step variant with batch ≥ `min_pods`, else the largest.
+    pub fn step_artifact(&self, min_pods: usize) -> Option<&ArtifactInfo> {
+        let mut steps: Vec<&ArtifactInfo> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "arcv_step")
+            .collect();
+        steps.sort_by_key(|a| a.pods);
+        steps
+            .iter()
+            .find(|a| a.pods >= min_pods)
+            .copied()
+            .or_else(|| steps.last().copied())
+    }
+
+    pub fn forecast_artifact(&self, min_pods: usize) -> Option<&ArtifactInfo> {
+        let mut v: Vec<&ArtifactInfo> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "forecast")
+            .collect();
+        v.sort_by_key(|a| a.pods);
+        v.iter().find(|a| a.pods >= min_pods).copied().or_else(|| v.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        // integration-style: only meaningful after `make artifacts`
+        if let Some(dir) = find_dir() {
+            let m = Manifest::load(&dir).expect("manifest parses");
+            assert_eq!(m.state_len, 6);
+            assert_eq!(m.params_len, 10);
+            assert!(m.step_artifact(1).is_some());
+            let step = m.step_artifact(64).unwrap();
+            assert!(step.pods >= 64);
+            assert!(step.file.is_file());
+        }
+    }
+
+    #[test]
+    fn step_artifact_picks_smallest_sufficient() {
+        let mk = |pods| ArtifactInfo {
+            kind: "arcv_step".into(),
+            file: PathBuf::from("x"),
+            pods,
+            window: 12,
+        };
+        let m = Manifest {
+            dir: PathBuf::new(),
+            state_len: 6,
+            params_len: 10,
+            default_params: vec![],
+            artifacts: vec![mk(256), mk(64)],
+        };
+        assert_eq!(m.step_artifact(10).unwrap().pods, 64);
+        assert_eq!(m.step_artifact(65).unwrap().pods, 256);
+        assert_eq!(m.step_artifact(9999).unwrap().pods, 256); // clamps to max
+    }
+}

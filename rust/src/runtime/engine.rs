@@ -1,0 +1,176 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! decision hot path. Adapted from /opt/xla-example/load_hlo — HLO *text*
+//! is the interchange format (see python/compile/aot.py for why).
+
+use super::artifacts::Manifest;
+use crate::policy::arcv::{ArcvParams, DecisionBackend, PARAMS_LEN, STATE_LEN};
+use std::path::Path;
+
+/// A PJRT CPU client (compile + execute). One per process is plenty.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> anyhow::Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation. Outputs are returned as the flattened tuple the
+/// AOT path emits (`return_tuple=True`).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Borrowing variant: callers keep ownership of (reused) input
+    /// literals — the §Perf hot path avoids re-allocating them per tick.
+    pub fn run_borrowed(&self, inputs: &[&xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<&xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The XLA-backed fleet decision backend: executes the AOT `arcv_step`
+/// artifact per decision tick. Same contract as `policy::arcv::NativeFleet`
+/// (pinned by rust/tests/fleet_equivalence.rs).
+pub struct XlaFleet {
+    exe: Executable,
+    pods: usize,
+    window: usize,
+    // reused input staging buffers (padded to the artifact batch)
+    windows_buf: Vec<f32>,
+    swap_buf: Vec<f32>,
+    state_buf: Vec<f32>,
+    // input literals allocated once; refilled in place per tick (§Perf:
+    // saves 4 literal allocations + 2 reshape copies per decision)
+    lit_windows: xla::Literal,
+    lit_swap: xla::Literal,
+    lit_state: xla::Literal,
+    lit_params: xla::Literal,
+    cached_params: Option<[f32; PARAMS_LEN]>,
+    // reused output buffers
+    out_state: Vec<f32>,
+}
+
+impl XlaFleet {
+    /// Load the best-fitting arcv_step variant from the manifest.
+    pub fn from_manifest(engine: &Engine, manifest: &Manifest, min_pods: usize) -> anyhow::Result<XlaFleet> {
+        let info = manifest
+            .step_artifact(min_pods)
+            .ok_or_else(|| anyhow::anyhow!("no arcv_step artifact in manifest"))?;
+        let exe = engine.load(&info.file)?;
+        let (p, w) = (info.pods, info.window);
+        let f32z = |n: usize| vec![0u8; n * 4];
+        Ok(XlaFleet {
+            exe,
+            pods: p,
+            window: w,
+            windows_buf: vec![0.0; p * w],
+            swap_buf: vec![0.0; p],
+            state_buf: vec![0.0; p * STATE_LEN],
+            lit_windows: xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[p, w],
+                &f32z(p * w),
+            )?,
+            lit_swap: xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[p],
+                &f32z(p),
+            )?,
+            lit_state: xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[p, STATE_LEN],
+                &f32z(p * STATE_LEN),
+            )?,
+            lit_params: xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[PARAMS_LEN],
+                &f32z(PARAMS_LEN),
+            )?,
+            cached_params: None,
+            out_state: vec![0.0; p * STATE_LEN],
+        })
+    }
+}
+
+impl DecisionBackend for XlaFleet {
+    fn batch(&self) -> usize {
+        self.pods
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+
+    fn step(
+        &mut self,
+        n: usize,
+        windows: &[f32],
+        swap: &[f32],
+        states: &mut [f32],
+        params: &ArcvParams,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(n <= self.pods, "n={n} exceeds artifact batch {}", self.pods);
+        let w = self.window;
+        anyhow::ensure!(windows.len() >= n * w, "windows buffer too small");
+        anyhow::ensure!(states.len() >= n * STATE_LEN, "states buffer too small");
+
+        // stage + pad. Padding rows get a benign flat window and zero state
+        // (their outputs are discarded).
+        self.windows_buf[..n * w].copy_from_slice(&windows[..n * w]);
+        self.windows_buf[n * w..].fill(1.0);
+        self.swap_buf[..n].copy_from_slice(&swap[..n]);
+        self.swap_buf[n..].fill(0.0);
+        self.state_buf[..n * STATE_LEN].copy_from_slice(&states[..n * STATE_LEN]);
+        self.state_buf[n * STATE_LEN..].fill(0.0);
+
+        // refill the preallocated literals in place
+        self.lit_windows.copy_raw_from(&self.windows_buf)?;
+        self.lit_swap.copy_raw_from(&self.swap_buf)?;
+        self.lit_state.copy_raw_from(&self.state_buf)?;
+        let params_vec = params.to_vec();
+        if self.cached_params != Some(params_vec) {
+            self.lit_params.copy_raw_from(&params_vec[..])?;
+            self.cached_params = Some(params_vec);
+        }
+
+        let outs = self.exe.run_borrowed(&[
+            &self.lit_windows,
+            &self.lit_swap,
+            &self.lit_state,
+            &self.lit_params,
+        ])?;
+        anyhow::ensure!(outs.len() == 2, "arcv_step must return (state, signals)");
+        outs[0].copy_raw_to(&mut self.out_state)?;
+        let signals = outs[1].to_vec::<f32>()?;
+        states[..n * STATE_LEN].copy_from_slice(&self.out_state[..n * STATE_LEN]);
+        Ok(signals[..n].to_vec())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

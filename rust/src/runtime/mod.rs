@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! and runs them on the L3 hot path. Python never executes at runtime.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{find_dir, ArtifactInfo, Manifest};
+pub use engine::{Engine, Executable, XlaFleet};

@@ -1,0 +1,268 @@
+//! The API-server facade (system S7): the typed surface policies and
+//! operators are allowed to touch, with kube-apiserver-style admission
+//! validation and a watchable event cursor.
+//!
+//! Everything the ARC-V controller does in the paper goes through exactly
+//! this surface: list pods, read status, patch memory (the
+//! `InPlacePodVerticalScaling` path), and watch events — never direct
+//! mutation of kubelet state.
+
+use super::cluster::Cluster;
+use super::pod::{MemoryProcess, PodId, PodPhase};
+use super::qos::QosClass;
+use super::resources::ResourceSpec;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ApiError {
+    #[error("pod {0} not found")]
+    NotFound(PodId),
+    #[error("admission denied: {0}")]
+    Admission(String),
+    #[error("patch denied: {0}")]
+    Patch(String),
+}
+
+/// What `kubectl get pod -o json` would show (the policy-visible view).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PodView {
+    pub id: PodId,
+    pub name: String,
+    pub phase: PodPhase,
+    pub qos: QosClass,
+    pub node: Option<usize>,
+    pub spec_memory_gb: Option<f64>,
+    pub effective_limit_gb: f64,
+    pub usage_gb: f64,
+    pub rss_gb: f64,
+    pub swap_gb: f64,
+    pub restarts: u32,
+}
+
+/// Typed API over a cluster. Holds no state of its own — it is the
+/// admission/validation layer.
+pub struct ApiServer;
+
+impl ApiServer {
+    /// Admission + create. Validates the spec like kube-apiserver would.
+    pub fn create_pod(
+        cluster: &mut Cluster,
+        name: &str,
+        spec: ResourceSpec,
+        process: Box<dyn MemoryProcess>,
+    ) -> Result<PodId, ApiError> {
+        if name.is_empty() || name.len() > 253 {
+            return Err(ApiError::Admission("pod name must be 1..=253 chars".into()));
+        }
+        if !name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-' || c == '.')
+        {
+            return Err(ApiError::Admission(format!(
+                "invalid pod name {name:?} (RFC 1123 subdomain required)"
+            )));
+        }
+        if let (Some(req), Some(lim)) = (spec.memory_gb.request, spec.memory_gb.limit) {
+            if req > lim {
+                return Err(ApiError::Admission(format!(
+                    "memory request {req} GB exceeds limit {lim} GB"
+                )));
+            }
+        }
+        if spec.memory_request_gb() < 0.0 {
+            return Err(ApiError::Admission("negative memory request".into()));
+        }
+        Ok(cluster.create_pod(name, spec, process))
+    }
+
+    pub fn get_pod(cluster: &Cluster, id: PodId) -> Result<PodView, ApiError> {
+        let p = cluster
+            .pods
+            .get(id)
+            .ok_or(ApiError::NotFound(id))?;
+        Ok(PodView {
+            id,
+            name: p.name.clone(),
+            phase: p.phase,
+            qos: p.qos,
+            node: p.node,
+            spec_memory_gb: p.spec.memory_limit_gb(),
+            effective_limit_gb: p.effective_limit_gb,
+            usage_gb: p.usage.usage_gb,
+            rss_gb: p.usage.rss_gb,
+            swap_gb: p.usage.swap_gb,
+            restarts: p.restarts,
+        })
+    }
+
+    pub fn list_pods(cluster: &Cluster) -> Vec<PodView> {
+        (0..cluster.pods.len())
+            .map(|id| Self::get_pod(cluster, id).expect("id in range"))
+            .collect()
+    }
+
+    /// The in-place vertical patch (§3.2). Validation mirrors the alpha
+    /// feature's rules: positive size, pod must exist and not be done,
+    /// and the patch must not attempt a QoS-class change (here: resizing
+    /// a Guaranteed pod keeps request == limit, which `with_memory`
+    /// guarantees; BestEffort pods have no limits to patch).
+    pub fn patch_pod_memory(
+        cluster: &mut Cluster,
+        id: PodId,
+        mem_gb: f64,
+    ) -> Result<(), ApiError> {
+        if cluster.pods.get(id).is_none() {
+            return Err(ApiError::NotFound(id));
+        }
+        if !(mem_gb.is_finite() && mem_gb > 0.0) {
+            return Err(ApiError::Patch(format!("invalid memory size {mem_gb}")));
+        }
+        let pod = &cluster.pods[id];
+        if pod.qos == QosClass::BestEffort {
+            return Err(ApiError::Patch(
+                "cannot add limits to a BestEffort pod in place (QoS class is immutable, §3.2)"
+                    .into(),
+            ));
+        }
+        if pod.is_done() {
+            return Err(ApiError::Patch("pod already completed".into()));
+        }
+        cluster.patch_pod_memory(id, mem_gb);
+        Ok(())
+    }
+
+    /// Watch: events at or after `cursor`; returns (events, next_cursor).
+    pub fn watch(
+        cluster: &Cluster,
+        cursor: usize,
+    ) -> (Vec<super::events::Event>, usize) {
+        let evs = cluster.events.events[cursor.min(cluster.events.events.len())..].to_vec();
+        (evs, cluster.events.events.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::node::Node;
+    use super::super::pod::testutil::ramp;
+    use super::super::swap::SwapDevice;
+    use super::*;
+
+    fn cluster() -> Cluster {
+        Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(16.0)))
+    }
+
+    #[test]
+    fn create_validates_names() {
+        let mut c = cluster();
+        assert!(matches!(
+            ApiServer::create_pod(&mut c, "", ResourceSpec::memory_exact(1.0), ramp(1.0, 1.0, 10.0)),
+            Err(ApiError::Admission(_))
+        ));
+        assert!(matches!(
+            ApiServer::create_pod(&mut c, "Bad_Name", ResourceSpec::memory_exact(1.0), ramp(1.0, 1.0, 10.0)),
+            Err(ApiError::Admission(_))
+        ));
+        assert!(ApiServer::create_pod(
+            &mut c,
+            "kripke-0",
+            ResourceSpec::memory_exact(1.0),
+            ramp(1.0, 1.0, 10.0)
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn create_rejects_request_above_limit() {
+        let mut c = cluster();
+        let mut spec = ResourceSpec::memory_exact(1.0);
+        spec.memory_gb.request = Some(2.0);
+        assert!(matches!(
+            ApiServer::create_pod(&mut c, "p", spec, ramp(1.0, 1.0, 10.0)),
+            Err(ApiError::Admission(_))
+        ));
+    }
+
+    #[test]
+    fn get_and_list_views() {
+        let mut c = cluster();
+        let id = ApiServer::create_pod(
+            &mut c,
+            "a",
+            ResourceSpec::memory_exact(2.0),
+            ramp(1.0, 1.0, 50.0),
+        )
+        .unwrap();
+        c.run_until(10, |_| false);
+        let v = ApiServer::get_pod(&c, id).unwrap();
+        assert_eq!(v.name, "a");
+        assert_eq!(v.phase, PodPhase::Running);
+        assert_eq!(v.qos, QosClass::Guaranteed);
+        assert!(v.usage_gb > 0.9);
+        assert_eq!(ApiServer::list_pods(&c).len(), 1);
+        assert_eq!(ApiServer::get_pod(&c, 99), Err(ApiError::NotFound(99)));
+    }
+
+    #[test]
+    fn patch_validation() {
+        let mut c = cluster();
+        let id = ApiServer::create_pod(
+            &mut c,
+            "a",
+            ResourceSpec::memory_exact(2.0),
+            ramp(1.0, 1.0, 20.0),
+        )
+        .unwrap();
+        assert!(matches!(
+            ApiServer::patch_pod_memory(&mut c, id, -1.0),
+            Err(ApiError::Patch(_))
+        ));
+        assert!(matches!(
+            ApiServer::patch_pod_memory(&mut c, 42, 1.0),
+            Err(ApiError::NotFound(42))
+        ));
+        assert!(ApiServer::patch_pod_memory(&mut c, id, 3.0).is_ok());
+        // finished pods cannot be patched
+        c.run_until(100, |c| c.all_done());
+        assert!(matches!(
+            ApiServer::patch_pod_memory(&mut c, id, 4.0),
+            Err(ApiError::Patch(_))
+        ));
+    }
+
+    #[test]
+    fn best_effort_pods_cannot_gain_limits_in_place() {
+        let mut c = cluster();
+        let id = ApiServer::create_pod(
+            &mut c,
+            "be",
+            ResourceSpec::best_effort(),
+            ramp(1.0, 1.0, 20.0),
+        )
+        .unwrap();
+        assert!(matches!(
+            ApiServer::patch_pod_memory(&mut c, id, 4.0),
+            Err(ApiError::Patch(_))
+        ));
+    }
+
+    #[test]
+    fn watch_cursor_advances() {
+        let mut c = cluster();
+        let id = ApiServer::create_pod(
+            &mut c,
+            "a",
+            ResourceSpec::memory_exact(2.0),
+            ramp(1.0, 1.0, 30.0),
+        )
+        .unwrap();
+        let (evs, cur) = ApiServer::watch(&c, 0);
+        assert!(evs.len() >= 2); // Scheduled + Started
+        ApiServer::patch_pod_memory(&mut c, id, 3.0).unwrap();
+        let (evs2, cur2) = ApiServer::watch(&c, cur);
+        assert_eq!(evs2.len(), 1); // just the ResizeIssued
+        assert!(cur2 > cur);
+        // cursor beyond the end is safe
+        let (evs3, _) = ApiServer::watch(&c, 10_000);
+        assert!(evs3.is_empty());
+    }
+}

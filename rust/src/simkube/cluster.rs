@@ -1,0 +1,375 @@
+//! The cluster: nodes + pods + kubelet + metrics + events, advanced on a
+//! discrete 1-second clock. This is the substrate every experiment runs on.
+
+use super::events::{EventKind, EventLog};
+use super::kubelet::{IoState, Kubelet, KubeletConfig};
+use super::metrics::MetricsStore;
+use super::node::Node;
+use super::pod::{MemoryProcess, PendingResize, Pod, PodId, PodPhase};
+use super::qos::QosClass;
+use super::resources::ResourceSpec;
+use super::scheduler::{Scheduler, Strategy};
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub kubelet: KubeletConfig,
+    pub scheduler: Strategy,
+    pub sampling_period_secs: u64,
+    /// Ring length per metric series.
+    pub metrics_history: usize,
+    /// Wall seconds a container takes to come back after a kill/restart.
+    pub restart_latency_secs: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            kubelet: KubeletConfig::default(),
+            scheduler: Strategy::BestFit,
+            sampling_period_secs: super::metrics::DEFAULT_SAMPLING_PERIOD_SECS,
+            metrics_history: 8192,
+            restart_latency_secs: 5,
+        }
+    }
+}
+
+pub struct Cluster {
+    pub config: ClusterConfig,
+    pub nodes: Vec<Node>,
+    pub pods: Vec<Pod>,
+    io: Vec<IoState>,
+    /// Pods waiting out the restart latency: (pod, ready_at).
+    restarting: Vec<(PodId, u64)>,
+    kubelet: Kubelet,
+    scheduler: Scheduler,
+    pub metrics: MetricsStore,
+    pub events: EventLog,
+    pub now: u64,
+}
+
+impl Cluster {
+    pub fn new(nodes: Vec<Node>, config: ClusterConfig) -> Self {
+        let kubelet = Kubelet::new(config.kubelet);
+        let scheduler = Scheduler::new(config.scheduler);
+        let metrics = MetricsStore::new(config.sampling_period_secs, config.metrics_history);
+        Self {
+            config,
+            nodes,
+            pods: Vec::new(),
+            io: Vec::new(),
+            restarting: Vec::new(),
+            kubelet,
+            scheduler,
+            metrics,
+            events: EventLog::new(),
+            now: 0,
+        }
+    }
+
+    /// Single-node convenience (most experiments pin one app per node, as
+    /// the paper does).
+    pub fn single_node(node: Node) -> Self {
+        Self::new(vec![node], ClusterConfig::default())
+    }
+
+    // ------------------------------------------------------------ API-ish --
+
+    /// Create and schedule a pod. Returns its id; the pod starts Running on
+    /// the next tick if a node fits, else stays Pending.
+    pub fn create_pod(
+        &mut self,
+        name: &str,
+        spec: ResourceSpec,
+        process: Box<dyn MemoryProcess>,
+    ) -> PodId {
+        let id = self.pods.len();
+        let mut pod = Pod::new(id, name, spec, process);
+        let request = pod.spec.memory_request_gb();
+        match self.scheduler.place(&self.nodes, request) {
+            Some(n) => {
+                self.nodes[n].bind(id, request);
+                pod.node = Some(n);
+                pod.phase = PodPhase::Running;
+                pod.started_at = Some(self.now);
+                self.events.push(self.now, id, EventKind::PodScheduled { node: n });
+                self.events.push(self.now, id, EventKind::PodStarted);
+            }
+            None => {
+                self.events.push(
+                    self.now,
+                    id,
+                    EventKind::SchedulingFailed {
+                        reason: format!("no node fits request of {request} GB"),
+                    },
+                );
+            }
+        }
+        self.pods.push(pod);
+        self.io.push(IoState::default());
+        id
+    }
+
+    /// In-place vertical resize (the §3.2 alpha feature): the spec changes
+    /// instantly, the kubelet syncs the effective limit later. QoS class is
+    /// intentionally NOT re-derived.
+    pub fn patch_pod_memory(&mut self, id: PodId, mem_gb: f64) {
+        let now = self.now;
+        let pod = &mut self.pods[id];
+        let old_request = pod.spec.memory_request_gb();
+        pod.spec = pod.spec.with_memory(mem_gb);
+        pod.pending_resize = Some(PendingResize {
+            target_gb: mem_gb,
+            issued_at: now,
+        });
+        if let Some(n) = pod.node {
+            self.nodes[n].adjust_reservation(old_request, mem_gb);
+        }
+        self.events.push(now, id, EventKind::ResizeIssued { target_gb: mem_gb });
+    }
+
+    /// Restart a killed pod with a new memory size (the VPA Updater path:
+    /// evict + recreate). Progress is lost (no checkpointing).
+    pub fn restart_pod(&mut self, id: PodId, new_mem_gb: f64) {
+        let now = self.now;
+        let ready_at = now + self.config.restart_latency_secs;
+        let pod = &mut self.pods[id];
+        let old_request = pod.spec.memory_request_gb();
+        pod.restart(Some(new_mem_gb));
+        pod.phase = PodPhase::Pending; // waits out restart latency
+        if let Some(n) = pod.node {
+            self.nodes[n].adjust_reservation(old_request, new_mem_gb);
+        }
+        self.io[id] = IoState::default();
+        self.restarting.push((id, ready_at));
+        self.events
+            .push(now, id, EventKind::PodRestarted { new_limit_gb: new_mem_gb });
+    }
+
+    pub fn pod(&self, id: PodId) -> &Pod {
+        &self.pods[id]
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.pods.iter().all(|p| p.is_done())
+    }
+
+    // -------------------------------------------------------------- clock --
+
+    /// Advance one second of cluster time.
+    pub fn step(&mut self) {
+        self.now += 1;
+        let now = self.now;
+
+        // restart latency expiry
+        let mut ready = Vec::new();
+        self.restarting.retain(|&(id, at)| {
+            if at <= now {
+                ready.push(id);
+                false
+            } else {
+                true
+            }
+        });
+        for id in ready {
+            let pod = &mut self.pods[id];
+            if pod.phase == PodPhase::Pending {
+                pod.phase = PodPhase::Running;
+                pod.started_at.get_or_insert(now);
+                self.events.push(now, id, EventKind::PodStarted);
+            }
+        }
+
+        // kubelet tick per running pod
+        for id in 0..self.pods.len() {
+            let node_idx = match self.pods[id].node {
+                Some(n) if self.pods[id].phase == PodPhase::Running => n,
+                _ => continue,
+            };
+            let (pods, io, nodes, events) = (
+                &mut self.pods,
+                &mut self.io,
+                &mut self.nodes,
+                &mut self.events,
+            );
+            self.kubelet.tick_pod(
+                now,
+                &mut pods[id],
+                &mut io[id],
+                &mut nodes[node_idx].swap,
+                events,
+            );
+            // a completed pod releases its reservation (kube GC semantics)
+            if pods[id].phase == PodPhase::Succeeded {
+                let req = pods[id].spec.memory_request_gb();
+                nodes[node_idx].unbind(id, req);
+            }
+        }
+
+        // node-pressure eviction in QoS order (BestEffort first)
+        for n in 0..self.nodes.len() {
+            loop {
+                let rss_sum: f64 = self.nodes[n]
+                    .pods
+                    .iter()
+                    .map(|&p| self.pods[p].usage.rss_gb)
+                    .sum();
+                if rss_sum <= self.nodes[n].capacity_gb {
+                    break;
+                }
+                // victim: lowest QoS rank, largest RSS
+                let victim = self.nodes[n]
+                    .pods
+                    .iter()
+                    .copied()
+                    .filter(|&p| self.pods[p].phase == PodPhase::Running)
+                    .min_by(|&a, &b| {
+                        let pa = &self.pods[a];
+                        let pb = &self.pods[b];
+                        pa.qos
+                            .eviction_rank()
+                            .cmp(&pb.qos.eviction_rank())
+                            .then(
+                                pb.usage
+                                    .rss_gb
+                                    .partial_cmp(&pa.usage.rss_gb)
+                                    .unwrap(),
+                            )
+                    });
+                let Some(v) = victim else { break };
+                let qos_rank = self.pods[v].qos.eviction_rank();
+                self.nodes[n].swap.page_in(self.pods[v].usage.swap_gb);
+                self.pods[v].usage = Default::default();
+                self.pods[v].phase = PodPhase::Evicted;
+                let req = self.pods[v].spec.memory_request_gb();
+                self.nodes[n].unbind(v, req);
+                self.events
+                    .push(now, v, EventKind::Evicted { node: n, qos_rank });
+            }
+        }
+
+        // metrics sampling
+        if self.metrics.is_sampling_tick(now) {
+            for pod in &self.pods {
+                if pod.phase == PodPhase::Running {
+                    self.metrics.record(now, pod);
+                }
+            }
+        }
+    }
+
+    /// Step until `stop` returns true or `max_ticks` elapse; returns ticks
+    /// actually run.
+    pub fn run_until(&mut self, max_ticks: u64, mut stop: impl FnMut(&Cluster) -> bool) -> u64 {
+        let start = self.now;
+        while self.now - start < max_ticks {
+            self.step();
+            if stop(self) {
+                break;
+            }
+        }
+        self.now - start
+    }
+
+    pub fn node_of(&self, id: PodId) -> Option<&Node> {
+        self.pods[id].node.map(|n| &self.nodes[n])
+    }
+
+    /// QoS class helper for tests/examples.
+    pub fn qos_of(&self, id: PodId) -> QosClass {
+        self.pods[id].qos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pod::testutil::ramp;
+    use super::super::swap::SwapDevice;
+    use super::*;
+
+    fn one_node_cluster(cap: f64, swap: SwapDevice) -> Cluster {
+        Cluster::single_node(Node::new("w0", cap, swap))
+    }
+
+    #[test]
+    fn pod_lifecycle_to_completion() {
+        let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+        let id = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 60.0));
+        assert!(c.pod(id).is_running());
+        let ticks = c.run_until(1000, |c| c.all_done());
+        assert_eq!(c.pod(id).phase, PodPhase::Succeeded);
+        assert_eq!(ticks, 60);
+        assert_eq!(c.pod(id).wall_running_secs, 60);
+    }
+
+    #[test]
+    fn pending_when_no_fit() {
+        let mut c = one_node_cluster(8.0, SwapDevice::disabled());
+        let id = c.create_pod("big", ResourceSpec::memory_exact(32.0), ramp(1.0, 1.0, 10.0));
+        assert_eq!(c.pod(id).phase, PodPhase::Pending);
+        assert!(c
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::SchedulingFailed { .. })));
+    }
+
+    #[test]
+    fn patch_then_kubelet_syncs() {
+        let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+        let id = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 1.0, 200.0));
+        c.run_until(10, |_| false);
+        c.patch_pod_memory(id, 6.0);
+        // spec is instant
+        assert_eq!(c.pod(id).spec.memory_limit_gb(), Some(6.0));
+        assert_eq!(c.pod(id).effective_limit_gb, 4.0);
+        c.run_until(10, |c| c.pod(id).pending_resize.is_none());
+        assert_eq!(c.pod(id).effective_limit_gb, 6.0);
+        assert_eq!(c.nodes[0].reserved_gb, 6.0);
+    }
+
+    #[test]
+    fn oom_then_restart_loses_progress() {
+        let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+        let id = c.create_pod("a", ResourceSpec::memory_exact(1.5), ramp(1.0, 3.0, 100.0));
+        c.run_until(1000, |c| c.pod(id).phase == PodPhase::OomKilled);
+        assert_eq!(c.pod(id).phase, PodPhase::OomKilled);
+        let progress_at_kill = c.pod(id).progress_secs;
+        assert!(progress_at_kill > 0.0);
+        c.restart_pod(id, 1.8);
+        assert_eq!(c.pod(id).progress_secs, 0.0);
+        // waits out restart latency then runs again
+        c.run_until(c.config.restart_latency_secs + 2, |_| false);
+        assert!(c.pod(id).is_running());
+        assert_eq!(c.pod(id).restarts, 1);
+    }
+
+    #[test]
+    fn node_pressure_evicts_best_effort_first() {
+        let mut c = one_node_cluster(8.0, SwapDevice::disabled());
+        // Guaranteed pod within its limit
+        let g = c.create_pod("g", ResourceSpec::memory_exact(6.0), ramp(5.0, 5.0, 500.0));
+        // BestEffort pod ballooning unbounded
+        let be = c.create_pod("be", ResourceSpec::best_effort(), ramp(1.0, 12.0, 100.0));
+        c.run_until(200, |c| c.pod(be).phase == PodPhase::Evicted);
+        assert_eq!(c.pod(be).phase, PodPhase::Evicted);
+        assert!(c.pod(g).is_running(), "guaranteed pod must survive");
+    }
+
+    #[test]
+    fn metrics_sampled_every_period() {
+        let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+        let id = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 60.0));
+        c.run_until(30, |_| false);
+        let series = c.metrics.pod(id).unwrap();
+        assert_eq!(series.count, 6); // t=5,10,...,30
+    }
+
+    #[test]
+    fn swap_absorbs_burst_on_enabled_node() {
+        let mut c = one_node_cluster(64.0, SwapDevice::hdd(32.0));
+        let id = c.create_pod("a", ResourceSpec::memory_exact(1.2), ramp(1.0, 2.0, 50.0));
+        c.run_until(5000, |c| c.all_done());
+        assert_eq!(c.pod(id).phase, PodPhase::Succeeded);
+        assert_eq!(c.events.count_ooms(id), 0);
+        assert!(c.pod(id).wall_running_secs > 50);
+    }
+}

@@ -1,0 +1,93 @@
+//! Cluster event log — what `kubectl get events` would show, and what the
+//! harness asserts on (OOM counts, restarts, resize latencies).
+
+use super::pod::PodId;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    PodScheduled { node: usize },
+    PodStarted,
+    PodCompleted,
+    /// The container breached its memory limit with no swap headroom.
+    OomKilled { usage_gb: f64, limit_gb: f64 },
+    /// Node-pressure eviction (QoS order).
+    Evicted { node: usize, qos_rank: u8 },
+    PodRestarted { new_limit_gb: f64 },
+    /// A resize patch was accepted into the spec (instant, §3.2).
+    ResizeIssued { target_gb: f64 },
+    /// The kubelet finished syncing the resize (possibly much later).
+    ResizeApplied { target_gb: f64, latency_secs: u64 },
+    /// Overflow pages went to the swap device.
+    SwappedOut { gb: f64 },
+    SchedulingFailed { reason: String },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub time: u64,
+    pub pod: PodId,
+    pub kind: EventKind,
+}
+
+#[derive(Debug, Default)]
+pub struct EventLog {
+    pub events: Vec<Event>,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: u64, pod: PodId, kind: EventKind) {
+        self.events.push(Event { time, pod, kind });
+    }
+
+    pub fn count_ooms(&self, pod: PodId) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.pod == pod && matches!(e.kind, EventKind::OomKilled { .. }))
+            .count()
+    }
+
+    pub fn count_restarts(&self, pod: PodId) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.pod == pod && matches!(e.kind, EventKind::PodRestarted { .. }))
+            .count()
+    }
+
+    pub fn resize_latencies(&self, pod: PodId) -> Vec<u64> {
+        self.events
+            .iter()
+            .filter(|e| e.pod == pod)
+            .filter_map(|e| match e.kind {
+                EventKind::ResizeApplied { latency_secs, .. } => Some(latency_secs),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Event> {
+        self.events.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_filter_by_pod_and_kind() {
+        let mut log = EventLog::new();
+        log.push(1, 0, EventKind::OomKilled { usage_gb: 2.0, limit_gb: 1.5 });
+        log.push(2, 0, EventKind::PodRestarted { new_limit_gb: 1.8 });
+        log.push(3, 1, EventKind::OomKilled { usage_gb: 9.0, limit_gb: 8.0 });
+        log.push(4, 0, EventKind::ResizeApplied { target_gb: 2.0, latency_secs: 7 });
+        assert_eq!(log.count_ooms(0), 1);
+        assert_eq!(log.count_ooms(1), 1);
+        assert_eq!(log.count_restarts(0), 1);
+        assert_eq!(log.resize_latencies(0), vec![7]);
+        assert!(log.resize_latencies(1).is_empty());
+    }
+}

@@ -1,0 +1,391 @@
+//! The kubelet: per-tick container management on one node.
+//!
+//! Responsibilities (paper §2.1, §3.2):
+//! - advance the application, charging swap I/O wait against progress;
+//! - enforce the *effective* memory limit: overflow spills to the node swap
+//!   device if enabled, else the container is OOM-killed;
+//! - sync in-place resize patches with the observed alpha-feature
+//!   semantics: nominal spec changes land instantly, upsizes become
+//!   effective after a short delay, and downsizes below the current
+//!   resident set are "significantly prolonged" (they wait for reclaim,
+//!   draining to swap at disk bandwidth when available);
+//! - account footprint integrals for the harness.
+
+use super::events::{EventKind, EventLog};
+use super::pod::{Pod, PodPhase};
+use super::swap::SwapDevice;
+
+#[derive(Clone, Copy, Debug)]
+pub struct KubeletConfig {
+    /// Seconds between a resize patch and enactment when no reclaim is
+    /// needed ("a delay of several seconds", §3.2).
+    pub resize_delay_secs: u64,
+    /// Fraction of swap-resident pages the app re-touches per second
+    /// (steady-state thrash while running partially out of swap).
+    pub fault_frac: f64,
+}
+
+impl Default for KubeletConfig {
+    fn default() -> Self {
+        Self {
+            resize_delay_secs: 3,
+            fault_frac: 0.02,
+        }
+    }
+}
+
+/// Per-pod transient I/O state the kubelet tracks between ticks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IoState {
+    /// Outstanding disk seconds the process must wait on.
+    pub debt_secs: f64,
+}
+
+pub struct Kubelet {
+    pub config: KubeletConfig,
+}
+
+impl Kubelet {
+    pub fn new(config: KubeletConfig) -> Self {
+        Self { config }
+    }
+
+    /// Advance one pod by one wall second. Returns `true` while the pod
+    /// stays Running (false on completion/OOM).
+    pub fn tick_pod(
+        &self,
+        now: u64,
+        pod: &mut Pod,
+        io: &mut IoState,
+        swap: &mut SwapDevice,
+        log: &mut EventLog,
+    ) -> bool {
+        if pod.phase != PodPhase::Running {
+            return false;
+        }
+
+        // -- 1. resize sync ---------------------------------------------------
+        self.sync_resize(now, pod, io, swap, log);
+
+        // -- 2. progress, paying down I/O debt --------------------------------
+        let wait = io.debt_secs.min(1.0);
+        io.debt_secs -= wait;
+        pod.progress_secs += 1.0 - wait;
+        pod.wall_running_secs += 1;
+
+        // -- 3. desired usage and limit enforcement ---------------------------
+        let v = pod.process.usage_gb(pod.progress_secs).max(0.0);
+        let lim = pod.effective_limit_gb;
+        let mut s = pod.usage.swap_gb;
+
+        if v > lim {
+            // overflow must live in swap
+            let want = v - lim;
+            if want > s {
+                let got = swap.page_out(want - s);
+                if got + s + 1e-9 < want {
+                    // swap disabled or full: the OOM killer fires.
+                    swap.page_in(s + got); // release what this pod held
+                    pod.usage.swap_gb = 0.0;
+                    pod.usage.usage_gb = v;
+                    pod.usage.rss_gb = 0.0;
+                    pod.phase = PodPhase::OomKilled;
+                    pod.oom_kills += 1;
+                    io.debt_secs = 0.0;
+                    log.push(now, pod.id, EventKind::OomKilled { usage_gb: v, limit_gb: lim });
+                    return false;
+                }
+                io.debt_secs += swap.io_secs(got);
+                log.push(now, pod.id, EventKind::SwappedOut { gb: got });
+                s += got;
+            }
+        } else if s > 0.0 {
+            // Headroom: page back in at device bandwidth (1 s budget) — but
+            // never past a pending downsize target, or the reclaim the
+            // resize sync is running would be undone each tick.
+            let target_lim = pod
+                .pending_resize
+                .map(|pr| pr.target_gb)
+                .unwrap_or(f64::INFINITY)
+                .min(lim);
+            let budget_gb = swap.bandwidth_gbps;
+            let headroom = (target_lim - (v - s)).max(0.0);
+            let bring = swap.page_in(s.min(budget_gb).min(headroom));
+            io.debt_secs += swap.io_secs(bring) * 0.5; // readahead overlaps compute
+            s -= bring;
+        }
+
+        // steady-state faulting over swap-resident pages
+        if s > 0.0 {
+            let fault_gb = self.config.fault_frac * s;
+            swap.traffic_gb += fault_gb;
+            io.debt_secs += swap.io_secs(fault_gb);
+        }
+
+        pod.usage.usage_gb = v;
+        pod.usage.swap_gb = s;
+        pod.usage.rss_gb = (v - s).min(lim).max(0.0);
+
+        // -- 4. accounting -----------------------------------------------------
+        let provisioned = if lim.is_finite() { lim } else { v };
+        pod.provisioned_gb_secs += provisioned;
+        pod.used_gb_secs += v;
+
+        // -- 5. completion ------------------------------------------------------
+        if pod.progress_secs >= pod.process.duration_secs() {
+            pod.phase = PodPhase::Succeeded;
+            pod.finished_at = Some(now);
+            // release swap residency
+            swap.page_in(pod.usage.swap_gb);
+            pod.usage.swap_gb = 0.0;
+            log.push(now, pod.id, EventKind::PodCompleted);
+            return false;
+        }
+        true
+    }
+
+    fn sync_resize(
+        &self,
+        now: u64,
+        pod: &mut Pod,
+        io: &mut IoState,
+        swap: &mut SwapDevice,
+        log: &mut EventLog,
+    ) {
+        let Some(pr) = pod.pending_resize else {
+            return;
+        };
+        let rss = pod.usage.rss_gb;
+        if pr.target_gb + 1e-12 >= rss {
+            // plain sync after the nominal delay
+            if now >= pr.issued_at + self.config.resize_delay_secs {
+                pod.effective_limit_gb = pr.target_gb;
+                pod.pending_resize = None;
+                log.push(
+                    now,
+                    pod.id,
+                    EventKind::ResizeApplied {
+                        target_gb: pr.target_gb,
+                        latency_secs: now - pr.issued_at,
+                    },
+                );
+            }
+        } else {
+            // downsize below the resident set: reclaim must run first. With
+            // swap, drain at disk bandwidth (1 s budget per tick); without,
+            // the sync simply stalls until usage falls (§3.2).
+            if swap.enabled() {
+                let deficit = rss - pr.target_gb;
+                let moved = swap.page_out(deficit.min(swap.bandwidth_gbps));
+                if moved > 0.0 {
+                    pod.usage.swap_gb += moved;
+                    pod.usage.rss_gb -= moved;
+                    io.debt_secs += swap.io_secs(moved);
+                    log.push(now, pod.id, EventKind::SwappedOut { gb: moved });
+                }
+            }
+            if pod.usage.rss_gb <= pr.target_gb + 1e-12
+                && now >= pr.issued_at + self.config.resize_delay_secs
+            {
+                pod.effective_limit_gb = pr.target_gb;
+                pod.pending_resize = None;
+                log.push(
+                    now,
+                    pod.id,
+                    EventKind::ResizeApplied {
+                        target_gb: pr.target_gb,
+                        latency_secs: now - pr.issued_at,
+                    },
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pod::testutil::ramp;
+    use super::super::pod::{PendingResize, Pod, PodPhase};
+    use super::super::resources::ResourceSpec;
+    use super::*;
+
+    fn running_pod(limit_gb: f64, proc_: Box<dyn super::super::pod::MemoryProcess>) -> Pod {
+        let mut p = Pod::new(0, "t", ResourceSpec::memory_exact(limit_gb), proc_);
+        p.phase = PodPhase::Running;
+        p.started_at = Some(0);
+        p
+    }
+
+    fn drive(
+        kubelet: &Kubelet,
+        pod: &mut Pod,
+        io: &mut IoState,
+        swap: &mut SwapDevice,
+        log: &mut EventLog,
+        from: u64,
+        ticks: u64,
+    ) -> u64 {
+        let mut t = from;
+        for _ in 0..ticks {
+            kubelet.tick_pod(t, pod, io, swap, log);
+            t += 1;
+            if pod.phase != PodPhase::Running {
+                break;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn pod_within_limit_completes_on_time() {
+        let k = Kubelet::new(KubeletConfig::default());
+        let mut pod = running_pod(4.0, ramp(1.0, 2.0, 100.0));
+        let mut io = IoState::default();
+        let mut swap = SwapDevice::disabled();
+        let mut log = EventLog::new();
+        let end = drive(&k, &mut pod, &mut io, &mut swap, &mut log, 0, 1000);
+        assert_eq!(pod.phase, PodPhase::Succeeded);
+        assert_eq!(end, 100); // no slowdown
+        assert_eq!(log.count_ooms(0), 0);
+    }
+
+    #[test]
+    fn breach_without_swap_is_oom() {
+        let k = Kubelet::new(KubeletConfig::default());
+        let mut pod = running_pod(1.5, ramp(1.0, 3.0, 100.0));
+        let mut io = IoState::default();
+        let mut swap = SwapDevice::disabled();
+        let mut log = EventLog::new();
+        drive(&k, &mut pod, &mut io, &mut swap, &mut log, 0, 1000);
+        assert_eq!(pod.phase, PodPhase::OomKilled);
+        assert_eq!(pod.oom_kills, 1);
+        assert_eq!(log.count_ooms(0), 1);
+        // killed roughly when the ramp crossed 1.5GB (25% in)
+        assert!(pod.progress_secs > 20.0 && pod.progress_secs < 30.0);
+    }
+
+    #[test]
+    fn breach_with_swap_survives_but_slows() {
+        let k = Kubelet::new(KubeletConfig::default());
+        let mut pod = running_pod(1.5, ramp(1.0, 3.0, 100.0));
+        let mut io = IoState::default();
+        let mut swap = SwapDevice::hdd(16.0);
+        let mut log = EventLog::new();
+        let end = drive(&k, &mut pod, &mut io, &mut swap, &mut log, 0, 10_000);
+        assert_eq!(pod.phase, PodPhase::Succeeded);
+        assert!(end > 100, "swap thrash must cost wall time, end={end}");
+        assert_eq!(log.count_ooms(0), 0);
+        assert!(pod.usage.swap_gb == 0.0, "completion releases swap");
+    }
+
+    #[test]
+    fn rss_never_exceeds_limit() {
+        let k = Kubelet::new(KubeletConfig::default());
+        let mut pod = running_pod(1.2, ramp(0.5, 2.5, 200.0));
+        let mut io = IoState::default();
+        let mut swap = SwapDevice::ssd(16.0);
+        let mut log = EventLog::new();
+        for t in 0..2000 {
+            if !k.tick_pod(t, &mut pod, &mut io, &mut swap, &mut log) {
+                break;
+            }
+            assert!(
+                pod.usage.rss_gb <= pod.effective_limit_gb + 1e-9,
+                "t={t} rss={} lim={}",
+                pod.usage.rss_gb,
+                pod.effective_limit_gb
+            );
+        }
+    }
+
+    #[test]
+    fn upsize_applies_after_delay() {
+        let k = Kubelet::new(KubeletConfig::default());
+        let mut pod = running_pod(2.0, ramp(1.0, 1.0, 50.0));
+        let mut io = IoState::default();
+        let mut swap = SwapDevice::disabled();
+        let mut log = EventLog::new();
+        // warm up a few ticks
+        for t in 0..5 {
+            k.tick_pod(t, &mut pod, &mut io, &mut swap, &mut log);
+        }
+        pod.pending_resize = Some(PendingResize { target_gb: 3.0, issued_at: 5 });
+        pod.spec = pod.spec.with_memory(3.0);
+        for t in 5..20 {
+            k.tick_pod(t, &mut pod, &mut io, &mut swap, &mut log);
+            if pod.pending_resize.is_none() {
+                break;
+            }
+        }
+        assert_eq!(pod.effective_limit_gb, 3.0);
+        let lat = log.resize_latencies(0);
+        assert_eq!(lat.len(), 1);
+        assert!(lat[0] >= 3, "latency {} must respect the sync delay", lat[0]);
+    }
+
+    #[test]
+    fn downsize_below_rss_is_prolonged_and_drains_to_swap() {
+        let k = Kubelet::new(KubeletConfig::default());
+        let mut pod = running_pod(8.0, ramp(6.0, 6.0, 4000.0));
+        let mut io = IoState::default();
+        let mut swap = SwapDevice::hdd(32.0); // 0.1 GB/s drain
+        let mut log = EventLog::new();
+        for t in 0..3 {
+            k.tick_pod(t, &mut pod, &mut io, &mut swap, &mut log);
+        }
+        assert!((pod.usage.rss_gb - 6.0).abs() < 1e-9);
+        pod.pending_resize = Some(PendingResize { target_gb: 4.0, issued_at: 3 });
+        pod.spec = pod.spec.with_memory(4.0);
+        let mut applied_at = None;
+        for t in 3..200 {
+            k.tick_pod(t, &mut pod, &mut io, &mut swap, &mut log);
+            if pod.pending_resize.is_none() {
+                applied_at = Some(t);
+                break;
+            }
+        }
+        let applied_at = applied_at.expect("resize must complete");
+        // 2 GB to reclaim at 0.1 GB/s → ≈20s, far beyond the nominal 3s
+        assert!(applied_at >= 3 + 15, "prolonged sync, applied at {applied_at}");
+        assert_eq!(pod.effective_limit_gb, 4.0);
+        assert!(pod.usage.swap_gb >= 2.0 - 1e-6);
+    }
+
+    #[test]
+    fn downsize_without_swap_stalls_until_usage_drops() {
+        let k = Kubelet::new(KubeletConfig::default());
+        // usage declines from 6GB to 2GB over 100s
+        let mut pod = running_pod(8.0, ramp(6.0, 2.0, 100.0));
+        let mut io = IoState::default();
+        let mut swap = SwapDevice::disabled();
+        let mut log = EventLog::new();
+        for t in 0..3 {
+            k.tick_pod(t, &mut pod, &mut io, &mut swap, &mut log);
+        }
+        pod.pending_resize = Some(PendingResize { target_gb: 4.0, issued_at: 3 });
+        let mut applied_at = None;
+        for t in 3..200 {
+            k.tick_pod(t, &mut pod, &mut io, &mut swap, &mut log);
+            if pod.pending_resize.is_none() {
+                applied_at = Some(t);
+                break;
+            }
+        }
+        // usage crosses 4GB at t=50 of the ramp
+        let applied_at = applied_at.expect("eventually applies");
+        assert!(applied_at >= 49, "applied_at={applied_at}");
+    }
+
+    #[test]
+    fn footprint_integrals_accumulate() {
+        let k = Kubelet::new(KubeletConfig::default());
+        let mut pod = running_pod(2.0, ramp(1.0, 1.0, 10.0));
+        let mut io = IoState::default();
+        let mut swap = SwapDevice::disabled();
+        let mut log = EventLog::new();
+        drive(&k, &mut pod, &mut io, &mut swap, &mut log, 0, 100);
+        // 10s at 2GB provisioned, 1GB used
+        assert!((pod.provisioned_gb_secs - 20.0).abs() < 1e-6);
+        assert!((pod.used_gb_secs - 10.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,207 @@
+//! The metrics pipeline: a cAdvisor-style sampler and Prometheus-format
+//! exposition (paper §2.1).
+//!
+//! The kubelet's cAdvisor samples every pod's `container_memory_usage_bytes`,
+//! `container_memory_rss` and `container_memory_swap`; third parties (here:
+//! the ARC-V controller "on another node") scrape those series. Sampling
+//! period is the paper's 5 s.
+
+use super::pod::{Pod, PodId};
+use crate::util::ring::RingBuffer;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+pub const DEFAULT_SAMPLING_PERIOD_SECS: u64 = 5;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Sample {
+    pub time: u64,
+    pub usage_gb: f64,
+    pub rss_gb: f64,
+    pub swap_gb: f64,
+    pub limit_gb: f64,
+}
+
+/// Per-pod sampled history (bounded ring per series).
+#[derive(Debug)]
+pub struct PodSeries {
+    pub usage: RingBuffer,
+    pub rss: RingBuffer,
+    pub swap: RingBuffer,
+    pub limit: RingBuffer,
+    pub last: Sample,
+    pub count: u64,
+}
+
+impl PodSeries {
+    fn new(history: usize) -> Self {
+        Self {
+            usage: RingBuffer::new(history),
+            rss: RingBuffer::new(history),
+            swap: RingBuffer::new(history),
+            limit: RingBuffer::new(history),
+            last: Sample::default(),
+            count: 0,
+        }
+    }
+}
+
+pub struct MetricsStore {
+    pub period_secs: u64,
+    history: usize,
+    series: BTreeMap<PodId, PodSeries>,
+}
+
+impl MetricsStore {
+    pub fn new(period_secs: u64, history: usize) -> Self {
+        Self {
+            period_secs,
+            history,
+            series: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_defaults() -> Self {
+        // 8 days of 5s samples is the VPA's retention; keep a generous ring.
+        Self::new(DEFAULT_SAMPLING_PERIOD_SECS, 140_000)
+    }
+
+    pub fn is_sampling_tick(&self, now: u64) -> bool {
+        now % self.period_secs == 0
+    }
+
+    /// Record one pod's current status (call on sampling ticks).
+    pub fn record(&mut self, now: u64, pod: &Pod) {
+        let entry = self
+            .series
+            .entry(pod.id)
+            .or_insert_with(|| PodSeries::new(self.history));
+        let s = Sample {
+            time: now,
+            usage_gb: pod.usage.usage_gb,
+            rss_gb: pod.usage.rss_gb,
+            swap_gb: pod.usage.swap_gb,
+            limit_gb: pod.effective_limit_gb,
+        };
+        entry.usage.push(s.usage_gb);
+        entry.rss.push(s.rss_gb);
+        entry.swap.push(s.swap_gb);
+        entry.limit.push(s.limit_gb);
+        entry.last = s;
+        entry.count += 1;
+    }
+
+    pub fn pod(&self, id: PodId) -> Option<&PodSeries> {
+        self.series.get(&id)
+    }
+
+    /// Newest `n` usage samples, oldest-first, into a caller buffer.
+    pub fn usage_window(&self, id: PodId, n: usize, out: &mut [f64]) -> usize {
+        self.series
+            .get(&id)
+            .map(|s| s.usage.copy_last_into(n, out))
+            .unwrap_or(0)
+    }
+
+    pub fn last(&self, id: PodId) -> Option<Sample> {
+        self.series.get(&id).map(|s| s.last)
+    }
+
+    /// Prometheus text exposition of the current values — what the scrape
+    /// endpoint of the kubelet would serve.
+    pub fn prometheus_text(&self, pod_names: &BTreeMap<PodId, String>) -> String {
+        let mut out = String::new();
+        for (metric, get) in [
+            ("container_memory_usage_bytes", 0usize),
+            ("container_memory_rss", 1),
+            ("container_memory_swap", 2),
+        ] {
+            let _ = writeln!(out, "# TYPE {metric} gauge");
+            for (id, s) in &self.series {
+                let name = pod_names
+                    .get(id)
+                    .map(|s| s.as_str())
+                    .unwrap_or("unknown");
+                let gb = match get {
+                    0 => s.last.usage_gb,
+                    1 => s.last.rss_gb,
+                    _ => s.last.swap_gb,
+                };
+                let _ = writeln!(
+                    out,
+                    "{metric}{{pod=\"{name}\"}} {:.0}",
+                    gb * 1e9
+                );
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pod::testutil::ramp;
+    use super::super::pod::Pod;
+    use super::super::resources::ResourceSpec;
+    use super::*;
+
+    fn pod_with_usage(id: PodId, usage: f64, swap: f64) -> Pod {
+        let mut p = Pod::new(id, &format!("p{id}"), ResourceSpec::memory_exact(8.0), ramp(1.0, 1.0, 10.0));
+        p.usage.usage_gb = usage;
+        p.usage.rss_gb = usage - swap;
+        p.usage.swap_gb = swap;
+        p
+    }
+
+    #[test]
+    fn sampling_tick_period() {
+        let m = MetricsStore::new(5, 16);
+        assert!(m.is_sampling_tick(0));
+        assert!(m.is_sampling_tick(10));
+        assert!(!m.is_sampling_tick(3));
+    }
+
+    #[test]
+    fn record_and_window() {
+        let mut m = MetricsStore::new(5, 16);
+        for (t, u) in [(0u64, 1.0), (5, 2.0), (10, 3.0)] {
+            m.record(t, &pod_with_usage(7, u, 0.0));
+        }
+        let mut buf = [0.0; 4];
+        assert_eq!(m.usage_window(7, 4, &mut buf), 3);
+        assert_eq!(&buf[..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(m.last(7).unwrap().usage_gb, 3.0);
+        assert_eq!(m.pod(7).unwrap().count, 3);
+    }
+
+    #[test]
+    fn window_keeps_newest_when_full() {
+        let mut m = MetricsStore::new(5, 3);
+        for i in 0..10u64 {
+            m.record(i * 5, &pod_with_usage(1, i as f64, 0.0));
+        }
+        let mut buf = [0.0; 3];
+        m.usage_window(1, 3, &mut buf);
+        assert_eq!(buf, [7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn unknown_pod_is_empty() {
+        let m = MetricsStore::with_defaults();
+        let mut buf = [0.0; 2];
+        assert_eq!(m.usage_window(99, 2, &mut buf), 0);
+        assert!(m.last(99).is_none());
+    }
+
+    #[test]
+    fn prometheus_exposition_has_all_series() {
+        let mut m = MetricsStore::new(5, 8);
+        m.record(0, &pod_with_usage(0, 2.5, 0.5));
+        let mut names = BTreeMap::new();
+        names.insert(0usize, "kripke-0".to_string());
+        let text = m.prometheus_text(&names);
+        assert!(text.contains("container_memory_usage_bytes{pod=\"kripke-0\"} 2500000000"));
+        assert!(text.contains("container_memory_rss{pod=\"kripke-0\"} 2000000000"));
+        assert!(text.contains("container_memory_swap{pod=\"kripke-0\"} 500000000"));
+    }
+}

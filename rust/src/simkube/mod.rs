@@ -1,0 +1,34 @@
+//! `simkube` — a discrete-time simulator of a swap-enabled, in-place-
+//! resizable Kubernetes cluster (DESIGN.md §1, systems S1–S7).
+//!
+//! This substrate replaces the paper's CloudLab K3s testbed. It reproduces
+//! every interface the ARC-V controller and the VPA baseline touch:
+//! pod objects with requests/limits and QoS classes, a kubelet that
+//! enforces limits / OOM-kills / syncs in-place resize patches with the
+//! §3.2 delay semantics, a bandwidth-limited node swap device, a
+//! request-based scheduler, and a cAdvisor-style metrics pipeline with
+//! Prometheus exposition.
+
+pub mod api;
+pub mod cluster;
+pub mod events;
+pub mod kubelet;
+pub mod metrics;
+pub mod node;
+pub mod pod;
+pub mod qos;
+pub mod resources;
+pub mod scheduler;
+pub mod swap;
+
+pub use api::{ApiError, ApiServer, PodView};
+pub use cluster::{Cluster, ClusterConfig};
+pub use events::{Event, EventKind, EventLog};
+pub use kubelet::{Kubelet, KubeletConfig};
+pub use metrics::{MetricsStore, Sample};
+pub use node::Node;
+pub use pod::{MemoryProcess, Pod, PodId, PodPhase};
+pub use qos::QosClass;
+pub use resources::{ResourcePair, ResourceSpec};
+pub use scheduler::{Scheduler, Strategy};
+pub use swap::SwapDevice;

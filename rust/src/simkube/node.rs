@@ -1,0 +1,93 @@
+//! Worker node: RAM capacity, the swap device, and allocation accounting.
+//! Defaults mirror the paper's CloudLab testbed (256 GB DDR4, 2×1 TB HDD).
+
+use super::pod::PodId;
+use super::swap::SwapDevice;
+
+#[derive(Debug)]
+pub struct Node {
+    pub name: String,
+    pub capacity_gb: f64,
+    pub swap: SwapDevice,
+    /// Pods bound to this node.
+    pub pods: Vec<PodId>,
+    /// Σ memory requests of bound pods (scheduler bookkeeping).
+    pub reserved_gb: f64,
+}
+
+impl Node {
+    pub fn new(name: &str, capacity_gb: f64, swap: SwapDevice) -> Self {
+        Self {
+            name: name.to_string(),
+            capacity_gb,
+            swap,
+            pods: Vec::new(),
+            reserved_gb: 0.0,
+        }
+    }
+
+    /// The paper's CloudLab c6320-style worker: 256 GB RAM, HDD swap.
+    pub fn cloudlab(name: &str) -> Self {
+        Self::new(name, 256.0, SwapDevice::hdd(128.0))
+    }
+
+    pub fn allocatable_gb(&self) -> f64 {
+        (self.capacity_gb - self.reserved_gb).max(0.0)
+    }
+
+    pub fn fits(&self, request_gb: f64) -> bool {
+        request_gb <= self.allocatable_gb()
+    }
+
+    pub fn bind(&mut self, pod: PodId, request_gb: f64) {
+        debug_assert!(!self.pods.contains(&pod), "pod already bound");
+        self.pods.push(pod);
+        self.reserved_gb += request_gb;
+    }
+
+    pub fn unbind(&mut self, pod: PodId, request_gb: f64) {
+        self.pods.retain(|&p| p != pod);
+        self.reserved_gb = (self.reserved_gb - request_gb).max(0.0);
+    }
+
+    /// Adjust the reservation in place (the resize patch path).
+    pub fn adjust_reservation(&mut self, old_gb: f64, new_gb: f64) {
+        self.reserved_gb = (self.reserved_gb - old_gb + new_gb).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_unbind_tracks_reservation() {
+        let mut n = Node::new("w0", 256.0, SwapDevice::disabled());
+        n.bind(1, 100.0);
+        n.bind(2, 50.0);
+        assert_eq!(n.allocatable_gb(), 106.0);
+        assert!(n.fits(106.0));
+        assert!(!n.fits(107.0));
+        n.unbind(1, 100.0);
+        assert_eq!(n.allocatable_gb(), 206.0);
+        assert_eq!(n.pods, vec![2]);
+    }
+
+    #[test]
+    fn adjust_reservation_moves_delta() {
+        let mut n = Node::new("w0", 256.0, SwapDevice::disabled());
+        n.bind(1, 10.0);
+        n.adjust_reservation(10.0, 25.0);
+        assert_eq!(n.reserved_gb, 25.0);
+        n.adjust_reservation(25.0, 5.0);
+        assert_eq!(n.reserved_gb, 5.0);
+    }
+
+    #[test]
+    fn cloudlab_matches_testbed() {
+        let n = Node::cloudlab("w1");
+        assert_eq!(n.capacity_gb, 256.0);
+        assert!(n.swap.enabled());
+        assert!((n.swap.bandwidth_gbps - 0.1).abs() < 1e-12); // mechanical disk
+    }
+}

@@ -1,0 +1,231 @@
+//! The pod abstraction: spec + live container status + the workload process
+//! running inside it.
+//!
+//! `MemoryProcess` is the inversion point between the cluster substrate and
+//! the workload models: a pod hosts *some* process whose desired memory is
+//! a pure function of its progress time, which is what lets restarts and
+//! swap-slowdowns replay deterministically.
+
+use super::qos::QosClass;
+use super::resources::ResourceSpec;
+
+/// What runs inside a container: desired memory as a function of progress.
+///
+/// `progress_secs` counts *application* seconds (it advances slower than
+/// wall time when the pod thrashes in swap, and resets on restart).
+pub trait MemoryProcess: Send {
+    /// Desired (virtual) memory at `progress_secs` into the run, in GB.
+    fn usage_gb(&self, progress_secs: f64) -> f64;
+    /// Total application seconds needed to complete.
+    fn duration_secs(&self) -> f64;
+    /// Display name ("kripke", "minife", ...).
+    fn name(&self) -> &str;
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PodPhase {
+    Pending,
+    Running,
+    Succeeded,
+    /// Killed by the kubelet/kernel OOM killer; may be restarted.
+    OomKilled,
+    /// Evicted under node pressure (QoS order).
+    Evicted,
+}
+
+/// An in-flight resize patch (§3.2): the spec is updated instantly, but the
+/// new limit becomes effective only after the kubelet syncs it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PendingResize {
+    pub target_gb: f64,
+    pub issued_at: u64,
+}
+
+/// Container/pod runtime status as cAdvisor would report it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PodUsage {
+    /// Desired virtual memory of the process (GB).
+    pub usage_gb: f64,
+    /// Resident set actually in RAM (GB): `min(usage, effective limit)`.
+    pub rss_gb: f64,
+    /// Pages pushed to the node swap device (GB).
+    pub swap_gb: f64,
+}
+
+pub type PodId = usize;
+
+pub struct Pod {
+    pub id: PodId,
+    pub name: String,
+    pub spec: ResourceSpec,
+    /// QoS class frozen at admission — in-place resizes must not change it
+    /// (§3.2), hence stored rather than re-derived.
+    pub qos: QosClass,
+    pub phase: PodPhase,
+    pub node: Option<usize>,
+
+    pub process: Box<dyn MemoryProcess>,
+    /// Application progress in seconds (advances ≤ 1 per tick).
+    pub progress_secs: f64,
+    /// Effective (enforced) memory limit; lags `spec` while a resize syncs.
+    pub effective_limit_gb: f64,
+    pub pending_resize: Option<PendingResize>,
+    pub usage: PodUsage,
+
+    pub restarts: u32,
+    pub oom_kills: u32,
+    pub started_at: Option<u64>,
+    pub finished_at: Option<u64>,
+    /// Wall seconds spent Running (accumulated across restarts).
+    pub wall_running_secs: u64,
+    /// ∫ provisioned (effective limit) dt in GB·s — the paper's footprint.
+    pub provisioned_gb_secs: f64,
+    /// ∫ usage dt in GB·s — the app's own footprint (Table 1).
+    pub used_gb_secs: f64,
+}
+
+impl Pod {
+    pub fn new(id: PodId, name: &str, spec: ResourceSpec, process: Box<dyn MemoryProcess>) -> Self {
+        let qos = QosClass::derive(&spec);
+        let effective = spec.memory_limit_gb().unwrap_or(f64::INFINITY);
+        Self {
+            id,
+            name: name.to_string(),
+            spec,
+            qos,
+            phase: PodPhase::Pending,
+            node: None,
+            process,
+            progress_secs: 0.0,
+            effective_limit_gb: effective,
+            pending_resize: None,
+            usage: PodUsage::default(),
+            restarts: 0,
+            oom_kills: 0,
+            started_at: None,
+            finished_at: None,
+            wall_running_secs: 0,
+            provisioned_gb_secs: 0.0,
+            used_gb_secs: 0.0,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == PodPhase::Succeeded
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.phase == PodPhase::Running
+    }
+
+    /// Remaining app-seconds to completion.
+    pub fn remaining_secs(&self) -> f64 {
+        (self.process.duration_secs() - self.progress_secs).max(0.0)
+    }
+
+    /// Restart the container in place (progress lost — the paper's
+    /// no-checkpointing assumption), optionally with a new memory size.
+    pub fn restart(&mut self, new_mem_gb: Option<f64>) {
+        if let Some(m) = new_mem_gb {
+            self.spec = self.spec.with_memory(m);
+            self.effective_limit_gb = m;
+        }
+        self.pending_resize = None;
+        self.progress_secs = 0.0;
+        self.usage = PodUsage::default();
+        self.restarts += 1;
+        self.phase = PodPhase::Running;
+    }
+}
+
+impl std::fmt::Debug for Pod {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pod")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .field("phase", &self.phase)
+            .field("qos", &self.qos)
+            .field("progress", &self.progress_secs)
+            .field("eff_limit", &self.effective_limit_gb)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// A linear-ramp process for kubelet/cluster tests.
+    pub struct RampProcess {
+        pub start_gb: f64,
+        pub end_gb: f64,
+        pub duration: f64,
+        pub name: String,
+    }
+
+    impl MemoryProcess for RampProcess {
+        fn usage_gb(&self, t: f64) -> f64 {
+            let frac = (t / self.duration).clamp(0.0, 1.0);
+            self.start_gb + (self.end_gb - self.start_gb) * frac
+        }
+
+        fn duration_secs(&self) -> f64 {
+            self.duration
+        }
+
+        fn name(&self) -> &str {
+            &self.name
+        }
+    }
+
+    pub fn ramp(start_gb: f64, end_gb: f64, duration: f64) -> Box<dyn MemoryProcess> {
+        Box::new(RampProcess {
+            start_gb,
+            end_gb,
+            duration,
+            name: "ramp".into(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::ramp;
+    use super::*;
+
+    #[test]
+    fn new_pod_freezes_qos_and_limit() {
+        let p = Pod::new(0, "t", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 100.0));
+        assert_eq!(p.qos, QosClass::Guaranteed);
+        assert_eq!(p.effective_limit_gb, 4.0);
+        assert_eq!(p.phase, PodPhase::Pending);
+    }
+
+    #[test]
+    fn best_effort_pod_has_infinite_limit() {
+        let p = Pod::new(0, "t", ResourceSpec::best_effort(), ramp(1.0, 2.0, 100.0));
+        assert!(p.effective_limit_gb.is_infinite());
+        assert_eq!(p.qos, QosClass::BestEffort);
+    }
+
+    #[test]
+    fn restart_resets_progress_and_counts() {
+        let mut p = Pod::new(0, "t", ResourceSpec::memory_exact(2.0), ramp(0.0, 4.0, 100.0));
+        p.phase = PodPhase::Running;
+        p.progress_secs = 50.0;
+        p.phase = PodPhase::OomKilled;
+        p.restart(Some(2.4));
+        assert_eq!(p.progress_secs, 0.0);
+        assert_eq!(p.restarts, 1);
+        assert_eq!(p.effective_limit_gb, 2.4);
+        assert!(p.is_running());
+    }
+
+    #[test]
+    fn remaining_counts_down() {
+        let mut p = Pod::new(0, "t", ResourceSpec::memory_exact(2.0), ramp(0.0, 1.0, 100.0));
+        assert_eq!(p.remaining_secs(), 100.0);
+        p.progress_secs = 99.5;
+        assert_eq!(p.remaining_secs(), 0.5);
+    }
+}

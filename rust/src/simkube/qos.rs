@@ -1,0 +1,103 @@
+//! Quality-of-Service class derivation (paper §2.2).
+//!
+//! Kubernetes assigns each pod a QoS class from its requests/limits; under
+//! node pressure the eviction/OOM order is BestEffort → Burstable →
+//! Guaranteed. §3.2 notes in-place resizes may NOT change the class, which
+//! the kubelet here enforces.
+
+use super::resources::ResourceSpec;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum QosClass {
+    /// Evicted first under pressure.
+    BestEffort,
+    Burstable,
+    /// Evicted last.
+    Guaranteed,
+}
+
+impl QosClass {
+    /// Derive the class exactly like kube-apiserver: Guaranteed iff every
+    /// set resource has request == limit and both cpu+memory are set;
+    /// BestEffort iff nothing is set; otherwise Burstable.
+    pub fn derive(spec: &ResourceSpec) -> QosClass {
+        let mem = &spec.memory_gb;
+        let cpu = &spec.cpu_m;
+        if !mem.is_set() && !cpu.is_set() {
+            return QosClass::BestEffort;
+        }
+        if mem.is_guaranteed() && cpu.is_guaranteed() {
+            return QosClass::Guaranteed;
+        }
+        QosClass::Burstable
+    }
+
+    /// Eviction priority: lower value = evicted earlier.
+    pub fn eviction_rank(&self) -> u8 {
+        match self {
+            QosClass::BestEffort => 0,
+            QosClass::Burstable => 1,
+            QosClass::Guaranteed => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            QosClass::BestEffort => "BestEffort",
+            QosClass::Burstable => "Burstable",
+            QosClass::Guaranteed => "Guaranteed",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::resources::{ResourcePair, ResourceSpec};
+    use super::*;
+
+    #[test]
+    fn exact_everything_is_guaranteed() {
+        assert_eq!(
+            QosClass::derive(&ResourceSpec::memory_exact(4.0)),
+            QosClass::Guaranteed
+        );
+    }
+
+    #[test]
+    fn nothing_set_is_best_effort() {
+        assert_eq!(
+            QosClass::derive(&ResourceSpec::best_effort()),
+            QosClass::BestEffort
+        );
+    }
+
+    #[test]
+    fn request_without_limit_is_burstable() {
+        let spec = ResourceSpec {
+            memory_gb: ResourcePair::request_only(4.0),
+            cpu_m: ResourcePair::none(),
+        };
+        assert_eq!(QosClass::derive(&spec), QosClass::Burstable);
+    }
+
+    #[test]
+    fn mismatched_request_limit_is_burstable() {
+        let spec = ResourceSpec {
+            memory_gb: ResourcePair {
+                request: Some(2.0),
+                limit: Some(4.0),
+            },
+            cpu_m: ResourcePair::exact(1000.0),
+        };
+        assert_eq!(QosClass::derive(&spec), QosClass::Burstable);
+    }
+
+    #[test]
+    fn eviction_order_matches_paper() {
+        assert!(QosClass::BestEffort.eviction_rank() < QosClass::Burstable.eviction_rank());
+        assert!(QosClass::Burstable.eviction_rank() < QosClass::Guaranteed.eviction_rank());
+    }
+}

@@ -1,0 +1,111 @@
+//! Resource specifications: the requests/limits model of a Kubernetes pod
+//! object (paper §2.2). Memory is the paper's subject and is tracked in GB;
+//! CPU (millicores) exists so QoS-class derivation behaves like the real
+//! scheduler.
+
+/// Requests/limits for one resource dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct ResourcePair {
+    pub request: Option<f64>,
+    pub limit: Option<f64>,
+}
+
+impl ResourcePair {
+    pub fn exact(v: f64) -> Self {
+        Self {
+            request: Some(v),
+            limit: Some(v),
+        }
+    }
+
+    pub fn request_only(v: f64) -> Self {
+        Self {
+            request: Some(v),
+            limit: None,
+        }
+    }
+
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_guaranteed(&self) -> bool {
+        match (self.request, self.limit) {
+            (Some(r), Some(l)) => (r - l).abs() < 1e-12,
+            _ => false,
+        }
+    }
+
+    pub fn is_set(&self) -> bool {
+        self.request.is_some() || self.limit.is_some()
+    }
+}
+
+/// The pod-level resource spec. `memory_gb` in GB, `cpu_m` in millicores.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct ResourceSpec {
+    pub memory_gb: ResourcePair,
+    pub cpu_m: ResourcePair,
+}
+
+impl ResourceSpec {
+    /// Both request and limit pinned to `mem_gb` (the experiments' setup:
+    /// requests == limits so resizes move both together).
+    pub fn memory_exact(mem_gb: f64) -> Self {
+        Self {
+            memory_gb: ResourcePair::exact(mem_gb),
+            cpu_m: ResourcePair::exact(10_000.0), // 10 cores, paper's thread count
+        }
+    }
+
+    pub fn best_effort() -> Self {
+        Self::default()
+    }
+
+    /// The memory the scheduler reserves (request, else limit, else 0).
+    pub fn memory_request_gb(&self) -> f64 {
+        self.memory_gb.request.or(self.memory_gb.limit).unwrap_or(0.0)
+    }
+
+    /// The enforced memory ceiling, if any.
+    pub fn memory_limit_gb(&self) -> Option<f64> {
+        self.memory_gb.limit
+    }
+
+    /// In-place vertical resize of the memory request+limit (the alpha
+    /// `InPlacePodVerticalScaling` patch of §3.2). Returns the new spec —
+    /// the kubelet decides when it becomes effective.
+    pub fn with_memory(&self, mem_gb: f64) -> Self {
+        let mut s = *self;
+        s.memory_gb = ResourcePair::exact(mem_gb);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_pair_is_guaranteed() {
+        assert!(ResourcePair::exact(4.0).is_guaranteed());
+        assert!(!ResourcePair::request_only(4.0).is_guaranteed());
+        assert!(!ResourcePair::none().is_guaranteed());
+    }
+
+    #[test]
+    fn request_falls_back_to_limit() {
+        let mut s = ResourceSpec::default();
+        s.memory_gb.limit = Some(8.0);
+        assert_eq!(s.memory_request_gb(), 8.0);
+    }
+
+    #[test]
+    fn resize_patch_replaces_memory_only() {
+        let s = ResourceSpec::memory_exact(4.0);
+        let t = s.with_memory(6.0);
+        assert_eq!(t.memory_limit_gb(), Some(6.0));
+        assert_eq!(t.memory_request_gb(), 6.0);
+        assert_eq!(t.cpu_m, s.cpu_m);
+    }
+}

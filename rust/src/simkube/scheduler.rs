@@ -1,0 +1,106 @@
+//! Request-based pod placement (paper §2.2 "Setting limits").
+//!
+//! The scheduler reserves each pod's memory *request* on a node; a node of
+//! capacity `x` hosts up to `x/y` pods of request `y`. Two strategies are
+//! provided: best-fit (default, packs tightly, the multi-tenancy use case
+//! of §5) and worst-fit (spreads load).
+
+use super::node::Node;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Choose the node with the least allocatable memory that still fits.
+    BestFit,
+    /// Choose the node with the most allocatable memory.
+    WorstFit,
+}
+
+pub struct Scheduler {
+    pub strategy: Strategy,
+}
+
+impl Scheduler {
+    pub fn new(strategy: Strategy) -> Self {
+        Self { strategy }
+    }
+
+    /// Pick a node index for a pod requesting `request_gb`, or None if no
+    /// node fits (the pod stays Pending — scheduling failure).
+    pub fn place(&self, nodes: &[Node], request_gb: f64) -> Option<usize> {
+        let fits = nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.fits(request_gb));
+        match self.strategy {
+            Strategy::BestFit => fits
+                .min_by(|a, b| {
+                    a.1.allocatable_gb()
+                        .partial_cmp(&b.1.allocatable_gb())
+                        .unwrap()
+                })
+                .map(|(i, _)| i),
+            Strategy::WorstFit => fits
+                .max_by(|a, b| {
+                    a.1.allocatable_gb()
+                        .partial_cmp(&b.1.allocatable_gb())
+                        .unwrap()
+                })
+                .map(|(i, _)| i),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::swap::SwapDevice;
+    use super::*;
+
+    fn nodes(frees: &[f64]) -> Vec<Node> {
+        frees
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| {
+                let mut n = Node::new(&format!("w{i}"), 256.0, SwapDevice::disabled());
+                n.reserved_gb = 256.0 - f;
+                n
+            })
+            .collect()
+    }
+
+    #[test]
+    fn best_fit_packs_tightest() {
+        let ns = nodes(&[100.0, 30.0, 60.0]);
+        let s = Scheduler::new(Strategy::BestFit);
+        assert_eq!(s.place(&ns, 25.0), Some(1));
+        assert_eq!(s.place(&ns, 50.0), Some(2));
+        assert_eq!(s.place(&ns, 90.0), Some(0));
+    }
+
+    #[test]
+    fn worst_fit_spreads() {
+        let ns = nodes(&[100.0, 30.0, 60.0]);
+        let s = Scheduler::new(Strategy::WorstFit);
+        assert_eq!(s.place(&ns, 25.0), Some(0));
+    }
+
+    #[test]
+    fn no_fit_returns_none() {
+        let ns = nodes(&[10.0, 20.0]);
+        let s = Scheduler::new(Strategy::BestFit);
+        assert_eq!(s.place(&ns, 64.0), None);
+    }
+
+    #[test]
+    fn capacity_over_request_ratio_pods_fit() {
+        // x/y pods of request y fit a node of capacity x (§2.2)
+        let mut ns = nodes(&[256.0]);
+        let s = Scheduler::new(Strategy::BestFit);
+        let y = 32.0;
+        let mut placed = 0;
+        while let Some(i) = s.place(&ns, y) {
+            ns[i].bind(placed, y);
+            placed += 1;
+        }
+        assert_eq!(placed, 8); // 256/32
+    }
+}

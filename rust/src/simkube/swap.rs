@@ -1,0 +1,126 @@
+//! The node swap device (paper §3.2 "Swap").
+//!
+//! Kubernetes swap support is what lets ARC-V absorb steep spikes instead
+//! of OOM-killing; its performance "strongly depends on the system's
+//! storage infrastructure". The device models a bandwidth-limited block
+//! store (the paper's testbed: 7200 RPM mechanical disks) shared by all
+//! pods on the node — there is *no per-pod swap limit*, the limitation the
+//! paper calls out explicitly.
+
+#[derive(Clone, Debug)]
+pub struct SwapDevice {
+    pub capacity_gb: f64,
+    /// Sustained sequential bandwidth, GB/s (HDD ≈ 0.1, SSD ≈ 0.5–3).
+    pub bandwidth_gbps: f64,
+    pub used_gb: f64,
+    /// Total bytes moved (GB), for the overhead accounting.
+    pub traffic_gb: f64,
+}
+
+impl SwapDevice {
+    pub fn hdd(capacity_gb: f64) -> Self {
+        Self {
+            capacity_gb,
+            bandwidth_gbps: 0.10,
+            used_gb: 0.0,
+            traffic_gb: 0.0,
+        }
+    }
+
+    pub fn ssd(capacity_gb: f64) -> Self {
+        Self {
+            capacity_gb,
+            bandwidth_gbps: 1.0,
+            used_gb: 0.0,
+            traffic_gb: 0.0,
+        }
+    }
+
+    /// A disabled device (Kubernetes default: fail if swap is on).
+    pub fn disabled() -> Self {
+        Self {
+            capacity_gb: 0.0,
+            bandwidth_gbps: 0.0,
+            used_gb: 0.0,
+            traffic_gb: 0.0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_gb > 0.0
+    }
+
+    pub fn free_gb(&self) -> f64 {
+        (self.capacity_gb - self.used_gb).max(0.0)
+    }
+
+    /// Try to page out `amount` GB; returns how much was accepted (bounded
+    /// by free capacity — the caller OOMs on the remainder).
+    pub fn page_out(&mut self, amount: f64) -> f64 {
+        let take = amount.max(0.0).min(self.free_gb());
+        self.used_gb += take;
+        self.traffic_gb += take;
+        take
+    }
+
+    /// Page `amount` GB back in (bounded by what is resident).
+    pub fn page_in(&mut self, amount: f64) -> f64 {
+        let take = amount.max(0.0).min(self.used_gb);
+        self.used_gb -= take;
+        self.traffic_gb += take;
+        take
+    }
+
+    /// Seconds of disk time to move `gb` at device bandwidth.
+    pub fn io_secs(&self, gb: f64) -> f64 {
+        if self.bandwidth_gbps <= 0.0 {
+            0.0
+        } else {
+            gb / self.bandwidth_gbps
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_out_caps_at_capacity() {
+        let mut d = SwapDevice::hdd(1.0);
+        assert_eq!(d.page_out(0.6), 0.6);
+        assert_eq!(d.page_out(0.6), 0.4);
+        assert_eq!(d.free_gb(), 0.0);
+        assert_eq!(d.used_gb, 1.0);
+    }
+
+    #[test]
+    fn page_in_caps_at_resident() {
+        let mut d = SwapDevice::hdd(2.0);
+        d.page_out(1.0);
+        assert_eq!(d.page_in(1.5), 1.0);
+        assert_eq!(d.used_gb, 0.0);
+    }
+
+    #[test]
+    fn disabled_device_accepts_nothing() {
+        let mut d = SwapDevice::disabled();
+        assert!(!d.enabled());
+        assert_eq!(d.page_out(1.0), 0.0);
+    }
+
+    #[test]
+    fn traffic_accumulates_both_directions() {
+        let mut d = SwapDevice::ssd(4.0);
+        d.page_out(2.0);
+        d.page_in(1.0);
+        assert_eq!(d.traffic_gb, 3.0);
+    }
+
+    #[test]
+    fn io_secs_scales_with_bandwidth() {
+        let d = SwapDevice::hdd(10.0);
+        assert!((d.io_secs(0.2) - 2.0).abs() < 1e-12); // 0.2GB @ 0.1GB/s
+        assert_eq!(SwapDevice::disabled().io_secs(5.0), 0.0);
+    }
+}

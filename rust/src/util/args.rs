@@ -1,0 +1,251 @@
+//! Minimal argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, and
+//! generated `--help`. Each binary declares its options up front so help
+//! text and unknown-flag errors stay consistent across the CLI, examples,
+//! and benches.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(about: &str) -> Self {
+        Self {
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut out = format!("{}\n\nUsage: {prog}", self.about);
+        for (p, _) in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push_str(" [options]\n\nOptions:\n");
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .filter(|d| !d.is_empty())
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("{head:<28}{}{def}\n", o.help));
+        }
+        out.push_str("  --help                    show this help\n");
+        out
+    }
+
+    /// Parse; on `--help` prints usage and exits 0; on error returns Err.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                if !o.is_flag {
+                    args.values.insert(o.name.clone(), d.clone());
+                }
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                print!("{}", self.usage("<prog>"));
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}"))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{key} needs a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+        }
+        if args.positionals.len() < self.positionals.len() {
+            return Err(format!(
+                "missing positional <{}>",
+                self.positionals[args.positionals.len()].0
+            ));
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); exits with usage on error.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("error: {e}\n");
+                eprint!("{}", self.usage(&std::env::args().next().unwrap_or_default()));
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("option --{key} was not declared with a default"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> f64 {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key} must be a number: {e}"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> u64 {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key} must be an integer: {e}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> usize {
+        self.get_u64(key) as usize
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test prog")
+            .opt("app", "kripke", "application")
+            .opt("seed", "42", "prng seed")
+            .flag("verbose", "chatty output")
+            .positional("cmd", "what to do")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&sv(&["run"])).unwrap();
+        assert_eq!(a.get("app"), "kripke");
+        assert_eq!(a.get_u64("seed"), 42);
+        assert!(!a.has_flag("verbose"));
+        assert_eq!(a.positional(0), Some("run"));
+    }
+
+    #[test]
+    fn overrides_and_equals_form() {
+        let a = spec()
+            .parse(&sv(&["run", "--app", "lulesh", "--seed=7", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("app"), "lulesh");
+        assert_eq!(a.get_u64("seed"), 7);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse(&sv(&["run", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse(&sv(&["run", "--app"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        assert!(spec().parse(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(spec().parse(&sv(&["run", "--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = spec().usage("arcv");
+        assert!(u.contains("--app"));
+        assert!(u.contains("[default: kripke]"));
+    }
+}

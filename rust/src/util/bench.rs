@@ -1,0 +1,128 @@
+//! Mini benchmarking harness (criterion is not in the vendored crate set).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: fixed warmup,
+//! timed iterations, mean/p50/p95 reporting in criterion-like lines. Good
+//! enough for the §Perf iteration loop where we compare successive runs of
+//! the same machine and care about >5 % deltas.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  p50 {:>12}  p95 {:>12}  min {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        )
+    }
+
+    /// Throughput helper: items processed per iteration → items/sec.
+    pub fn per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{:.0} ns", ns)
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations.
+/// `f` should return something observable to keep the optimizer honest
+/// (its result is passed through `std::hint::black_box`).
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let pick = |q: f64| samples[((q * (iters - 1) as f64).round() as usize).min(iters - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: pick(0.50),
+        p95_ns: pick(0.95),
+        min_ns: samples[0],
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Auto-pick an iteration count targeting ~`target_ms` of total measure time.
+pub fn bench_auto<T>(name: &str, target_ms: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // One probe iteration decides the count.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let probe_ns = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((target_ms * 1e6 / probe_ns).ceil() as usize).clamp(5, 100_000);
+    bench(name, iters / 10 + 1, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 25, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(r.iters, 25);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.500 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn per_sec_inverts_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e6, // 1ms per iter
+            p50_ns: 1e6,
+            p95_ns: 1e6,
+            min_ns: 1e6,
+        };
+        assert!((r.per_sec(10.0) - 10_000.0).abs() < 1e-6);
+    }
+}

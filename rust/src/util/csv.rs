@@ -1,0 +1,144 @@
+//! Tiny CSV writer/reader for trace dumps and bench series (the figures'
+//! data files).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity must match header"
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn frow(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|x| format!("{x}")).collect::<Vec<_>>());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+fn escape(c: &str) -> String {
+    if c.contains(',') || c.contains('"') || c.contains('\n') {
+        format!("\"{}\"", c.replace('"', "\"\""))
+    } else {
+        c.to_string()
+    }
+}
+
+/// Parse simple CSV (no embedded newlines) → (header, rows).
+pub fn parse(text: &str) -> Result<(Vec<String>, Vec<Vec<String>>), String> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = split_line(lines.next().ok_or("empty csv")?);
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let cells = split_line(line);
+        if cells.len() != header.len() {
+            return Err(format!(
+                "row {} has {} cells, header has {}",
+                i + 1,
+                cells.len(),
+                header.len()
+            ));
+        }
+        rows.push(cells);
+    }
+    Ok((header, rows))
+}
+
+fn split_line(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                cells.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    cells.push(cur);
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_parses() {
+        let mut w = CsvWriter::new(&["t", "usage_gb", "note"]);
+        w.row(&["0".into(), "1.5".into(), "plain".into()]);
+        w.row(&["5".into(), "2.5".into(), "has,comma".into()]);
+        let text = w.to_string();
+        let (h, rows) = parse(&text).unwrap();
+        assert_eq!(h, vec!["t", "usage_gb", "note"]);
+        assert_eq!(rows[1][2], "has,comma");
+    }
+
+    #[test]
+    fn quote_escaping_round_trips() {
+        let mut w = CsvWriter::new(&["a"]);
+        w.row(&["say \"hi\"".into()]);
+        let (_, rows) = parse(&w.to_string()).unwrap();
+        assert_eq!(rows[0][0], "say \"hi\"");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn parse_rejects_ragged() {
+        assert!(parse("a,b\n1\n").is_err());
+    }
+}

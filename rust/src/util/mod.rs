@@ -1,0 +1,14 @@
+//! Support layer: deterministic PRNGs, units, stats, containers, I/O
+//! formats, CLI parsing, and the mini bench/property-test harnesses that
+//! replace criterion/proptest in this offline build (DESIGN.md §7).
+
+pub mod args;
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod plot;
+pub mod prop;
+pub mod ring;
+pub mod rng;
+pub mod stats;
+pub mod units;

@@ -1,0 +1,131 @@
+//! ASCII line plots for terminal figures (the benches render each paper
+//! figure as CSV *and* a quick-look plot).
+
+/// Render one or more series into a `height`-row ASCII chart. Series are
+/// drawn with distinct glyphs; x is compressed to `width` columns by
+//  averaging buckets.
+pub fn multi_line(
+    title: &str,
+    series: &[(&str, &[f64])],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(height >= 2 && width >= 8);
+    let glyphs = ['*', '+', 'o', 'x', '#', '@'];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (_, ys) in series {
+        for &y in *ys {
+            if y.is_finite() {
+                lo = lo.min(y);
+                hi = hi.max(y);
+            }
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return format!("{title}\n(no finite data)\n");
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        if ys.is_empty() {
+            continue;
+        }
+        let glyph = glyphs[si % glyphs.len()];
+        for col in 0..width {
+            // average the bucket of samples that lands in this column
+            let a = col * ys.len() / width;
+            let b = (((col + 1) * ys.len()) / width).max(a + 1).min(ys.len());
+            if a >= ys.len() {
+                break;
+            }
+            let v: f64 = ys[a..b].iter().sum::<f64>() / (b - a) as f64;
+            let row = ((v - lo) / (hi - lo) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            grid[row][col] = glyph;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{hi:>10.3} |")
+        } else if i == height - 1 {
+            format!("{lo:>10.3} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>11}+{}\n", "", "-".repeat(width)));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", glyphs[i % glyphs.len()], name))
+        .collect();
+    out.push_str(&format!("{:>12}{}\n", "", legend.join("   ")));
+    out
+}
+
+/// Single-series convenience.
+pub fn line(title: &str, ys: &[f64], width: usize, height: usize) -> String {
+    multi_line(title, &[("series", ys)], width, height)
+}
+
+/// Horizontal bar chart for ratio tables (Fig 4 left).
+pub fn bars(title: &str, rows: &[(&str, f64)], width: usize) -> String {
+    let mut out = format!("{title}\n");
+    let max = rows.iter().map(|(_, v)| *v).fold(0.0_f64, f64::max).max(1e-9);
+    for (name, v) in rows {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!("{name:>12} | {:<width$} {v:.2}\n", "#".repeat(n)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_line_with_bounds() {
+        let ys: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = line("ramp", &ys, 40, 8);
+        assert!(s.contains("ramp"));
+        assert!(s.contains("99.000"));
+        assert!(s.contains("0.000"));
+    }
+
+    #[test]
+    fn handles_flat_series() {
+        let s = line("flat", &[5.0; 10], 20, 4);
+        assert!(s.contains("5.000"));
+    }
+
+    #[test]
+    fn multi_series_legend() {
+        let a: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..50).map(|i| (50 - i) as f64).collect();
+        let s = multi_line("two", &[("up", &a), ("down", &b)], 30, 6);
+        assert!(s.contains("* up"));
+        assert!(s.contains("+ down"));
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let s = bars("ratios", &[("amr", 1.06), ("lammps", 10.5)], 30);
+        assert!(s.contains("amr"));
+        assert!(s.contains("10.50"));
+    }
+
+    #[test]
+    fn empty_data_is_graceful() {
+        let s = multi_line("none", &[("e", &[][..])], 20, 4);
+        assert!(s.contains("no finite data"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Fixed-capacity ring buffer for metric windows (the coordinator keeps one
+//! per pod; the hot loop reads the last `W` samples without reallocating).
+
+#[derive(Clone, Debug)]
+pub struct RingBuffer {
+    buf: Vec<f64>,
+    head: usize, // next write position
+    len: usize,
+}
+
+impl RingBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "ring buffer needs capacity > 0");
+        Self {
+            buf: vec![0.0; capacity],
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.buf[self.head] = x;
+        self.head = (self.head + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    /// i-th element from the oldest (0 = oldest retained sample).
+    pub fn get(&self, i: usize) -> Option<f64> {
+        if i >= self.len {
+            return None;
+        }
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        Some(self.buf[(start + i) % cap])
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        if self.len == 0 {
+            None
+        } else {
+            self.get(self.len - 1)
+        }
+    }
+
+    /// Copy the newest `n` samples (oldest-first) into `out`; returns how
+    /// many were written. Allocation-free for the caller's reused buffer.
+    pub fn copy_last_into(&self, n: usize, out: &mut [f64]) -> usize {
+        let take = n.min(self.len).min(out.len());
+        let skip = self.len - take;
+        for i in 0..take {
+            out[i] = self.get(skip + i).unwrap();
+        }
+        take
+    }
+
+    /// All retained samples, oldest-first.
+    pub fn to_vec(&self) -> Vec<f64> {
+        (0..self.len).map(|i| self.get(i).unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_wraps() {
+        let mut r = RingBuffer::new(3);
+        assert!(r.is_empty());
+        r.push(1.0);
+        r.push(2.0);
+        assert_eq!(r.to_vec(), vec![1.0, 2.0]);
+        r.push(3.0);
+        assert!(r.is_full());
+        r.push(4.0); // evicts 1.0
+        assert_eq!(r.to_vec(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(r.last(), Some(4.0));
+        assert_eq!(r.get(0), Some(2.0));
+        assert_eq!(r.get(3), None);
+    }
+
+    #[test]
+    fn copy_last_into_takes_newest() {
+        let mut r = RingBuffer::new(5);
+        for i in 0..9 {
+            r.push(i as f64);
+        }
+        let mut out = [0.0; 3];
+        let n = r.copy_last_into(3, &mut out);
+        assert_eq!(n, 3);
+        assert_eq!(out, [6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn copy_more_than_len_clamps() {
+        let mut r = RingBuffer::new(8);
+        r.push(1.0);
+        r.push(2.0);
+        let mut out = [0.0; 8];
+        assert_eq!(r.copy_last_into(8, &mut out), 2);
+        assert_eq!(&out[..2], &[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        RingBuffer::new(0);
+    }
+}

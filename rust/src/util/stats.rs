@@ -1,0 +1,165 @@
+//! Small numeric helpers shared by the metrics pipeline, the harness, and
+//! the benches.
+
+/// Streaming mean/min/max/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile with linear interpolation; `q` in [0, 1]. Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Trapezoidal integral of uniformly sampled `ys` with spacing `dt`.
+pub fn trapezoid(ys: &[f64], dt: f64) -> f64 {
+    if ys.len() < 2 {
+        return 0.0;
+    }
+    let inner: f64 = ys[1..ys.len() - 1].iter().sum();
+    dt * (0.5 * (ys[0] + ys[ys.len() - 1]) + inner)
+}
+
+/// Ordinary least squares over (0..n, ys) → (slope, intercept).
+pub fn linreg(ys: &[f64]) -> (f64, f64) {
+    let n = ys.len();
+    if n < 2 {
+        return (0.0, ys.first().copied().unwrap_or(0.0));
+    }
+    let nf = n as f64;
+    let tbar = (nf - 1.0) / 2.0;
+    let ybar = mean(ys);
+    let mut cov = 0.0;
+    let mut var = 0.0;
+    for (i, &y) in ys.iter().enumerate() {
+        let dt = i as f64 - tbar;
+        cov += dt * (y - ybar);
+        var += dt * dt;
+    }
+    let slope = cov / var;
+    (slope, ybar - slope * tbar)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_match_direct() {
+        let xs = [3.0, 1.0, 4.0, 1.5, 9.2, 2.6];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 6);
+        assert!((s.mean() - mean(&xs)).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 9.2);
+        let m = mean(&xs);
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / 5.0;
+        assert!((s.var() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn trapezoid_integrates_line() {
+        // ∫0..4 of y=x dx = 8, sampled at dt=1
+        let ys = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert!((trapezoid(&ys, 1.0) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let ys: Vec<f64> = (0..10).map(|i| 2.5 * i as f64 - 3.0).collect();
+        let (m, b) = linreg(&ys);
+        assert!((m - 2.5).abs() < 1e-9);
+        assert!((b + 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linreg_flat_is_zero_slope() {
+        let ys = [7.0; 12];
+        let (m, b) = linreg(&ys);
+        assert_eq!(m, 0.0);
+        assert_eq!(b, 7.0);
+    }
+}

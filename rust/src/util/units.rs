@@ -1,0 +1,105 @@
+//! Memory quantities. The whole stack measures memory in **GB (f64)**
+//! (decimal gigabytes, matching the paper's tables); helpers here convert
+//! to/from human-readable strings and the bytes the simulated kubelet
+//! reports.
+
+/// 1 GB in bytes (decimal, as the paper's GB/TB figures are decimal).
+pub const GB: f64 = 1e9;
+pub const MB: f64 = 1e6;
+
+/// Parse "4.5GB" / "415MB" / "23.7mb" / "0.5tb" / plain "1.25" (GB) → GB.
+pub fn parse_gb(s: &str) -> Result<f64, String> {
+    let t = s.trim();
+    let lower = t.to_ascii_lowercase();
+    let (num, mult) = if let Some(stripped) = lower.strip_suffix("tb") {
+        (stripped, 1000.0)
+    } else if let Some(stripped) = lower.strip_suffix("gb") {
+        (stripped, 1.0)
+    } else if let Some(stripped) = lower.strip_suffix("mb") {
+        (stripped, 1e-3)
+    } else if let Some(stripped) = lower.strip_suffix("kb") {
+        (stripped, 1e-6)
+    } else if let Some(stripped) = lower.strip_suffix('b') {
+        (stripped, 1e-9)
+    } else {
+        (lower.as_str(), 1.0)
+    };
+    num.trim()
+        .parse::<f64>()
+        .map(|v| v * mult)
+        .map_err(|e| format!("cannot parse memory quantity {s:?}: {e}"))
+}
+
+/// Format GB with a sensible unit ("23.7 MB", "5.50 GB", "13.8 TB").
+pub fn fmt_gb(gb: f64) -> String {
+    let abs = gb.abs();
+    if abs >= 1000.0 {
+        format!("{:.2} TB", gb / 1000.0)
+    } else if abs >= 1.0 {
+        format!("{:.2} GB", gb)
+    } else if abs >= 1e-3 {
+        format!("{:.1} MB", gb * 1e3)
+    } else {
+        format!("{:.0} KB", gb * 1e6)
+    }
+}
+
+pub fn gb_to_bytes(gb: f64) -> u64 {
+    (gb * GB).round().max(0.0) as u64
+}
+
+pub fn bytes_to_gb(bytes: u64) -> f64 {
+    bytes as f64 / GB
+}
+
+/// Format seconds as "1h47m" / "12m33s" / "45s".
+pub fn fmt_secs(s: u64) -> String {
+    if s >= 3600 {
+        format!("{}h{:02}m", s / 3600, (s % 3600) / 60)
+    } else if s >= 60 {
+        format!("{}m{:02}s", s / 60, s % 60)
+    } else {
+        format!("{s}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_units() {
+        assert_eq!(parse_gb("4.5GB").unwrap(), 4.5);
+        assert!((parse_gb("415MB").unwrap() - 0.415).abs() < 1e-12);
+        assert!((parse_gb("23.7mb").unwrap() - 0.0237).abs() < 1e-12);
+        assert_eq!(parse_gb("0.5tb").unwrap(), 500.0);
+        assert_eq!(parse_gb("2").unwrap(), 2.0);
+        assert_eq!(parse_gb(" 1.5 GB ").unwrap(), 1.5);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_gb("lots").is_err());
+        assert!(parse_gb("").is_err());
+    }
+
+    #[test]
+    fn fmt_picks_unit() {
+        assert_eq!(fmt_gb(5.5), "5.50 GB");
+        assert_eq!(fmt_gb(0.0237), "23.7 MB");
+        assert_eq!(fmt_gb(13_800.0), "13.80 TB");
+    }
+
+    #[test]
+    fn bytes_conversions() {
+        assert_eq!(gb_to_bytes(2.0), 2_000_000_000);
+        assert!((bytes_to_gb(2_000_000_000) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(45), "45s");
+        assert_eq!(fmt_secs(753), "12m33s");
+        assert_eq!(fmt_secs(6420), "1h47m");
+    }
+}

@@ -1,0 +1,110 @@
+//! Calibration checks: every generated workload must reproduce its Table 1
+//! row (execution time exactly; max memory and footprint within tolerance).
+
+use super::model::Pattern;
+use super::registry::{build, AppId};
+use super::trace::Trace;
+
+/// One Table 1 row (paper values, verbatim; footprint in GB·s).
+#[derive(Clone, Copy, Debug)]
+pub struct Table1Row {
+    pub app: AppId,
+    pub pattern: Pattern,
+    pub exec_secs: f64,
+    pub max_gb: f64,
+    pub footprint_gbs: f64,
+}
+
+/// Table 1 of the paper.
+pub const TABLE1: [Table1Row; 9] = [
+    Table1Row { app: AppId::Amr, pattern: Pattern::Growth, exec_secs: 253.0, max_gb: 2.6, footprint_gbs: 620.0 },
+    Table1Row { app: AppId::Bfs, pattern: Pattern::Dynamic, exec_secs: 287.0, max_gb: 48.4, footprint_gbs: 9400.0 },
+    Table1Row { app: AppId::Cm1, pattern: Pattern::Growth, exec_secs: 913.0, max_gb: 0.415, footprint_gbs: 240.0 },
+    Table1Row { app: AppId::Gromacs, pattern: Pattern::Growth, exec_secs: 6420.0, max_gb: 4.5, footprint_gbs: 27_180.0 },
+    Table1Row { app: AppId::Kripke, pattern: Pattern::Growth, exec_secs: 650.0, max_gb: 5.5, footprint_gbs: 3500.0 },
+    Table1Row { app: AppId::Lammps, pattern: Pattern::Growth, exec_secs: 2321.0, max_gb: 0.0237, footprint_gbs: 54.0 },
+    Table1Row { app: AppId::Lulesh, pattern: Pattern::Dynamic, exec_secs: 750.0, max_gb: 0.696, footprint_gbs: 270.0 },
+    Table1Row { app: AppId::Minife, pattern: Pattern::Dynamic, exec_secs: 352.0, max_gb: 63.7, footprint_gbs: 13_800.0 },
+    Table1Row { app: AppId::Sputnipic, pattern: Pattern::Growth, exec_secs: 210.0, max_gb: 8.8, footprint_gbs: 1000.0 },
+];
+
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    pub app: AppId,
+    pub measured_max_gb: f64,
+    pub measured_footprint_gbs: f64,
+    pub measured_pattern: Pattern,
+    pub max_rel_err: f64,
+    pub footprint_rel_err: f64,
+    pub pattern_ok: bool,
+}
+
+impl CalibrationReport {
+    pub fn within(&self, tol: f64) -> bool {
+        self.max_rel_err.abs() <= tol && self.footprint_rel_err.abs() <= tol && self.pattern_ok
+    }
+}
+
+/// Generate the app's trace (5 s sampling, like the paper) and compare.
+pub fn check(row: &Table1Row, seed: u64) -> CalibrationReport {
+    let model = build(row.app, seed);
+    let trace = Trace::from_model(&model, 5.0);
+    let max = trace.max_gb();
+    let fp = trace.footprint_gbs();
+    let pattern = trace.classify(0.02);
+    CalibrationReport {
+        app: row.app,
+        measured_max_gb: max,
+        measured_footprint_gbs: fp,
+        measured_pattern: pattern,
+        max_rel_err: (max - row.max_gb) / row.max_gb,
+        footprint_rel_err: (fp - row.footprint_gbs) / row.footprint_gbs,
+        pattern_ok: pattern == row.pattern,
+    }
+}
+
+pub fn check_all(seed: u64) -> Vec<CalibrationReport> {
+    TABLE1.iter().map(|r| check(r, seed)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_app_matches_table1_within_5_percent() {
+        for (row, rep) in TABLE1.iter().zip(check_all(42)) {
+            assert!(
+                rep.within(0.05),
+                "{:?}: max err {:.1}% fp err {:.1}% pattern {}(want {})",
+                row.app,
+                rep.max_rel_err * 100.0,
+                rep.footprint_rel_err * 100.0,
+                rep.measured_pattern,
+                row.pattern,
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_is_seed_stable() {
+        // different noise seeds must not break the targets
+        for seed in [1, 7, 123, 20_250_710] {
+            for rep in check_all(seed) {
+                assert!(rep.within(0.05), "seed={seed} app={:?}", rep.app);
+            }
+        }
+    }
+
+    #[test]
+    fn patterns_split_paper_way() {
+        let growth: Vec<_> = TABLE1
+            .iter()
+            .filter(|r| r.pattern == Pattern::Growth)
+            .map(|r| r.app)
+            .collect();
+        assert_eq!(growth.len(), 6);
+        assert!(growth.contains(&AppId::Kripke));
+        assert!(!growth.contains(&AppId::Lulesh));
+    }
+}

@@ -1,0 +1,14 @@
+//! `workloads` — the nine HPC application memory models of paper §3.1
+//! (system S8): calibrated synthetic generators, trace record/replay, and
+//! Table 1 calibration checks.
+
+pub mod apps;
+pub mod calibrate;
+pub mod model;
+pub mod registry;
+pub mod trace;
+
+pub use calibrate::{check, check_all, Table1Row, TABLE1};
+pub use model::{AppModel, Pattern, Shape};
+pub use registry::{build, AppId};
+pub use trace::{Trace, TraceProcess};

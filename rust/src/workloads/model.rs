@@ -1,0 +1,272 @@
+//! Synthetic application memory models (paper §3).
+//!
+//! Each of the nine applications is a *shape* — a normalized profile
+//! `s: [0,1] → [0,1]` built from the combinators here — plus an affine
+//! calibration `usage(t) = a + b·s(t/T)` solved at construction so the
+//! generated trace hits Table 1's max memory and memory footprint exactly
+//! (DESIGN.md §5). Deterministic multiplicative noise (seeded, per-second)
+//! models measurement jitter without disturbing the calibration targets.
+
+use super::super::simkube::pod::MemoryProcess;
+use crate::util::rng::hash2;
+
+/// The paper's two memory-consumption classes (§3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// Non-decreasing monotonic within a ±2 % band.
+    Growth,
+    /// Everything else (has decreases beyond the band).
+    Dynamic,
+}
+
+impl std::fmt::Display for Pattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Pattern::Growth => "G",
+            Pattern::Dynamic => "D",
+        })
+    }
+}
+
+/// Normalized shape: piecewise segments over x ∈ [0,1].
+pub struct Shape {
+    segments: Vec<(f64, Box<dyn Fn(f64) -> f64 + Send + Sync>)>, // (width, f(local x))
+    total: f64,
+}
+
+impl Shape {
+    pub fn new() -> Self {
+        Self {
+            segments: Vec::new(),
+            total: 0.0,
+        }
+    }
+
+    fn seg(mut self, width: f64, f: impl Fn(f64) -> f64 + Send + Sync + 'static) -> Self {
+        assert!(width > 0.0);
+        self.segments.push((width, Box::new(f)));
+        self.total += width;
+        self
+    }
+
+    /// Linear piece from `lo` to `hi` over `width` of normalized time.
+    pub fn linear(self, width: f64, lo: f64, hi: f64) -> Self {
+        self.seg(width, move |x| lo + (hi - lo) * x)
+    }
+
+    /// Constant piece.
+    pub fn flat(self, width: f64, v: f64) -> Self {
+        self.seg(width, move |_| v)
+    }
+
+    /// Saturating exponential rise `lo → hi` (fast early growth).
+    pub fn satexp(self, width: f64, lo: f64, hi: f64, k: f64) -> Self {
+        let denom = 1.0 - (-k_f(k)).exp();
+        self.seg(width, move |x| {
+            lo + (hi - lo) * (1.0 - (-k_f(k) * x).exp()) / denom
+        })
+    }
+
+    /// Repeating burst cycles: rise to `hi` then steep fall to `lo`
+    /// (`n` cycles across the segment, asymmetric ramp-up).
+    pub fn bursts(self, width: f64, lo: f64, hi: f64, n: u32, seed: u64) -> Self {
+        self.seg(width, move |x| {
+            let cycle = x * n as f64;
+            let i = cycle.floor();
+            let frac = cycle - i;
+            // per-cycle peak varies deterministically in [0.55, 1.0]·hi
+            let h = 0.55 + 0.45 * unit(hash2(seed, i as u64));
+            let peak = lo + (hi - lo) * h;
+            if frac < 0.8 {
+                // ramp up over 80% of the cycle
+                lo + (peak - lo) * (frac / 0.8).powf(1.6)
+            } else {
+                // steep decrease
+                peak - (peak - lo) * ((frac - 0.8) / 0.2)
+            }
+        })
+    }
+
+    /// Evaluate at normalized time x ∈ [0,1].
+    pub fn eval(&self, x: f64) -> f64 {
+        let x = x.clamp(0.0, 1.0) * self.total;
+        let mut acc = 0.0;
+        for (i, (w, f)) in self.segments.iter().enumerate() {
+            let last = i + 1 == self.segments.len();
+            if x <= acc + *w || last {
+                let local = ((x - acc) / w).clamp(0.0, 1.0);
+                return f(local);
+            }
+            acc += w;
+        }
+        0.0
+    }
+}
+
+impl Default for Shape {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn k_f(k: f64) -> f64 {
+    k.max(1e-6)
+}
+
+/// u64 → [0,1)
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// A calibrated application model. Implements [`MemoryProcess`] so pods can
+/// host it directly.
+pub struct AppModel {
+    pub name: String,
+    pub pattern: Pattern,
+    pub exec_secs: f64,
+    pub max_gb: f64,
+    /// Table 1 target, GB·s.
+    pub footprint_gbs: f64,
+    shape: Shape,
+    /// usage = a + b · shape(x), solved from (max, footprint).
+    a: f64,
+    b: f64,
+    /// max of the raw shape over the evaluation grid (normalizer).
+    shape_max: f64,
+    pub noise_amp: f64,
+    pub seed: u64,
+}
+
+impl AppModel {
+    /// Calibrate `shape` to hit `max_gb` and `footprint_gbs` over
+    /// `exec_secs` (±5 %, see workloads::calibrate).
+    pub fn calibrated(
+        name: &str,
+        pattern: Pattern,
+        exec_secs: f64,
+        max_gb: f64,
+        footprint_gbs: f64,
+        shape: Shape,
+        noise_amp: f64,
+        seed: u64,
+    ) -> Self {
+        // numeric max + mean of the shape on a 1s-equivalent grid
+        let n = (exec_secs as usize).max(1000);
+        let mut smax = f64::MIN;
+        let mut ssum = 0.0;
+        for i in 0..=n {
+            let v = shape.eval(i as f64 / n as f64);
+            smax = smax.max(v);
+            ssum += v;
+        }
+        let smean = ssum / (n + 1) as f64 / smax; // of the normalized shape
+        let avg_gb = footprint_gbs / exec_secs;
+        // Solve a + b = max, a + b*mean = avg  (see DESIGN.md §5)
+        let mut b = if smean < 1.0 {
+            (max_gb - avg_gb) / (1.0 - smean)
+        } else {
+            0.0
+        };
+        let mut a = max_gb - b;
+        if a < 0.0 {
+            // shape mean too low for the target ratio: clamp (small error)
+            a = 0.0;
+            b = max_gb;
+        }
+        Self {
+            name: name.to_string(),
+            pattern,
+            exec_secs,
+            max_gb,
+            footprint_gbs,
+            shape,
+            a,
+            b,
+            shape_max: smax,
+            noise_amp,
+            seed,
+        }
+    }
+
+    /// Noise factor at integer second `t` — deterministic, mean ≈ 1.
+    fn noise(&self, t: u64) -> f64 {
+        1.0 + self.noise_amp * (2.0 * unit(hash2(self.seed, t)) - 1.0)
+    }
+}
+
+impl MemoryProcess for AppModel {
+    fn usage_gb(&self, progress_secs: f64) -> f64 {
+        let x = (progress_secs / self.exec_secs).clamp(0.0, 1.0);
+        let s = self.shape.eval(x) / self.shape_max;
+        let base = self.a + self.b * s;
+        (base * self.noise(progress_secs as u64)).max(1e-4)
+    }
+
+    fn duration_secs(&self) -> f64 {
+        self.exec_secs
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_linear_and_flat_compose() {
+        let s = Shape::new().linear(0.5, 0.0, 1.0).flat(0.5, 1.0);
+        assert!((s.eval(0.0) - 0.0).abs() < 1e-9);
+        assert!((s.eval(0.25) - 0.5).abs() < 1e-9);
+        assert!((s.eval(0.75) - 1.0).abs() < 1e-9);
+        assert!((s.eval(1.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn satexp_rises_and_saturates() {
+        let s = Shape::new().satexp(1.0, 0.0, 1.0, 5.0);
+        assert!(s.eval(0.0) < 0.01);
+        assert!(s.eval(0.2) > 0.5); // fast early
+        assert!((s.eval(1.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bursts_hit_peaks_and_troughs() {
+        let s = Shape::new().bursts(1.0, 0.2, 1.0, 10, 7);
+        let vals: Vec<f64> = (0..1000).map(|i| s.eval(i as f64 / 1000.0)).collect();
+        let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+        let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max > 0.7, "max={max}");
+        assert!(min < 0.25, "min={min}");
+    }
+
+    #[test]
+    fn calibration_hits_max_and_footprint() {
+        let shape = Shape::new().linear(1.0, 0.2, 1.0);
+        let m = AppModel::calibrated("lin", Pattern::Growth, 1000.0, 10.0, 7000.0, shape, 0.0, 1);
+        // exact max at end
+        assert!((m.usage_gb(1000.0) - 10.0).abs() < 1e-6);
+        // footprint ≈ 7000 GB·s
+        let fp: f64 = (0..1000).map(|t| m.usage_gb(t as f64 + 0.5)).sum();
+        assert!((fp - 7000.0).abs() / 7000.0 < 0.01, "fp={fp}");
+    }
+
+    #[test]
+    fn usage_is_pure_function_of_progress() {
+        let shape = Shape::new().linear(1.0, 0.0, 1.0);
+        let m = AppModel::calibrated("p", Pattern::Growth, 100.0, 4.0, 250.0, shape, 0.01, 3);
+        assert_eq!(m.usage_gb(42.0), m.usage_gb(42.0));
+    }
+
+    #[test]
+    fn noise_respects_amplitude() {
+        let shape = Shape::new().flat(1.0, 1.0);
+        let m = AppModel::calibrated("n", Pattern::Growth, 500.0, 2.0, 1000.0, shape, 0.005, 9);
+        for t in 0..500 {
+            let u = m.usage_gb(t as f64);
+            assert!(u <= 2.0 * 1.0051 && u >= 2.0 * 0.9949, "t={t} u={u}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Application registry: ids, names, builders.
+
+use super::apps;
+use super::model::AppModel;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AppId {
+    Amr,
+    Bfs,
+    Cm1,
+    Gromacs,
+    Kripke,
+    Lammps,
+    Lulesh,
+    Minife,
+    Sputnipic,
+}
+
+impl AppId {
+    pub fn all() -> [AppId; 9] {
+        [
+            AppId::Amr,
+            AppId::Bfs,
+            AppId::Cm1,
+            AppId::Gromacs,
+            AppId::Kripke,
+            AppId::Lammps,
+            AppId::Lulesh,
+            AppId::Minife,
+            AppId::Sputnipic,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppId::Amr => "amr",
+            AppId::Bfs => "bfs",
+            AppId::Cm1 => "cm1",
+            AppId::Gromacs => "gromacs",
+            AppId::Kripke => "kripke",
+            AppId::Lammps => "lammps",
+            AppId::Lulesh => "lulesh",
+            AppId::Minife => "minife",
+            AppId::Sputnipic => "sputnipic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<AppId, String> {
+        AppId::all()
+            .into_iter()
+            .find(|a| a.name() == s.to_ascii_lowercase())
+            .ok_or_else(|| {
+                format!(
+                    "unknown app {s:?}; expected one of {}",
+                    AppId::all().map(|a| a.name()).join(", ")
+                )
+            })
+    }
+}
+
+impl std::fmt::Display for AppId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Build the calibrated model for an app with a noise seed.
+pub fn build(app: AppId, seed: u64) -> AppModel {
+    match app {
+        AppId::Amr => apps::amr(seed),
+        AppId::Bfs => apps::bfs(seed),
+        AppId::Cm1 => apps::cm1(seed),
+        AppId::Gromacs => apps::gromacs(seed),
+        AppId::Kripke => apps::kripke(seed),
+        AppId::Lammps => apps::lammps(seed),
+        AppId::Lulesh => apps::lulesh(seed),
+        AppId::Minife => apps::minife(seed),
+        AppId::Sputnipic => apps::sputnipic(seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_names() {
+        for a in AppId::all() {
+            assert_eq!(AppId::parse(a.name()).unwrap(), a);
+            assert_eq!(AppId::parse(&a.name().to_uppercase()).unwrap(), a);
+        }
+        assert!(AppId::parse("nonesuch").is_err());
+    }
+
+    #[test]
+    fn build_names_match_ids() {
+        use crate::simkube::pod::MemoryProcess;
+        for a in AppId::all() {
+            assert_eq!(build(a, 1).name(), a.name());
+        }
+    }
+}

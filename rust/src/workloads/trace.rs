@@ -1,0 +1,184 @@
+//! Sampled memory traces: record, replay, classify, persist.
+//!
+//! A `Trace` is what Figure 2 plots — the 5 s-sampled memory series of one
+//! application run. Traces can be generated from a model, re-played as a
+//! [`MemoryProcess`] (for experiments driven from recorded data), and
+//! classified into the paper's Growth/Dynamic patterns.
+
+use super::super::simkube::pod::MemoryProcess;
+use super::model::Pattern;
+use crate::util::csv::{self, CsvWriter};
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// Sampling period, seconds (the paper uses 5).
+    pub dt: f64,
+    /// Usage samples, GB, at t = 0, dt, 2·dt, ...
+    pub samples: Vec<f64>,
+    pub name: String,
+}
+
+impl Trace {
+    /// Sample a model at period `dt` across its whole duration.
+    pub fn from_model(m: &dyn MemoryProcess, dt: f64) -> Trace {
+        let n = (m.duration_secs() / dt).ceil() as usize;
+        let samples = (0..=n)
+            .map(|i| m.usage_gb((i as f64 * dt).min(m.duration_secs())))
+            .collect();
+        Trace {
+            dt,
+            samples,
+            name: m.name().to_string(),
+        }
+    }
+
+    pub fn duration_secs(&self) -> f64 {
+        (self.samples.len().saturating_sub(1)) as f64 * self.dt
+    }
+
+    pub fn max_gb(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::MIN, f64::max)
+    }
+
+    /// ∫ usage dt, GB·s (the Table 1 footprint before the /1000).
+    pub fn footprint_gbs(&self) -> f64 {
+        stats::trapezoid(&self.samples, self.dt)
+    }
+
+    /// The paper's §3 classification: Growth iff every consecutive relative
+    /// delta is ≥ −band (default band 2 %).
+    pub fn classify(&self, band: f64) -> Pattern {
+        for w in self.samples.windows(2) {
+            let rel = (w[1] - w[0]) / w[0].abs().max(1e-9);
+            if rel < -band {
+                return Pattern::Dynamic;
+            }
+        }
+        Pattern::Growth
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut w = CsvWriter::new(&["t_secs", "usage_gb"]);
+        for (i, &s) in self.samples.iter().enumerate() {
+            w.frow(&[i as f64 * self.dt, s]);
+        }
+        w.to_string()
+    }
+
+    pub fn from_csv(name: &str, text: &str) -> Result<Trace, String> {
+        let (header, rows) = csv::parse(text)?;
+        if header.len() < 2 {
+            return Err("need t_secs,usage_gb columns".into());
+        }
+        let mut ts = Vec::new();
+        let mut ys = Vec::new();
+        for r in rows {
+            ts.push(r[0].parse::<f64>().map_err(|e| e.to_string())?);
+            ys.push(r[1].parse::<f64>().map_err(|e| e.to_string())?);
+        }
+        if ys.len() < 2 {
+            return Err("trace needs at least two samples".into());
+        }
+        Ok(Trace {
+            dt: ts[1] - ts[0],
+            samples: ys,
+            name: name.to_string(),
+        })
+    }
+}
+
+/// Replay a recorded trace as a process (linear interpolation between
+/// samples). Lets experiments run from external/captured data.
+pub struct TraceProcess {
+    trace: Trace,
+}
+
+impl TraceProcess {
+    pub fn new(trace: Trace) -> Self {
+        Self { trace }
+    }
+}
+
+impl MemoryProcess for TraceProcess {
+    fn usage_gb(&self, t: f64) -> f64 {
+        let x = (t / self.trace.dt).clamp(0.0, (self.trace.samples.len() - 1) as f64);
+        let i = x.floor() as usize;
+        let frac = x - i as f64;
+        if i + 1 >= self.trace.samples.len() {
+            *self.trace.samples.last().unwrap()
+        } else {
+            self.trace.samples[i] * (1.0 - frac) + self.trace.samples[i + 1] * frac
+        }
+    }
+
+    fn duration_secs(&self) -> f64 {
+        self.trace.duration_secs()
+    }
+
+    fn name(&self) -> &str {
+        &self.trace.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::apps;
+    use super::*;
+
+    #[test]
+    fn from_model_covers_duration() {
+        let m = apps::cm1(1);
+        let t = Trace::from_model(&m, 5.0);
+        assert!((t.duration_secs() - 915.0).abs() < 5.1); // ceil to sample grid
+        assert!(t.max_gb() > 0.4 && t.max_gb() < 0.43);
+    }
+
+    #[test]
+    fn classify_growth_vs_dynamic() {
+        let g = Trace {
+            dt: 5.0,
+            samples: vec![1.0, 1.01, 1.02, 1.05, 1.05],
+            name: "g".into(),
+        };
+        assert_eq!(g.classify(0.02), Pattern::Growth);
+        let d = Trace {
+            dt: 5.0,
+            samples: vec![1.0, 1.5, 1.0, 1.5],
+            name: "d".into(),
+        };
+        assert_eq!(d.classify(0.02), Pattern::Dynamic);
+        // small dips inside the band stay Growth
+        let band_ok = Trace {
+            dt: 5.0,
+            samples: vec![1.0, 0.99, 1.0, 0.995, 1.0],
+            name: "b".into(),
+        };
+        assert_eq!(band_ok.classify(0.02), Pattern::Growth);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let m = apps::kripke(1);
+        let t = Trace::from_model(&m, 5.0);
+        let text = t.to_csv();
+        let back = Trace::from_csv("kripke", &text).unwrap();
+        assert_eq!(back.samples.len(), t.samples.len());
+        assert!((back.dt - 5.0).abs() < 1e-9);
+        assert!((back.footprint_gbs() - t.footprint_gbs()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn replay_interpolates() {
+        let t = Trace {
+            dt: 5.0,
+            samples: vec![0.0, 10.0, 20.0],
+            name: "r".into(),
+        };
+        let p = TraceProcess::new(t);
+        assert!((p.usage_gb(2.5) - 5.0).abs() < 1e-9);
+        assert!((p.usage_gb(7.5) - 15.0).abs() < 1e-9);
+        assert_eq!(p.usage_gb(1e9), 20.0); // clamps at end
+        assert_eq!(p.duration_secs(), 10.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Runtime equivalence: the XLA fleet backend (AOT artifact via PJRT) must
+//! match the native fleet backend on random batches — the test that proves
+//! the deployed hot path computes the paper's policy.
+//!
+//! Requires `make artifacts`; skips (with a loud note) when absent so plain
+//! `cargo test` still passes in a fresh checkout.
+
+use arcv::policy::arcv::{ArcvParams, DecisionBackend, NativeFleet, PodState, State, STATE_LEN};
+use arcv::runtime::{Engine, Manifest, XlaFleet};
+use arcv::util::rng::Xoshiro256;
+
+fn make_batch(
+    rng: &mut Xoshiro256,
+    n: usize,
+    w: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut windows = vec![0f32; n * w];
+    let mut swap = vec![0f32; n];
+    let mut states = vec![0f32; n * STATE_LEN];
+    for i in 0..n {
+        let base = rng.uniform(0.05, 50.0);
+        let kind = rng.below(4);
+        for j in 0..w {
+            let v = match kind {
+                0 => base * (1.0 + 0.1 * j as f64), // growth
+                1 => base * (1.0 + rng.uniform(-0.005, 0.005)), // flat
+                2 => {
+                    // drop in the middle
+                    if j == w / 2 {
+                        base * 0.5
+                    } else {
+                        base
+                    }
+                }
+                _ => base * (1.0 + rng.uniform(-0.3, 0.3)), // noisy
+            };
+            windows[i * w + j] = v.max(1e-3) as f32;
+        }
+        swap[i] = if rng.next_f64() < 0.3 {
+            rng.uniform(0.0, 1.0) as f32
+        } else {
+            0.0
+        };
+        let mut st = PodState::initial(base * rng.uniform(1.0, 2.0));
+        st.state = match rng.below(3) {
+            0 => State::Growing,
+            1 => State::Dynamic,
+            _ => State::Stable,
+        };
+        st.nosig = rng.below(4) as f64;
+        st.persist = rng.below(4) as f64;
+        st.gmax = base * rng.uniform(0.8, 1.5);
+        st.pack(&mut states[i * STATE_LEN..(i + 1) * STATE_LEN]);
+    }
+    (windows, swap, states)
+}
+
+#[test]
+fn xla_fleet_matches_native_fleet() {
+    let Ok(manifest) = Manifest::discover() else {
+        eprintln!("SKIP xla_fleet_matches_native_fleet: run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let mut xla = XlaFleet::from_manifest(&engine, &manifest, 64).expect("load artifact");
+    let w = xla.window();
+    let mut native = NativeFleet::new(xla.batch(), w);
+    let params = ArcvParams::default();
+
+    let mut rng = Xoshiro256::new(0xA2C5);
+    for round in 0..8 {
+        let n = [1usize, 3, 16, 64][round % 4].min(xla.batch());
+        let (windows, swap, states) = make_batch(&mut rng, n, w);
+        let mut st_native = states.clone();
+        let mut st_xla = states;
+        let sig_native = native
+            .step(n, &windows, &swap, &mut st_native, &params)
+            .unwrap();
+        let sig_xla = xla.step(n, &windows, &swap, &mut st_xla, &params).unwrap();
+
+        assert_eq!(sig_native, sig_xla, "round {round}: signals diverge");
+        for i in 0..n * STATE_LEN {
+            let (a, b) = (st_native[i], st_xla[i]);
+            let rel = (a - b).abs() / b.abs().max(1e-5);
+            if rel >= 2e-3 {
+                let pod = i / STATE_LEN;
+                eprintln!(
+                    "pod {pod}: window={:?} swap={} state_in(before)=?",
+                    &windows[pod * w..(pod + 1) * w],
+                    swap[pod],
+                );
+                eprintln!(
+                    "native state={:?}",
+                    &st_native[pod * STATE_LEN..(pod + 1) * STATE_LEN]
+                );
+                eprintln!(
+                    "xla    state={:?}",
+                    &st_xla[pod * STATE_LEN..(pod + 1) * STATE_LEN]
+                );
+            }
+            assert!(
+                rel < 2e-3,
+                "round {round}: state[{i}] native={a} xla={b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_fleet_is_deterministic_across_calls() {
+    let Ok(manifest) = Manifest::discover() else {
+        eprintln!("SKIP xla_fleet_is_deterministic_across_calls: run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    let mut xla = XlaFleet::from_manifest(&engine, &manifest, 64).unwrap();
+    let w = xla.window();
+    let mut rng = Xoshiro256::new(7);
+    let (windows, swap, states) = make_batch(&mut rng, 8, w);
+    let params = ArcvParams::default();
+
+    let mut s1 = states.clone();
+    let mut s2 = states;
+    let g1 = xla.step(8, &windows, &swap, &mut s1, &params).unwrap();
+    let g2 = xla.step(8, &windows, &swap, &mut s2, &params).unwrap();
+    assert_eq!(g1, g2);
+    assert_eq!(s1, s2);
+}

@@ -1,0 +1,174 @@
+//! Integration tests across the whole stack: workloads → cluster →
+//! policies → harness, including the XLA-backed fleet path when artifacts
+//! are present.
+
+use arcv::coordinator::controller::{run_to_completion, Tick};
+use arcv::coordinator::fleet::FleetController;
+use arcv::harness::{ratio_row, run, ExperimentConfig, PolicyKind};
+use arcv::policy::arcv::{ArcvParams, NativeFleet};
+use arcv::runtime::{Engine, Manifest, XlaFleet};
+use arcv::simkube::cluster::Cluster;
+use arcv::simkube::node::Node;
+use arcv::simkube::resources::ResourceSpec;
+use arcv::simkube::swap::SwapDevice;
+use arcv::workloads::{build, AppId};
+
+/// Growth apps from a 20% initial allocation under the VPA simulator must
+/// show the paper's pathology: repeated OOM restarts, large exec blowup —
+/// while ARC-V avoids OOM entirely (Fig 4's headline).
+#[test]
+fn vpa_vs_arcv_shape_on_growth_app() {
+    let app = AppId::Sputnipic; // fastest growth app (210s)
+    let vpa = run(&ExperimentConfig::vpa_env(app), PolicyKind::VpaSim);
+    let arcv = run(
+        &ExperimentConfig::arcv_env(app),
+        PolicyKind::ArcvNative(ArcvParams::default()),
+    );
+    assert!(vpa.completed && arcv.completed);
+    assert!(vpa.restarts >= 5, "staircase restarts: {}", vpa.restarts);
+    assert_eq!(arcv.oom_count, 0, "ARC-V eliminates OOMs");
+    let row = ratio_row(&vpa, &arcv, 210.0);
+    assert!(row.exectime_ratio > 1.5, "VPA pays restarts: {}", row.exectime_ratio);
+    assert!(row.footprint_ratio > 0.5, "sane footprint ratio");
+    assert!(
+        row.arcv_overhead_pct < 3.0,
+        "ARC-V overhead below 3% (paper §5): {}",
+        row.arcv_overhead_pct
+    );
+}
+
+/// The stable showcase (LAMMPS, Fig 5): ARC-V shrinks a grossly
+/// over-provisioned tiny app by a large factor.
+#[test]
+fn arcv_shrinks_stable_lammps_hard() {
+    let mut cfg = ExperimentConfig::arcv_env(AppId::Lammps);
+    cfg.initial_frac = 10.0; // paper: VPA grossly over-allocates tiny apps
+    let r = run(&cfg, PolicyKind::ArcvNative(ArcvParams::default()));
+    assert!(r.completed);
+    let over = cfg.initial_frac * 0.0237 * r.wall_secs as f64;
+    assert!(
+        r.provisioned_gbs < over / 2.0,
+        "footprint {} must beat static {}",
+        r.provisioned_gbs,
+        over
+    );
+}
+
+/// MiniFE's end-of-run spike (Fig 4/§5): when the provisioned limit sits
+/// below the final spike (here: initial 90 % of max, as in the paper where
+/// the limit had converged near live usage), swap absorbs the spike — no
+/// OOM — at a visible execution-time cost, exactly what the paper reports.
+#[test]
+fn minife_uses_swap_and_survives() {
+    let mut cfg = ExperimentConfig::arcv_env(AppId::Minife);
+    cfg.initial_frac = 0.9; // 57.3 GB < the 63.7 GB end spike
+    cfg.budget_mult = 20.0;
+    let r = run(&cfg, PolicyKind::ArcvNative(ArcvParams::default()));
+    assert!(r.completed);
+    assert_eq!(r.oom_count, 0, "swap must absorb the spike, not the OOM killer");
+    let max_swap = r
+        .swap_series
+        .iter()
+        .map(|&(_, s)| s)
+        .fold(0.0_f64, f64::max);
+    assert!(max_swap > 0.0, "the final spike must touch swap");
+    // the paper reports MiniFE as the one app with visible overhead
+    assert!(r.wall_secs > 352, "swap thrash costs wall time: {}", r.wall_secs);
+}
+
+/// Fleet controller with the native backend equals the per-pod native
+/// policy on the same workload (same decisions, same footprint).
+#[test]
+fn fleet_native_matches_per_pod_policy() {
+    let params = ArcvParams::default();
+    let per_pod = run(
+        &ExperimentConfig::arcv_env(AppId::Kripke),
+        PolicyKind::ArcvNative(params),
+    );
+    let fleet = run(
+        &ExperimentConfig::arcv_env(AppId::Kripke),
+        PolicyKind::ArcvFleet(params, Box::new(NativeFleet::new(64, params.window))),
+    );
+    assert_eq!(per_pod.wall_secs, fleet.wall_secs);
+    let rel = (per_pod.provisioned_gbs - fleet.provisioned_gbs).abs() / per_pod.provisioned_gbs;
+    assert!(rel < 0.02, "footprints agree: {rel}");
+}
+
+/// End-to-end with the AOT artifact on the decision path (the deployed
+/// configuration). Requires `make artifacts`.
+#[test]
+fn xla_fleet_end_to_end_run() {
+    let Ok(manifest) = Manifest::discover() else {
+        eprintln!("SKIP xla_fleet_end_to_end_run: run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    let params = ArcvParams::default();
+    let fleet = XlaFleet::from_manifest(&engine, &manifest, 64).unwrap();
+    let xla = run(
+        &ExperimentConfig::arcv_env(AppId::Sputnipic),
+        PolicyKind::ArcvFleet(params, Box::new(fleet)),
+    );
+    let native = run(
+        &ExperimentConfig::arcv_env(AppId::Sputnipic),
+        PolicyKind::ArcvNative(params),
+    );
+    assert!(xla.completed);
+    assert_eq!(xla.oom_count, 0);
+    assert_eq!(xla.wall_secs, native.wall_secs);
+    let rel = (xla.provisioned_gbs - native.provisioned_gbs).abs() / native.provisioned_gbs;
+    assert!(rel < 0.02, "xla within 2% of native footprint: {rel}");
+}
+
+/// Multi-tenancy (§5 Use cases): four right-sized apps co-locate on one
+/// 256 GB node, all complete, no OOM, reservations never exceed capacity.
+#[test]
+fn multi_tenant_colocation_on_one_node() {
+    let mut c = Cluster::single_node(Node::cloudlab("w0"));
+    let params = ArcvParams::default();
+    let apps = [AppId::Kripke, AppId::Cm1, AppId::Lulesh, AppId::Lammps];
+    let mut ctl = FleetController::new(Box::new(NativeFleet::new(64, params.window)), params);
+    let mut ids = Vec::new();
+    for (i, app) in apps.iter().enumerate() {
+        let m = build(*app, 42 + i as u64);
+        let init = m.max_gb * 1.2;
+        let id = c.create_pod(app.name(), ResourceSpec::memory_exact(init), Box::new(m));
+        ctl.manage(id, init);
+        ids.push(id);
+    }
+    let mut max_reserved: f64 = 0.0;
+    let start = c.now;
+    while c.now - start < 60_000 && !c.all_done() {
+        c.step();
+        ctl.tick(&mut c);
+        max_reserved = max_reserved.max(c.nodes[0].reserved_gb);
+        assert!(c.nodes[0].reserved_gb <= c.nodes[0].capacity_gb + 1e-9);
+    }
+    for &id in &ids {
+        assert!(c.pod(id).is_done(), "pod {id} finished");
+        assert_eq!(c.events.count_ooms(id), 0);
+    }
+}
+
+/// Prometheus exposition is served with all three container series for a
+/// live pod (the metrics-pipeline contract third parties scrape).
+#[test]
+fn prometheus_endpoint_contract() {
+    let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(16.0)));
+    let id = c.create_pod(
+        "kripke-0",
+        ResourceSpec::memory_exact(8.0),
+        Box::new(build(AppId::Kripke, 1)),
+    );
+    run_to_completion(&mut c, &mut arcv::coordinator::Controller::new(), 100);
+    let mut names = std::collections::BTreeMap::new();
+    names.insert(id, "kripke-0".to_string());
+    let text = c.metrics.prometheus_text(&names);
+    for metric in [
+        "container_memory_usage_bytes",
+        "container_memory_rss",
+        "container_memory_swap",
+    ] {
+        assert!(text.contains(&format!("{metric}{{pod=\"kripke-0\"}}")), "{metric}");
+    }
+}

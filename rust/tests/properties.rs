@@ -1,0 +1,295 @@
+//! Property-based tests over the coordinator's invariants (the proptest
+//! role in this offline build — see util::prop). Each property runs a few
+//! hundred seeded random cases.
+
+use arcv::policy::arcv::{detect, ArcvParams, PodState, Signal, State};
+use arcv::policy::vpa::VpaSimPolicy;
+use arcv::policy::VerticalPolicy;
+use arcv::simkube::cluster::Cluster;
+use arcv::simkube::node::Node;
+use arcv::simkube::pod::MemoryProcess;
+use arcv::simkube::resources::ResourceSpec;
+use arcv::simkube::scheduler::{Scheduler, Strategy};
+use arcv::simkube::swap::SwapDevice;
+use arcv::util::prop::{check, require, Gen};
+use arcv::util::ring::RingBuffer;
+
+fn gen_window(g: &mut Gen) -> Vec<f64> {
+    let w = g.usize(2, 24);
+    let base = g.f64(0.05, 64.0);
+    (0..w).map(|_| (base * g.f64(0.5, 1.5)).max(1e-3)).collect()
+}
+
+fn gen_state(g: &mut Gen) -> PodState {
+    PodState {
+        state: *g.pick(&[State::Growing, State::Dynamic, State::Stable]),
+        nosig: g.usize(0, 5) as f64,
+        persist: g.usize(0, 5) as f64,
+        gmax: g.f64(0.0, 100.0),
+        rec: g.f64(0.01, 120.0),
+    }
+}
+
+// --------------------------------------------------------- state machine --
+
+#[test]
+fn prop_rec_always_covers_need() {
+    check("rec >= usage+swap", 400, |g| {
+        let win = gen_window(g);
+        let swap = if g.bool(0.3) { g.f64(0.0, 4.0) } else { 0.0 };
+        let mut st = gen_state(g);
+        st.step(&win, swap, &ArcvParams::default());
+        let need = win.last().unwrap() + swap;
+        require(st.rec + 1e-9 >= need, "rec must cover live need")
+    });
+}
+
+#[test]
+fn prop_gmax_is_monotone_nondecreasing() {
+    check("gmax monotone", 400, |g| {
+        let mut st = gen_state(g);
+        let before = st.gmax;
+        st.step(&gen_window(g), 0.0, &ArcvParams::default());
+        require(st.gmax + 1e-12 >= before, "gmax never decreases")
+    });
+}
+
+#[test]
+fn prop_dynamic_never_transitions_to_growing() {
+    check("no dynamic->growing", 400, |g| {
+        let mut st = gen_state(g);
+        st.state = State::Dynamic;
+        st.step(&gen_window(g), 0.0, &ArcvParams::default());
+        require(st.state != State::Growing, "§3.3 forbids Dynamic→Growing")
+    });
+}
+
+#[test]
+fn prop_counters_stay_bounded_and_nonnegative() {
+    check("counters sane", 400, |g| {
+        let mut st = gen_state(g);
+        let prev_nosig = st.nosig;
+        st.step(&gen_window(g), 0.0, &ArcvParams::default());
+        require(st.nosig >= 0.0 && st.persist >= 0.0, "non-negative")?;
+        require(
+            st.nosig <= prev_nosig + 1.0,
+            "nosig grows by at most one per tick",
+        )
+    });
+}
+
+#[test]
+fn prop_dynamic_rec_never_below_global_max() {
+    check("dynamic floor", 400, |g| {
+        let win = gen_window(g);
+        let mut st = gen_state(g);
+        st.state = State::Dynamic;
+        st.step(&win, 0.0, &ArcvParams::default());
+        if st.state == State::Dynamic {
+            require(st.rec + 1e-9 >= st.gmax, "decrease limited to global max")
+        } else {
+            Ok(())
+        }
+    });
+}
+
+#[test]
+fn prop_step_is_deterministic() {
+    check("step deterministic", 200, |g| {
+        let win = gen_window(g);
+        let swap = g.f64(0.0, 2.0);
+        let st0 = gen_state(g);
+        let mut a = st0;
+        let mut b = st0;
+        let sa = a.step(&win, swap, &ArcvParams::default());
+        let sb = b.step(&win, swap, &ArcvParams::default());
+        require(sa == sb && a == b, "same inputs, same outputs")
+    });
+}
+
+// --------------------------------------------------------------- signals --
+
+#[test]
+fn prop_signal_scale_invariant() {
+    check("signal scale invariance", 300, |g| {
+        let win = gen_window(g);
+        let k = g.f64(0.01, 100.0);
+        let scaled: Vec<f64> = win.iter().map(|x| x * k).collect();
+        let (a, _) = detect(&win, 0.02);
+        let (b, _) = detect(&scaled, 0.02);
+        require(a == b, "relative bands are scale invariant")
+    });
+}
+
+#[test]
+fn prop_big_drop_forces_signal_ii() {
+    check("drop forces II", 300, |g| {
+        let mut win = gen_window(g);
+        let i = g.usize(1, win.len() - 1);
+        win[i] = win[i - 1] * 0.5; // 50% drop >> 2% band
+        let (sig, _) = detect(&win, 0.02);
+        require(sig == Signal::II, "unsorted window is signal II")
+    });
+}
+
+#[test]
+fn prop_wider_band_never_creates_signals() {
+    check("band monotonicity", 300, |g| {
+        let win = gen_window(g);
+        let (tight, _) = detect(&win, 0.02);
+        let (loose, _) = detect(&win, 0.20);
+        // a looser band can only demote signals toward None
+        require(
+            !(tight == Signal::None && loose != Signal::None),
+            "loosening the band cannot create a signal",
+        )
+    });
+}
+
+// --------------------------------------------------------------- kubelet --
+
+struct RandWalk {
+    vals: Vec<f64>,
+}
+
+impl MemoryProcess for RandWalk {
+    fn usage_gb(&self, t: f64) -> f64 {
+        self.vals[(t as usize).min(self.vals.len() - 1)]
+    }
+    fn duration_secs(&self) -> f64 {
+        self.vals.len() as f64
+    }
+    fn name(&self) -> &str {
+        "randwalk"
+    }
+}
+
+#[test]
+fn prop_rss_never_exceeds_effective_limit() {
+    check("rss <= limit", 60, |g| {
+        let n = g.usize(50, 200);
+        let mut v = g.f64(0.5, 4.0);
+        let vals: Vec<f64> = (0..n)
+            .map(|_| {
+                v = (v * g.f64(0.8, 1.25)).clamp(0.05, 16.0);
+                v
+            })
+            .collect();
+        let mut c = Cluster::single_node(Node::new("w", 64.0, SwapDevice::hdd(64.0)));
+        let limit = g.f64(1.0, 8.0);
+        let id = c.create_pod("p", ResourceSpec::memory_exact(limit), Box::new(RandWalk { vals }));
+        for _ in 0..n * 3 {
+            c.step();
+            // random in-place patches while running
+            if g.bool(0.05) && c.pod(id).is_running() {
+                c.patch_pod_memory(id, g.f64(0.5, 12.0));
+            }
+            let p = c.pod(id);
+            require(
+                p.usage.rss_gb <= p.effective_limit_gb + 1e-9,
+                "rss within enforced limit",
+            )?;
+            if p.is_done() {
+                break;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_swap_accounting_conserved() {
+    check("swap conservation", 40, |g| {
+        let n = g.usize(50, 150);
+        let vals: Vec<f64> = (0..n).map(|_| g.f64(0.5, 6.0)).collect();
+        let mut c = Cluster::single_node(Node::new("w", 64.0, SwapDevice::hdd(32.0)));
+        let id = c.create_pod(
+            "p",
+            ResourceSpec::memory_exact(g.f64(1.0, 3.0)),
+            Box::new(RandWalk { vals }),
+        );
+        for _ in 0..n * 4 {
+            c.step();
+            let pod_swap: f64 = c.pod(id).usage.swap_gb;
+            let dev_used = c.nodes[0].swap.used_gb;
+            require(
+                (pod_swap - dev_used).abs() < 1e-6,
+                "single pod's swap must equal device residency",
+            )?;
+            if c.pod(id).is_done() {
+                break;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- scheduler --
+
+#[test]
+fn prop_scheduler_never_overcommits_requests() {
+    check("scheduler fit", 200, |g| {
+        let n_nodes = g.usize(1, 5);
+        let mut nodes: Vec<Node> = (0..n_nodes)
+            .map(|i| Node::new(&format!("w{i}"), g.f64(32.0, 256.0), SwapDevice::disabled()))
+            .collect();
+        let sched = Scheduler::new(if g.bool(0.5) {
+            Strategy::BestFit
+        } else {
+            Strategy::WorstFit
+        });
+        for pod in 0..g.usize(1, 30) {
+            let req = g.f64(1.0, 80.0);
+            if let Some(i) = sched.place(&nodes, req) {
+                require(nodes[i].fits(req), "placed only where it fits")?;
+                nodes[i].bind(pod, req);
+            }
+            for nd in &nodes {
+                require(
+                    nd.reserved_gb <= nd.capacity_gb + 1e-9,
+                    "reservations within capacity",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- ring/vpa --
+
+#[test]
+fn prop_ring_matches_vec_model() {
+    check("ring == vec model", 300, |g| {
+        let cap = g.usize(1, 16);
+        let n = g.usize(0, 48);
+        let mut ring = RingBuffer::new(cap);
+        let mut model: Vec<f64> = Vec::new();
+        for _ in 0..n {
+            let x = g.f64(-10.0, 10.0);
+            ring.push(x);
+            model.push(x);
+            if model.len() > cap {
+                model.remove(0);
+            }
+        }
+        require(ring.to_vec() == model, "ring equals sliding vec")?;
+        require(ring.last() == model.last().copied(), "last matches")
+    });
+}
+
+#[test]
+fn prop_vpa_staircase_is_geometric() {
+    check("vpa staircase", 200, |g| {
+        let init = g.f64(0.1, 10.0);
+        let k = g.usize(1, 8);
+        let mut p = VpaSimPolicy::new(init);
+        for _ in 0..k {
+            // OOM exactly at the recommendation (the growth-app case)
+            let rec = p.recommendation_gb().unwrap();
+            p.on_oom(0, rec);
+        }
+        let expect = init * 1.2f64.powi(k as i32);
+        let got = p.recommendation_gb().unwrap();
+        require((got - expect).abs() / expect < 1e-9, "rec = init·1.2^k")
+    });
+}
