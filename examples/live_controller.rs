@@ -8,23 +8,27 @@
 use arcv::coordinator::remote::run_remote;
 use arcv::policy::arcv::{ArcvParams, ArcvPolicy};
 use arcv::policy::VerticalPolicy;
-use arcv::simkube::{Cluster, Node, PodId, ResourceSpec};
+use arcv::simkube::{ApiClient, Cluster, Node, PodId, ResourceSpec};
 use arcv::workloads::{build, AppId};
 use std::collections::BTreeMap;
 
 fn main() {
     let mut cluster = Cluster::single_node(Node::cloudlab("worker-0"));
+    let mut api = ApiClient::new();
     let mut policies: Vec<(PodId, Box<dyn VerticalPolicy>)> = Vec::new();
     let mut names = BTreeMap::new();
 
     for (i, app) in [AppId::Kripke, AppId::Lulesh, AppId::Cm1].iter().enumerate() {
         let model = build(*app, 7 + i as u64);
         let init = model.max_gb * 1.2;
-        let id = cluster.create_pod(
-            &format!("{}-0", app.name()),
-            ResourceSpec::memory_exact(init),
-            Box::new(model),
-        );
+        let id = api
+            .create_pod(
+                &mut cluster,
+                &format!("{}-0", app.name()),
+                ResourceSpec::memory_exact(init),
+                Box::new(model),
+            )
+            .expect("pod admitted");
         names.insert(id, format!("{}-0", app.name()));
         policies.push((id, Box::new(ArcvPolicy::new(init, ArcvParams::default()))));
     }

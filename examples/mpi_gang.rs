@@ -10,7 +10,7 @@ use arcv::coordinator::gang::GangSupervisor;
 use arcv::policy::arcv::{ArcvParams, ArcvPolicy};
 use arcv::policy::vpa::VpaSimPolicy;
 use arcv::policy::VerticalPolicy;
-use arcv::simkube::{Cluster, Node, PodId, ResourceSpec, SwapDevice};
+use arcv::simkube::{ApiClient, Cluster, Node, PodId, ResourceSpec, SwapDevice};
 use arcv::workloads::{build, AppId};
 
 const RANKS: usize = 4;
@@ -20,17 +20,21 @@ fn build_gang(
     initial_frac: f64,
 ) -> Vec<(PodId, f64)> {
     // 4 sputniPIC ranks with slightly skewed memory (rank 0 holds extra
-    // field data — the usual MPI imbalance)
+    // field data — the usual MPI imbalance), admitted through the API
+    let mut api = ApiClient::new();
     (0..RANKS)
         .map(|rank| {
             let model = build(AppId::Sputnipic, 100 + rank as u64);
             let skew = 1.0 + 0.15 * (rank == 0) as u8 as f64;
             let init = model.max_gb * initial_frac * skew;
-            let id = cluster.create_pod(
-                &format!("sputnipic-rank{rank}"),
-                ResourceSpec::memory_exact(init),
-                Box::new(model),
-            );
+            let id = api
+                .create_pod(
+                    cluster,
+                    &format!("sputnipic-rank{rank}"),
+                    ResourceSpec::memory_exact(init),
+                    Box::new(model),
+                )
+                .expect("rank admitted");
             (id, init)
         })
         .collect()

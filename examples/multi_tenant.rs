@@ -8,7 +8,7 @@
 use arcv::coordinator::controller::Tick;
 use arcv::coordinator::fleet::FleetController;
 use arcv::policy::arcv::{ArcvParams, NativeFleet};
-use arcv::simkube::{Cluster, Node, ResourceSpec};
+use arcv::simkube::{ApiClient, Cluster, Node, ResourceSpec};
 use arcv::util::plot::line;
 use arcv::workloads::{build, AppId};
 
@@ -23,15 +23,18 @@ fn main() {
     ];
     let mut cluster = Cluster::single_node(Node::cloudlab("worker-0"));
     let params = ArcvParams::default();
-    let mut ctl = FleetController::new(Box::new(NativeFleet::new(64, params.window)), params);
+    let mut ctl = FleetController::from_backend(Box::new(NativeFleet::new(64, params.window)), params);
 
+    let mut api = ApiClient::new(); // the tenant-facing admission surface
     let mut static_sum = 0.0;
     let mut ids = Vec::new();
     for (i, app) in apps.iter().enumerate() {
         let model = build(*app, 42 + i as u64);
         let init = model.max_gb * 1.2;
         static_sum += init;
-        let id = cluster.create_pod(app.name(), ResourceSpec::memory_exact(init), Box::new(model));
+        let id = api
+            .create_pod(&mut cluster, app.name(), ResourceSpec::memory_exact(init), Box::new(model))
+            .expect("tenant pod admitted");
         ctl.manage(id, init);
         ids.push((id, *app));
     }

@@ -5,7 +5,7 @@
 
 use arcv::coordinator::controller::{run_to_completion, Controller};
 use arcv::policy::arcv::{ArcvParams, ArcvPolicy};
-use arcv::simkube::{Cluster, Node, ResourceSpec};
+use arcv::simkube::{ApiClient, Cluster, Node, ResourceSpec};
 use arcv::workloads::{build, AppId};
 
 fn main() {
@@ -14,13 +14,18 @@ fn main() {
 
     // 2. A containerized HPC workload — Kripke, calibrated to Table 1
     //    (650 s, 5.5 GB peak). Initial allocation: 120 % of its max.
+    //    The pod is created through the typed API client, so admission
+    //    validates the spec exactly as kube-apiserver would.
     let app = build(AppId::Kripke, 42);
     let initial_gb = app.max_gb * 1.2;
-    let pod = cluster.create_pod(
-        "kripke-0",
-        ResourceSpec::memory_exact(initial_gb),
-        Box::new(app),
-    );
+    let pod = ApiClient::new()
+        .create_pod(
+            &mut cluster,
+            "kripke-0",
+            ResourceSpec::memory_exact(initial_gb),
+            Box::new(app),
+        )
+        .expect("pod admitted");
 
     // 3. The ARC-V controller manages the pod: it scrapes the 5 s metrics,
     //    classifies the consumption pattern (Growing/Dynamic/Stable), and
@@ -30,7 +35,13 @@ fn main() {
 
     run_to_completion(&mut cluster, &mut controller, 100_000);
 
-    // 4. Results.
+    // 4. Results (the controller's audit log shows each applied resize).
+    let applied = controller
+        .actions()
+        .iter()
+        .filter(|a| a.outcome == arcv::simkube::Outcome::Applied)
+        .count();
+    println!("API actions applied by the controller: {applied}");
     let p = cluster.pod(pod);
     let static_fp = initial_gb * p.wall_running_secs as f64;
     println!("pod finished: {:?} in {} s", p.phase, p.wall_running_secs);

@@ -7,7 +7,7 @@
 
 use arcv::harness::{run, run_line, ExperimentConfig, PolicyKind, SwapKind};
 use arcv::policy::arcv::ArcvParams;
-use arcv::simkube::{Cluster, EventKind, Node, ResourceSpec, SwapDevice};
+use arcv::simkube::{ApiClient, Cluster, EventKind, Node, ResourceSpec, SwapDevice};
 use arcv::util::plot::multi_line;
 use arcv::workloads::{build, AppId};
 
@@ -51,15 +51,21 @@ fn main() {
     // §3.2: a downsize below the resident set is 'significantly prolonged'.
     println!("\n=== §3.2 resize-sync semantics (direct kubelet observation) ===\n");
     let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(32.0)));
-    let id = c.create_pod(
-        "steady",
-        ResourceSpec::memory_exact(8.0),
-        Box::new(build(AppId::Gromacs, 1)),
-    );
+    let mut api = ApiClient::new();
+    let id = api
+        .create_pod(
+            &mut c,
+            "steady",
+            ResourceSpec::memory_exact(8.0),
+            Box::new(build(AppId::Gromacs, 1)),
+        )
+        .expect("pod admitted");
     c.run_until(200, |_| false);
-    c.patch_pod_memory(id, 6.0); // upsize-free sync: above rss? 4.2 rss -> plain delay
+    // patches go through the API: above rss? 4.2 rss -> plain delay
+    api.patch_pod_memory(&mut c, id, 6.0, None).expect("patch admitted");
     c.run_until(30, |c| c.pod(id).pending_resize.is_none());
-    c.patch_pod_memory(id, 2.0); // below rss: must reclaim via swap first
+    // below rss: must reclaim via swap first
+    api.patch_pod_memory(&mut c, id, 2.0, None).expect("patch admitted");
     c.run_until(600, |c| c.pod(id).pending_resize.is_none());
     for lat in c.events.resize_latencies(id) {
         println!("  resize applied after {lat} s");

@@ -62,7 +62,7 @@ fn main() {
     for n in [1usize, 4, 16, 64] {
         let (mut c, ids) = cluster_with_pods(n);
         let params = ArcvParams::default();
-        let mut ctl = FleetController::new(Box::new(NativeFleet::new(64, params.window)), params);
+        let mut ctl = FleetController::from_backend(Box::new(NativeFleet::new(64, params.window)), params);
         for &id in &ids {
             let init = c.pod(id).effective_limit_gb;
             ctl.manage(id, init);

@@ -1,90 +1,185 @@
-//! The controller: scrapes sampled metrics, drives per-pod policies, and
-//! applies their actions through the cluster API — the process the paper
-//! runs "on another node ... requiring only Kubernetes access permissions"
-//! (§5 Overhead).
+//! The controller: syncs its informer cache, scrapes sampled metrics,
+//! drives a node-scoped policy, and submits the decided batch through its
+//! typed [`ApiClient`] — the process the paper runs "on another node ...
+//! requiring only Kubernetes access permissions" (§5 Overhead).
+//!
+//! `Controller<P>` is generic over the [`NodePolicy`] it drives: the
+//! default `Controller<PerPodAdapter>` hosts per-pod [`VerticalPolicy`]
+//! kernels (ARC-V native, VPA, fixed, oracle), while
+//! `Controller<FleetPolicy>` (aliased as `FleetController`) batches every
+//! decision through one `DecisionBackend::step` call. Both read cached
+//! [`PodView`](crate::simkube::api::PodView)s — never `cluster.pods` —
+//! and every action lands in the API audit log as
+//! applied / deferred / rejected.
 
-use crate::policy::{Action, VerticalPolicy};
+use crate::policy::{Action, NodePolicy, PerPodAdapter, PodAction, VerticalPolicy};
+use crate::simkube::api::{ActionRecord, ApiClient, Verb};
 use crate::simkube::cluster::Cluster;
 use crate::simkube::pod::{PodId, PodPhase};
 
 /// Anything that reacts to a cluster tick (per-pod or fleet controllers,
-/// and the remote bridge).
+/// gang supervisors, and the remote bridge).
 pub trait Tick {
     fn tick(&mut self, cluster: &mut Cluster);
+
+    /// The coordinator's API audit log, if it keeps one (the harness
+    /// reports applied/rejected counts from it).
+    fn audit(&self) -> &[ActionRecord] {
+        &[]
+    }
 }
 
-/// One policy instance per pod.
-pub struct Controller {
-    entries: Vec<(PodId, Box<dyn VerticalPolicy>)>,
+/// A coordinator driving one node-scoped policy through the API.
+pub struct Controller<P: NodePolicy = PerPodAdapter> {
+    client: ApiClient,
+    policy: P,
     /// (time, pod, recommendation) history for reporting.
     pub rec_log: Vec<(u64, PodId, f64)>,
 }
 
-impl Controller {
-    pub fn new() -> Self {
+impl<P: NodePolicy> Controller<P> {
+    /// Wrap an arbitrary node policy.
+    pub fn with_policy(policy: P) -> Self {
         Self {
-            entries: Vec::new(),
+            client: ApiClient::new(),
+            policy,
             rec_log: Vec::new(),
         }
     }
 
-    pub fn manage(&mut self, pod: PodId, policy: Box<dyn VerticalPolicy>) {
-        self.entries.push((pod, policy));
+    pub fn policy(&self) -> &P {
+        &self.policy
     }
 
-    pub fn policy_of(&self, pod: PodId) -> Option<&dyn VerticalPolicy> {
-        self.entries
-            .iter()
-            .find(|(p, _)| *p == pod)
-            .map(|(_, pol)| pol.as_ref())
+    pub fn policy_mut(&mut self) -> &mut P {
+        &mut self.policy
+    }
+
+    /// This controller's API client (informer cache + audit log).
+    pub fn client(&self) -> &ApiClient {
+        &self.client
+    }
+
+    /// The structured per-controller action log (applied / deferred /
+    /// rejected, with reasons).
+    pub fn actions(&self) -> &[ActionRecord] {
+        self.client.actions()
+    }
+
+    /// Submit one decided action through the API. Rejections stay in the
+    /// audit log rather than unwinding the tick, and the policy is told so
+    /// it can roll back bookkeeping and re-issue later.
+    fn apply(&mut self, cluster: &mut Cluster, now: u64, act: PodAction) {
+        let expected = self.client.cached(act.pod).map(|v| v.resource_version);
+        match act.action {
+            Action::None => {
+                self.client
+                    .record_deferred(now, act.pod, Verb::Patch, act.reason.clone());
+            }
+            Action::Resize(gb) => {
+                if self
+                    .client
+                    .patch_pod_memory(cluster, act.pod, gb, expected)
+                    .is_ok()
+                {
+                    self.rec_log.push((now, act.pod, gb));
+                } else {
+                    self.policy.on_action_rejected(now, &act);
+                }
+            }
+            Action::RestartWith(gb) => {
+                if self.client.restart_pod(cluster, act.pod, gb).is_ok() {
+                    self.rec_log.push((now, act.pod, gb));
+                } else {
+                    self.policy.on_action_rejected(now, &act);
+                }
+            }
+        }
     }
 }
 
-impl Default for Controller {
+impl Controller<PerPodAdapter> {
+    /// A controller hosting one [`VerticalPolicy`] instance per pod.
+    pub fn new() -> Self {
+        Self::with_policy(PerPodAdapter::new())
+    }
+
+    /// Attach a per-pod policy. Managing the same pod twice is last-wins
+    /// (the displaced policy is returned), so two policies can never fight
+    /// over one pod tick after tick.
+    pub fn manage(
+        &mut self,
+        pod: PodId,
+        policy: Box<dyn VerticalPolicy>,
+    ) -> Option<Box<dyn VerticalPolicy>> {
+        self.policy.manage(pod, policy)
+    }
+
+    pub fn policy_of(&self, pod: PodId) -> Option<&dyn VerticalPolicy> {
+        self.policy.policy_of(pod)
+    }
+}
+
+impl Default for Controller<PerPodAdapter> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Tick for Controller {
+impl<P: NodePolicy> Tick for Controller<P> {
+    fn audit(&self) -> &[ActionRecord] {
+        self.client.actions()
+    }
+
     fn tick(&mut self, cluster: &mut Cluster) {
         let now = cluster.now;
-        let sampling = cluster.metrics.is_sampling_tick(now);
-        for (pod, policy) in &mut self.entries {
-            let phase = cluster.pod(*pod).phase;
+        // informer refresh: all reads below go through the cache
+        self.client.sync(cluster);
 
-            // OOM recovery first (policy decides the restart size)
-            if phase == PodPhase::OomKilled {
-                let usage = cluster.pod(*pod).usage.usage_gb;
-                if let Action::RestartWith(gb) = policy.on_oom(now, usage) {
-                    cluster.restart_pod(*pod, gb);
-                }
-                continue;
+        // 1. OOM recovery first (the policy decides the restart size)
+        let ooms: Vec<(PodId, f64)> = self
+            .client
+            .cached_views()
+            .filter(|v| v.phase == PodPhase::OomKilled)
+            .map(|v| (v.id, v.usage_gb))
+            .collect();
+        for (pod, usage) in ooms {
+            if let Some(act) = self.policy.on_oom(now, pod, usage) {
+                self.apply(cluster, now, act);
             }
-            if phase != PodPhase::Running {
-                continue;
-            }
+        }
 
-            // scrape on sampling ticks
-            if sampling {
-                if let Some(s) = cluster.metrics.last(*pod) {
+        // 2. scrape fresh samples into the policy on sampling ticks
+        if cluster.metrics.is_sampling_tick(now) {
+            let running: Vec<PodId> = self
+                .client
+                .cached_views()
+                .filter(|v| v.phase == PodPhase::Running)
+                .map(|v| v.id)
+                .collect();
+            for pod in running {
+                if let Some(s) = cluster.metrics.last(pod) {
                     if s.time == now {
-                        policy.observe(now, &s);
+                        self.policy.observe(now, pod, &s);
                     }
                 }
             }
+        }
 
-            match policy.decide(now) {
-                Action::Resize(gb) => {
-                    cluster.patch_pod_memory(*pod, gb);
-                    self.rec_log.push((now, *pod, gb));
-                }
-                Action::RestartWith(gb) => {
-                    cluster.restart_pod(*pod, gb);
-                    self.rec_log.push((now, *pod, gb));
-                }
-                Action::None => {}
-            }
+        // 3. one node-scoped decision batch, highest priority first
+        // (interval-gated policies skip the view pass on off ticks)
+        if !self.policy.wants_decision(now) {
+            return;
+        }
+        let views: Vec<&_> = self
+            .client
+            .cached_views()
+            .filter(|v| v.phase == PodPhase::Running)
+            .collect();
+        let mut actions = self.policy.decide(now, &views);
+        actions.sort_by(|a, b| b.priority.cmp(&a.priority));
+        for act in actions {
+            self.apply(cluster, now, act);
         }
     }
 }
@@ -109,6 +204,7 @@ mod tests {
     use super::*;
     use crate::policy::arcv::{ArcvParams, ArcvPolicy};
     use crate::policy::vpa::VpaSimPolicy;
+    use crate::simkube::api::Outcome;
     use crate::simkube::node::Node;
     use crate::simkube::pod::testutil::ramp;
     use crate::simkube::resources::ResourceSpec;
@@ -125,6 +221,13 @@ mod tests {
         assert!(c.pod(id).is_done(), "must finish eventually");
         assert!(c.pod(id).restarts > 3, "needs several +20% steps");
         assert!(ticks > 300, "restarts cost wall time: {ticks}");
+        // every restart went through the API and is audited as applied
+        let applied_restarts = ctl
+            .actions()
+            .iter()
+            .filter(|a| a.verb == Verb::Restart && a.outcome == Outcome::Applied)
+            .count();
+        assert_eq!(applied_restarts as u32, c.pod(id).restarts);
     }
 
     #[test]
@@ -157,5 +260,15 @@ mod tests {
         run_to_completion(&mut c, &mut ctl, 10_000);
         assert!(!ctl.rec_log.is_empty());
         assert!(ctl.rec_log.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn manage_twice_is_last_wins() {
+        let mut ctl = Controller::new();
+        assert!(ctl.manage(7, Box::new(VpaSimPolicy::new(1.0))).is_none());
+        let displaced = ctl.manage(7, Box::new(ArcvPolicy::new(4.0, ArcvParams::default())));
+        assert!(displaced.is_some(), "first policy is displaced, not duplicated");
+        assert_eq!(ctl.policy_of(7).unwrap().name(), "arcv");
+        assert_eq!(ctl.policy().len(), 1);
     }
 }

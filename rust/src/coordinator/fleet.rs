@@ -1,173 +1,51 @@
-//! Fleet controller: batches every managed pod's ARC-V decision into one
-//! `DecisionBackend::step` call per decision tick — the deployed hot path
-//! (with `runtime::XlaFleet` as the backend, the whole policy runs inside
-//! the AOT-compiled XLA artifact).
+//! Fleet controller: `Controller<FleetPolicy>` — every managed pod's
+//! ARC-V decision batched into one `DecisionBackend::step` call per
+//! decision tick, submitted through the same [`ApiClient`] surface as the
+//! per-pod controllers (with `runtime::XlaFleet` as the backend, the whole
+//! policy runs inside the AOT-compiled XLA artifact).
+//!
+//! [`ApiClient`]: crate::simkube::api::ApiClient
 
-use super::controller::Tick;
-use crate::policy::arcv::{ArcvParams, DecisionBackend, PodState, STATE_LEN};
-use crate::simkube::cluster::Cluster;
-use crate::simkube::pod::{PodId, PodPhase};
-use crate::util::ring::RingBuffer;
+use super::controller::Controller;
+use crate::policy::arcv::{ArcvParams, DecisionBackend, FleetPolicy, PodState};
+use crate::simkube::pod::PodId;
 
-struct Managed {
-    pod: PodId,
-    window: RingBuffer,
-    started_at: Option<u64>,
-    swap_gb: f32,
-    last_rec: f64,
-}
+/// The deployed hot path: a coordinator driving the fleet-batched policy.
+pub type FleetController = Controller<FleetPolicy>;
 
-pub struct FleetController {
-    backend: Box<dyn DecisionBackend>,
-    pub params: ArcvParams,
-    managed: Vec<Managed>,
-    /// packed per-pod states, P×6 (P = managed.len())
-    states: Vec<f32>,
-    last_decision: u64,
-    // staging buffers reused across ticks
-    win_stage: Vec<f32>,
-    swap_stage: Vec<f32>,
-    state_stage: Vec<f32>,
-    idx_stage: Vec<usize>,
-    /// (time, pod, rec) decisions for reporting
-    pub rec_log: Vec<(u64, PodId, f64)>,
-    /// (time, pod, signal code) for event analysis
-    pub signal_log: Vec<(u64, PodId, f32)>,
-}
-
-impl FleetController {
-    pub fn new(backend: Box<dyn DecisionBackend>, params: ArcvParams) -> Self {
-        assert_eq!(
-            backend.window(),
-            params.window,
-            "backend window must match params.window"
-        );
-        Self {
-            backend,
-            params,
-            managed: Vec::new(),
-            states: Vec::new(),
-            last_decision: 0,
-            win_stage: Vec::new(),
-            swap_stage: Vec::new(),
-            state_stage: Vec::new(),
-            idx_stage: Vec::new(),
-            rec_log: Vec::new(),
-            signal_log: Vec::new(),
-        }
+impl Controller<FleetPolicy> {
+    /// Build a fleet coordinator over `backend`. (Named `from_backend`
+    /// rather than `new` so `Controller::new()` stays unambiguous across
+    /// the generic instantiations.)
+    pub fn from_backend(backend: Box<dyn DecisionBackend>, params: ArcvParams) -> Self {
+        Self::with_policy(FleetPolicy::new(backend, params))
     }
 
+    /// Start managing a pod at `initial_rec_gb` (last-wins on re-manage).
     pub fn manage(&mut self, pod: PodId, initial_rec_gb: f64) {
-        assert!(
-            self.managed.len() < self.backend.batch(),
-            "fleet exceeds backend batch {}",
-            self.backend.batch()
-        );
-        self.managed.push(Managed {
-            pod,
-            window: RingBuffer::new(self.params.window),
-            started_at: None,
-            swap_gb: 0.0,
-            last_rec: initial_rec_gb,
-        });
-        let mut st = vec![0f32; STATE_LEN];
-        PodState::initial(initial_rec_gb).pack(&mut st);
-        self.states.extend_from_slice(&st);
+        self.policy_mut().manage(pod, initial_rec_gb);
     }
 
     pub fn pod_state(&self, pod: PodId) -> Option<PodState> {
-        let i = self.managed.iter().position(|m| m.pod == pod)?;
-        Some(PodState::unpack(&self.states[i * STATE_LEN..(i + 1) * STATE_LEN]))
+        self.policy().pod_state(pod)
     }
 
     pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
+        self.policy().backend_name()
     }
-}
 
-impl Tick for FleetController {
-    fn tick(&mut self, cluster: &mut Cluster) {
-        let now = cluster.now;
-
-        // scrape on sampling ticks
-        if cluster.metrics.is_sampling_tick(now) {
-            for m in &mut self.managed {
-                if cluster.pod(m.pod).phase != PodPhase::Running {
-                    continue;
-                }
-                if let Some(s) = cluster.metrics.last(m.pod) {
-                    if s.time == now {
-                        m.started_at.get_or_insert(now);
-                        m.window.push(s.usage_gb);
-                        m.swap_gb = s.swap_gb as f32;
-                    }
-                }
-            }
-        }
-
-        // decision tick
-        if now < self.last_decision + self.params.decision_interval_secs {
-            return;
-        }
-        let w = self.params.window;
-        self.win_stage.clear();
-        self.swap_stage.clear();
-        self.state_stage.clear();
-        self.idx_stage.clear();
-        let mut scratch = vec![0.0f64; w];
-        for (i, m) in self.managed.iter().enumerate() {
-            let eligible = cluster.pod(m.pod).phase == PodPhase::Running
-                && m.started_at
-                    .map(|t0| now >= t0 + self.params.init_phase_secs)
-                    .unwrap_or(false)
-                && m.window.len() >= w;
-            if !eligible {
-                continue;
-            }
-            m.window.copy_last_into(w, &mut scratch);
-            self.win_stage.extend(scratch.iter().map(|&x| x as f32));
-            self.swap_stage.push(m.swap_gb);
-            self.state_stage
-                .extend_from_slice(&self.states[i * STATE_LEN..(i + 1) * STATE_LEN]);
-            self.idx_stage.push(i);
-        }
-        if self.idx_stage.is_empty() {
-            return;
-        }
-        self.last_decision = now;
-        let n = self.idx_stage.len();
-        let signals = self
-            .backend
-            .step(
-                n,
-                &self.win_stage,
-                &self.swap_stage,
-                &mut self.state_stage,
-                &self.params,
-            )
-            .expect("fleet decision step failed");
-
-        for (k, &i) in self.idx_stage.iter().enumerate() {
-            self.states[i * STATE_LEN..(i + 1) * STATE_LEN]
-                .copy_from_slice(&self.state_stage[k * STATE_LEN..(k + 1) * STATE_LEN]);
-            let st = PodState::unpack(&self.states[i * STATE_LEN..(i + 1) * STATE_LEN]);
-            let pod = self.managed[i].pod;
-            self.signal_log.push((now, pod, signals[k]));
-            let prev = self.managed[i].last_rec;
-            if (st.rec - prev).abs() / prev.max(1e-9) > 1e-4 {
-                cluster.patch_pod_memory(pod, st.rec);
-                self.managed[i].last_rec = st.rec;
-                self.rec_log.push((now, pod, st.rec));
-            }
-        }
+    /// (time, pod, signal code) decision trace for event analysis.
+    pub fn signal_log(&self) -> &[(u64, PodId, f32)] {
+        &self.policy().signal_log
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::controller::run_to_completion;
+    use super::super::controller::{run_to_completion, Tick};
     use super::*;
     use crate::policy::arcv::NativeFleet;
+    use crate::simkube::cluster::Cluster;
     use crate::simkube::node::Node;
     use crate::simkube::pod::testutil::ramp;
     use crate::simkube::resources::ResourceSpec;
@@ -179,7 +57,7 @@ mod tests {
         let params = ArcvParams::default();
         let a = c.create_pod("flat", ResourceSpec::memory_exact(12.0), ramp(4.0, 4.0, 900.0));
         let b = c.create_pod("grow", ResourceSpec::memory_exact(10.0), ramp(2.0, 8.0, 900.0));
-        let mut ctl = FleetController::new(Box::new(NativeFleet::new(64, params.window)), params);
+        let mut ctl = FleetController::from_backend(Box::new(NativeFleet::new(64, params.window)), params);
         ctl.manage(a, 12.0);
         ctl.manage(b, 10.0);
         run_to_completion(&mut c, &mut ctl, 20_000);
@@ -190,6 +68,7 @@ mod tests {
         // the growing pod's rec must have tracked growth to ~8GB
         assert!(ctl.pod_state(b).unwrap().rec >= 7.9);
         assert!(!ctl.rec_log.is_empty());
+        assert!(!ctl.signal_log().is_empty());
     }
 
     #[test]
@@ -197,7 +76,7 @@ mod tests {
         let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(16.0)));
         let params = ArcvParams::default();
         let a = c.create_pod("x", ResourceSpec::memory_exact(8.0), ramp(2.0, 2.0, 400.0));
-        let mut ctl = FleetController::new(Box::new(NativeFleet::new(8, params.window)), params);
+        let mut ctl = FleetController::from_backend(Box::new(NativeFleet::new(8, params.window)), params);
         ctl.manage(a, 8.0);
         // during init (first 60s) no patches may be issued
         for _ in 0..59 {

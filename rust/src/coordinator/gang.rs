@@ -7,9 +7,14 @@
 //! checkpointing), each member with the policy-chosen new allocation.
 //! This is the failure amplification that makes per-pod OOMs so expensive
 //! for HPC and motivates ARC-V's top-down, OOM-free approach.
+//!
+//! Like every coordinator, the supervisor holds a typed [`ApiClient`]:
+//! member state is read from the informer cache and every restart/patch is
+//! submitted (and audited) through the API.
 
 use super::controller::Tick;
 use crate::policy::{Action, VerticalPolicy};
+use crate::simkube::api::ApiClient;
 use crate::simkube::cluster::Cluster;
 use crate::simkube::pod::{PodId, PodPhase};
 
@@ -24,11 +29,15 @@ pub struct Gang {
 
 pub struct GangSupervisor {
     pub gangs: Vec<Gang>,
+    client: ApiClient,
 }
 
 impl GangSupervisor {
     pub fn new() -> Self {
-        Self { gangs: Vec::new() }
+        Self {
+            gangs: Vec::new(),
+            client: ApiClient::new(),
+        }
     }
 
     pub fn supervise(
@@ -49,6 +58,11 @@ impl GangSupervisor {
         self.gangs.iter().find(|g| g.name == name)
     }
 
+    /// The supervisor's API audit trail.
+    pub fn client(&self) -> &ApiClient {
+        &self.client
+    }
+
     /// A gang finishes only when every rank finished (barrier semantics).
     pub fn gang_done(&self, cluster: &Cluster, name: &str) -> bool {
         self.gang(name)
@@ -64,42 +78,43 @@ impl Default for GangSupervisor {
 }
 
 impl Tick for GangSupervisor {
+    fn audit(&self) -> &[crate::simkube::api::ActionRecord] {
+        self.client.actions()
+    }
+
     fn tick(&mut self, cluster: &mut Cluster) {
         let now = cluster.now;
+        self.client.sync(cluster);
         let sampling = cluster.metrics.is_sampling_tick(now);
         for gang in &mut self.gangs {
             // 1. failure amplification: any killed member dooms the gang
-            let failed: Vec<usize> = gang
-                .members
-                .iter()
-                .enumerate()
-                .filter(|(_, &m)| {
-                    matches!(
-                        cluster.pod(m).phase,
-                        PodPhase::OomKilled | PodPhase::Evicted
-                    )
-                })
-                .map(|(i, _)| i)
-                .collect();
-            if !failed.is_empty() {
+            let any_failed = gang.members.iter().any(|&m| {
+                matches!(
+                    self.client.cached(m).map(|v| v.phase),
+                    Some(PodPhase::OomKilled) | Some(PodPhase::Evicted)
+                )
+            });
+            if any_failed {
                 gang.gang_restarts += 1;
                 for (i, &m) in gang.members.iter().enumerate() {
-                    let usage = cluster.pod(m).usage.usage_gb.max(
-                        cluster.pod(m).effective_limit_gb.min(1e6), // fallback scale
-                    );
+                    let view = self.client.cached(m);
+                    let (usage_gb, limit_gb) = view
+                        .map(|v| (v.usage_gb, v.effective_limit_gb))
+                        .unwrap_or((0.0, 0.0));
+                    let usage = usage_gb.max(limit_gb.min(1e6)); // fallback scale
                     let new_mem = match gang.policies[i].on_oom(now, usage) {
                         Action::RestartWith(gb) => gb,
-                        _ => cluster.pod(m).effective_limit_gb,
+                        _ => limit_gb,
                     };
                     // every rank restarts from scratch — even healthy ones
-                    cluster.restart_pod(m, new_mem);
+                    let _ = self.client.restart_pod(cluster, m, new_mem);
                 }
                 continue;
             }
 
             // 2. normal operation: scrape + per-rank decisions
             for (i, &m) in gang.members.iter().enumerate() {
-                if cluster.pod(m).phase != PodPhase::Running {
+                if self.client.cached(m).map(|v| v.phase) != Some(PodPhase::Running) {
                     continue;
                 }
                 if sampling {
@@ -109,9 +124,14 @@ impl Tick for GangSupervisor {
                         }
                     }
                 }
+                let expected = self.client.cached(m).map(|v| v.resource_version);
                 match gang.policies[i].decide(now) {
-                    Action::Resize(gb) => cluster.patch_pod_memory(m, gb),
-                    Action::RestartWith(gb) => cluster.restart_pod(m, gb),
+                    Action::Resize(gb) => {
+                        let _ = self.client.patch_pod_memory(cluster, m, gb, expected);
+                    }
+                    Action::RestartWith(gb) => {
+                        let _ = self.client.restart_pod(cluster, m, gb);
+                    }
                     Action::None => {}
                 }
             }
@@ -168,6 +188,15 @@ mod tests {
         // the HEALTHY rank0 was restarted too — the §1 failure amplification
         assert!(c.pod(r0).restarts >= 1, "healthy rank dragged down");
         assert_eq!(c.pod(r0).restarts, c.pod(r1).restarts);
+        // every restart flowed through the API surface
+        use crate::simkube::api::{Outcome, Verb};
+        let audited = sup
+            .client()
+            .actions()
+            .iter()
+            .filter(|a| a.verb == Verb::Restart && a.outcome == Outcome::Applied)
+            .count() as u32;
+        assert_eq!(audited, c.pod(r0).restarts + c.pod(r1).restarts);
     }
 
     #[test]

@@ -1,6 +1,12 @@
-//! The controller runtime (system S12): per-pod and fleet-batched
-//! controllers, the simulation driver, and the threaded "remote node"
-//! deployment shape.
+//! The controller runtime (system S12): coordinators that drive
+//! node-scoped policies through the typed `ApiClient` — per-pod and
+//! fleet-batched controllers, gang supervisors, the simulation driver,
+//! and the threaded "remote node" deployment shape.
+//!
+//! Every actor here owns its own `ApiClient`: reads come from the
+//! client's informer cache, mutations go through admission +
+//! resourceVersion conflict checks, and each action is audited as
+//! applied / deferred / rejected.
 
 pub mod controller;
 pub mod gang;

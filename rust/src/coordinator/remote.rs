@@ -6,6 +6,7 @@
 //! has (tokio is not in the vendored crate set; std threads + mpsc).
 
 use crate::policy::{Action, VerticalPolicy};
+use crate::simkube::api::{ApiClient, Verb};
 use crate::simkube::cluster::Cluster;
 use crate::simkube::metrics::Sample;
 use crate::simkube::pod::{PodId, PodPhase};
@@ -105,7 +106,9 @@ pub fn spawn(mut controller: RemoteController) -> RemoteHandle {
 }
 
 /// Drive a cluster with a remote controller to completion. Commands are
-/// applied at the tick after they arrive (transport delay ≥ 1 s).
+/// applied at the tick after they arrive (transport delay ≥ 1 s) through
+/// the bridge's [`ApiClient`]; commands that raced a phase change are
+/// recorded as deferred in its audit log, API rejections as rejected.
 pub fn run_remote(
     cluster: &mut Cluster,
     policies: Vec<(PodId, Box<dyn VerticalPolicy>)>,
@@ -115,22 +118,28 @@ pub fn run_remote(
     let handle = spawn(RemoteController::new(policies));
     let start = cluster.now;
     let mut oom_reported: Vec<u32> = vec![0; cluster.pods.len()];
+    let mut api = ApiClient::new();
 
     while cluster.now - start < max_ticks && !cluster.all_done() {
         cluster.step();
         let now = cluster.now;
+        api.sync(cluster);
 
         // apply commands that arrived since the last tick
         while let Ok(cmd) = handle.rx.try_recv() {
             match cmd {
                 Command::Patch { pod, mem_gb } => {
-                    if cluster.pod(pod).is_running() {
-                        cluster.patch_pod_memory(pod, mem_gb);
+                    if api.cached(pod).map(|v| v.phase) == Some(PodPhase::Running) {
+                        let _ = api.patch_pod_memory(cluster, pod, mem_gb, None);
+                    } else {
+                        api.record_deferred(now, pod, Verb::Patch, "pod not running; command dropped");
                     }
                 }
                 Command::Restart { pod, mem_gb } => {
-                    if cluster.pod(pod).phase == PodPhase::OomKilled {
-                        cluster.restart_pod(pod, mem_gb);
+                    if api.cached(pod).map(|v| v.phase) == Some(PodPhase::OomKilled) {
+                        let _ = api.restart_pod(cluster, pod, mem_gb);
+                    } else {
+                        api.record_deferred(now, pod, Verb::Restart, "pod not OOM-killed; command dropped");
                     }
                 }
             }

@@ -7,6 +7,7 @@ use crate::policy::arcv::{ArcvParams, ArcvPolicy, DecisionBackend};
 use crate::policy::fixed::FixedPolicy;
 use crate::policy::oracle::OraclePolicy;
 use crate::policy::vpa::{UpdateMode, VpaFullPolicy, VpaSimPolicy};
+use crate::simkube::api::{ApiClient, Outcome};
 use crate::simkube::cluster::{Cluster, ClusterConfig};
 use crate::simkube::node::Node;
 use crate::simkube::pod::PodPhase;
@@ -132,6 +133,11 @@ pub struct RunResult {
     pub oom_count: usize,
     pub restarts: u32,
     pub completed: bool,
+    /// API actions the controller got applied (resizes + restarts) — the
+    /// §5 overhead surface, counted at the admission layer.
+    pub api_applied: usize,
+    /// API actions refused by admission/conflict checks.
+    pub api_rejected: usize,
     /// (t, recommendation/limit GB) — Fig 5's red line.
     pub limit_series: Vec<(u64, f64)>,
     /// (t, usage GB) — Fig 5's blue line.
@@ -150,11 +156,16 @@ pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
 
     let node = Node::new("w0", cfg.node_capacity_gb, cfg.swap.device());
     let mut cluster = Cluster::new(vec![node], ClusterConfig::default());
-    let pod = cluster.create_pod(
-        cfg.app.name(),
-        ResourceSpec::memory_exact(initial_gb),
-        Box::new(model),
-    );
+    // Admission runs like it would on a real cluster: the harness is just
+    // another API actor.
+    let pod = ApiClient::new()
+        .create_pod(
+            &mut cluster,
+            cfg.app.name(),
+            ResourceSpec::memory_exact(initial_gb),
+            Box::new(model),
+        )
+        .expect("workload pod admitted");
 
     let budget = (exec_secs * cfg.budget_mult) as u64;
     let mut controller: Box<dyn Tick> = match kind {
@@ -164,7 +175,7 @@ pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
             Box::new(c)
         }
         PolicyKind::ArcvFleet(params, backend) => {
-            let mut c = FleetController::new(backend, params);
+            let mut c = FleetController::from_backend(backend, params);
             c.manage(pod, initial_gb);
             Box::new(c)
         }
@@ -221,6 +232,15 @@ pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
         }
     }
 
+    let audit = controller.audit();
+    let api_applied = audit
+        .iter()
+        .filter(|a| a.outcome == Outcome::Applied && !a.dry_run)
+        .count();
+    let api_rejected = audit
+        .iter()
+        .filter(|a| a.outcome == Outcome::Rejected)
+        .count();
     let p = cluster.pod(pod);
     RunResult {
         app: cfg.app,
@@ -231,6 +251,8 @@ pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
         oom_count: cluster.events.count_ooms(pod),
         restarts: p.restarts,
         completed: p.is_done(),
+        api_applied,
+        api_rejected,
         limit_series,
         usage_series,
         swap_series,

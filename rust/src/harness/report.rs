@@ -71,7 +71,7 @@ pub fn ratios_csv(rows: &[RatioRow]) -> CsvWriter {
 /// Summarize one run as a single line.
 pub fn run_line(r: &RunResult) -> String {
     format!(
-        "{:<10} {:<10} wall={:>6}s footprint={:>10.1} GB·s used={:>10.1} GB·s ooms={} restarts={} {}",
+        "{:<10} {:<10} wall={:>6}s footprint={:>10.1} GB·s used={:>10.1} GB·s ooms={} restarts={} api={}/{} {}",
         r.app.name(),
         r.policy,
         r.wall_secs,
@@ -79,6 +79,8 @@ pub fn run_line(r: &RunResult) -> String {
         r.used_gbs,
         r.oom_count,
         r.restarts,
+        r.api_applied,
+        r.api_applied + r.api_rejected,
         if r.completed { "done" } else { "TIMEOUT" },
     )
 }
@@ -107,6 +109,8 @@ mod tests {
             oom_count: 0,
             restarts,
             completed: true,
+            api_applied: 0,
+            api_rejected: 0,
             limit_series: vec![],
             usage_series: vec![],
             swap_series: vec![],

@@ -9,12 +9,18 @@
 //!
 //! Quick map:
 //! - [`simkube`] — discrete-time Kubernetes-like cluster (kubelet, QoS,
-//!   in-place resize with §3.2 delays, swap, scheduler, metrics pipeline);
+//!   in-place resize with §3.2 delays, swap, scheduler, metrics pipeline)
+//!   fronted by the typed `simkube::api::ApiClient`: admission chain +
+//!   dry-run, resourceVersion conflict detection, a PLEG-style informer
+//!   cache, and a structured audit log — the *only* mutation path;
 //! - [`workloads`] — the nine HPC application memory models of Table 1;
-//! - [`policy`] — ARC-V (native + fleet backends), the VPA baselines,
-//!   fixed and oracle references;
+//! - [`policy`] — the node-scoped `NodePolicy` surface (batched
+//!   `PodAction`s) with `PerPodAdapter` lifting the per-pod kernels:
+//!   ARC-V (native + fleet backends), the VPA baselines, fixed and
+//!   oracle references;
 //! - [`runtime`] — PJRT loader/executor for the AOT artifacts;
-//! - [`coordinator`] — controllers wiring policies to the cluster API;
+//! - [`coordinator`] — controllers driving node policies through their
+//!   `ApiClient` (per-pod, fleet-batched, gang, remote bridge);
 //! - [`harness`] — experiment runner + reports for every paper figure;
 //! - [`util`] — offline-build support (PRNG, JSON/CSV, args, mini-bench,
 //!   mini-proptest, plots).

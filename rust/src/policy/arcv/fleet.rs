@@ -1,16 +1,25 @@
-//! Fleet-batched decision backends.
+//! Fleet-batched decision backends, and [`FleetPolicy`] — the node-scoped
+//! policy that drives them.
 //!
-//! The coordinator batches every pod's decision into one step call
+//! The policy batches every managed pod's decision into one step call
 //! (`windows[P,W]`, `swap[P]`, packed `states[P,6]`, `params[10]` →
 //! new states + signals). Two interchangeable backends exist:
 //!
 //! - [`NativeFleet`] — loops the native state machine (this module);
 //! - `runtime::engine::XlaFleet` — executes the AOT artifact on PJRT.
 //!
-//! `fleet_equivalence` in rust/tests pins them to each other.
+//! `fleet_equivalence` in rust/tests pins them to each other. As a
+//! [`NodePolicy`], the fleet presents through the same coordinator surface
+//! as the per-pod policies (`PerPodAdapter`), so the deployed hot path and
+//! the baselines are driven by identical admission/audit machinery.
 
 use super::params::ArcvParams;
 use super::state::{PodState, STATE_LEN};
+use crate::policy::{Action, NodePolicy, PodAction};
+use crate::simkube::api::PodView;
+use crate::simkube::metrics::Sample;
+use crate::simkube::pod::PodId;
+use crate::util::ring::RingBuffer;
 
 /// A batched ARC-V decision step.
 ///
@@ -91,6 +100,203 @@ impl DecisionBackend for NativeFleet {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+/// Per-pod bookkeeping the fleet policy keeps between ticks.
+struct ManagedPod {
+    pod: PodId,
+    window: RingBuffer,
+    started_at: Option<u64>,
+    swap_gb: f32,
+    last_rec: f64,
+    /// `last_rec` before the most recent emitted action — restored by
+    /// [`NodePolicy::on_action_rejected`] so a refused patch is re-issued
+    /// on the next decision tick instead of being silently forgotten.
+    prev_rec: f64,
+}
+
+/// ARC-V's fleet backend presented as a [`NodePolicy`]: one batched
+/// `DecisionBackend::step` call per decision tick for every managed pod on
+/// the node (with `runtime::XlaFleet` as the backend, the whole policy
+/// runs inside the AOT-compiled XLA artifact).
+pub struct FleetPolicy {
+    backend: Box<dyn DecisionBackend>,
+    pub params: ArcvParams,
+    managed: Vec<ManagedPod>,
+    /// packed per-pod states, P×6 (P = managed.len())
+    states: Vec<f32>,
+    last_decision: u64,
+    // staging buffers reused across ticks
+    win_stage: Vec<f32>,
+    swap_stage: Vec<f32>,
+    state_stage: Vec<f32>,
+    idx_stage: Vec<usize>,
+    /// (time, pod, signal code) for event analysis
+    pub signal_log: Vec<(u64, PodId, f32)>,
+}
+
+impl FleetPolicy {
+    pub fn new(backend: Box<dyn DecisionBackend>, params: ArcvParams) -> Self {
+        assert_eq!(
+            backend.window(),
+            params.window,
+            "backend window must match params.window"
+        );
+        Self {
+            backend,
+            params,
+            managed: Vec::new(),
+            states: Vec::new(),
+            last_decision: 0,
+            win_stage: Vec::new(),
+            swap_stage: Vec::new(),
+            state_stage: Vec::new(),
+            idx_stage: Vec::new(),
+            signal_log: Vec::new(),
+        }
+    }
+
+    /// Start managing a pod at `initial_rec_gb`. Managing the same pod
+    /// twice is last-wins: its window and packed state are re-initialized.
+    pub fn manage(&mut self, pod: PodId, initial_rec_gb: f64) {
+        let mut st = [0f32; STATE_LEN];
+        PodState::initial(initial_rec_gb).pack(&mut st);
+        if let Some(i) = self.managed.iter().position(|m| m.pod == pod) {
+            self.managed[i] = ManagedPod {
+                pod,
+                window: RingBuffer::new(self.params.window),
+                started_at: None,
+                swap_gb: 0.0,
+                last_rec: initial_rec_gb,
+                prev_rec: initial_rec_gb,
+            };
+            self.states[i * STATE_LEN..(i + 1) * STATE_LEN].copy_from_slice(&st);
+            return;
+        }
+        assert!(
+            self.managed.len() < self.backend.batch(),
+            "fleet exceeds backend batch {}",
+            self.backend.batch()
+        );
+        self.managed.push(ManagedPod {
+            pod,
+            window: RingBuffer::new(self.params.window),
+            started_at: None,
+            swap_gb: 0.0,
+            last_rec: initial_rec_gb,
+            prev_rec: initial_rec_gb,
+        });
+        self.states.extend_from_slice(&st);
+    }
+
+    pub fn pod_state(&self, pod: PodId) -> Option<PodState> {
+        let i = self.managed.iter().position(|m| m.pod == pod)?;
+        Some(PodState::unpack(&self.states[i * STATE_LEN..(i + 1) * STATE_LEN]))
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+impl NodePolicy for FleetPolicy {
+    fn name(&self) -> &str {
+        "arcv-fleet"
+    }
+
+    fn observe(&mut self, now: u64, pod: PodId, sample: &Sample) {
+        if let Some(m) = self.managed.iter_mut().find(|m| m.pod == pod) {
+            m.started_at.get_or_insert(now);
+            m.window.push(sample.usage_gb);
+            m.swap_gb = sample.swap_gb as f32;
+        }
+    }
+
+    fn on_oom(&mut self, _now: u64, _pod: PodId, _usage_at_oom_gb: f64) -> Option<PodAction> {
+        // The fleet deployment runs with swap enabled (ARC-V's OOM-free
+        // operating point); recovery from kills is the per-pod tier's job.
+        None
+    }
+
+    fn wants_decision(&self, now: u64) -> bool {
+        now >= self.last_decision + self.params.decision_interval_secs
+    }
+
+    fn decide(&mut self, now: u64, pods: &[&PodView]) -> Vec<PodAction> {
+        if now < self.last_decision + self.params.decision_interval_secs {
+            return Vec::new();
+        }
+        let w = self.params.window;
+        self.win_stage.clear();
+        self.swap_stage.clear();
+        self.state_stage.clear();
+        self.idx_stage.clear();
+        let mut scratch = vec![0.0f64; w];
+        for (i, m) in self.managed.iter().enumerate() {
+            let eligible = pods.iter().any(|v| v.id == m.pod)
+                && m.started_at
+                    .map(|t0| now >= t0 + self.params.init_phase_secs)
+                    .unwrap_or(false)
+                && m.window.len() >= w;
+            if !eligible {
+                continue;
+            }
+            m.window.copy_last_into(w, &mut scratch);
+            self.win_stage.extend(scratch.iter().map(|&x| x as f32));
+            self.swap_stage.push(m.swap_gb);
+            self.state_stage
+                .extend_from_slice(&self.states[i * STATE_LEN..(i + 1) * STATE_LEN]);
+            self.idx_stage.push(i);
+        }
+        if self.idx_stage.is_empty() {
+            return Vec::new();
+        }
+        self.last_decision = now;
+        let n = self.idx_stage.len();
+        let signals = self
+            .backend
+            .step(
+                n,
+                &self.win_stage,
+                &self.swap_stage,
+                &mut self.state_stage,
+                &self.params,
+            )
+            .expect("fleet decision step failed");
+
+        let mut actions = Vec::new();
+        for (k, &i) in self.idx_stage.iter().enumerate() {
+            self.states[i * STATE_LEN..(i + 1) * STATE_LEN]
+                .copy_from_slice(&self.state_stage[k * STATE_LEN..(k + 1) * STATE_LEN]);
+            let st = PodState::unpack(&self.states[i * STATE_LEN..(i + 1) * STATE_LEN]);
+            let pod = self.managed[i].pod;
+            self.signal_log.push((now, pod, signals[k]));
+            let prev = self.managed[i].last_rec;
+            if (st.rec - prev).abs() / prev.max(1e-9) > 1e-4 {
+                self.managed[i].prev_rec = prev;
+                self.managed[i].last_rec = st.rec;
+                actions.push(PodAction::new(
+                    pod,
+                    Action::Resize(st.rec),
+                    format!("fleet signal {}", signals[k]),
+                ));
+            }
+        }
+        actions
+    }
+
+    fn on_action_rejected(&mut self, _now: u64, act: &PodAction) {
+        // Roll the bookkeeping back so the resize is re-issued on the next
+        // decision tick (the packed state keeps evolving regardless —
+        // same as a per-pod kernel whose patch was refused).
+        if let Some(m) = self.managed.iter_mut().find(|m| m.pod == act.pod) {
+            m.last_rec = m.prev_rec;
+        }
+    }
+
+    fn recommendation_gb(&self, pod: PodId) -> Option<f64> {
+        self.managed.iter().find(|m| m.pod == pod).map(|m| m.last_rec)
     }
 }
 

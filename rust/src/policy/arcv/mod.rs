@@ -12,7 +12,7 @@ pub mod params;
 pub mod signals;
 pub mod state;
 
-pub use fleet::{DecisionBackend, NativeFleet};
+pub use fleet::{DecisionBackend, FleetPolicy, NativeFleet};
 pub use native::ArcvPolicy;
 pub use params::{ArcvParams, PARAMS_LEN};
 pub use signals::{detect, Signal, WindowStats};

@@ -1,8 +1,21 @@
 //! Vertical autoscaling policies (systems S9–S11).
 //!
-//! Everything that decides a pod's memory allocation implements
-//! [`VerticalPolicy`]; the coordinator feeds it sampled metrics and applies
-//! the actions it returns through the cluster API. Implementations:
+//! Two policy tiers exist, matching how the paper deploys ARC-V "at the
+//! node level":
+//!
+//! - [`VerticalPolicy`] — the per-pod decision kernel: one instance per
+//!   pod, fed sampled metrics, returns an [`Action`] for its own pod.
+//! - [`NodePolicy`] — the node-scoped surface the coordinator actually
+//!   drives: one `decide` call per tick over the cached [`PodView`]s of a
+//!   whole node, returning a batch of [`PodAction`]s (with reasons and
+//!   priorities) that the coordinator submits through the `ApiClient`.
+//!
+//! [`PerPodAdapter`] lifts any set of `VerticalPolicy` instances into a
+//! `NodePolicy`, so ARC-V's native policy, the VPA recommender/simulator,
+//! [`fixed`], and [`oracle`] all present through the same interface as the
+//! fleet-batched backend ([`arcv::fleet::FleetPolicy`]).
+//!
+//! Implementations:
 //!
 //! - [`arcv`] — the paper's contribution (native state machine + the
 //!   XLA-artifact fleet backend),
@@ -16,9 +29,11 @@ pub mod fixed;
 pub mod oracle;
 pub mod vpa;
 
+use crate::simkube::api::PodView;
 use crate::simkube::metrics::Sample;
+use crate::simkube::pod::PodId;
 
-/// What a policy wants done to its pod.
+/// What a policy wants done to a pod.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Action {
     None,
@@ -44,4 +59,201 @@ pub trait VerticalPolicy: Send {
 
     /// Current recommendation (GB) for reporting, if the policy has one.
     fn recommendation_gb(&self) -> Option<f64>;
+}
+
+/// One decided action of a node-scoped batch: which pod, what to do, why,
+/// and how urgently. The coordinator applies higher priorities first and
+/// threads `reason` into the API audit log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PodAction {
+    pub pod: PodId,
+    pub action: Action,
+    pub reason: String,
+    pub priority: u8,
+}
+
+impl PodAction {
+    pub fn new(pod: PodId, action: Action, reason: impl Into<String>) -> Self {
+        Self {
+            pod,
+            action,
+            reason: reason.into(),
+            priority: 0,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// A node-scoped policy: decides for every pod on a node in one call.
+///
+/// Intentionally NOT `Send`: the fleet implementation wraps a PJRT client
+/// that is single-threaded by construction, and node policies run on the
+/// coordinator thread (the remote deployment shape ships [`VerticalPolicy`]
+/// boxes across the channel instead).
+pub trait NodePolicy {
+    fn name(&self) -> &str;
+
+    /// Fresh cAdvisor metrics for one managed pod (sampling ticks only).
+    fn observe(&mut self, now: u64, pod: PodId, sample: &Sample);
+
+    /// The pod was OOM-killed; return the recovery action, if any.
+    fn on_oom(&mut self, now: u64, pod: PodId, usage_at_oom_gb: f64) -> Option<PodAction>;
+
+    /// Cheap pre-check: may `decide` act at `now`? Interval-gated policies
+    /// override this so the coordinator skips materializing pod views on
+    /// off-interval ticks. Default: always.
+    fn wants_decision(&self, _now: u64) -> bool {
+        true
+    }
+
+    /// Called every tick with the cached views of the node's Running pods.
+    /// Returns the batch of actions to submit this tick (possibly empty).
+    fn decide(&mut self, now: u64, pods: &[&PodView]) -> Vec<PodAction>;
+
+    /// The coordinator submitted this policy's action and the API refused
+    /// it (admission or resourceVersion conflict). Stateful policies roll
+    /// back their bookkeeping here so the action is re-issued on a later
+    /// tick. Default: no-op (per-pod kernels are fire-and-forget).
+    fn on_action_rejected(&mut self, _now: u64, _act: &PodAction) {}
+
+    /// Current recommendation for one pod, if the policy tracks one.
+    fn recommendation_gb(&self, pod: PodId) -> Option<f64>;
+}
+
+/// Lifts per-pod [`VerticalPolicy`] instances into a [`NodePolicy`]: each
+/// managed pod keeps its own decision kernel, and the adapter batches
+/// their actions per tick.
+pub struct PerPodAdapter {
+    entries: Vec<(PodId, Box<dyn VerticalPolicy>)>,
+}
+
+impl PerPodAdapter {
+    pub fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// Attach `policy` to `pod`. Managing the same pod twice is last-wins:
+    /// the displaced policy is returned (a second policy fighting the
+    /// first every tick was the old failure mode — now impossible).
+    pub fn manage(
+        &mut self,
+        pod: PodId,
+        policy: Box<dyn VerticalPolicy>,
+    ) -> Option<Box<dyn VerticalPolicy>> {
+        match self.entries.iter_mut().find(|(p, _)| *p == pod) {
+            Some(entry) => Some(std::mem::replace(&mut entry.1, policy)),
+            None => {
+                self.entries.push((pod, policy));
+                None
+            }
+        }
+    }
+
+    pub fn policy_of(&self, pod: PodId) -> Option<&dyn VerticalPolicy> {
+        self.entries
+            .iter()
+            .find(|(p, _)| *p == pod)
+            .map(|(_, pol)| pol.as_ref())
+    }
+
+    pub fn managed_pods(&self) -> impl Iterator<Item = PodId> + '_ {
+        self.entries.iter().map(|(p, _)| *p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for PerPodAdapter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NodePolicy for PerPodAdapter {
+    fn name(&self) -> &str {
+        "per-pod"
+    }
+
+    fn observe(&mut self, now: u64, pod: PodId, sample: &Sample) {
+        if let Some((_, p)) = self.entries.iter_mut().find(|(id, _)| *id == pod) {
+            p.observe(now, sample);
+        }
+    }
+
+    fn on_oom(&mut self, now: u64, pod: PodId, usage_at_oom_gb: f64) -> Option<PodAction> {
+        let (_, p) = self.entries.iter_mut().find(|(id, _)| *id == pod)?;
+        match p.on_oom(now, usage_at_oom_gb) {
+            Action::RestartWith(gb) => Some(
+                PodAction::new(pod, Action::RestartWith(gb), format!("{}: oom recovery", p.name()))
+                    .with_priority(2),
+            ),
+            _ => None,
+        }
+    }
+
+    fn decide(&mut self, now: u64, pods: &[&PodView]) -> Vec<PodAction> {
+        let mut out = Vec::new();
+        for (pod, policy) in &mut self.entries {
+            if !pods.iter().any(|v| v.id == *pod) {
+                continue; // not Running on this node this tick
+            }
+            match policy.decide(now) {
+                Action::None => {}
+                act => out.push(PodAction::new(*pod, act, policy.name().to_string())),
+            }
+        }
+        out
+    }
+
+    fn recommendation_gb(&self, pod: PodId) -> Option<f64> {
+        self.policy_of(pod)?.recommendation_gb()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::fixed::FixedPolicy;
+    use crate::policy::vpa::VpaSimPolicy;
+
+    #[test]
+    fn manage_same_pod_twice_is_last_wins() {
+        let mut a = PerPodAdapter::new();
+        assert!(a.manage(0, Box::new(FixedPolicy::new(4.0))).is_none());
+        let displaced = a.manage(0, Box::new(VpaSimPolicy::new(2.0)));
+        assert_eq!(displaced.unwrap().name(), "fixed");
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.policy_of(0).unwrap().name(), "vpa-sim");
+        assert_eq!(a.recommendation_gb(0), Some(2.0));
+    }
+
+    #[test]
+    fn oom_maps_to_priority_restart() {
+        let mut a = PerPodAdapter::new();
+        a.manage(3, Box::new(VpaSimPolicy::new(1.0)));
+        let act = a.on_oom(10, 3, 1.01).unwrap();
+        assert_eq!(act.pod, 3);
+        assert_eq!(act.priority, 2);
+        assert!(matches!(act.action, Action::RestartWith(_)));
+        // unmanaged pods yield nothing
+        assert!(a.on_oom(10, 9, 1.0).is_none());
+    }
+
+    #[test]
+    fn decide_skips_pods_without_running_view() {
+        let mut a = PerPodAdapter::new();
+        a.manage(0, Box::new(VpaSimPolicy::new(1.0)));
+        // no views at all → no actions (and no panic)
+        assert!(a.decide(5, &[]).is_empty());
+    }
 }

@@ -1,0 +1,77 @@
+//! Stub PJRT engine for builds without the `xla-runtime` feature: the
+//! same public surface as `engine.rs`, with every entry point reporting
+//! that the runtime is unavailable. Keeps the crate buildable (and the
+//! native decision path fully functional) when the vendored `xla` crate
+//! is absent; `Manifest::discover`-guarded tests and the CLI degrade
+//! gracefully.
+
+use super::artifacts::Manifest;
+use crate::policy::arcv::{ArcvParams, DecisionBackend};
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: built without the `xla-runtime` feature (see rust/Cargo.toml)";
+
+/// Stub of the PJRT CPU client; construction always fails.
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    pub fn cpu() -> anyhow::Result<Engine> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load(&self, _path: &Path) -> anyhow::Result<Executable> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+}
+
+/// Stub compiled computation (never constructed).
+pub struct Executable {
+    _private: (),
+}
+
+/// Stub XLA fleet backend (never constructed; `from_manifest` fails).
+pub struct XlaFleet {
+    _private: (),
+}
+
+impl XlaFleet {
+    pub fn from_manifest(
+        _engine: &Engine,
+        _manifest: &Manifest,
+        _min_pods: usize,
+    ) -> anyhow::Result<XlaFleet> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+}
+
+impl DecisionBackend for XlaFleet {
+    fn batch(&self) -> usize {
+        0
+    }
+
+    fn window(&self) -> usize {
+        0
+    }
+
+    fn step(
+        &mut self,
+        _n: usize,
+        _windows: &[f32],
+        _swap: &[f32],
+        _states: &mut [f32],
+        _params: &ArcvParams,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

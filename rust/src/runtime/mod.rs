@@ -1,7 +1,16 @@
 //! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
 //! and runs them on the L3 hot path. Python never executes at runtime.
+//!
+//! The real engine needs the vendored `xla` crate and is gated behind the
+//! `xla-runtime` feature; default builds get a same-shape stub whose
+//! constructors fail loudly, so the native decision path (and everything
+//! guarded by `Manifest::discover`) works in any environment.
 
 pub mod artifacts;
+#[cfg(feature = "xla-runtime")]
+pub mod engine;
+#[cfg(not(feature = "xla-runtime"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 
 pub use artifacts::{find_dir, ArtifactInfo, Manifest};

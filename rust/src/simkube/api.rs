@@ -1,13 +1,30 @@
-//! The API-server facade (system S7): the typed surface policies and
-//! operators are allowed to touch, with kube-apiserver-style admission
-//! validation and a watchable event cursor.
+//! The API server surface (system S7): the typed, stateful client every
+//! actor — per-pod controllers, the fleet coordinator, gang supervisors,
+//! and the remote bridge — goes through to read or mutate cluster state.
 //!
 //! Everything the ARC-V controller does in the paper goes through exactly
 //! this surface: list pods, read status, patch memory (the
-//! `InPlacePodVerticalScaling` path), and watch events — never direct
-//! mutation of kubelet state.
+//! `InPlacePodVerticalScaling` path), restart, and watch events — never
+//! direct mutation of kubelet state. `rust/tests/api_surface.rs` pins that
+//! claim: every coordinator mutation must surface as an API-layer event in
+//! [`ApiClient::watch`].
+//!
+//! The client models how kube clients actually behave:
+//!
+//! - an **admission chain** ([`AdmissionPlugin`]) validates every create /
+//!   patch / restart, with dry-run support that runs the full chain
+//!   without touching the cluster;
+//! - every pod carries a `resource_version`; a patch submitted with a
+//!   stale expected version is refused with [`ApiError::Conflict`]
+//!   (optimistic concurrency, the multi-writer safety net);
+//! - a **PLEG-style informer cache**: [`ApiClient::sync`] drains the watch
+//!   stream and relists, so controllers read cached [`PodView`]s instead
+//!   of poking `cluster.pods` directly;
+//! - a structured **audit log** ([`ActionRecord`]): every request is
+//!   recorded as applied / deferred / rejected with its reason.
 
 use super::cluster::Cluster;
+use super::events::Event;
 use super::pod::{MemoryProcess, PodId, PodPhase};
 use super::qos::QosClass;
 use super::resources::ResourceSpec;
@@ -20,6 +37,12 @@ pub enum ApiError {
     Admission(String),
     #[error("patch denied: {0}")]
     Patch(String),
+    #[error("conflict on pod {pod}: expected resourceVersion {expected}, server has {actual}")]
+    Conflict {
+        pod: PodId,
+        expected: u64,
+        actual: u64,
+    },
 }
 
 /// What `kubectl get pod -o json` would show (the policy-visible view).
@@ -30,6 +53,9 @@ pub struct PodView {
     pub phase: PodPhase,
     pub qos: QosClass,
     pub node: Option<usize>,
+    /// Optimistic-concurrency token; pass it back on patch to detect
+    /// mid-flight writers.
+    pub resource_version: u64,
     pub spec_memory_gb: Option<f64>,
     pub effective_limit_gb: f64,
     pub usage_gb: f64,
@@ -38,53 +64,252 @@ pub struct PodView {
     pub restarts: u32,
 }
 
-/// Typed API over a cluster. Holds no state of its own — it is the
-/// admission/validation layer.
-pub struct ApiServer;
+/// The API verb of a request, for audit records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verb {
+    Create,
+    Patch,
+    Restart,
+}
 
-impl ApiServer {
-    /// Admission + create. Validates the spec like kube-apiserver would.
-    pub fn create_pod(
-        cluster: &mut Cluster,
-        name: &str,
-        spec: ResourceSpec,
-        process: Box<dyn MemoryProcess>,
-    ) -> Result<PodId, ApiError> {
+/// What happened to a submitted (or considered) action.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// The mutation was admitted and applied to the cluster.
+    Applied,
+    /// The caller held or dropped the action without applying it (pod not
+    /// running yet, command raced a phase change, superseded policy, ...).
+    Deferred,
+    /// The API refused the request (admission, conflict, not-found).
+    Rejected,
+}
+
+/// One entry of the per-client action log — the §5 "audited surface".
+#[derive(Clone, Debug)]
+pub struct ActionRecord {
+    pub time: u64,
+    /// `None` when the request never resolved to a pod (rejected create).
+    pub pod: Option<PodId>,
+    pub verb: Verb,
+    pub outcome: Outcome,
+    pub reason: String,
+    pub target_gb: Option<f64>,
+    /// True when the request was a dry-run (validation only).
+    pub dry_run: bool,
+}
+
+/// A request as the admission chain sees it.
+pub enum AdmissionRequest<'a> {
+    Create {
+        name: &'a str,
+        spec: &'a ResourceSpec,
+    },
+    Patch {
+        id: PodId,
+        mem_gb: f64,
+    },
+    Restart {
+        id: PodId,
+        mem_gb: f64,
+    },
+}
+
+/// One link of the admission chain. Plugins are pure validators: they see
+/// the request and the (read-only) cluster, and return `Err(reason)` to
+/// deny. The same chain runs for real requests and dry-runs.
+pub trait AdmissionPlugin: Send {
+    fn name(&self) -> &'static str;
+    fn review(&self, cluster: &Cluster, req: &AdmissionRequest) -> Result<(), String>;
+}
+
+/// RFC 1123 pod-name validation (create only).
+struct NameRules;
+
+impl AdmissionPlugin for NameRules {
+    fn name(&self) -> &'static str {
+        "NameRules"
+    }
+
+    fn review(&self, _cluster: &Cluster, req: &AdmissionRequest) -> Result<(), String> {
+        let AdmissionRequest::Create { name, .. } = req else {
+            return Ok(());
+        };
         if name.is_empty() || name.len() > 253 {
-            return Err(ApiError::Admission("pod name must be 1..=253 chars".into()));
+            return Err("pod name must be 1..=253 chars".into());
         }
         if !name
             .chars()
             .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-' || c == '.')
         {
-            return Err(ApiError::Admission(format!(
+            return Err(format!(
                 "invalid pod name {name:?} (RFC 1123 subdomain required)"
-            )));
+            ));
         }
-        if let (Some(req), Some(lim)) = (spec.memory_gb.request, spec.memory_gb.limit) {
-            if req > lim {
-                return Err(ApiError::Admission(format!(
-                    "memory request {req} GB exceeds limit {lim} GB"
-                )));
-            }
-        }
-        if spec.memory_request_gb() < 0.0 {
-            return Err(ApiError::Admission("negative memory request".into()));
-        }
-        Ok(cluster.create_pod(name, spec, process))
+        Ok(())
+    }
+}
+
+/// Spec sanity: requests/limits must be finite, non-negative, and ordered;
+/// patch/restart sizes must be finite and positive. This is where NaN/inf
+/// requests die.
+struct ResourceRules;
+
+impl AdmissionPlugin for ResourceRules {
+    fn name(&self) -> &'static str {
+        "ResourceRules"
     }
 
-    pub fn get_pod(cluster: &Cluster, id: PodId) -> Result<PodView, ApiError> {
-        let p = cluster
-            .pods
-            .get(id)
-            .ok_or(ApiError::NotFound(id))?;
-        Ok(PodView {
+    fn review(&self, _cluster: &Cluster, req: &AdmissionRequest) -> Result<(), String> {
+        match req {
+            AdmissionRequest::Create { spec, .. } => {
+                for v in [spec.memory_gb.request, spec.memory_gb.limit]
+                    .into_iter()
+                    .flatten()
+                {
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(format!("memory quantity {v} must be finite and >= 0"));
+                    }
+                }
+                if let (Some(req_gb), Some(lim)) = (spec.memory_gb.request, spec.memory_gb.limit) {
+                    if req_gb > lim {
+                        return Err(format!(
+                            "memory request {req_gb} GB exceeds limit {lim} GB"
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            AdmissionRequest::Patch { mem_gb, .. } | AdmissionRequest::Restart { mem_gb, .. } => {
+                if !(mem_gb.is_finite() && *mem_gb > 0.0) {
+                    return Err(format!("invalid memory size {mem_gb}"));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// The in-place-resize alpha rules (§3.2): QoS class is immutable (no
+/// adding limits to a BestEffort pod), and completed pods are sealed.
+struct InPlaceResizeRules;
+
+impl AdmissionPlugin for InPlaceResizeRules {
+    fn name(&self) -> &'static str {
+        "InPlaceResizeRules"
+    }
+
+    fn review(&self, cluster: &Cluster, req: &AdmissionRequest) -> Result<(), String> {
+        let AdmissionRequest::Patch { id, .. } = req else {
+            return Ok(());
+        };
+        let Some(pod) = cluster.pods.get(*id) else {
+            return Ok(()); // existence is checked before the chain
+        };
+        if pod.qos == QosClass::BestEffort {
+            return Err(
+                "cannot add limits to a BestEffort pod in place (QoS class is immutable, §3.2)"
+                    .into(),
+            );
+        }
+        if pod.is_done() {
+            return Err("pod already completed".into());
+        }
+        Ok(())
+    }
+}
+
+/// Typed, stateful API client: the only mutation path for policies and
+/// coordinators. Each actor owns one (kube clients are per-process);
+/// optimistic concurrency on the shared `resource_version` keeps
+/// concurrent clients honest.
+pub struct ApiClient {
+    admission: Vec<Box<dyn AdmissionPlugin>>,
+    /// Informer cache, indexed by `PodId`.
+    cache: Vec<Option<PodView>>,
+    /// Watch cursor for [`Self::sync`].
+    cursor: usize,
+    actions: Vec<ActionRecord>,
+}
+
+impl Default for ApiClient {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ApiClient {
+    /// A client with the default admission chain (names, resource sanity,
+    /// in-place-resize rules).
+    pub fn new() -> Self {
+        Self {
+            admission: vec![
+                Box::new(NameRules),
+                Box::new(ResourceRules),
+                Box::new(InPlaceResizeRules),
+            ],
+            cache: Vec::new(),
+            cursor: 0,
+            actions: Vec::new(),
+        }
+    }
+
+    /// Append a custom admission plugin (multi-tenant quotas etc.).
+    pub fn push_plugin(&mut self, plugin: Box<dyn AdmissionPlugin>) {
+        self.admission.push(plugin);
+    }
+
+    fn admit(&self, cluster: &Cluster, req: &AdmissionRequest) -> Result<(), String> {
+        for p in &self.admission {
+            p.review(cluster, req)
+                .map_err(|e| format!("{}: {e}", p.name()))?;
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn record(
+        &mut self,
+        time: u64,
+        pod: Option<PodId>,
+        verb: Verb,
+        outcome: Outcome,
+        reason: impl Into<String>,
+        target_gb: Option<f64>,
+        dry_run: bool,
+    ) {
+        self.actions.push(ActionRecord {
+            time,
+            pod,
+            verb,
+            outcome,
+            reason: reason.into(),
+            target_gb,
+            dry_run,
+        });
+    }
+
+    /// The per-client action log (applied / deferred / rejected).
+    pub fn actions(&self) -> &[ActionRecord] {
+        &self.actions
+    }
+
+    /// Coordinators call this when they hold or drop an action without
+    /// submitting it, so the audit trail stays complete.
+    pub fn record_deferred(&mut self, time: u64, pod: PodId, verb: Verb, reason: impl Into<String>) {
+        self.record(time, Some(pod), verb, Outcome::Deferred, reason, None, false);
+    }
+
+    // ------------------------------------------------------------- reads --
+
+    fn build_view(cluster: &Cluster, id: PodId) -> Option<PodView> {
+        let p = cluster.pods.get(id)?;
+        Some(PodView {
             id,
             name: p.name.clone(),
             phase: p.phase,
             qos: p.qos,
             node: p.node,
+            resource_version: p.resource_version,
             spec_memory_gb: p.spec.memory_limit_gb(),
             effective_limit_gb: p.effective_limit_gb,
             usage_gb: p.usage.usage_gb,
@@ -94,49 +319,233 @@ impl ApiServer {
         })
     }
 
+    /// Read-through GET (bypasses the informer cache).
+    pub fn get_pod(&self, cluster: &Cluster, id: PodId) -> Result<PodView, ApiError> {
+        Self::build_view(cluster, id).ok_or(ApiError::NotFound(id))
+    }
+
+    /// LIST of live views.
     pub fn list_pods(cluster: &Cluster) -> Vec<PodView> {
         (0..cluster.pods.len())
-            .map(|id| Self::get_pod(cluster, id).expect("id in range"))
+            .filter_map(|id| Self::build_view(cluster, id))
             .collect()
     }
 
-    /// The in-place vertical patch (§3.2). Validation mirrors the alpha
-    /// feature's rules: positive size, pod must exist and not be done,
-    /// and the patch must not attempt a QoS-class change (here: resizing
-    /// a Guaranteed pod keeps request == limit, which `with_memory`
-    /// guarantees; BestEffort pods have no limits to patch).
-    pub fn patch_pod_memory(
+    /// Watch: events at or after `cursor`; returns (events, next_cursor).
+    pub fn watch(cluster: &Cluster, cursor: usize) -> (Vec<Event>, usize) {
+        let evs = cluster.events.events[cursor.min(cluster.events.events.len())..].to_vec();
+        (evs, cluster.events.events.len())
+    }
+
+    /// Informer refresh (PLEG-style): advance the watch cursor and relist
+    /// only when it moved — every phase transition and accepted mutation
+    /// emits an event (the PLEG contract in `events.rs`), so an unmoved
+    /// cursor means the cached lifecycle state is still exact. Usage
+    /// figures in cached views refresh on those event ticks; live metrics
+    /// flow through the scrape pipeline, not the informer.
+    pub fn sync(&mut self, cluster: &Cluster) {
+        let next = cluster.events.events.len();
+        let fresh = next != self.cursor || self.cache.len() < cluster.pods.len();
+        self.cursor = next;
+        if !fresh {
+            return;
+        }
+        if self.cache.len() < cluster.pods.len() {
+            self.cache.resize(cluster.pods.len(), None);
+        }
+        for id in 0..cluster.pods.len() {
+            self.cache[id] = Self::build_view(cluster, id);
+        }
+    }
+
+    /// The cached view of one pod (None until the first [`Self::sync`]
+    /// observes it).
+    pub fn cached(&self, id: PodId) -> Option<&PodView> {
+        self.cache.get(id).and_then(|v| v.as_ref())
+    }
+
+    /// All cached views, id order.
+    pub fn cached_views(&self) -> impl Iterator<Item = &PodView> {
+        self.cache.iter().flatten()
+    }
+
+    // --------------------------------------------------------- mutations --
+
+    /// Admission + create. Validates the spec like kube-apiserver would.
+    pub fn create_pod(
+        &mut self,
         cluster: &mut Cluster,
+        name: &str,
+        spec: ResourceSpec,
+        process: Box<dyn MemoryProcess>,
+    ) -> Result<PodId, ApiError> {
+        let now = cluster.now;
+        let req_gb = spec.memory_request_gb();
+        if let Err(reason) = self.admit(cluster, &AdmissionRequest::Create { name, spec: &spec }) {
+            self.record(
+                now,
+                None,
+                Verb::Create,
+                Outcome::Rejected,
+                reason.as_str(),
+                Some(req_gb),
+                false,
+            );
+            return Err(ApiError::Admission(reason));
+        }
+        let id = cluster.create_pod(name, spec, process);
+        self.record(now, Some(id), Verb::Create, Outcome::Applied, "created", Some(req_gb), false);
+        if self.cache.len() <= id {
+            self.cache.resize(id + 1, None);
+        }
+        self.cache[id] = Self::build_view(cluster, id);
+        Ok(id)
+    }
+
+    /// Dry-run create: the full admission chain, no mutation.
+    pub fn dry_run_create(
+        &mut self,
+        cluster: &Cluster,
+        name: &str,
+        spec: &ResourceSpec,
+    ) -> Result<(), ApiError> {
+        let now = cluster.now;
+        let res = self.admit(cluster, &AdmissionRequest::Create { name, spec });
+        match res {
+            Ok(()) => {
+                self.record(now, None, Verb::Create, Outcome::Applied, "dry-run ok", None, true);
+                Ok(())
+            }
+            Err(reason) => {
+                self.record(now, None, Verb::Create, Outcome::Rejected, reason.as_str(), None, true);
+                Err(ApiError::Admission(reason))
+            }
+        }
+    }
+
+    fn validate_patch(
+        &self,
+        cluster: &Cluster,
         id: PodId,
         mem_gb: f64,
+        expected_rv: Option<u64>,
     ) -> Result<(), ApiError> {
-        if cluster.pods.get(id).is_none() {
+        let Some(pod) = cluster.pods.get(id) else {
             return Err(ApiError::NotFound(id));
+        };
+        self.admit(cluster, &AdmissionRequest::Patch { id, mem_gb })
+            .map_err(ApiError::Patch)?;
+        if let Some(expected) = expected_rv {
+            if expected != pod.resource_version {
+                return Err(ApiError::Conflict {
+                    pod: id,
+                    expected,
+                    actual: pod.resource_version,
+                });
+            }
         }
-        if !(mem_gb.is_finite() && mem_gb > 0.0) {
-            return Err(ApiError::Patch(format!("invalid memory size {mem_gb}")));
-        }
-        let pod = &cluster.pods[id];
-        if pod.qos == QosClass::BestEffort {
-            return Err(ApiError::Patch(
-                "cannot add limits to a BestEffort pod in place (QoS class is immutable, §3.2)"
-                    .into(),
-            ));
-        }
-        if pod.is_done() {
-            return Err(ApiError::Patch("pod already completed".into()));
-        }
-        cluster.patch_pod_memory(id, mem_gb);
         Ok(())
     }
 
-    /// Watch: events at or after `cursor`; returns (events, next_cursor).
-    pub fn watch(
+    /// The in-place vertical patch (§3.2). `expected_rv` is the
+    /// resourceVersion the caller read its decision from; `Some(stale)`
+    /// returns [`ApiError::Conflict`], `None` is a server-side apply.
+    /// Returns the pod's new resourceVersion.
+    pub fn patch_pod_memory(
+        &mut self,
+        cluster: &mut Cluster,
+        id: PodId,
+        mem_gb: f64,
+        expected_rv: Option<u64>,
+    ) -> Result<u64, ApiError> {
+        let now = cluster.now;
+        if let Err(e) = self.validate_patch(cluster, id, mem_gb, expected_rv) {
+            self.record(
+                now,
+                Some(id),
+                Verb::Patch,
+                Outcome::Rejected,
+                e.to_string(),
+                Some(mem_gb),
+                false,
+            );
+            return Err(e);
+        }
+        cluster.patch_pod_memory(id, mem_gb);
+        let rv = cluster.pods[id].resource_version;
+        self.record(now, Some(id), Verb::Patch, Outcome::Applied, "resize issued", Some(mem_gb), false);
+        if self.cache.len() <= id {
+            self.cache.resize(id + 1, None);
+        }
+        self.cache[id] = Self::build_view(cluster, id);
+        Ok(rv)
+    }
+
+    /// Dry-run patch: existence + admission + conflict checks, cluster
+    /// untouched.
+    pub fn dry_run_patch(
+        &mut self,
         cluster: &Cluster,
-        cursor: usize,
-    ) -> (Vec<super::events::Event>, usize) {
-        let evs = cluster.events.events[cursor.min(cluster.events.events.len())..].to_vec();
-        (evs, cluster.events.events.len())
+        id: PodId,
+        mem_gb: f64,
+        expected_rv: Option<u64>,
+    ) -> Result<(), ApiError> {
+        let now = cluster.now;
+        let res = self.validate_patch(cluster, id, mem_gb, expected_rv);
+        let (outcome, reason) = match &res {
+            Ok(()) => (Outcome::Applied, "dry-run ok".to_string()),
+            Err(e) => (Outcome::Rejected, e.to_string()),
+        };
+        self.record(now, Some(id), Verb::Patch, outcome, reason, Some(mem_gb), true);
+        res
+    }
+
+    /// Evict-and-recreate with a new size (the VPA Updater path). Progress
+    /// is lost. Returns the pod's new resourceVersion.
+    ///
+    /// Unlike patches, restarts are deliberately allowed on *any* existing
+    /// pod, including Succeeded ones: a gang supervisor restarting a failed
+    /// MPI job must restart already-finished ranks too (§1 failure
+    /// amplification), and recreate-on-completed is legal in kube.
+    pub fn restart_pod(
+        &mut self,
+        cluster: &mut Cluster,
+        id: PodId,
+        mem_gb: f64,
+    ) -> Result<u64, ApiError> {
+        let now = cluster.now;
+        if cluster.pods.get(id).is_none() {
+            self.record(
+                now,
+                Some(id),
+                Verb::Restart,
+                Outcome::Rejected,
+                "pod not found",
+                Some(mem_gb),
+                false,
+            );
+            return Err(ApiError::NotFound(id));
+        }
+        if let Err(reason) = self.admit(cluster, &AdmissionRequest::Restart { id, mem_gb }) {
+            self.record(
+                now,
+                Some(id),
+                Verb::Restart,
+                Outcome::Rejected,
+                reason.as_str(),
+                Some(mem_gb),
+                false,
+            );
+            return Err(ApiError::Admission(reason));
+        }
+        cluster.restart_pod(id, mem_gb);
+        let rv = cluster.pods[id].resource_version;
+        self.record(now, Some(id), Verb::Restart, Outcome::Applied, "restarted", Some(mem_gb), false);
+        if self.cache.len() <= id {
+            self.cache.resize(id + 1, None);
+        }
+        self.cache[id] = Self::build_view(cluster, id);
+        Ok(rv)
     }
 }
 
@@ -154,30 +563,36 @@ mod tests {
     #[test]
     fn create_validates_names() {
         let mut c = cluster();
+        let mut api = ApiClient::new();
         assert!(matches!(
-            ApiServer::create_pod(&mut c, "", ResourceSpec::memory_exact(1.0), ramp(1.0, 1.0, 10.0)),
+            api.create_pod(&mut c, "", ResourceSpec::memory_exact(1.0), ramp(1.0, 1.0, 10.0)),
             Err(ApiError::Admission(_))
         ));
         assert!(matches!(
-            ApiServer::create_pod(&mut c, "Bad_Name", ResourceSpec::memory_exact(1.0), ramp(1.0, 1.0, 10.0)),
+            api.create_pod(&mut c, "Bad_Name", ResourceSpec::memory_exact(1.0), ramp(1.0, 1.0, 10.0)),
             Err(ApiError::Admission(_))
         ));
-        assert!(ApiServer::create_pod(
-            &mut c,
-            "kripke-0",
-            ResourceSpec::memory_exact(1.0),
-            ramp(1.0, 1.0, 10.0)
-        )
-        .is_ok());
+        assert!(api
+            .create_pod(
+                &mut c,
+                "kripke-0",
+                ResourceSpec::memory_exact(1.0),
+                ramp(1.0, 1.0, 10.0)
+            )
+            .is_ok());
+        // rejections and the applied create are all audited
+        assert_eq!(api.actions().len(), 3);
+        assert_eq!(api.actions()[2].outcome, Outcome::Applied);
     }
 
     #[test]
     fn create_rejects_request_above_limit() {
         let mut c = cluster();
+        let mut api = ApiClient::new();
         let mut spec = ResourceSpec::memory_exact(1.0);
         spec.memory_gb.request = Some(2.0);
         assert!(matches!(
-            ApiServer::create_pod(&mut c, "p", spec, ramp(1.0, 1.0, 10.0)),
+            api.create_pod(&mut c, "p", spec, ramp(1.0, 1.0, 10.0)),
             Err(ApiError::Admission(_))
         ));
     }
@@ -185,62 +600,86 @@ mod tests {
     #[test]
     fn get_and_list_views() {
         let mut c = cluster();
-        let id = ApiServer::create_pod(
-            &mut c,
-            "a",
-            ResourceSpec::memory_exact(2.0),
-            ramp(1.0, 1.0, 50.0),
-        )
-        .unwrap();
+        let mut api = ApiClient::new();
+        let id = api
+            .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 50.0))
+            .unwrap();
         c.run_until(10, |_| false);
-        let v = ApiServer::get_pod(&c, id).unwrap();
+        let v = api.get_pod(&c, id).unwrap();
         assert_eq!(v.name, "a");
         assert_eq!(v.phase, PodPhase::Running);
         assert_eq!(v.qos, QosClass::Guaranteed);
+        assert_eq!(v.resource_version, 1);
         assert!(v.usage_gb > 0.9);
-        assert_eq!(ApiServer::list_pods(&c).len(), 1);
-        assert_eq!(ApiServer::get_pod(&c, 99), Err(ApiError::NotFound(99)));
+        assert_eq!(ApiClient::list_pods(&c).len(), 1);
+        assert_eq!(api.get_pod(&c, 99), Err(ApiError::NotFound(99)));
     }
 
     #[test]
     fn patch_validation() {
         let mut c = cluster();
-        let id = ApiServer::create_pod(
-            &mut c,
-            "a",
-            ResourceSpec::memory_exact(2.0),
-            ramp(1.0, 1.0, 20.0),
-        )
-        .unwrap();
+        let mut api = ApiClient::new();
+        let id = api
+            .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 20.0))
+            .unwrap();
         assert!(matches!(
-            ApiServer::patch_pod_memory(&mut c, id, -1.0),
+            api.patch_pod_memory(&mut c, id, -1.0, None),
             Err(ApiError::Patch(_))
         ));
         assert!(matches!(
-            ApiServer::patch_pod_memory(&mut c, 42, 1.0),
+            api.patch_pod_memory(&mut c, 42, 1.0, None),
             Err(ApiError::NotFound(42))
         ));
-        assert!(ApiServer::patch_pod_memory(&mut c, id, 3.0).is_ok());
+        assert!(api.patch_pod_memory(&mut c, id, 3.0, None).is_ok());
         // finished pods cannot be patched
         c.run_until(100, |c| c.all_done());
         assert!(matches!(
-            ApiServer::patch_pod_memory(&mut c, id, 4.0),
+            api.patch_pod_memory(&mut c, id, 4.0, None),
             Err(ApiError::Patch(_))
         ));
     }
 
     #[test]
+    fn stale_resource_version_conflicts() {
+        let mut c = cluster();
+        let mut api = ApiClient::new();
+        let id = api
+            .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 200.0))
+            .unwrap();
+        let v = api.get_pod(&c, id).unwrap();
+        assert_eq!(v.resource_version, 1);
+        // a competing writer lands first
+        let rv2 = api.patch_pod_memory(&mut c, id, 3.0, Some(v.resource_version)).unwrap();
+        assert_eq!(rv2, 2);
+        // ... so our view is now stale
+        let err = api
+            .patch_pod_memory(&mut c, id, 4.0, Some(v.resource_version))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ApiError::Conflict { pod: id, expected: 1, actual: 2 }
+        );
+        // fresh read + retry succeeds
+        let fresh = api.get_pod(&c, id).unwrap();
+        assert!(api
+            .patch_pod_memory(&mut c, id, 4.0, Some(fresh.resource_version))
+            .is_ok());
+        // the conflict is audited as a rejection
+        assert!(api
+            .actions()
+            .iter()
+            .any(|a| a.outcome == Outcome::Rejected && a.reason.contains("conflict")));
+    }
+
+    #[test]
     fn best_effort_pods_cannot_gain_limits_in_place() {
         let mut c = cluster();
-        let id = ApiServer::create_pod(
-            &mut c,
-            "be",
-            ResourceSpec::best_effort(),
-            ramp(1.0, 1.0, 20.0),
-        )
-        .unwrap();
+        let mut api = ApiClient::new();
+        let id = api
+            .create_pod(&mut c, "be", ResourceSpec::best_effort(), ramp(1.0, 1.0, 20.0))
+            .unwrap();
         assert!(matches!(
-            ApiServer::patch_pod_memory(&mut c, id, 4.0),
+            api.patch_pod_memory(&mut c, id, 4.0, None),
             Err(ApiError::Patch(_))
         ));
     }
@@ -248,21 +687,34 @@ mod tests {
     #[test]
     fn watch_cursor_advances() {
         let mut c = cluster();
-        let id = ApiServer::create_pod(
-            &mut c,
-            "a",
-            ResourceSpec::memory_exact(2.0),
-            ramp(1.0, 1.0, 30.0),
-        )
-        .unwrap();
-        let (evs, cur) = ApiServer::watch(&c, 0);
+        let mut api = ApiClient::new();
+        let id = api
+            .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 30.0))
+            .unwrap();
+        let (evs, cur) = ApiClient::watch(&c, 0);
         assert!(evs.len() >= 2); // Scheduled + Started
-        ApiServer::patch_pod_memory(&mut c, id, 3.0).unwrap();
-        let (evs2, cur2) = ApiServer::watch(&c, cur);
+        api.patch_pod_memory(&mut c, id, 3.0, None).unwrap();
+        let (evs2, cur2) = ApiClient::watch(&c, cur);
         assert_eq!(evs2.len(), 1); // just the ResizeIssued
         assert!(cur2 > cur);
         // cursor beyond the end is safe
-        let (evs3, _) = ApiServer::watch(&c, 10_000);
+        let (evs3, _) = ApiClient::watch(&c, 10_000);
         assert!(evs3.is_empty());
+    }
+
+    #[test]
+    fn informer_cache_tracks_lifecycle() {
+        let mut c = cluster();
+        let mut api = ApiClient::new();
+        let id = api
+            .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 30.0))
+            .unwrap();
+        assert_eq!(api.cached(id).unwrap().phase, PodPhase::Running);
+        c.run_until(40, |c| c.all_done());
+        // cache is stale until the next sync ...
+        assert_eq!(api.cached(id).unwrap().phase, PodPhase::Running);
+        api.sync(&c);
+        assert_eq!(api.cached(id).unwrap().phase, PodPhase::Succeeded);
+        assert_eq!(api.cached_views().count(), 1);
     }
 }

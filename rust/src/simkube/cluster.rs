@@ -111,18 +111,31 @@ impl Cluster {
 
     /// In-place vertical resize (the §3.2 alpha feature): the spec changes
     /// instantly, the kubelet syncs the effective limit later. QoS class is
-    /// intentionally NOT re-derived.
+    /// intentionally NOT re-derived. On a pod with no running container
+    /// (Pending, OomKilled, Evicted) there is nothing for the kubelet to
+    /// reclaim, so the new limit becomes effective immediately.
     pub fn patch_pod_memory(&mut self, id: PodId, mem_gb: f64) {
         let now = self.now;
+        let running = self.pods[id].phase == PodPhase::Running;
         let pod = &mut self.pods[id];
         let old_request = pod.spec.memory_request_gb();
         pod.spec = pod.spec.with_memory(mem_gb);
-        pod.pending_resize = Some(PendingResize {
-            target_gb: mem_gb,
-            issued_at: now,
-        });
+        pod.resource_version += 1;
+        if running {
+            pod.pending_resize = Some(PendingResize {
+                target_gb: mem_gb,
+                issued_at: now,
+            });
+        } else {
+            pod.effective_limit_gb = mem_gb;
+            pod.pending_resize = None;
+        }
         if let Some(n) = pod.node {
-            self.nodes[n].adjust_reservation(old_request, mem_gb);
+            // only adjust accounting while the pod actually holds a
+            // reservation (evicted pods were unbound but keep `node` set)
+            if self.nodes[n].pods.contains(&id) {
+                self.nodes[n].adjust_reservation(old_request, mem_gb);
+            }
         }
         self.events.push(now, id, EventKind::ResizeIssued { target_gb: mem_gb });
     }
@@ -135,9 +148,16 @@ impl Cluster {
         let pod = &mut self.pods[id];
         let old_request = pod.spec.memory_request_gb();
         pod.restart(Some(new_mem_gb));
+        pod.resource_version += 1;
         pod.phase = PodPhase::Pending; // waits out restart latency
         if let Some(n) = pod.node {
-            self.nodes[n].adjust_reservation(old_request, new_mem_gb);
+            if self.nodes[n].pods.contains(&id) {
+                self.nodes[n].adjust_reservation(old_request, new_mem_gb);
+            } else {
+                // evicted/completed pods released their reservation; a
+                // restart re-admits them to the node's accounting
+                self.nodes[n].bind(id, new_mem_gb);
+            }
         }
         self.io[id] = IoState::default();
         self.restarting.push((id, ready_at));

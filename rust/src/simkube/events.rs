@@ -1,5 +1,12 @@
 //! Cluster event log — what `kubectl get events` would show, and what the
 //! harness asserts on (OOM counts, restarts, resize latencies).
+//!
+//! PLEG contract: every pod phase transition emits exactly one event
+//! (`PodScheduled`/`PodStarted`, `PodCompleted`, `OomKilled`, `Evicted`,
+//! `PodRestarted`, `SchedulingFailed`), and every accepted API mutation
+//! emits `ResizeIssued` or `PodRestarted`. The `ApiClient` informer relies
+//! on this to keep its cached `PodView`s lifecycle-accurate, and
+//! `rust/tests/api_surface.rs` pins the mutation half.
 
 use super::pod::PodId;
 

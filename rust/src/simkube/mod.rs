@@ -21,7 +21,9 @@ pub mod resources;
 pub mod scheduler;
 pub mod swap;
 
-pub use api::{ApiError, ApiServer, PodView};
+pub use api::{
+    ActionRecord, AdmissionPlugin, AdmissionRequest, ApiClient, ApiError, Outcome, PodView, Verb,
+};
 pub use cluster::{Cluster, ClusterConfig};
 pub use events::{Event, EventKind, EventLog};
 pub use kubelet::{Kubelet, KubeletConfig};

@@ -63,6 +63,10 @@ pub struct Pod {
     pub qos: QosClass,
     pub phase: PodPhase,
     pub node: Option<usize>,
+    /// Optimistic-concurrency token, kube-style: bumped on every accepted
+    /// spec-level mutation (create = 1, then each patch/restart). A client
+    /// patching with a stale `resource_version` gets `ApiError::Conflict`.
+    pub resource_version: u64,
 
     pub process: Box<dyn MemoryProcess>,
     /// Application progress in seconds (advances ≤ 1 per tick).
@@ -95,6 +99,7 @@ impl Pod {
             qos,
             phase: PodPhase::Pending,
             node: None,
+            resource_version: 1,
             process,
             progress_secs: 0.0,
             effective_limit_gb: effective,

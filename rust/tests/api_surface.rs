@@ -1,0 +1,224 @@
+//! The admission-surface contract: every coordinator mutation flows
+//! through the typed `ApiClient` and surfaces as an API-layer event in
+//! `watch()`; admission/patch edge cases behave like kube-apiserver.
+
+use arcv::coordinator::controller::{run_to_completion, Controller};
+use arcv::policy::arcv::{ArcvParams, ArcvPolicy};
+use arcv::policy::vpa::VpaSimPolicy;
+use arcv::simkube::{
+    ApiClient, ApiError, Cluster, EventKind, Node, Outcome, PodPhase, ResourceSpec, SwapDevice,
+    Verb,
+};
+use arcv::workloads::{build, AppId};
+
+fn ramp_process(start: f64, end: f64, dur: f64) -> Box<dyn arcv::simkube::MemoryProcess> {
+    struct Ramp(f64, f64, f64);
+    impl arcv::simkube::MemoryProcess for Ramp {
+        fn usage_gb(&self, t: f64) -> f64 {
+            self.0 + (self.1 - self.0) * (t / self.2).clamp(0.0, 1.0)
+        }
+        fn duration_secs(&self) -> f64 {
+            self.2
+        }
+        fn name(&self) -> &str {
+            "ramp"
+        }
+    }
+    Box::new(Ramp(start, end, dur))
+}
+
+/// Satellite regression: the api.rs module doc claims "never direct
+/// mutation of kubelet state". Every applied coordinator action must be
+/// visible in the API watch stream — patches as `ResizeIssued`, restarts
+/// as `PodRestarted`.
+#[test]
+fn every_coordinator_action_surfaces_in_watch() {
+    // a) the OOM/restart-heavy VPA baseline
+    let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::disabled()));
+    let id = c.create_pod("app", ResourceSpec::memory_exact(0.6), ramp_process(1.0, 3.0, 300.0));
+    let mut ctl = Controller::new();
+    ctl.manage(id, Box::new(VpaSimPolicy::new(0.6)));
+    run_to_completion(&mut c, &mut ctl, 100_000);
+    assert!(c.pod(id).is_done());
+
+    let applied = |verb: Verb, ctl: &Controller| {
+        ctl.actions()
+            .iter()
+            .filter(|a| a.verb == verb && a.outcome == Outcome::Applied && !a.dry_run)
+            .count()
+    };
+    let (events, _) = ApiClient::watch(&c, 0);
+    let resize_events = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::ResizeIssued { .. }))
+        .count();
+    let restart_events = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::PodRestarted { .. }))
+        .count();
+    assert!(applied(Verb::Restart, &ctl) > 0, "VPA run must restart");
+    assert_eq!(applied(Verb::Patch, &ctl), resize_events);
+    assert_eq!(applied(Verb::Restart, &ctl), restart_events);
+
+    // b) the resize-heavy ARC-V path
+    let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(32.0)));
+    let id = c.create_pod("app", ResourceSpec::memory_exact(12.0), ramp_process(4.0, 4.0, 900.0));
+    let mut ctl = Controller::new();
+    ctl.manage(id, Box::new(ArcvPolicy::new(12.0, ArcvParams::default())));
+    run_to_completion(&mut c, &mut ctl, 100_000);
+    let (events, _) = ApiClient::watch(&c, 0);
+    let resize_events = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::ResizeIssued { .. }))
+        .count();
+    assert!(applied(Verb::Patch, &ctl) > 0, "ARC-V run must resize");
+    assert_eq!(applied(Verb::Patch, &ctl), resize_events);
+}
+
+#[test]
+fn nan_and_inf_memory_rejected_at_admission() {
+    let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::disabled()));
+    let mut api = ApiClient::new();
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+        let err = api
+            .create_pod(&mut c, "bad", ResourceSpec::memory_exact(bad), ramp_process(1.0, 1.0, 10.0))
+            .unwrap_err();
+        assert!(matches!(err, ApiError::Admission(_)), "{bad} admitted: {err}");
+    }
+    assert_eq!(c.pods.len(), 0, "nothing was created");
+
+    // same rules on the patch path
+    let id = api
+        .create_pod(&mut c, "ok", ResourceSpec::memory_exact(2.0), ramp_process(1.0, 1.0, 100.0))
+        .unwrap();
+    for bad in [f64::NAN, f64::INFINITY, 0.0, -3.0] {
+        assert!(matches!(
+            api.patch_pod_memory(&mut c, id, bad, None),
+            Err(ApiError::Patch(_))
+        ));
+    }
+    // all rejections are in the audit log with reasons
+    assert_eq!(
+        api.actions().iter().filter(|a| a.outcome == Outcome::Rejected).count(),
+        8
+    );
+}
+
+#[test]
+fn patch_on_pending_pod_is_effective_immediately() {
+    // 8 GB node, 32 GB request → unschedulable, stays Pending
+    let mut c = Cluster::single_node(Node::new("w0", 8.0, SwapDevice::disabled()));
+    let mut api = ApiClient::new();
+    let id = api
+        .create_pod(&mut c, "big", ResourceSpec::memory_exact(32.0), ramp_process(1.0, 1.0, 10.0))
+        .unwrap();
+    assert_eq!(c.pod(id).phase, PodPhase::Pending);
+    let rv = api.patch_pod_memory(&mut c, id, 4.0, Some(1)).unwrap();
+    assert_eq!(rv, 2);
+    // no running container → nothing for the kubelet to sync
+    assert_eq!(c.pod(id).spec.memory_limit_gb(), Some(4.0));
+    assert_eq!(c.pod(id).effective_limit_gb, 4.0);
+    assert!(c.pod(id).pending_resize.is_none());
+}
+
+#[test]
+fn dry_run_leaves_cluster_untouched() {
+    let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(16.0)));
+    let mut api = ApiClient::new();
+    let id = api
+        .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp_process(1.0, 1.0, 100.0))
+        .unwrap();
+    c.run_until(10, |_| false);
+    let events_before = c.events.events.len();
+    let rv_before = c.pod(id).resource_version;
+    let spec_before = c.pod(id).spec;
+
+    // valid dry-runs validate without mutating
+    api.dry_run_create(&c, "another", &ResourceSpec::memory_exact(1.0)).unwrap();
+    api.dry_run_patch(&c, id, 3.0, Some(rv_before)).unwrap();
+    // invalid dry-runs report the same errors the real calls would
+    assert!(matches!(
+        api.dry_run_create(&c, "Bad_Name", &ResourceSpec::memory_exact(1.0)),
+        Err(ApiError::Admission(_))
+    ));
+    assert!(matches!(
+        api.dry_run_patch(&c, id, f64::NAN, None),
+        Err(ApiError::Patch(_))
+    ));
+    assert_eq!(
+        api.dry_run_patch(&c, id, 3.0, Some(999)),
+        Err(ApiError::Conflict { pod: id, expected: 999, actual: rv_before })
+    );
+
+    assert_eq!(c.pods.len(), 1);
+    assert_eq!(c.events.events.len(), events_before);
+    assert_eq!(c.pod(id).resource_version, rv_before);
+    assert_eq!(c.pod(id).spec, spec_before);
+    assert!(c.pod(id).pending_resize.is_none());
+    // ... but the attempts are all audited as dry-run
+    assert_eq!(api.actions().iter().filter(|a| a.dry_run).count(), 5);
+}
+
+#[test]
+fn two_clients_conflict_on_stale_resource_version() {
+    let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(16.0)));
+    let mut alice = ApiClient::new();
+    let mut bob = ApiClient::new();
+    let id = alice
+        .create_pod(&mut c, "shared", ResourceSpec::memory_exact(4.0), ramp_process(1.0, 1.0, 500.0))
+        .unwrap();
+    c.run_until(5, |_| false);
+    alice.sync(&c);
+    bob.sync(&c);
+    let rv_a = alice.cached(id).unwrap().resource_version;
+    let rv_b = bob.cached(id).unwrap().resource_version;
+    assert_eq!(rv_a, rv_b);
+
+    // Alice lands first; Bob's decision was made against a stale view.
+    alice.patch_pod_memory(&mut c, id, 5.0, Some(rv_a)).unwrap();
+    let err = bob.patch_pod_memory(&mut c, id, 3.0, Some(rv_b)).unwrap_err();
+    assert!(matches!(err, ApiError::Conflict { .. }), "{err}");
+    // Bob re-syncs and retries cleanly.
+    bob.sync(&c);
+    let fresh = bob.cached(id).unwrap().resource_version;
+    bob.patch_pod_memory(&mut c, id, 3.0, Some(fresh)).unwrap();
+    assert_eq!(c.pod(id).spec.memory_limit_gb(), Some(3.0));
+}
+
+/// The admission chain is extensible: a quota plugin can cap creates.
+#[test]
+fn custom_admission_plugin_participates_in_chain() {
+    struct MaxRequestQuota(f64);
+    impl arcv::simkube::AdmissionPlugin for MaxRequestQuota {
+        fn name(&self) -> &'static str {
+            "MaxRequestQuota"
+        }
+        fn review(
+            &self,
+            _cluster: &Cluster,
+            req: &arcv::simkube::AdmissionRequest,
+        ) -> Result<(), String> {
+            if let arcv::simkube::AdmissionRequest::Create { spec, .. } = req {
+                if spec.memory_request_gb() > self.0 {
+                    return Err(format!(
+                        "request {} GB exceeds tenant quota {} GB",
+                        spec.memory_request_gb(),
+                        self.0
+                    ));
+                }
+            }
+            Ok(())
+        }
+    }
+
+    let mut c = Cluster::single_node(Node::new("w0", 256.0, SwapDevice::disabled()));
+    let mut api = ApiClient::new();
+    api.push_plugin(Box::new(MaxRequestQuota(8.0)));
+    let err = api
+        .create_pod(&mut c, "hog", ResourceSpec::memory_exact(32.0), Box::new(build(AppId::Minife, 1)))
+        .unwrap_err();
+    assert!(matches!(err, ApiError::Admission(ref m) if m.contains("quota")), "{err}");
+    assert!(api
+        .create_pod(&mut c, "ok", ResourceSpec::memory_exact(4.0), Box::new(build(AppId::Kripke, 1)))
+        .is_ok());
+}

@@ -127,7 +127,7 @@ fn multi_tenant_colocation_on_one_node() {
     let mut c = Cluster::single_node(Node::cloudlab("w0"));
     let params = ArcvParams::default();
     let apps = [AppId::Kripke, AppId::Cm1, AppId::Lulesh, AppId::Lammps];
-    let mut ctl = FleetController::new(Box::new(NativeFleet::new(64, params.window)), params);
+    let mut ctl = FleetController::from_backend(Box::new(NativeFleet::new(64, params.window)), params);
     let mut ids = Vec::new();
     for (i, app) in apps.iter().enumerate() {
         let m = build(*app, 42 + i as u64);

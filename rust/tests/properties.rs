@@ -182,7 +182,12 @@ fn prop_rss_never_exceeds_effective_limit() {
             c.step();
             // random in-place patches while running
             if g.bool(0.05) && c.pod(id).is_running() {
+                let rv = c.pod(id).resource_version;
                 c.patch_pod_memory(id, g.f64(0.5, 12.0));
+                require(
+                    c.pod(id).resource_version == rv + 1,
+                    "resourceVersion bumps on every patch",
+                )?;
             }
             let p = c.pod(id);
             require(
