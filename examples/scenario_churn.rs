@@ -1,0 +1,90 @@
+//! Scenario quickstart: a small heterogeneous cluster under a bursty job
+//! stream with churn — a random pod kill, a node drain, and a mid-life
+//! memory-leak pod — run under ARC-V and the VPA simulator. This is the
+//! CI smoke for the churn paths; it finishes in seconds. (Arrivals are
+//! bursty rather than Poisson so pods are deterministically running when
+//! the kill and drain injectors fire — the Poisson regime is exercised by
+//! the `scenario_fleet` bench and the integration tests.)
+//!
+//!   cargo run --release --example scenario_churn
+
+use arcv::harness::SwapKind;
+use arcv::policy::arcv::ArcvParams;
+use arcv::scenario::{
+    outcome_line, run_scenario, Arrivals, Fault, ScenarioPolicy, ScenarioSpec, WorkloadMix,
+};
+use arcv::simkube::EventKind;
+use arcv::workloads::AppId;
+
+fn main() {
+    let spec = ScenarioSpec::new("churn-smoke")
+        .pool("hi", 2, 64.0, SwapKind::Hdd(32.0))
+        .pool("lo", 1, 32.0, SwapKind::Ssd(16.0))
+        .arrivals(Arrivals::Bursty { period_secs: 60, burst: 3 })
+        .jobs(10)
+        .mix(WorkloadMix::uniform(&[
+            AppId::Amr,
+            AppId::Cm1,
+            AppId::Kripke,
+            AppId::Lulesh,
+            AppId::Sputnipic,
+        ]))
+        .fault(Fault::KillRandomPod { at: 120 })
+        .fault(Fault::LeakyPod {
+            at: 200,
+            base_gb: 2.0,
+            leak_gb_per_sec: 0.01,
+            lifetime_secs: 400.0,
+        })
+        .fault(Fault::DrainNode { at: 300, node: 2 })
+        .max_ticks(60_000);
+
+    println!(
+        "churn smoke: {} nodes, {} jobs + 1 leak pod, kill@120 drain@300\n",
+        spec.node_count(),
+        spec.jobs
+    );
+
+    let mut failed = false;
+    for policy in [ScenarioPolicy::Arcv(ArcvParams::default()), ScenarioPolicy::VpaSim] {
+        let run = run_scenario(&spec, policy, 7);
+        println!("{}", outcome_line(&run.outcome));
+        // churn actually happened: the drain displaced pods or idled a
+        // node, the kill landed, the leak pod ran
+        let drained = run
+            .cluster
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::NodeDrained { .. }));
+        let killed = run
+            .cluster
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::PodKilled { .. }));
+        if !drained || !killed {
+            eprintln!("FAIL: expected churn events (drained={drained} killed={killed})");
+            failed = true;
+        }
+        if run.outcome.stuck_pending > 0 {
+            eprintln!(
+                "FAIL: {} pods stuck Pending under {}",
+                run.outcome.stuck_pending,
+                policy.label()
+            );
+            failed = true;
+        }
+        if run.outcome.jobs_completed != run.outcome.jobs_submitted {
+            eprintln!(
+                "FAIL: {}/{} jobs completed under {}",
+                run.outcome.jobs_completed,
+                run.outcome.jobs_submitted,
+                policy.label()
+            );
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("\nchurn paths exercised: arrivals, requeue, drain, kill, leak — all jobs done");
+}

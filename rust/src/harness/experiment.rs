@@ -36,6 +36,12 @@ pub enum PolicyKind {
 /// (paper §5 "Memory provisioning").
 pub const VPA_MIN_REC_GB: f64 = 0.25;
 
+/// DESIGN §6.1 environment init fractions of the app's max memory. Single
+/// source of truth for the harness environments AND `scenario` policy
+/// sizing, so the two experiment surfaces can never drift apart.
+pub const ARCV_INIT_FRAC: f64 = 1.2;
+pub const VPA_INIT_FRAC: f64 = 0.2;
+
 impl PolicyKind {
     /// Floor on the initial allocation this policy would ever request.
     pub fn min_initial_gb(&self) -> f64 {
@@ -71,7 +77,8 @@ pub enum SwapKind {
 }
 
 impl SwapKind {
-    fn device(&self) -> SwapDevice {
+    /// Materialize the device (also used by `scenario` node pools).
+    pub fn device(&self) -> SwapDevice {
         match self {
             SwapKind::Disabled => SwapDevice::disabled(),
             SwapKind::Hdd(gb) => SwapDevice::hdd(*gb),
@@ -97,7 +104,7 @@ impl ExperimentConfig {
         Self {
             app,
             seed: 42,
-            initial_frac: 1.2,
+            initial_frac: ARCV_INIT_FRAC,
             swap: SwapKind::Hdd(128.0),
             node_capacity_gb: 256.0,
             budget_mult: 60.0,
@@ -113,7 +120,7 @@ impl ExperimentConfig {
     /// 20 % of max.
     pub fn vpa_env(app: AppId) -> Self {
         Self {
-            initial_frac: 0.2,
+            initial_frac: VPA_INIT_FRAC,
             swap: SwapKind::Disabled,
             ..Self::new(app)
         }

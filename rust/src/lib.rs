@@ -22,12 +22,17 @@
 //! - [`coordinator`] — controllers driving node policies through their
 //!   `ApiClient` (per-pod, fleet-batched, gang, remote bridge);
 //! - [`harness`] — experiment runner + reports for every paper figure;
+//! - [`scenario`] — cluster-scale workload scenarios: declarative specs
+//!   (arrival processes, workload mixes, heterogeneous node pools, fault
+//!   injectors), a churn-capable executor with a per-tick requeue loop,
+//!   and a parallel multi-seed grid runner with fleet-level outcomes;
 //! - [`util`] — offline-build support (PRNG, JSON/CSV, args, mini-bench,
 //!   mini-proptest, plots).
 pub mod coordinator;
 pub mod harness;
 pub mod policy;
 pub mod runtime;
+pub mod scenario;
 pub mod simkube;
 pub mod util;
 pub mod workloads;

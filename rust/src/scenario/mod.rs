@@ -1,0 +1,38 @@
+//! `scenario` — cluster-scale workload scenarios (system S14): the layer
+//! that turns the single-app simulator into a fleet testbed.
+//!
+//! The paper evaluates ARC-V on static pod sets; production clusters see
+//! *queues* — job arrival streams, pod churn, heterogeneous node pools,
+//! and failures. This subsystem makes that regime expressible and
+//! measurable:
+//!
+//! - [`spec`] — declarative [`ScenarioSpec`]s: arrival processes
+//!   (Poisson, bursty, batch backlog), weighted workload mixes over the
+//!   nine Table 1 apps, heterogeneous [`NodePool`]s, and [`Fault`]
+//!   injectors (node drain, mid-life memory-leak pod, random pod kill);
+//! - [`arrival`] — deterministic schedule expansion with per-job RNG
+//!   streams derived from `(run seed, job index)`, so serial and parallel
+//!   executions are bit-identical;
+//! - [`engine`] — the churn executor: mid-run submission through the
+//!   `ApiClient`, departures freeing capacity, a per-tick requeue loop
+//!   for Pending pods, and fault events flowing through the `EventLog`;
+//! - [`outcome`] — fleet-level outcomes: OOM-kill rate, jobs completed,
+//!   completion slowdown vs. isolated runtime (p50/p99), GB·h allocated
+//!   vs. used, total Pending wait;
+//! - [`runner`] — the parallel multi-seed executor: `scenario × policy ×
+//!   seed` grids fanned across OS threads with bit-identical results.
+//!
+//! This is the substrate every future scaling experiment (sharding,
+//! admission-aware packing, backlog-aware policies) plugs into.
+
+pub mod arrival;
+pub mod engine;
+pub mod outcome;
+pub mod runner;
+pub mod spec;
+
+pub use arrival::{build_schedule, JobSpec, STREAM_FAULTS, STREAM_JOB};
+pub use engine::{run_scenario, JobRecord, LeakProcess, ScenarioRun};
+pub use outcome::{outcome_json, outcome_line, ScenarioOutcome};
+pub use runner::{run_grid, summarize, summary_line, GridSummary};
+pub use spec::{Arrivals, Fault, NodePool, ScenarioPolicy, ScenarioSpec, WorkloadMix};

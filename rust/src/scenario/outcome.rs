@@ -1,0 +1,280 @@
+//! Fleet-level outcomes of a scenario run: what a capacity planner reads
+//! off the fleet dashboard — completion counts, OOM/fault tallies,
+//! completion slowdown vs. isolated runtime, GB·h allocated vs. used, and
+//! queue-wait totals.
+
+use super::engine::JobRecord;
+use super::spec::{ScenarioPolicy, ScenarioSpec};
+use crate::simkube::{Cluster, EventKind, PodPhase};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::{mean, percentile};
+
+/// Aggregate result of one `(scenario, policy, seed)` run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioOutcome {
+    pub scenario: String,
+    pub policy: String,
+    pub seed: u64,
+    /// Ticks the run took (submission window + drain).
+    pub wall_ticks: u64,
+    pub jobs_submitted: usize,
+    pub jobs_completed: usize,
+    /// Scheduled arrivals that never got submitted because the run hit
+    /// `max_ticks` first — load the scenario silently shed, reported so a
+    /// truncated run can't masquerade as a completed one.
+    pub jobs_dropped: usize,
+    /// Pods still Pending when the run stopped (queue starvation).
+    pub stuck_pending: usize,
+    /// Pods in any non-Succeeded state at stop (includes stuck_pending).
+    pub unfinished: usize,
+    pub oom_kills: usize,
+    /// Fault-injector kills (crash semantics, not OOMs).
+    pub fault_kills: usize,
+    pub node_drains: usize,
+    pub pressure_evictions: usize,
+    pub restarts: u64,
+    /// Σ provisioned (effective limit) over every pod, GB·h.
+    pub allocated_gb_h: f64,
+    /// Σ actual usage over every pod, GB·h.
+    pub used_gb_h: f64,
+    /// Σ seconds spent waiting for a node, from the event log: waiting
+    /// begins at submission and again whenever churn displaces the pod
+    /// (drain, kill, pressure eviction), and ends at each placement.
+    /// Pods still waiting when the run stops accrue until then.
+    pub pending_wait_secs: u64,
+    /// Completion slowdown vs. isolated runtime — `(finish − submit) /
+    /// nominal exec` over completed, non-injected jobs.
+    pub slowdown_p50: f64,
+    pub slowdown_p99: f64,
+    pub slowdown_mean: f64,
+    /// Policy API actions applied / rejected (the controller audit log).
+    pub api_applied: usize,
+    pub api_rejected: usize,
+}
+
+/// Total queue wait reconstructed from the event log, so re-queue waits
+/// caused by churn count — not just the wait before first placement.
+fn queue_wait_secs(cluster: &Cluster, jobs: &[JobRecord], end: u64) -> u64 {
+    let mut wait = 0u64;
+    for j in jobs {
+        // pods wait from submission (and from every displacement) until
+        // the next PodScheduled
+        let mut waiting_since = Some(j.submit_at);
+        for e in cluster.events.iter().filter(|e| e.pod == j.pod) {
+            match e.kind {
+                EventKind::PodScheduled { .. } => {
+                    if let Some(t0) = waiting_since.take() {
+                        wait += e.time.saturating_sub(t0);
+                    }
+                }
+                EventKind::PodDrained { .. }
+                | EventKind::PodKilled { .. }
+                | EventKind::Evicted { .. }
+                | EventKind::PodRequeued => {
+                    waiting_since.get_or_insert(e.time);
+                }
+                _ => {}
+            }
+        }
+        if let Some(t0) = waiting_since {
+            wait += end.saturating_sub(t0);
+        }
+    }
+    wait
+}
+
+/// Fold a finished run into its outcome.
+#[allow(clippy::too_many_arguments)]
+pub fn collect(
+    spec: &ScenarioSpec,
+    policy: &ScenarioPolicy,
+    seed: u64,
+    cluster: &Cluster,
+    jobs: &[JobRecord],
+    jobs_dropped: usize,
+    api_applied: usize,
+    api_rejected: usize,
+) -> ScenarioOutcome {
+    let end = cluster.now;
+    let mut completed = 0usize;
+    let mut stuck = 0usize;
+    let mut unfinished = 0usize;
+    let mut restarts = 0u64;
+    let mut ooms = 0usize;
+    let mut allocated = 0.0;
+    let mut used = 0.0;
+    let mut slowdowns = Vec::new();
+    for j in jobs {
+        let p = cluster.pod(j.pod);
+        allocated += p.provisioned_gb_secs;
+        used += p.used_gb_secs;
+        restarts += p.restarts as u64;
+        ooms += p.oom_kills as usize;
+        match p.phase {
+            PodPhase::Succeeded => {
+                completed += 1;
+                if !j.injected {
+                    let finish = p.finished_at.unwrap_or(end);
+                    slowdowns.push((finish - j.submit_at) as f64 / j.nominal_secs.max(1.0));
+                }
+            }
+            PodPhase::Pending => {
+                unfinished += 1;
+                // a bound Pending pod is merely waiting out restart
+                // latency — only unbound pods are queue-starved
+                if p.node.is_none() {
+                    stuck += 1;
+                }
+            }
+            _ => unfinished += 1,
+        }
+    }
+    let mut fault_kills = 0usize;
+    let mut node_drains = 0usize;
+    let mut evictions = 0usize;
+    for e in cluster.events.iter() {
+        match e.kind {
+            EventKind::PodKilled { .. } => fault_kills += 1,
+            EventKind::NodeDrained { .. } => node_drains += 1,
+            EventKind::Evicted { .. } => evictions += 1,
+            _ => {}
+        }
+    }
+    let (p50, p99, mu) = if slowdowns.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            percentile(&slowdowns, 0.50),
+            percentile(&slowdowns, 0.99),
+            mean(&slowdowns),
+        )
+    };
+    ScenarioOutcome {
+        scenario: spec.name.clone(),
+        policy: policy.label().to_string(),
+        seed,
+        wall_ticks: end,
+        jobs_submitted: jobs.len(),
+        jobs_completed: completed,
+        jobs_dropped,
+        stuck_pending: stuck,
+        unfinished,
+        oom_kills: ooms,
+        fault_kills,
+        node_drains,
+        pressure_evictions: evictions,
+        restarts,
+        allocated_gb_h: allocated / 3600.0,
+        used_gb_h: used / 3600.0,
+        pending_wait_secs: queue_wait_secs(cluster, jobs, end),
+        slowdown_p50: p50,
+        slowdown_p99: p99,
+        slowdown_mean: mu,
+        api_applied,
+        api_rejected,
+    }
+}
+
+/// One-line summary (what the bench and example print per run).
+pub fn outcome_line(o: &ScenarioOutcome) -> String {
+    format!(
+        "{:<18} {:<8} seed={:<4} jobs {:>3}/{:<3} wall={:>6}s  slowdown p50/p99 {:>5.2}/{:>5.2}  \
+         alloc {:>8.2} GB·h used {:>8.2} GB·h  ooms={} kills={} drains={} evict={} \
+         wait={}s stuck={} dropped={}",
+        o.scenario,
+        o.policy,
+        o.seed,
+        o.jobs_completed,
+        o.jobs_submitted,
+        o.wall_ticks,
+        o.slowdown_p50,
+        o.slowdown_p99,
+        o.allocated_gb_h,
+        o.used_gb_h,
+        o.oom_kills,
+        o.fault_kills,
+        o.node_drains,
+        o.pressure_evictions,
+        o.pending_wait_secs,
+        o.stuck_pending,
+        o.jobs_dropped,
+    )
+}
+
+/// The outcome as a JSON object (the bench's machine-readable emission).
+pub fn outcome_json(o: &ScenarioOutcome) -> Json {
+    obj(vec![
+        ("scenario", s(&o.scenario)),
+        ("policy", s(&o.policy)),
+        ("seed", num(o.seed as f64)),
+        ("wall_ticks", num(o.wall_ticks as f64)),
+        ("jobs_submitted", num(o.jobs_submitted as f64)),
+        ("jobs_completed", num(o.jobs_completed as f64)),
+        ("jobs_dropped", num(o.jobs_dropped as f64)),
+        ("stuck_pending", num(o.stuck_pending as f64)),
+        ("unfinished", num(o.unfinished as f64)),
+        ("oom_kills", num(o.oom_kills as f64)),
+        ("fault_kills", num(o.fault_kills as f64)),
+        ("node_drains", num(o.node_drains as f64)),
+        ("pressure_evictions", num(o.pressure_evictions as f64)),
+        ("restarts", num(o.restarts as f64)),
+        ("allocated_gb_h", num(o.allocated_gb_h)),
+        ("used_gb_h", num(o.used_gb_h)),
+        ("pending_wait_secs", num(o.pending_wait_secs as f64)),
+        ("slowdown_p50", num(o.slowdown_p50)),
+        ("slowdown_p99", num(o.slowdown_p99)),
+        ("slowdown_mean", num(o.slowdown_mean)),
+        ("api_applied", num(o.api_applied as f64)),
+        ("api_rejected", num(o.api_rejected as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ScenarioOutcome {
+        ScenarioOutcome {
+            scenario: "t".into(),
+            policy: "arcv".into(),
+            seed: 1,
+            wall_ticks: 1000,
+            jobs_submitted: 10,
+            jobs_completed: 9,
+            jobs_dropped: 0,
+            stuck_pending: 1,
+            unfinished: 1,
+            oom_kills: 2,
+            fault_kills: 1,
+            node_drains: 1,
+            pressure_evictions: 0,
+            restarts: 3,
+            allocated_gb_h: 12.5,
+            used_gb_h: 7.25,
+            pending_wait_secs: 420,
+            slowdown_p50: 1.1,
+            slowdown_p99: 2.4,
+            slowdown_mean: 1.3,
+            api_applied: 40,
+            api_rejected: 2,
+        }
+    }
+
+    #[test]
+    fn line_mentions_the_load_bearing_numbers() {
+        let l = outcome_line(&sample());
+        assert!(l.contains("9/10"));
+        assert!(l.contains("stuck=1"));
+        assert!(l.contains("drains=1"));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let j = outcome_json(&sample());
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("jobs_completed").unwrap().as_usize(), Some(9));
+        assert_eq!(back.get("policy").unwrap().as_str(), Some("arcv"));
+        assert_eq!(back.get("allocated_gb_h").unwrap().as_f64(), Some(12.5));
+    }
+}

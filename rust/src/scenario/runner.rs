@@ -1,0 +1,198 @@
+//! The parallel multi-seed executor: fans a `scenario × policy × seed`
+//! grid across OS threads (`std::thread::scope` — no new dependencies)
+//! and aggregates fleet-level outcomes per `(scenario, policy)` cell.
+//!
+//! Each grid point is an independent, fully deterministic simulation (see
+//! `scenario::arrival` for the seeding contract), so the fan-out is
+//! embarrassingly parallel: workers pull indices from a shared atomic
+//! counter and write into their point's pre-assigned slot, making the
+//! result order — and every result bit — identical to a serial run.
+
+use super::engine::run_scenario;
+use super::outcome::ScenarioOutcome;
+use super::spec::{ScenarioPolicy, ScenarioSpec};
+use crate::util::stats::mean;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run the full grid. `threads == 0` uses the machine's available
+/// parallelism; `threads == 1` is the serial reference. Results come back
+/// in grid order (scenario-major, then policy, then seed) regardless of
+/// which worker ran what.
+pub fn run_grid(
+    specs: &[ScenarioSpec],
+    policies: &[ScenarioPolicy],
+    seeds: &[u64],
+    threads: usize,
+) -> Vec<ScenarioOutcome> {
+    let mut combos: Vec<(usize, usize, u64)> = Vec::new();
+    for si in 0..specs.len() {
+        for pi in 0..policies.len() {
+            for &seed in seeds {
+                combos.push((si, pi, seed));
+            }
+        }
+    }
+    if combos.is_empty() {
+        return Vec::new();
+    }
+    let workers = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+    .clamp(1, combos.len());
+
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<ScenarioOutcome>>> =
+        Mutex::new((0..combos.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= combos.len() {
+                    break;
+                }
+                let (si, pi, seed) = combos[i];
+                let run = run_scenario(&specs[si], policies[pi], seed);
+                slots.lock().unwrap()[i] = Some(run.outcome);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every grid point ran"))
+        .collect()
+}
+
+/// Per-`(scenario, policy)` aggregate across seeds.
+#[derive(Clone, Debug)]
+pub struct GridSummary {
+    pub scenario: String,
+    pub policy: String,
+    pub seeds: usize,
+    pub jobs_submitted: usize,
+    pub jobs_completed: usize,
+    pub stuck_pending: usize,
+    pub oom_kills: usize,
+    pub fault_kills: usize,
+    pub restarts: u64,
+    /// OOM kills per submitted job — the fleet OOM-kill rate.
+    pub oom_rate: f64,
+    pub slowdown_p50_mean: f64,
+    pub slowdown_p99_mean: f64,
+    pub allocated_gb_h_mean: f64,
+    pub used_gb_h_mean: f64,
+    pub pending_wait_secs_mean: f64,
+    pub wall_ticks_mean: f64,
+}
+
+/// Group grid points by `(scenario, policy)` in first-seen order.
+pub fn summarize(points: &[ScenarioOutcome]) -> Vec<GridSummary> {
+    let mut groups: Vec<(String, String, Vec<&ScenarioOutcome>)> = Vec::new();
+    for p in points {
+        match groups
+            .iter_mut()
+            .find(|(s, pl, _)| *s == p.scenario && *pl == p.policy)
+        {
+            Some((_, _, v)) => v.push(p),
+            None => groups.push((p.scenario.clone(), p.policy.clone(), vec![p])),
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(scenario, policy, v)| {
+            let submitted: usize = v.iter().map(|o| o.jobs_submitted).sum();
+            let ooms: usize = v.iter().map(|o| o.oom_kills).sum();
+            let f = |g: fn(&ScenarioOutcome) -> f64| -> f64 {
+                mean(&v.iter().map(|&o| g(o)).collect::<Vec<f64>>())
+            };
+            GridSummary {
+                scenario,
+                policy,
+                seeds: v.len(),
+                jobs_submitted: submitted,
+                jobs_completed: v.iter().map(|o| o.jobs_completed).sum(),
+                stuck_pending: v.iter().map(|o| o.stuck_pending).sum(),
+                oom_kills: ooms,
+                fault_kills: v.iter().map(|o| o.fault_kills).sum(),
+                restarts: v.iter().map(|o| o.restarts).sum(),
+                oom_rate: ooms as f64 / (submitted as f64).max(1.0),
+                slowdown_p50_mean: f(|o| o.slowdown_p50),
+                slowdown_p99_mean: f(|o| o.slowdown_p99),
+                allocated_gb_h_mean: f(|o| o.allocated_gb_h),
+                used_gb_h_mean: f(|o| o.used_gb_h),
+                pending_wait_secs_mean: f(|o| o.pending_wait_secs as f64),
+                wall_ticks_mean: f(|o| o.wall_ticks as f64),
+            }
+        })
+        .collect()
+}
+
+/// One-line rendering of a summary row.
+pub fn summary_line(s: &GridSummary) -> String {
+    format!(
+        "{:<18} {:<8} seeds={:<2} jobs {:>4}/{:<4} oom-rate={:.3}  slowdown p50/p99 \
+         {:>5.2}/{:>5.2}  alloc {:>8.2} GB·h used {:>8.2} GB·h  wait≈{:.0}s stuck={}",
+        s.scenario,
+        s.policy,
+        s.seeds,
+        s.jobs_completed,
+        s.jobs_submitted,
+        s.oom_rate,
+        s.slowdown_p50_mean,
+        s.slowdown_p99_mean,
+        s.allocated_gb_h_mean,
+        s.used_gb_h_mean,
+        s.pending_wait_secs_mean,
+        s.stuck_pending,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::{Arrivals, WorkloadMix};
+    use super::*;
+    use crate::harness::experiment::SwapKind;
+    use crate::policy::arcv::ArcvParams;
+    use crate::workloads::AppId;
+
+    fn small_spec() -> ScenarioSpec {
+        ScenarioSpec::new("grid-t")
+            .pool("n", 1, 24.0, SwapKind::Hdd(8.0))
+            .mix(WorkloadMix::uniform(&[AppId::Sputnipic]))
+            .arrivals(Arrivals::Backlog)
+            .jobs(2)
+            .max_ticks(5_000)
+    }
+
+    #[test]
+    fn grid_covers_every_combo_in_order() {
+        let specs = [small_spec()];
+        let policies = [
+            ScenarioPolicy::Arcv(ArcvParams::default()),
+            ScenarioPolicy::Fixed,
+        ];
+        let seeds = [1, 2];
+        let out = run_grid(&specs, &policies, &seeds, 1);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].policy, "arcv");
+        assert_eq!(out[0].seed, 1);
+        assert_eq!(out[1].seed, 2);
+        assert_eq!(out[2].policy, "fixed");
+        let summaries = summarize(&out);
+        assert_eq!(summaries.len(), 2);
+        assert_eq!(summaries[0].seeds, 2);
+        assert_eq!(summaries[0].jobs_submitted, 4);
+        assert!(summary_line(&summaries[0]).contains("arcv"));
+    }
+
+    #[test]
+    fn empty_grid_is_empty() {
+        assert!(run_grid(&[], &[ScenarioPolicy::Fixed], &[1], 0).is_empty());
+    }
+}

@@ -1,0 +1,434 @@
+//! Declarative scenario specifications: *what* a cluster-scale run looks
+//! like — node pools, an arrival process, a workload mix, fault injectors
+//! — separated from *how* it executes (`scenario::engine`).
+//!
+//! A spec plus a run seed is a complete, deterministic description: the
+//! same `(spec, policy, seed)` triple always produces bit-identical runs,
+//! which is what lets the parallel grid runner fan out without changing
+//! results.
+
+use crate::harness::experiment::{SwapKind, ARCV_INIT_FRAC, VPA_INIT_FRAC, VPA_MIN_REC_GB};
+use crate::policy::arcv::{ArcvParams, ArcvPolicy};
+use crate::policy::fixed::FixedPolicy;
+use crate::policy::vpa::VpaSimPolicy;
+use crate::policy::VerticalPolicy;
+use crate::simkube::{Cluster, ClusterConfig, Node, Strategy, SwapDevice};
+use crate::workloads::{AppId, TABLE1};
+
+/// One homogeneous group of worker nodes (heterogeneous clusters declare
+/// several pools). Nodes are named `<pool>-<i>` in declaration order.
+#[derive(Clone, Debug)]
+pub struct NodePool {
+    pub name: String,
+    pub count: usize,
+    pub capacity_gb: f64,
+    pub swap: SwapKind,
+}
+
+/// How jobs arrive — the queue regimes elastic-HPC schedulers face
+/// (arXiv:2410.10655, arXiv:2510.15147).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrivals {
+    /// Memoryless stream: exponential inter-arrival gaps.
+    Poisson { rate_per_min: f64 },
+    /// `burst` jobs land together every `period_secs` (on/off load).
+    Bursty { period_secs: u64, burst: usize },
+    /// Batch-queue backlog: every job queued at t = 0.
+    Backlog,
+}
+
+/// A scheduled fault injector. Each fires exactly once, at tick `at`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Cordon node `node` at `at` and displace its pods (progress lost;
+    /// displaced pods re-enter the requeue loop).
+    DrainNode { at: u64, node: usize },
+    /// Kill one randomly chosen running pod at `at` (crash, not OOM).
+    KillRandomPod { at: u64 },
+    /// Submit a pod at `at` whose process leaks `leak_gb_per_sec` on top
+    /// of `base_gb` for `lifetime_secs` — the mid-life memory-leak case
+    /// that static sizing can never catch.
+    LeakyPod {
+        at: u64,
+        base_gb: f64,
+        leak_gb_per_sec: f64,
+        lifetime_secs: f64,
+    },
+}
+
+impl Fault {
+    /// The tick this fault is scheduled for.
+    pub fn at(&self) -> u64 {
+        match self {
+            Fault::DrainNode { at, .. }
+            | Fault::KillRandomPod { at }
+            | Fault::LeakyPod { at, .. } => *at,
+        }
+    }
+}
+
+/// Weighted workload mix over the registered Table 1 applications.
+#[derive(Clone, Debug)]
+pub struct WorkloadMix {
+    entries: Vec<(AppId, f64)>,
+    total: f64,
+}
+
+impl WorkloadMix {
+    pub fn uniform(apps: &[AppId]) -> Self {
+        let entries: Vec<(AppId, f64)> = apps.iter().map(|&a| (a, 1.0)).collect();
+        Self::weighted(&entries)
+    }
+
+    pub fn weighted(entries: &[(AppId, f64)]) -> Self {
+        assert!(!entries.is_empty(), "workload mix cannot be empty");
+        // each weight must be strictly positive: a negative weight would
+        // silently shadow every later entry in pick()'s cumulative scan
+        for (app, w) in entries {
+            assert!(
+                w.is_finite() && *w > 0.0,
+                "mix weight for {} must be finite and > 0 (got {w})",
+                app.name()
+            );
+        }
+        let total: f64 = entries.iter().map(|e| e.1).sum();
+        Self {
+            entries: entries.to_vec(),
+            total,
+        }
+    }
+
+    /// Map `u ∈ [0, 1)` onto an app by cumulative weight.
+    pub fn pick(&self, u: f64) -> AppId {
+        let target = u.clamp(0.0, 1.0) * self.total;
+        let mut acc = 0.0;
+        for (app, w) in &self.entries {
+            acc += w;
+            if target < acc {
+                return *app;
+            }
+        }
+        self.entries[self.entries.len() - 1].0
+    }
+
+    pub fn apps(&self) -> impl Iterator<Item = AppId> + '_ {
+        self.entries.iter().map(|e| e.0)
+    }
+}
+
+/// Which vertical policy manages every scenario pod. Scenario runs drive
+/// per-pod kernels through the standard `Controller<PerPodAdapter>`, so
+/// each policy sees exactly the surface it sees in single-app experiments.
+#[derive(Clone, Copy, Debug)]
+pub enum ScenarioPolicy {
+    /// ARC-V native: swap-enabled nodes, init at 120 % of app max (the
+    /// paper's ARC-V environment).
+    Arcv(ArcvParams),
+    /// The §4.1 VPA simulator: swap disabled (OOMs restart), init at 20 %
+    /// of max with the 250 Mi VPA floor (the paper's VPA environment).
+    VpaSim,
+    /// Static allocation at 120 % of max (bare-metal style baseline).
+    Fixed,
+}
+
+impl ScenarioPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScenarioPolicy::Arcv(_) => "arcv",
+            ScenarioPolicy::VpaSim => "vpa-sim",
+            ScenarioPolicy::Fixed => "fixed",
+        }
+    }
+
+    /// Initial request/limit for an app peaking at `app_max_gb`, using the
+    /// same fraction constants as `harness::ExperimentConfig`'s per-policy
+    /// environments.
+    pub fn initial_gb(&self, app_max_gb: f64) -> f64 {
+        match self {
+            ScenarioPolicy::Arcv(_) | ScenarioPolicy::Fixed => app_max_gb * ARCV_INIT_FRAC,
+            ScenarioPolicy::VpaSim => (app_max_gb * VPA_INIT_FRAC).max(VPA_MIN_REC_GB),
+        }
+    }
+
+    /// VPA-sim runs the paper's no-swap environment; the others keep each
+    /// pool's declared swap device.
+    pub fn wants_swap(&self) -> bool {
+        !matches!(self, ScenarioPolicy::VpaSim)
+    }
+
+    /// Build the per-pod decision kernel for one pod.
+    pub fn make(&self, initial_gb: f64) -> Box<dyn VerticalPolicy> {
+        match self {
+            ScenarioPolicy::Arcv(params) => Box::new(ArcvPolicy::new(initial_gb, *params)),
+            ScenarioPolicy::VpaSim => Box::new(VpaSimPolicy::new(initial_gb)),
+            ScenarioPolicy::Fixed => Box::new(FixedPolicy::new(initial_gb)),
+        }
+    }
+}
+
+/// A complete scenario: infrastructure + load + faults + run bounds. The
+/// run seed is deliberately NOT part of the spec — `run_scenario` and
+/// `run_grid` take it as a parameter, so one spec fans out over seeds.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub pools: Vec<NodePool>,
+    pub arrivals: Arrivals,
+    pub mix: WorkloadMix,
+    /// Jobs submitted through the arrival process (fault pods extra).
+    pub jobs: usize,
+    pub faults: Vec<Fault>,
+    pub strategy: Strategy,
+    /// Hard stop for one run, in ticks (covers queue-starvation stalls).
+    pub max_ticks: u64,
+}
+
+impl ScenarioSpec {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            pools: Vec::new(),
+            arrivals: Arrivals::Backlog,
+            mix: WorkloadMix::uniform(&AppId::all()),
+            jobs: 0,
+            faults: Vec::new(),
+            strategy: Strategy::BestFit,
+            max_ticks: 50_000,
+        }
+    }
+
+    pub fn pool(mut self, name: &str, count: usize, capacity_gb: f64, swap: SwapKind) -> Self {
+        self.pools.push(NodePool {
+            name: name.to_string(),
+            count,
+            capacity_gb,
+            swap,
+        });
+        self
+    }
+
+    pub fn arrivals(mut self, arrivals: Arrivals) -> Self {
+        self.arrivals = arrivals;
+        self
+    }
+
+    pub fn mix(mut self, mix: WorkloadMix) -> Self {
+        self.mix = mix;
+        self
+    }
+
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
+    pub fn fault(mut self, fault: Fault) -> Self {
+        self.faults.push(fault);
+        self
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn max_ticks(mut self, max_ticks: u64) -> Self {
+        self.max_ticks = max_ticks;
+        self
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.pools.iter().map(|p| p.count).sum()
+    }
+
+    /// Sanity checks before a run: non-empty infra and load, drain targets
+    /// in range, and every app in the mix placeable at its initial request
+    /// on at least one node (otherwise it pends forever by construction).
+    pub fn validate(&self, policy: &ScenarioPolicy) -> Result<(), String> {
+        if self.pools.is_empty() {
+            return Err("scenario has no node pools".into());
+        }
+        if self.jobs == 0 {
+            return Err("scenario submits no jobs".into());
+        }
+        match self.arrivals {
+            Arrivals::Poisson { rate_per_min } => {
+                if !(rate_per_min.is_finite() && rate_per_min > 0.0) {
+                    return Err(format!(
+                        "Poisson rate_per_min must be finite and > 0 (got {rate_per_min})"
+                    ));
+                }
+            }
+            Arrivals::Bursty { burst, .. } => {
+                if burst == 0 {
+                    return Err("bursty arrivals need burst >= 1".into());
+                }
+            }
+            Arrivals::Backlog => {}
+        }
+        let biggest = self
+            .pools
+            .iter()
+            .map(|p| p.capacity_gb)
+            .fold(0.0_f64, f64::max);
+        for app in self.mix.apps() {
+            let row = TABLE1
+                .iter()
+                .find(|r| r.app == app)
+                .expect("every AppId has a Table 1 row");
+            let init = policy.initial_gb(row.max_gb);
+            if init > biggest {
+                return Err(format!(
+                    "{} initial request {:.1} GB exceeds the largest node ({:.1} GB); \
+                     it would pend forever",
+                    app.name(),
+                    init,
+                    biggest
+                ));
+            }
+        }
+        for f in &self.faults {
+            if f.at() >= self.max_ticks {
+                return Err(format!(
+                    "fault at t={} is at/after max_ticks {}; it would never fire \
+                     (the engine would idle out the whole tick budget waiting)",
+                    f.at(),
+                    self.max_ticks
+                ));
+            }
+            match f {
+                Fault::DrainNode { node, .. } => {
+                    if *node >= self.node_count() {
+                        return Err(format!(
+                            "drain target node {node} out of range (cluster has {})",
+                            self.node_count()
+                        ));
+                    }
+                }
+                Fault::LeakyPod { base_gb, .. } => {
+                    let init = policy.initial_gb(*base_gb);
+                    if init > biggest {
+                        return Err(format!(
+                            "leak pod initial request {init:.1} GB exceeds the largest \
+                             node ({biggest:.1} GB); it would pend forever"
+                        ));
+                    }
+                }
+                Fault::KillRandomPod { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the cluster: pools expand to nodes in declaration
+    /// order. Swap follows the policy's environment (VPA-sim mirrors the
+    /// paper's no-swap setup).
+    pub fn build_cluster(&self, policy: &ScenarioPolicy) -> Cluster {
+        let mut nodes = Vec::new();
+        for pool in &self.pools {
+            for i in 0..pool.count {
+                let swap = if policy.wants_swap() {
+                    pool.swap.device()
+                } else {
+                    SwapDevice::disabled()
+                };
+                nodes.push(Node::new(&format!("{}-{i}", pool.name), pool.capacity_gb, swap));
+            }
+        }
+        let config = ClusterConfig {
+            scheduler: self.strategy,
+            ..ClusterConfig::default()
+        };
+        Cluster::new(nodes, config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_pick_respects_weights_and_bounds() {
+        let mix = WorkloadMix::weighted(&[(AppId::Kripke, 3.0), (AppId::Cm1, 1.0)]);
+        assert_eq!(mix.pick(0.0), AppId::Kripke);
+        assert_eq!(mix.pick(0.74), AppId::Kripke);
+        assert_eq!(mix.pick(0.76), AppId::Cm1);
+        // out-of-range u clamps instead of panicking
+        assert_eq!(mix.pick(1.0), AppId::Cm1);
+        assert_eq!(mix.pick(-0.5), AppId::Kripke);
+    }
+
+    #[test]
+    fn builder_assembles_cluster() {
+        let spec = ScenarioSpec::new("t")
+            .pool("big", 2, 256.0, SwapKind::Hdd(64.0))
+            .pool("small", 1, 64.0, SwapKind::Ssd(16.0))
+            .jobs(4);
+        assert_eq!(spec.node_count(), 3);
+        let arcv = ScenarioPolicy::Arcv(ArcvParams::default());
+        let c = spec.build_cluster(&arcv);
+        assert_eq!(c.nodes.len(), 3);
+        assert_eq!(c.nodes[0].name, "big-0");
+        assert_eq!(c.nodes[2].name, "small-0");
+        assert_eq!(c.nodes[2].capacity_gb, 64.0);
+        assert!(c.nodes[0].swap.enabled());
+        // the VPA environment strips swap
+        let v = spec.build_cluster(&ScenarioPolicy::VpaSim);
+        assert!(!v.nodes[0].swap.enabled());
+    }
+
+    #[test]
+    fn validate_catches_impossible_specs() {
+        let arcv = ScenarioPolicy::Arcv(ArcvParams::default());
+        let empty = ScenarioSpec::new("t");
+        assert!(empty.validate(&arcv).is_err(), "no pools");
+        // minife at 120% needs 76.4 GB — a 64 GB-node cluster can never
+        // place it
+        let tiny = ScenarioSpec::new("t")
+            .pool("n", 2, 64.0, SwapKind::Disabled)
+            .mix(WorkloadMix::uniform(&[AppId::Minife]))
+            .jobs(1);
+        assert!(tiny.validate(&arcv).is_err());
+        // ...but the VPA environment starts at 20%, which fits
+        assert!(tiny.validate(&ScenarioPolicy::VpaSim).is_ok());
+        let bad_drain = ScenarioSpec::new("t")
+            .pool("n", 1, 256.0, SwapKind::Disabled)
+            .jobs(1)
+            .mix(WorkloadMix::uniform(&[AppId::Kripke]))
+            .fault(Fault::DrainNode { at: 10, node: 5 });
+        assert!(bad_drain.validate(&arcv).is_err());
+        // a leak pod that can never be placed is caught like a mix app
+        let bad_leak = ScenarioSpec::new("t")
+            .pool("n", 1, 32.0, SwapKind::Disabled)
+            .jobs(1)
+            .mix(WorkloadMix::uniform(&[AppId::Kripke]))
+            .fault(Fault::LeakyPod {
+                at: 10,
+                base_gb: 40.0,
+                leak_gb_per_sec: 0.01,
+                lifetime_secs: 100.0,
+            });
+        assert!(bad_leak.validate(&arcv).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and > 0")]
+    fn negative_mix_weights_are_rejected() {
+        WorkloadMix::weighted(&[(AppId::Kripke, 2.0), (AppId::Cm1, -1.0)]);
+    }
+
+    #[test]
+    fn policy_environments_match_harness() {
+        let arcv = ScenarioPolicy::Arcv(ArcvParams::default());
+        assert!((arcv.initial_gb(10.0) - 12.0).abs() < 1e-9);
+        assert!(arcv.wants_swap());
+        // VPA floor: 20% of CM1's 0.415 GB is below the 250 Mi minimum
+        let vpa = ScenarioPolicy::VpaSim;
+        assert_eq!(vpa.initial_gb(0.415), VPA_MIN_REC_GB);
+        assert!((vpa.initial_gb(50.0) - 10.0).abs() < 1e-9);
+        assert!(!vpa.wants_swap());
+        assert_eq!(arcv.make(4.0).name(), "arcv");
+        assert_eq!(vpa.make(4.0).name(), "vpa-sim");
+        assert_eq!(ScenarioPolicy::Fixed.make(4.0).name(), "fixed");
+    }
+}

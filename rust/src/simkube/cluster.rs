@@ -1,7 +1,7 @@
 //! The cluster: nodes + pods + kubelet + metrics + events, advanced on a
 //! discrete 1-second clock. This is the substrate every experiment runs on.
 
-use super::events::{EventKind, EventLog};
+use super::events::{EventKind, EventLog, NODE_EVENT};
 use super::kubelet::{IoState, Kubelet, KubeletConfig};
 use super::metrics::MetricsStore;
 use super::node::Node;
@@ -74,6 +74,21 @@ impl Cluster {
 
     // ------------------------------------------------------------ API-ish --
 
+    /// Bind and start a pod on node `n` now, emitting the PLEG pair
+    /// (`PodScheduled` + `PodStarted`). `create_pod` and the requeue loop
+    /// share this so the placement transition lives in exactly one place.
+    fn start_on(&mut self, id: PodId, n: usize) {
+        let now = self.now;
+        let request = self.pods[id].spec.memory_request_gb();
+        self.nodes[n].bind(id, request);
+        let pod = &mut self.pods[id];
+        pod.node = Some(n);
+        pod.phase = PodPhase::Running;
+        pod.started_at.get_or_insert(now);
+        self.events.push(now, id, EventKind::PodScheduled { node: n });
+        self.events.push(now, id, EventKind::PodStarted);
+    }
+
     /// Create and schedule a pod. Returns its id; the pod starts Running on
     /// the next tick if a node fits, else stays Pending.
     pub fn create_pod(
@@ -83,17 +98,12 @@ impl Cluster {
         process: Box<dyn MemoryProcess>,
     ) -> PodId {
         let id = self.pods.len();
-        let mut pod = Pod::new(id, name, spec, process);
+        let pod = Pod::new(id, name, spec, process);
         let request = pod.spec.memory_request_gb();
+        self.pods.push(pod);
+        self.io.push(IoState::default());
         match self.scheduler.place(&self.nodes, request) {
-            Some(n) => {
-                self.nodes[n].bind(id, request);
-                pod.node = Some(n);
-                pod.phase = PodPhase::Running;
-                pod.started_at = Some(self.now);
-                self.events.push(self.now, id, EventKind::PodScheduled { node: n });
-                self.events.push(self.now, id, EventKind::PodStarted);
-            }
+            Some(n) => self.start_on(id, n),
             None => {
                 self.events.push(
                     self.now,
@@ -104,8 +114,6 @@ impl Cluster {
                 );
             }
         }
-        self.pods.push(pod);
-        self.io.push(IoState::default());
         id
     }
 
@@ -169,6 +177,127 @@ impl Cluster {
         &self.pods[id]
     }
 
+    // ------------------------------------------------------------- churn --
+
+    /// Reset the container state to a fresh, unbound replacement: progress
+    /// and usage are lost (the paper's no-checkpointing assumption) and
+    /// the spec limit applies from birth. Shared by drain, kill, and the
+    /// Evicted-requeue path so fresh-container semantics live in exactly
+    /// one place.
+    fn fresh_container(pod: &mut Pod) {
+        pod.usage = Default::default();
+        pod.progress_secs = 0.0;
+        pod.pending_resize = None;
+        pod.effective_limit_gb = pod.spec.memory_limit_gb().unwrap_or(f64::INFINITY);
+        pod.node = None;
+    }
+
+    /// Displace a pod from `from_node`: swap residency is returned to the
+    /// node's device, any in-flight restart is cancelled, and the pod goes
+    /// back to Pending as a fresh container.
+    fn displace(&mut self, id: PodId, from_node: usize) {
+        self.nodes[from_node].swap.page_in(self.pods[id].usage.swap_gb);
+        self.restarting.retain(|&(p, _)| p != id);
+        let pod = &mut self.pods[id];
+        Self::fresh_container(pod);
+        if !pod.is_done() {
+            pod.phase = PodPhase::Pending;
+            pod.restarts += 1;
+        }
+        self.io[id] = IoState::default();
+    }
+
+    /// Cordon `node` and displace every pod bound to it (the drain fault
+    /// injector / `kubectl drain`). Displaced pods lose their progress and
+    /// re-enter the scheduling queue via [`Self::schedule_pending`].
+    /// Returns how many pods were displaced.
+    pub fn drain_node(&mut self, node: usize) -> usize {
+        let now = self.now;
+        self.nodes[node].cordon();
+        let victims: Vec<PodId> = self.nodes[node].pods.clone();
+        for &id in &victims {
+            let req = self.pods[id].spec.memory_request_gb();
+            self.nodes[node].unbind(id, req);
+            self.displace(id, node);
+            self.events.push(now, id, EventKind::PodDrained { node });
+        }
+        self.events.push(
+            now,
+            NODE_EVENT,
+            EventKind::NodeDrained { node, displaced: victims.len() },
+        );
+        victims.len()
+    }
+
+    /// Crash a running container (the random-kill fault injector). The pod
+    /// releases its reservation and re-enters the scheduling queue; a
+    /// no-op on pods that are not Running. Returns whether a kill landed.
+    pub fn kill_pod(&mut self, id: PodId) -> bool {
+        let now = self.now;
+        if self.pods[id].phase != PodPhase::Running {
+            return false;
+        }
+        let node = self.pods[id].node.expect("running pod is bound");
+        let req = self.pods[id].spec.memory_request_gb();
+        self.nodes[node].unbind(id, req);
+        self.displace(id, node);
+        self.events.push(now, id, EventKind::PodKilled { node });
+        true
+    }
+
+    /// The requeue loop: try to place every pod waiting for a node —
+    /// Pending and unbound (failed admission-time scheduling, drained,
+    /// killed), or pressure-Evicted (converted back to Pending here, as a
+    /// fresh container). Called by the scenario engine every tick so no
+    /// pod is stuck Pending forever while capacity exists; returns how
+    /// many pods were placed.
+    pub fn schedule_pending(&mut self) -> usize {
+        let now = self.now;
+        let mut placed = 0;
+        for id in 0..self.pods.len() {
+            let waiting = match self.pods[id].phase {
+                PodPhase::Pending => self.pods[id].node.is_none(),
+                PodPhase::Evicted => true,
+                _ => false,
+            };
+            if !waiting {
+                continue;
+            }
+            if self.pods[id].phase == PodPhase::Evicted {
+                // evictions released the reservation but kept `node` for
+                // audit; requeue as a fresh container. Placement waits for
+                // the NEXT tick (eviction cooldown): re-admitting in the
+                // same tick the pressure eviction fired would flap the pod
+                // straight back onto the still-loaded node.
+                let pod = &mut self.pods[id];
+                Self::fresh_container(pod);
+                pod.phase = PodPhase::Pending;
+                pod.restarts += 1;
+                self.events.push(now, id, EventKind::PodRequeued);
+                continue;
+            }
+            let request = self.pods[id].spec.memory_request_gb();
+            if let Some(n) = self.scheduler.place(&self.nodes, request) {
+                self.io[id] = IoState::default();
+                if self.pods[id].started_at.is_some() {
+                    // replacement container (the pod ran before): pays the
+                    // same restart latency as the API restart path, so
+                    // churn-induced replacements cost what policy-induced
+                    // ones do. PodStarted is emitted when the latency
+                    // expires (the step() restart path).
+                    self.nodes[n].bind(id, request);
+                    self.pods[id].node = Some(n);
+                    self.events.push(now, id, EventKind::PodScheduled { node: n });
+                    self.restarting.push((id, now + self.config.restart_latency_secs));
+                } else {
+                    self.start_on(id, n);
+                }
+                placed += 1;
+            }
+        }
+        placed
+    }
+
     pub fn all_done(&self) -> bool {
         self.pods.iter().all(|p| p.is_done())
     }
@@ -192,7 +321,10 @@ impl Cluster {
         });
         for id in ready {
             let pod = &mut self.pods[id];
-            if pod.phase == PodPhase::Pending {
+            // only BOUND pods start: a restart issued against a displaced
+            // (unbound) pod must wait for the requeue loop to place it,
+            // not become a zombie Running pod no kubelet ever ticks
+            if pod.phase == PodPhase::Pending && pod.node.is_some() {
                 pod.phase = PodPhase::Running;
                 pod.started_at.get_or_insert(now);
                 self.events.push(now, id, EventKind::PodStarted);
@@ -248,12 +380,7 @@ impl Cluster {
                         pa.qos
                             .eviction_rank()
                             .cmp(&pb.qos.eviction_rank())
-                            .then(
-                                pb.usage
-                                    .rss_gb
-                                    .partial_cmp(&pa.usage.rss_gb)
-                                    .unwrap(),
-                            )
+                            .then(pb.usage.rss_gb.total_cmp(&pa.usage.rss_gb))
                     });
                 let Some(v) = victim else { break };
                 let qos_rank = self.pods[v].qos.eviction_rank();
@@ -381,6 +508,135 @@ mod tests {
         c.run_until(30, |_| false);
         let series = c.metrics.pod(id).unwrap();
         assert_eq!(series.count, 6); // t=5,10,...,30
+    }
+
+    #[test]
+    fn pending_pod_places_after_departure_frees_capacity() {
+        // arrival → Pending → requeue → placement once a completion frees
+        // the reservation (the scenario churn loop's core invariant)
+        let mut c = one_node_cluster(8.0, SwapDevice::disabled());
+        let a = c.create_pod("a", ResourceSpec::memory_exact(6.0), ramp(1.0, 1.0, 20.0));
+        let b = c.create_pod("b", ResourceSpec::memory_exact(6.0), ramp(1.0, 1.0, 20.0));
+        assert!(c.pod(a).is_running());
+        assert_eq!(c.pod(b).phase, PodPhase::Pending);
+        // requeue while the node is full is a no-op
+        assert_eq!(c.schedule_pending(), 0);
+        assert_eq!(c.pod(b).phase, PodPhase::Pending);
+        // run a to completion; its reservation departs with it
+        c.run_until(1000, |c| c.pod(a).is_done());
+        assert_eq!(c.schedule_pending(), 1);
+        assert!(c.pod(b).is_running());
+        assert_eq!(c.pod(b).started_at, Some(c.now));
+        c.run_until(1000, |c| c.all_done());
+        assert_eq!(c.pod(b).phase, PodPhase::Succeeded);
+    }
+
+    #[test]
+    fn drain_cordons_and_displaces_to_other_node() {
+        let mut c = Cluster::new(
+            vec![
+                Node::new("w0", 16.0, SwapDevice::disabled()),
+                Node::new("w1", 16.0, SwapDevice::disabled()),
+            ],
+            ClusterConfig::default(),
+        );
+        // best-fit packs both pods onto one node... both nodes equal, so
+        // pin progress and check displacement wherever they land
+        let a = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 1.0, 100.0));
+        c.run_until(10, |_| false);
+        let home = c.pod(a).node.unwrap();
+        let progress_before = c.pod(a).progress_secs;
+        assert!(progress_before > 0.0);
+        let displaced = c.drain_node(home);
+        assert_eq!(displaced, 1);
+        assert!(c.nodes[home].cordoned);
+        assert!(c.nodes[home].pods.is_empty());
+        assert_eq!(c.pod(a).phase, PodPhase::Pending);
+        assert_eq!(c.pod(a).node, None);
+        assert_eq!(c.pod(a).progress_secs, 0.0, "no checkpointing");
+        assert_eq!(c.pod(a).restarts, 1);
+        // the requeue loop re-places it on the surviving node
+        assert_eq!(c.schedule_pending(), 1);
+        let new_home = c.pod(a).node.unwrap();
+        assert_ne!(new_home, home, "cordoned node must not take it back");
+        let drain_logged = c
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::NodeDrained { displaced: 1, .. }));
+        assert!(drain_logged, "node-level drain event with displaced count");
+        assert!(c
+            .events
+            .iter()
+            .any(|e| e.pod == a && matches!(e.kind, EventKind::PodDrained { .. })));
+    }
+
+    #[test]
+    fn kill_pod_requeues_as_fresh_container() {
+        let mut c = one_node_cluster(16.0, SwapDevice::disabled());
+        let a = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 1.0, 50.0));
+        c.run_until(10, |_| false);
+        assert!(c.kill_pod(a));
+        assert_eq!(c.pod(a).phase, PodPhase::Pending);
+        assert_eq!(c.pod(a).progress_secs, 0.0);
+        assert_eq!(c.nodes[0].reserved_gb, 0.0, "kill releases the reservation");
+        assert!(!c.kill_pod(a), "only Running pods can be killed");
+        assert_eq!(c.schedule_pending(), 1);
+        c.run_until(100, |c| c.all_done());
+        assert_eq!(c.pod(a).phase, PodPhase::Succeeded);
+        assert_eq!(
+            c.events
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::PodKilled { .. }))
+                .count(),
+            1
+        );
+    }
+
+    #[test]
+    fn restart_of_displaced_pod_never_runs_unbound() {
+        let mut c = one_node_cluster(16.0, SwapDevice::disabled());
+        let a = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 1.0, 50.0));
+        c.run_until(5, |_| false);
+        assert!(c.kill_pod(a));
+        // a supervisor blindly restarts the displaced pod (the API layer
+        // deliberately allows restarts on any pod)
+        c.restart_pod(a, 4.0);
+        c.run_until(c.config.restart_latency_secs + 2, |_| false);
+        // the expiry must NOT promote an unbound pod to Running — it waits
+        // for the requeue loop instead
+        assert_eq!(c.pod(a).phase, PodPhase::Pending);
+        assert_eq!(c.pod(a).node, None);
+        assert_eq!(c.schedule_pending(), 1);
+        c.run_until(c.config.restart_latency_secs + 60, |c| c.all_done());
+        assert_eq!(c.pod(a).phase, PodPhase::Succeeded);
+    }
+
+    #[test]
+    fn evicted_pod_requeues_once_pressure_clears() {
+        let mut c = one_node_cluster(8.0, SwapDevice::disabled());
+        // guaranteed pod holding 6 GB for a while, then finishing
+        let g = c.create_pod("g", ResourceSpec::memory_exact(6.0), ramp(5.0, 5.0, 40.0));
+        // best-effort balloon gets evicted under pressure
+        let be = c.create_pod("be", ResourceSpec::best_effort(), ramp(1.0, 12.0, 30.0));
+        c.run_until(200, |c| c.pod(be).phase == PodPhase::Evicted);
+        assert_eq!(c.pod(be).phase, PodPhase::Evicted);
+        // first pass converts it back to Pending as a fresh container but
+        // does NOT place it (eviction cooldown: no same-tick flapping)
+        c.schedule_pending();
+        assert_eq!(c.pod(be).phase, PodPhase::Pending);
+        assert_eq!(c.pod(be).progress_secs, 0.0);
+        assert!(c
+            .events
+            .iter()
+            .any(|e| e.pod == be && e.kind == EventKind::PodRequeued));
+        // the next pass places it (its request is 0 GB); as a replacement
+        // container it waits out the standard restart latency first
+        c.schedule_pending();
+        assert!(c.pod(be).node.is_some());
+        assert_eq!(c.pod(be).phase, PodPhase::Pending);
+        c.run_until(c.config.restart_latency_secs + 1, |_| false);
+        assert!(c.pod(be).is_running());
+        assert!(c.pod(g).is_running(), "guaranteed pod unaffected");
     }
 
     #[test]

@@ -3,12 +3,19 @@
 //!
 //! PLEG contract: every pod phase transition emits exactly one event
 //! (`PodScheduled`/`PodStarted`, `PodCompleted`, `OomKilled`, `Evicted`,
-//! `PodRestarted`, `SchedulingFailed`), and every accepted API mutation
-//! emits `ResizeIssued` or `PodRestarted`. The `ApiClient` informer relies
+//! `PodRestarted`, `PodDrained`, `PodKilled`, `PodRequeued`,
+//! `SchedulingFailed`), and every accepted API mutation emits
+//! `ResizeIssued` or `PodRestarted`. The `ApiClient` informer relies
 //! on this to keep its cached `PodView`s lifecycle-accurate, and
 //! `rust/tests/api_surface.rs` pins the mutation half.
 
 use super::pod::PodId;
+
+/// Sentinel `pod` id for node-scoped entries (`NodeDrained`): the event
+/// log is keyed by pod, so node-level events use this reserved id. It can
+/// never collide with a real pod (a cluster of `usize::MAX` pods cannot
+/// exist — the pod vector itself would not fit in the address space).
+pub const NODE_EVENT: PodId = PodId::MAX;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum EventKind {
@@ -27,6 +34,19 @@ pub enum EventKind {
     /// Overflow pages went to the swap device.
     SwappedOut { gb: f64 },
     SchedulingFailed { reason: String },
+    /// A fault injector (or operator) cordoned `node` and displaced the
+    /// pods bound to it. Logged with [`NODE_EVENT`] as the pod id; the
+    /// per-pod half is `PodDrained`.
+    NodeDrained { node: usize, displaced: usize },
+    /// This pod was displaced from `node` by a drain: progress is lost (no
+    /// checkpointing) and the pod re-enters the scheduling queue.
+    PodDrained { node: usize },
+    /// A fault injector killed this pod's container on `node` (crash
+    /// semantics — distinct from `OomKilled`); it re-enters the queue.
+    PodKilled { node: usize },
+    /// A pressure-evicted pod was converted back to Pending by the
+    /// scenario requeue loop (fresh container, progress lost).
+    PodRequeued,
 }
 
 #[derive(Clone, Debug, PartialEq)]

@@ -13,6 +13,9 @@ pub struct Node {
     pub pods: Vec<PodId>,
     /// Σ memory requests of bound pods (scheduler bookkeeping).
     pub reserved_gb: f64,
+    /// Cordoned nodes take no new pods (`kubectl cordon` — the drain fault
+    /// injector sets this). Existing bindings are unaffected.
+    pub cordoned: bool,
 }
 
 impl Node {
@@ -23,6 +26,7 @@ impl Node {
             swap,
             pods: Vec::new(),
             reserved_gb: 0.0,
+            cordoned: false,
         }
     }
 
@@ -36,7 +40,16 @@ impl Node {
     }
 
     pub fn fits(&self, request_gb: f64) -> bool {
-        request_gb <= self.allocatable_gb()
+        !self.cordoned && request_gb <= self.allocatable_gb()
+    }
+
+    /// Mark unschedulable (new placements skip this node).
+    pub fn cordon(&mut self) {
+        self.cordoned = true;
+    }
+
+    pub fn uncordon(&mut self) {
+        self.cordoned = false;
     }
 
     pub fn bind(&mut self, pod: PodId, request_gb: f64) {
@@ -81,6 +94,17 @@ mod tests {
         assert_eq!(n.reserved_gb, 25.0);
         n.adjust_reservation(25.0, 5.0);
         assert_eq!(n.reserved_gb, 5.0);
+    }
+
+    #[test]
+    fn cordoned_node_takes_no_new_pods() {
+        let mut n = Node::new("w0", 256.0, SwapDevice::disabled());
+        assert!(n.fits(10.0));
+        n.cordon();
+        assert!(!n.fits(10.0), "cordoned node must refuse placements");
+        assert_eq!(n.allocatable_gb(), 256.0, "capacity accounting unchanged");
+        n.uncordon();
+        assert!(n.fits(10.0));
     }
 
     #[test]

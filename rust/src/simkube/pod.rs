@@ -76,6 +76,10 @@ pub struct Pod {
     pub pending_resize: Option<PendingResize>,
     pub usage: PodUsage,
 
+    /// Every container replacement: policy restarts (the VPA Updater
+    /// path), OOM recoveries, and scenario churn — drain displacement,
+    /// fault kills, and pressure-eviction requeues all count, since each
+    /// starts a fresh container with progress lost.
     pub restarts: u32,
     pub oom_kills: u32,
     pub started_at: Option<u64>,

@@ -25,7 +25,10 @@ impl Scheduler {
     }
 
     /// Pick a node index for a pod requesting `request_gb`, or None if no
-    /// node fits (the pod stays Pending — scheduling failure).
+    /// node fits (the pod stays Pending — scheduling failure). Cordoned
+    /// nodes never fit. Comparison uses `f64::total_cmp`, a total order:
+    /// the old `partial_cmp(..).unwrap()` panicked the whole scheduler if
+    /// any candidate's allocatable memory ever became NaN.
     pub fn place(&self, nodes: &[Node], request_gb: f64) -> Option<usize> {
         let fits = nodes
             .iter()
@@ -33,18 +36,10 @@ impl Scheduler {
             .filter(|(_, n)| n.fits(request_gb));
         match self.strategy {
             Strategy::BestFit => fits
-                .min_by(|a, b| {
-                    a.1.allocatable_gb()
-                        .partial_cmp(&b.1.allocatable_gb())
-                        .unwrap()
-                })
+                .min_by(|a, b| a.1.allocatable_gb().total_cmp(&b.1.allocatable_gb()))
                 .map(|(i, _)| i),
             Strategy::WorstFit => fits
-                .max_by(|a, b| {
-                    a.1.allocatable_gb()
-                        .partial_cmp(&b.1.allocatable_gb())
-                        .unwrap()
-                })
+                .max_by(|a, b| a.1.allocatable_gb().total_cmp(&b.1.allocatable_gb()))
                 .map(|(i, _)| i),
         }
     }
@@ -88,6 +83,43 @@ mod tests {
         let ns = nodes(&[10.0, 20.0]);
         let s = Scheduler::new(Strategy::BestFit);
         assert_eq!(s.place(&ns, 64.0), None);
+    }
+
+    #[test]
+    fn place_survives_non_finite_allocatable() {
+        // Regression: node selection used partial_cmp(..).unwrap(), which
+        // panics as soon as two fitting candidates compare un-orderably.
+        // total_cmp is total over every f64, so degenerate capacities
+        // (NaN, ±inf — e.g. from a mis-parsed node spec) must not panic.
+        let mut ns = nodes(&[50.0, 60.0]);
+        ns[0].capacity_gb = f64::NAN;
+        ns[0].reserved_gb = f64::NAN;
+        let mut inf = Node::new("inf", f64::INFINITY, SwapDevice::disabled());
+        inf.reserved_gb = f64::INFINITY;
+        ns.push(inf);
+        ns.push(Node::new("inf2", f64::INFINITY, SwapDevice::disabled()));
+        for strategy in [Strategy::BestFit, Strategy::WorstFit] {
+            let s = Scheduler::new(strategy);
+            // must not panic, and must pick *some* fitting node
+            assert!(s.place(&ns, 25.0).is_some());
+            // NaN request fits nothing and must not panic either
+            assert_eq!(s.place(&ns, f64::NAN), None);
+        }
+        // best-fit still prefers the tightest finite node
+        assert_eq!(Scheduler::new(Strategy::BestFit).place(&ns, 25.0), Some(1));
+        // worst-fit prefers the infinite-headroom node
+        assert_eq!(Scheduler::new(Strategy::WorstFit).place(&ns, 25.0), Some(3));
+    }
+
+    #[test]
+    fn cordoned_nodes_are_skipped() {
+        let mut ns = nodes(&[100.0, 30.0]);
+        ns[1].cordon();
+        let s = Scheduler::new(Strategy::BestFit);
+        // node 1 would win best-fit, but it is cordoned
+        assert_eq!(s.place(&ns, 25.0), Some(0));
+        ns[0].cordon();
+        assert_eq!(s.place(&ns, 25.0), None);
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Integration tests for the scenario subsystem: churn (arrival → Pending
+//! → requeue → placement after a departure frees capacity), fault
+//! injectors firing exactly once at their scheduled tick, and the
+//! serial/parallel determinism contract of the grid runner.
+
+use arcv::harness::SwapKind;
+use arcv::policy::arcv::ArcvParams;
+use arcv::scenario::{
+    build_schedule, run_grid, run_scenario, Arrivals, Fault, ScenarioPolicy, ScenarioSpec,
+    WorkloadMix,
+};
+use arcv::simkube::EventKind;
+use arcv::workloads::AppId;
+
+/// Fixed policy + one 16 GB node + four kripke jobs (6.6 GB initial each):
+/// exactly two fit; the other two must wait Pending until the first pair
+/// completes and departs, then the requeue loop places them.
+#[test]
+fn queued_jobs_place_only_after_departures_free_capacity() {
+    let spec = ScenarioSpec::new("queue")
+        .pool("n", 1, 16.0, SwapKind::Disabled)
+        .mix(WorkloadMix::uniform(&[AppId::Kripke]))
+        .arrivals(Arrivals::Backlog)
+        .jobs(4)
+        .max_ticks(10_000);
+    let run = run_scenario(&spec, ScenarioPolicy::Fixed, 1);
+
+    assert_eq!(run.outcome.jobs_submitted, 4);
+    assert_eq!(run.outcome.jobs_completed, 4);
+    assert_eq!(run.outcome.stuck_pending, 0);
+
+    // kripke runs 650 s; under Fixed nothing resizes, so the second pair
+    // can only start once the first pair departs
+    let starts: Vec<u64> = run
+        .jobs
+        .iter()
+        .map(|j| run.cluster.pod(j.pod).started_at.expect("all started"))
+        .collect();
+    assert_eq!(starts.iter().filter(|&&t| t == 0).count(), 2);
+    assert_eq!(starts.iter().filter(|&&t| t >= 650).count(), 2);
+    // the initial no-fit surfaced as a scheduling failure, then requeued
+    assert!(run
+        .cluster
+        .events
+        .iter()
+        .any(|e| matches!(e.kind, EventKind::SchedulingFailed { .. })));
+    assert_eq!(run.outcome.pending_wait_secs, 2 * 650);
+    // slowdowns: two at 1.0, two at 2.0 → p50 interpolates to 1.5
+    assert!((run.outcome.slowdown_p50 - 1.5).abs() < 0.02, "{}", run.outcome.slowdown_p50);
+    assert!(run.outcome.slowdown_p99 > 1.9);
+}
+
+/// Every fault injector fires exactly once, at exactly its scheduled tick.
+#[test]
+fn fault_injectors_fire_exactly_once_at_their_tick() {
+    let spec = ScenarioSpec::new("faults")
+        .pool("n", 1, 64.0, SwapKind::Disabled)
+        .mix(WorkloadMix::uniform(&[AppId::Kripke]))
+        .arrivals(Arrivals::Backlog)
+        .jobs(2)
+        .fault(Fault::LeakyPod {
+            at: 30,
+            base_gb: 1.0,
+            leak_gb_per_sec: 0.005,
+            lifetime_secs: 200.0,
+        })
+        .fault(Fault::KillRandomPod { at: 50 })
+        .fault(Fault::DrainNode { at: 100, node: 0 })
+        // the only node stays cordoned after the drain, so everything is
+        // stuck Pending by design; stop soon after and check accounting
+        .max_ticks(300);
+    let run = run_scenario(&spec, ScenarioPolicy::Fixed, 9);
+
+    let kills: Vec<u64> = run
+        .cluster
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::PodKilled { .. }))
+        .map(|e| e.time)
+        .collect();
+    assert_eq!(kills, vec![50], "kill fires once, at t=50");
+
+    let drains: Vec<(u64, usize)> = run
+        .cluster
+        .events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::NodeDrained { displaced, .. } => Some((e.time, displaced)),
+            _ => None,
+        })
+        .collect();
+    // at t=100 the node hosts both kripke pods and the leak pod
+    assert_eq!(drains, vec![(100, 3)], "drain fires once, at t=100");
+
+    // the leak pod was submitted at its scheduled tick and counted
+    assert_eq!(run.outcome.jobs_submitted, 3);
+    let leak = run.jobs.iter().find(|j| j.injected).expect("leak pod recorded");
+    assert_eq!(leak.submit_at, 30);
+    assert_eq!(leak.name, "leak-30");
+
+    // post-drain: one cordoned node, no capacity anywhere → everything
+    // re-enters the queue and is reported stuck at the hard stop
+    assert_eq!(run.outcome.node_drains, 1);
+    assert_eq!(run.outcome.fault_kills, 1);
+    assert_eq!(run.outcome.stuck_pending, 3);
+    assert_eq!(run.outcome.jobs_completed, 0);
+}
+
+/// The determinism contract: a parallel grid is bit-identical to the
+/// serial reference, because every random stream derives from
+/// `(run seed, job index)` — never from thread interleaving.
+#[test]
+fn parallel_grid_is_bit_identical_to_serial() {
+    let specs = [ScenarioSpec::new("det")
+        .pool("a", 2, 32.0, SwapKind::Hdd(16.0))
+        .pool("b", 1, 16.0, SwapKind::Ssd(8.0))
+        .mix(WorkloadMix::uniform(&[AppId::Sputnipic, AppId::Cm1, AppId::Amr]))
+        .arrivals(Arrivals::Poisson { rate_per_min: 10.0 })
+        .jobs(6)
+        .fault(Fault::KillRandomPod { at: 150 })
+        .max_ticks(30_000)];
+    let policies = [
+        ScenarioPolicy::Arcv(ArcvParams::default()),
+        ScenarioPolicy::VpaSim,
+    ];
+    let seeds = [1, 2, 3, 4];
+
+    let serial = run_grid(&specs, &policies, &seeds, 1);
+    let parallel = run_grid(&specs, &policies, &seeds, 4);
+    assert_eq!(serial.len(), 8);
+    assert_eq!(serial, parallel, "parallel execution must not change results");
+
+    // distinct seeds genuinely produce distinct runs (the streams are
+    // seed-sensitive, not just reproducible)
+    assert!(
+        serial[0] != serial[1] || serial[1] != serial[2],
+        "different seeds should differ somewhere"
+    );
+}
+
+/// Per-job model seeds are a pure function of (run seed, job index), so
+/// the schedule — and through it every workload trace — replays exactly.
+#[test]
+fn schedules_replay_exactly_per_seed() {
+    let spec = ScenarioSpec::new("sched")
+        .pool("n", 1, 64.0, SwapKind::Disabled)
+        .mix(WorkloadMix::uniform(&[AppId::Kripke, AppId::Lulesh]))
+        .arrivals(Arrivals::Poisson { rate_per_min: 3.0 })
+        .jobs(25);
+    assert_eq!(build_schedule(&spec, 123), build_schedule(&spec, 123));
+    let a = build_schedule(&spec, 123);
+    let b = build_schedule(&spec, 124);
+    assert_ne!(a, b);
+    // arrival times must be monotone (a queue, not a shuffle)
+    assert!(a.windows(2).all(|w| w[0].submit_at <= w[1].submit_at));
+}
