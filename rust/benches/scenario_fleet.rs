@@ -13,9 +13,10 @@
 use arcv::harness::SwapKind;
 use arcv::policy::arcv::ArcvParams;
 use arcv::scenario::{
-    outcome_json, outcome_line, run_grid, run_scenario, summarize, summary_line, Arrivals,
-    Fault, ScenarioPolicy, ScenarioSpec, WorkloadMix,
+    outcome_json, outcome_line, run_grid, run_scenario, run_scenario_mode, summarize,
+    summary_line, Arrivals, Fault, ScenarioPolicy, ScenarioSpec, WorkloadMix,
 };
+use arcv::simkube::KernelMode;
 use arcv::util::json::{arr, num, obj, s, Json};
 use arcv::workloads::AppId;
 use std::time::Instant;
@@ -76,6 +77,40 @@ fn main() {
         );
     }
 
+    println!("\n=== kernel: event-driven clock vs 1 s-stepping on the fleet scenario ===\n");
+    let arcv_policy = ScenarioPolicy::Arcv(ArcvParams::default());
+    let t0 = Instant::now();
+    let lockstep_run = run_scenario_mode(&spec, arcv_policy, 42, KernelMode::Lockstep);
+    let kernel_lockstep_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let event_run = run_scenario_mode(&spec, arcv_policy, 42, KernelMode::EventDriven);
+    let kernel_event_secs = t0.elapsed().as_secs_f64();
+    let kernel_identical = lockstep_run.outcome == event_run.outcome
+        && lockstep_run.cluster.events.events == event_run.cluster.events.events;
+    let kernel_speedup = kernel_lockstep_secs / kernel_event_secs.max(1e-9);
+    let ticks = event_run.stats.sim_ticks;
+    println!(
+        "lockstep {kernel_lockstep_secs:.3}s  event {kernel_event_secs:.3}s over {ticks} \
+         sim-seconds -> {kernel_speedup:.2}x speedup, {} kernel events, results {}",
+        event_run.stats.events,
+        if kernel_identical { "bit-identical" } else { "DIVERGED" },
+    );
+    let kernel_json = obj(vec![
+        ("bench", s("scenario_fleet/kernel")),
+        ("sim_ticks", num(ticks as f64)),
+        ("kernel_events", num(event_run.stats.events as f64)),
+        ("ctl_wakes", num(event_run.stats.ctl_wakes as f64)),
+        ("lockstep_secs", num(kernel_lockstep_secs)),
+        ("event_secs", num(kernel_event_secs)),
+        ("speedup", num(kernel_speedup)),
+        ("events_per_sec", num(event_run.stats.events as f64 / kernel_event_secs.max(1e-9))),
+        ("ticks_per_sec_event", num(ticks as f64 / kernel_event_secs.max(1e-9))),
+        ("identical", Json::Bool(kernel_identical)),
+    ]);
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/BENCH_kernel_fleet.json", kernel_json.to_string_pretty())
+        .expect("write bench_out/BENCH_kernel_fleet.json");
+
     println!("\n=== parallel multi-seed executor: 8 ARC-V seeds, serial vs parallel ===\n");
     let seeds: Vec<u64> = (1..=8).collect();
     let grid_policies = [ScenarioPolicy::Arcv(ArcvParams::default())];
@@ -127,6 +162,7 @@ fn main() {
         ("parallel_identical", Json::Bool(identical)),
         ("stuck_pending_total", num((stuck_total + grid_stuck) as f64)),
         ("unfinished_total", num((unfinished_total + grid_unfinished) as f64)),
+        ("kernel", kernel_json),
         ("singles", arr(singles.iter().map(outcome_json).collect())),
     ]);
     println!("\nBENCH {}", bench_json.to_string_pretty());
@@ -151,6 +187,16 @@ fn main() {
             "FAIL: parallel speedup {speedup:.2}x below the {required:.2}x required \
              on {threads} threads"
         );
+        std::process::exit(1);
+    }
+    if !kernel_identical {
+        eprintln!("FAIL: event-driven kernel diverged from the 1 s-stepping reference");
+        std::process::exit(1);
+    }
+    // CI gate: never slower than the seed's per-second loop (target >= 5x
+    // on the single-app sweep; the fleet scenario reports its own ratio)
+    if kernel_speedup < 1.0 {
+        eprintln!("FAIL: event kernel slower than 1 s stepping ({kernel_speedup:.2}x)");
         std::process::exit(1);
     }
 }

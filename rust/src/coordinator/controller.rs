@@ -27,6 +27,24 @@ pub trait Tick {
     fn audit(&self) -> &[ActionRecord] {
         &[]
     }
+
+    /// The next tick (strictly after `cluster.now`) at which a `tick`
+    /// call could possibly act — the coordinator's declared cadence, fed
+    /// by its policy's decision intervals and observation needs. The
+    /// event kernel only delivers ticks then, plus at every OOM /
+    /// eviction / completion interrupt. The default — every tick — is
+    /// exactly the legacy polling loop, so coordinators that don't
+    /// declare a cadence (gang supervisors, the remote bridge, custom
+    /// impls) keep their behaviour unchanged under the kernel.
+    fn next_wake(&self, cluster: &Cluster) -> u64 {
+        cluster.now + 1
+    }
+
+    /// Whether this coordinator scrapes sampled metrics. `false` lets the
+    /// event kernel skip the sampling pipeline across coasted stretches.
+    fn wants_observe(&self) -> bool {
+        true
+    }
 }
 
 /// A coordinator driving one node-scoped policy through the API.
@@ -129,6 +147,14 @@ impl Default for Controller<PerPodAdapter> {
 impl<P: NodePolicy> Tick for Controller<P> {
     fn audit(&self) -> &[ActionRecord] {
         self.client.actions()
+    }
+
+    fn next_wake(&self, cluster: &Cluster) -> u64 {
+        self.policy.next_wake(cluster.now, cluster.metrics.period_secs)
+    }
+
+    fn wants_observe(&self) -> bool {
+        self.policy.wants_observe()
     }
 
     fn tick(&mut self, cluster: &mut Cluster) {

@@ -8,9 +8,12 @@ use crate::policy::fixed::FixedPolicy;
 use crate::policy::oracle::OraclePolicy;
 use crate::policy::vpa::{UpdateMode, VpaFullPolicy, VpaSimPolicy};
 use crate::simkube::api::{ApiClient, Outcome};
+use crate::simkube::clock::next_multiple;
 use crate::simkube::cluster::{Cluster, ClusterConfig};
+use crate::simkube::events::Event;
+use crate::simkube::kernel::{run_kernel, EventSource, KernelMode, KernelStats};
 use crate::simkube::node::Node;
-use crate::simkube::pod::PodPhase;
+use crate::simkube::pod::{PodId, PodPhase};
 use crate::simkube::resources::ResourceSpec;
 use crate::simkube::swap::SwapDevice;
 use crate::workloads::{build, AppId};
@@ -127,7 +130,89 @@ impl ExperimentConfig {
     }
 }
 
-#[derive(Clone, Debug)]
+/// Cap on retained points per report series. Collection decimates by
+/// stride doubling once the cap is reached, so unbounded-budget runs
+/// cannot grow memory without bound while short figure runs (well under
+/// the cap) keep full 5 s resolution.
+pub const SERIES_CAP: usize = 4096;
+
+/// Three aligned bounded report series, sampled on the metrics grid.
+/// Decimation is a pure function of push *times*, so the lockstep and
+/// event-driven kernels collect bit-identical series.
+struct SeriesSet {
+    stride: u64,
+    limit: Vec<(u64, f64)>,
+    usage: Vec<(u64, f64)>,
+    swap: Vec<(u64, f64)>,
+}
+
+impl SeriesSet {
+    fn new(stride: u64) -> Self {
+        Self {
+            stride: stride.max(1),
+            limit: Vec::new(),
+            usage: Vec::new(),
+            swap: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, t: u64, limit: f64, usage: f64, swap: f64) {
+        if t % self.stride != 0 {
+            return;
+        }
+        self.limit.push((t, limit));
+        self.usage.push((t, usage));
+        self.swap.push((t, swap));
+        if self.limit.len() >= SERIES_CAP {
+            self.stride *= 2;
+            let s = self.stride;
+            self.limit.retain(|(t, _)| t % s == 0);
+            self.usage.retain(|(t, _)| t % s == 0);
+            self.swap.retain(|(t, _)| t % s == 0);
+        }
+    }
+
+    /// Next tick the sampler needs (the harness's one timed event kind).
+    fn next_tick(&self, now: u64) -> u64 {
+        next_multiple(now, self.stride)
+    }
+}
+
+/// The harness as a kernel event source: its only events are the series
+/// sample points; the run ends when the workload pod reaches a terminal
+/// phase (or the kernel hits the tick budget).
+struct HarnessSource {
+    pod: PodId,
+    start: u64,
+    series: SeriesSet,
+}
+
+impl<C: Tick + ?Sized> EventSource<C> for HarnessSource {
+    fn next_event(&mut self, cluster: &Cluster) -> Option<u64> {
+        Some(self.series.next_tick(cluster.now))
+    }
+
+    fn fire_post(&mut self, cluster: &mut Cluster) {
+        if cluster.now == self.start {
+            return; // the legacy loop never sampled before the first step
+        }
+        let p = cluster.pod(self.pod);
+        if p.phase == PodPhase::Running {
+            let lim = if p.effective_limit_gb.is_finite() {
+                p.effective_limit_gb
+            } else {
+                p.usage.usage_gb
+            };
+            self.series.push(cluster.now, lim, p.usage.usage_gb, p.usage.swap_gb);
+        }
+    }
+
+    fn done(&mut self, cluster: &Cluster) -> bool {
+        cluster.all_done()
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunResult {
     pub app: AppId,
     pub policy: String,
@@ -153,8 +238,24 @@ pub struct RunResult {
     pub swap_series: Vec<(u64, f64)>,
 }
 
-/// Run one experiment to completion (or budget).
+/// Everything one experiment produces: the reportable result plus the
+/// full event log and kernel counters (what the equivalence suite and the
+/// perf benches compare across kernel modes).
+pub struct RunOutput {
+    pub result: RunResult,
+    pub events: Vec<Event>,
+    pub stats: KernelStats,
+}
+
+/// Run one experiment to completion (or budget) on the event-driven
+/// kernel (`rust/tests/kernel_equivalence.rs` proves it bit-identical to
+/// the 1 s-stepping reference, [`KernelMode::Lockstep`]).
 pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
+    run_with_mode(cfg, kind, KernelMode::EventDriven).result
+}
+
+/// [`run`] with an explicit kernel mode.
+pub fn run_with_mode(cfg: &ExperimentConfig, kind: PolicyKind, mode: KernelMode) -> RunOutput {
     let model = build(cfg.app, cfg.seed);
     let exec_secs = model.exec_secs;
     let max_gb = model.max_gb;
@@ -216,28 +317,15 @@ pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
         }
     };
 
-    // Drive, recording series at sampling ticks.
-    let mut limit_series = Vec::new();
-    let mut usage_series = Vec::new();
-    let mut swap_series = Vec::new();
+    // Drive through the kernel; the series sampler is the harness's only
+    // timed event source (metrics-grid points, decimated past SERIES_CAP).
     let start = cluster.now;
-    while cluster.now - start < budget && !cluster.all_done() {
-        cluster.step();
-        controller.tick(&mut cluster);
-        if cluster.metrics.is_sampling_tick(cluster.now) {
-            let p = cluster.pod(pod);
-            if p.phase == PodPhase::Running {
-                let lim = if p.effective_limit_gb.is_finite() {
-                    p.effective_limit_gb
-                } else {
-                    p.usage.usage_gb
-                };
-                limit_series.push((cluster.now, lim));
-                usage_series.push((cluster.now, p.usage.usage_gb));
-                swap_series.push((cluster.now, p.usage.swap_gb));
-            }
-        }
-    }
+    let mut src = HarnessSource {
+        pod,
+        start,
+        series: SeriesSet::new(cluster.metrics.period_secs),
+    };
+    let stats = run_kernel(mode, &mut cluster, &mut *controller, &mut src, start + budget);
 
     let audit = controller.audit();
     let api_applied = audit
@@ -249,7 +337,7 @@ pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
         .filter(|a| a.outcome == Outcome::Rejected)
         .count();
     let p = cluster.pod(pod);
-    RunResult {
+    let result = RunResult {
         app: cfg.app,
         policy: label,
         wall_secs: cluster.now - start,
@@ -260,9 +348,14 @@ pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
         completed: p.is_done(),
         api_applied,
         api_rejected,
-        limit_series,
-        usage_series,
-        swap_series,
+        limit_series: src.series.limit,
+        usage_series: src.series.usage,
+        swap_series: src.series.swap,
+    };
+    RunOutput {
+        result,
+        events: cluster.events.events,
+        stats,
     }
 }
 

@@ -4,6 +4,8 @@ pub mod experiment;
 pub mod report;
 pub mod sweep;
 
-pub use experiment::{run, ExperimentConfig, PolicyKind, RunResult, SwapKind};
+pub use experiment::{
+    run, run_with_mode, ExperimentConfig, PolicyKind, RunOutput, RunResult, SwapKind,
+};
 pub use report::{ratio_row, ratio_table, ratios_csv, run_line, RatioRow};
 pub use sweep::{stability_variants, sweep_params, window_variants, SweepPoint};

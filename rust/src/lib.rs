@@ -8,11 +8,14 @@
 //! HLO-text artifacts executed through [`runtime`].
 //!
 //! Quick map:
-//! - [`simkube`] — discrete-time Kubernetes-like cluster (kubelet, QoS,
-//!   in-place resize with §3.2 delays, swap, scheduler, metrics pipeline)
-//!   fronted by the typed `simkube::api::ApiClient`: admission chain +
-//!   dry-run, resourceVersion conflict detection, a PLEG-style informer
-//!   cache, and a structured audit log — the *only* mutation path;
+//! - [`simkube`] — Kubernetes-like cluster (kubelet, QoS, in-place
+//!   resize with §3.2 delays, swap, scheduler, metrics pipeline) fronted
+//!   by the typed `simkube::api::ApiClient`: admission chain + dry-run,
+//!   resourceVersion conflict detection, a PLEG-style informer cache,
+//!   and a structured audit log — the *only* mutation path; advanced by
+//!   the discrete-event `simkube::kernel` (one event-driven clock under
+//!   both the harness and the scenario engine, bit-identical to 1 s
+//!   stepping);
 //! - [`workloads`] — the nine HPC application memory models of Table 1;
 //! - [`policy`] — the node-scoped `NodePolicy` surface (batched
 //!   `PodAction`s) with `PerPodAdapter` lifting the per-pod kernels:

@@ -17,6 +17,7 @@ use super::params::ArcvParams;
 use super::state::{PodState, STATE_LEN};
 use crate::policy::{Action, NodePolicy, PodAction};
 use crate::simkube::api::PodView;
+use crate::simkube::clock::next_multiple;
 use crate::simkube::metrics::Sample;
 use crate::simkube::pod::PodId;
 use crate::util::ring::RingBuffer;
@@ -221,6 +222,25 @@ impl NodePolicy for FleetPolicy {
 
     fn wants_decision(&self, now: u64) -> bool {
         now >= self.last_decision + self.params.decision_interval_secs
+    }
+
+    /// Fleet cadence: the 5 s scrape grid (window feed + eligibility
+    /// flips), the decision interval, and each pod's init-grace expiry.
+    fn next_wake(&self, now: u64, sampling_period_secs: u64) -> u64 {
+        let mut wake = next_multiple(now, sampling_period_secs);
+        let next_decision = self.last_decision + self.params.decision_interval_secs;
+        if next_decision > now {
+            wake = wake.min(next_decision);
+        }
+        for m in &self.managed {
+            if let Some(t0) = m.started_at {
+                let init_end = t0 + self.params.init_phase_secs;
+                if init_end > now {
+                    wake = wake.min(init_end);
+                }
+            }
+        }
+        wake
     }
 
     fn decide(&mut self, now: u64, pods: &[&PodView]) -> Vec<PodAction> {

@@ -6,6 +6,7 @@ use super::params::ArcvParams;
 use super::signals::Signal;
 use super::state::{PodState, State};
 use crate::policy::{Action, VerticalPolicy};
+use crate::simkube::clock::next_multiple;
 use crate::simkube::metrics::Sample;
 use crate::util::ring::RingBuffer;
 
@@ -97,6 +98,30 @@ impl VerticalPolicy for ArcvPolicy {
     fn recommendation_gb(&self) -> Option<f64> {
         Some(self.state.rec)
     }
+
+    /// ARC-V's cadence: it must see every 5 s scrape (the window feed) and
+    /// can only act once `decision_interval_secs` elapsed since its last
+    /// decision — every gate in [`Self::decide`] flips on one of those two
+    /// grids, so waking on them reproduces per-tick polling exactly.
+    fn next_wake(&self, now: u64, sampling_period_secs: u64) -> u64 {
+        // the first tick every decide() gate passes is the maximum of the
+        // three gate thresholds, and each threshold lies on one of these
+        // grids — so waking on them reproduces per-tick polling exactly
+        let mut wake = next_multiple(now, sampling_period_secs);
+        let next_decision = self.last_decision + self.params.decision_interval_secs;
+        if next_decision > now {
+            wake = wake.min(next_decision);
+        }
+        if let Some(t0) = self.started_at {
+            // the init-grace expiry is its own grid point (it need not be
+            // a multiple of either period for non-default params)
+            let init_end = t0 + self.params.init_phase_secs;
+            if init_end > now {
+                wake = wake.min(init_end);
+            }
+        }
+        wake
+    }
 }
 
 #[cfg(test)]
@@ -174,6 +199,39 @@ mod tests {
         assert_eq!(p.machine_state(), State::Growing);
         // rec must stay ahead of live usage the whole time
         assert!(p.state().rec >= last * 0.95, "rec={} last={last}", p.state().rec);
+    }
+
+    #[test]
+    fn declared_wakes_reproduce_per_tick_polling() {
+        // the event kernel only calls decide() at next_wake() ticks; the
+        // resulting action stream must equal per-tick polling exactly
+        let params = ArcvParams::default();
+        let mut polled = ArcvPolicy::new(10.0, params);
+        let mut waked = ArcvPolicy::new(10.0, params);
+        let mut polled_acts = Vec::new();
+        let mut waked_acts = Vec::new();
+        let mut wake_at = waked.next_wake(0, 5);
+        for now in 1..=1500u64 {
+            if now % 5 == 0 {
+                polled.observe(now, &sample(2.0, 0.0));
+            }
+            let a = polled.decide(now);
+            if a != Action::None {
+                polled_acts.push((now, a));
+            }
+            if now >= wake_at {
+                if now % 5 == 0 {
+                    waked.observe(now, &sample(2.0, 0.0));
+                }
+                let b = waked.decide(now);
+                if b != Action::None {
+                    waked_acts.push((now, b));
+                }
+                wake_at = waked.next_wake(now, 5);
+            }
+        }
+        assert!(!polled_acts.is_empty(), "the flat app must get shrunk");
+        assert_eq!(polled_acts, waked_acts);
     }
 
     #[test]

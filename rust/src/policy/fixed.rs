@@ -35,6 +35,16 @@ impl VerticalPolicy for FixedPolicy {
     fn recommendation_gb(&self) -> Option<f64> {
         Some(self.limit_gb)
     }
+
+    /// Never acts and never reads metrics: the kernel can skip it (and the
+    /// whole sampling pipeline) outright. OOM interrupts still arrive.
+    fn next_wake(&self, _now: u64, _sampling_period_secs: u64) -> u64 {
+        u64::MAX
+    }
+
+    fn wants_observe(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

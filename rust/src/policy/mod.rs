@@ -59,6 +59,24 @@ pub trait VerticalPolicy: Send {
 
     /// Current recommendation (GB) for reporting, if the policy has one.
     fn recommendation_gb(&self) -> Option<f64>;
+
+    /// The next tick (strictly after `now`) at which a `decide`/`observe`
+    /// call could possibly do anything — the policy's declared cadence.
+    /// The event kernel only wakes the controller then (plus on OOM /
+    /// eviction / completion interrupts, which arrive regardless).
+    /// Default: every tick, i.e. exactly the legacy polling behaviour.
+    /// `u64::MAX` means "purely event-driven — never poll me".
+    fn next_wake(&self, now: u64, _sampling_period_secs: u64) -> u64 {
+        now + 1
+    }
+
+    /// Whether this policy consumes scraped metrics (`observe` is
+    /// stateful). Policies returning `false` let the kernel skip the
+    /// sampling pipeline entirely on coasted stretches. Default: true
+    /// (conservative).
+    fn wants_observe(&self) -> bool {
+        true
+    }
 }
 
 /// One decided action of a node-scoped batch: which pod, what to do, why,
@@ -107,6 +125,19 @@ pub trait NodePolicy {
     /// override this so the coordinator skips materializing pod views on
     /// off-interval ticks. Default: always.
     fn wants_decision(&self, _now: u64) -> bool {
+        true
+    }
+
+    /// The next tick (strictly after `now`) at which this policy could
+    /// act — the node-scoped analogue of [`VerticalPolicy::next_wake`].
+    /// Default: every tick (legacy polling).
+    fn next_wake(&self, now: u64, _sampling_period_secs: u64) -> u64 {
+        now + 1
+    }
+
+    /// Whether this policy consumes scraped metrics (see
+    /// [`VerticalPolicy::wants_observe`]).
+    fn wants_observe(&self) -> bool {
         true
     }
 
@@ -217,6 +248,20 @@ impl NodePolicy for PerPodAdapter {
 
     fn recommendation_gb(&self, pod: PodId) -> Option<f64> {
         self.policy_of(pod)?.recommendation_gb()
+    }
+
+    fn next_wake(&self, now: u64, sampling_period_secs: u64) -> u64 {
+        // earliest cadence across the hosted kernels; an empty adapter
+        // never needs waking (interrupts still arrive event-driven)
+        let mut wake = u64::MAX;
+        for (_, p) in &self.entries {
+            wake = wake.min(p.next_wake(now, sampling_period_secs));
+        }
+        wake.max(now + 1)
+    }
+
+    fn wants_observe(&self) -> bool {
+        self.entries.iter().any(|(_, p)| p.wants_observe())
     }
 }
 

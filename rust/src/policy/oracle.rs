@@ -71,6 +71,17 @@ impl VerticalPolicy for OraclePolicy {
             Some(self.current)
         }
     }
+
+    /// Interval-gated and trace-driven (no metrics): `decide` mutates on
+    /// the first call at/after `last_decision + decision_interval` and is
+    /// pure before it, so that single tick is the only wake needed.
+    fn next_wake(&self, now: u64, _sampling_period_secs: u64) -> u64 {
+        (self.last_decision + self.decision_interval).max(now + 1)
+    }
+
+    fn wants_observe(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -55,6 +55,17 @@ impl VerticalPolicy for VpaSimPolicy {
     fn recommendation_gb(&self) -> Option<f64> {
         Some(self.rec_gb)
     }
+
+    /// Purely event-driven: static between OOMs (`decide` is always None
+    /// and `observe` is a no-op), so the kernel never needs to poll it —
+    /// OOM interrupts arrive regardless of cadence.
+    fn next_wake(&self, _now: u64, _sampling_period_secs: u64) -> u64 {
+        u64::MAX
+    }
+
+    fn wants_observe(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

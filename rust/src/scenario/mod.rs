@@ -13,9 +13,11 @@
 //! - [`arrival`] — deterministic schedule expansion with per-job RNG
 //!   streams derived from `(run seed, job index)`, so serial and parallel
 //!   executions are bit-identical;
-//! - [`engine`] — the churn executor: mid-run submission through the
-//!   `ApiClient`, departures freeing capacity, a per-tick requeue loop
-//!   for Pending pods, and fault events flowing through the `EventLog`;
+//! - [`engine`] — the churn executor, a thin event source over the
+//!   discrete-event [`kernel`](crate::simkube::kernel): mid-run
+//!   submission through the `ApiClient`, departures freeing capacity, an
+//!   epoch-gated requeue loop for Pending pods, and fault events flowing
+//!   through the `EventLog`;
 //! - [`outcome`] — fleet-level outcomes: OOM-kill rate, jobs completed,
 //!   completion slowdown vs. isolated runtime (p50/p99), GB·h allocated
 //!   vs. used, total Pending wait;
@@ -32,7 +34,7 @@ pub mod runner;
 pub mod spec;
 
 pub use arrival::{build_schedule, JobSpec, STREAM_FAULTS, STREAM_JOB};
-pub use engine::{run_scenario, JobRecord, LeakProcess, ScenarioRun};
+pub use engine::{run_scenario, run_scenario_mode, JobRecord, LeakProcess, ScenarioRun};
 pub use outcome::{outcome_json, outcome_line, ScenarioOutcome};
 pub use runner::{run_grid, summarize, summary_line, GridSummary};
 pub use spec::{Arrivals, Fault, NodePool, ScenarioPolicy, ScenarioSpec, WorkloadMix};

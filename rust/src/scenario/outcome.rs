@@ -23,6 +23,10 @@ pub struct ScenarioOutcome {
     /// `max_ticks` first — load the scenario silently shed, reported so a
     /// truncated run can't masquerade as a completed one.
     pub jobs_dropped: usize,
+    /// Creates the API refused at admission. The run survives them (the
+    /// engine used to panic here); they are audited by the engine's
+    /// `ApiClient` and tallied so shed load stays visible.
+    pub jobs_rejected: usize,
     /// Pods still Pending when the run stopped (queue starvation).
     pub stuck_pending: usize,
     /// Pods in any non-Succeeded state at stop (includes stuck_pending).
@@ -92,6 +96,7 @@ pub fn collect(
     cluster: &Cluster,
     jobs: &[JobRecord],
     jobs_dropped: usize,
+    jobs_rejected: usize,
     api_applied: usize,
     api_rejected: usize,
 ) -> ScenarioOutcome {
@@ -157,6 +162,7 @@ pub fn collect(
         jobs_submitted: jobs.len(),
         jobs_completed: completed,
         jobs_dropped,
+        jobs_rejected,
         stuck_pending: stuck,
         unfinished,
         oom_kills: ooms,
@@ -180,7 +186,7 @@ pub fn outcome_line(o: &ScenarioOutcome) -> String {
     format!(
         "{:<18} {:<8} seed={:<4} jobs {:>3}/{:<3} wall={:>6}s  slowdown p50/p99 {:>5.2}/{:>5.2}  \
          alloc {:>8.2} GB·h used {:>8.2} GB·h  ooms={} kills={} drains={} evict={} \
-         wait={}s stuck={} dropped={}",
+         wait={}s stuck={} dropped={} rejected={}",
         o.scenario,
         o.policy,
         o.seed,
@@ -198,6 +204,7 @@ pub fn outcome_line(o: &ScenarioOutcome) -> String {
         o.pending_wait_secs,
         o.stuck_pending,
         o.jobs_dropped,
+        o.jobs_rejected,
     )
 }
 
@@ -211,6 +218,7 @@ pub fn outcome_json(o: &ScenarioOutcome) -> Json {
         ("jobs_submitted", num(o.jobs_submitted as f64)),
         ("jobs_completed", num(o.jobs_completed as f64)),
         ("jobs_dropped", num(o.jobs_dropped as f64)),
+        ("jobs_rejected", num(o.jobs_rejected as f64)),
         ("stuck_pending", num(o.stuck_pending as f64)),
         ("unfinished", num(o.unfinished as f64)),
         ("oom_kills", num(o.oom_kills as f64)),
@@ -242,6 +250,7 @@ mod tests {
             jobs_submitted: 10,
             jobs_completed: 9,
             jobs_dropped: 0,
+            jobs_rejected: 0,
             stuck_pending: 1,
             unfinished: 1,
             oom_kills: 2,

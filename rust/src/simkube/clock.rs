@@ -1,0 +1,120 @@
+//! The simulation clock: a time-indexed priority queue of typed events.
+//!
+//! Event sources (the scenario engine's arrival schedule and fault
+//! injectors, future churn generators) seed the queue up front; the
+//! kernel asks for the next due time and pops everything due at the
+//! current tick. Ordering is deterministic: events fire by (time,
+//! insertion order), so two events at the same tick dispatch in the order
+//! they were scheduled — exactly how the legacy per-tick loops visited
+//! them.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A typed, scheduled occurrence. The payload is an index into the
+/// source's own tables (job schedules, fault lists), keeping the queue
+/// itself `Copy`-cheap. The derived order is never consulted in practice
+/// — the heap's `(time, seq)` prefix is already unique — it only lets
+/// the event live inside the heap key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TimedEvent {
+    /// Submit job `schedule[i]`.
+    JobArrival(usize),
+    /// Fire fault injector `faults[i]`.
+    FaultFire(usize),
+    /// Source-defined wake-up (spare kind for future event sources).
+    Wake(u64),
+}
+
+/// Min-heap of `(at, seq, event)`, popped in deterministic (time,
+/// insertion) order.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    heap: BinaryHeap<Reverse<(u64, u64, TimedEvent)>>,
+    seq: u64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `ev` at tick `at`.
+    pub fn schedule(&mut self, at: u64, ev: TimedEvent) {
+        self.heap.push(Reverse((at, self.seq, ev)));
+        self.seq += 1;
+    }
+
+    /// The earliest scheduled tick, if any events remain.
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse((at, _, _))| *at)
+    }
+
+    /// Pop the next event if it is due at or before `now`.
+    pub fn pop_due(&mut self, now: u64) -> Option<(u64, TimedEvent)> {
+        let due = matches!(self.heap.peek(), Some(Reverse((at, _, _))) if *at <= now);
+        if !due {
+            return None;
+        }
+        let Reverse((at, _, ev)) = self.heap.pop().expect("peeked entry exists");
+        Some((at, ev))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// The first tick strictly after `now` that lands on `period`'s grid
+/// (ticks where `t % period == 0`) — policy cadences and the metrics
+/// sampler share this helper.
+pub fn next_multiple(now: u64, period: u64) -> u64 {
+    let p = period.max(1);
+    (now / p + 1) * p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_then_insertion_order() {
+        let mut c = SimClock::new();
+        c.schedule(10, TimedEvent::JobArrival(0));
+        c.schedule(5, TimedEvent::JobArrival(1));
+        c.schedule(10, TimedEvent::FaultFire(0));
+        assert_eq!(c.peek_time(), Some(5));
+        assert_eq!(c.pop_due(4), None, "nothing due before t=5");
+        assert_eq!(c.pop_due(5), Some((5, TimedEvent::JobArrival(1))));
+        // both t=10 events due at once: scheduled order wins
+        assert_eq!(c.pop_due(10), Some((10, TimedEvent::JobArrival(0))));
+        assert_eq!(c.pop_due(10), Some((10, TimedEvent::FaultFire(0))));
+        assert!(c.is_empty());
+        assert_eq!(c.pop_due(100), None);
+    }
+
+    #[test]
+    fn len_tracks_scheduling() {
+        let mut c = SimClock::new();
+        assert_eq!(c.len(), 0);
+        c.schedule(1, TimedEvent::Wake(7));
+        c.schedule(2, TimedEvent::Wake(8));
+        assert_eq!(c.len(), 2);
+        let (at, ev) = c.pop_due(3).unwrap();
+        assert_eq!((at, ev), (1, TimedEvent::Wake(7)));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn next_multiple_lands_on_grid() {
+        assert_eq!(next_multiple(0, 5), 5);
+        assert_eq!(next_multiple(4, 5), 5);
+        assert_eq!(next_multiple(5, 5), 10);
+        assert_eq!(next_multiple(7, 1), 8);
+        assert_eq!(next_multiple(3, 0), 4, "period 0 degrades to every tick");
+    }
+}

@@ -1,6 +1,7 @@
 //! The cluster: nodes + pods + kubelet + metrics + events, advanced on a
 //! discrete 1-second clock. This is the substrate every experiment runs on.
 
+use super::clock::next_multiple;
 use super::events::{EventKind, EventLog, NODE_EVENT};
 use super::kubelet::{IoState, Kubelet, KubeletConfig};
 use super::metrics::MetricsStore;
@@ -45,6 +46,42 @@ pub struct Cluster {
     pub metrics: MetricsStore,
     pub events: EventLog,
     pub now: u64,
+    /// Bumped on every placement-relevant change (bind/unbind, reservation
+    /// adjust, cordon, eviction, requeue activity). The event kernel's
+    /// scenario adapter compares epochs to know when another
+    /// [`Self::schedule_pending`] pass could possibly do something —
+    /// an unchanged epoch proves the pass would be a no-op.
+    pub sched_epoch: u64,
+}
+
+/// How [`Cluster::advance_to`] returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advance {
+    /// The clock reached the requested target tick.
+    Reached,
+    /// Stopped early: an OOM kill, pressure eviction, pod completion, or
+    /// restart-latency resume (`PodStarted`) fired at `cluster.now` — the
+    /// driver gets control at exactly the tick the legacy per-second
+    /// loops would have reacted on.
+    Interrupted,
+}
+
+/// Longest window a phase-local slope bound is probed (and therefore
+/// coasted) over in one jump; longer quiescent stretches simply coast in
+/// several jumps. Pods-free stretches (everything Pending/terminal) are
+/// not slope-bounded and jump without this cap.
+const COAST_PROBE_TICKS: u64 = 64;
+
+/// Options for [`Cluster::advance_to`].
+#[derive(Clone, Copy, Debug)]
+pub struct AdvanceOpts {
+    /// `true`: jump quiescent stretches (the event kernel). `false`:
+    /// exact 1 s stepping (the legacy reference).
+    pub event_driven: bool,
+    /// Whether coast landings on metric sampling ticks must record
+    /// samples (required whenever any policy consumes scraped metrics;
+    /// per-second stepping always records, exactly like `step`).
+    pub sample_metrics: bool,
 }
 
 impl Cluster {
@@ -63,6 +100,7 @@ impl Cluster {
             metrics,
             events: EventLog::new(),
             now: 0,
+            sched_epoch: 0,
         }
     }
 
@@ -79,6 +117,7 @@ impl Cluster {
     /// share this so the placement transition lives in exactly one place.
     fn start_on(&mut self, id: PodId, n: usize) {
         let now = self.now;
+        self.sched_epoch += 1;
         let request = self.pods[id].spec.memory_request_gb();
         self.nodes[n].bind(id, request);
         let pod = &mut self.pods[id];
@@ -105,6 +144,7 @@ impl Cluster {
         match self.scheduler.place(&self.nodes, request) {
             Some(n) => self.start_on(id, n),
             None => {
+                self.sched_epoch += 1; // a new waiting pod arms the requeue loop
                 self.events.push(
                     self.now,
                     id,
@@ -124,6 +164,7 @@ impl Cluster {
     /// reclaim, so the new limit becomes effective immediately.
     pub fn patch_pod_memory(&mut self, id: PodId, mem_gb: f64) {
         let now = self.now;
+        self.sched_epoch += 1; // reservation may shrink → queued pods may fit
         let running = self.pods[id].phase == PodPhase::Running;
         let pod = &mut self.pods[id];
         let old_request = pod.spec.memory_request_gb();
@@ -152,6 +193,7 @@ impl Cluster {
     /// evict + recreate). Progress is lost (no checkpointing).
     pub fn restart_pod(&mut self, id: PodId, new_mem_gb: f64) {
         let now = self.now;
+        self.sched_epoch += 1;
         let ready_at = now + self.config.restart_latency_secs;
         let pod = &mut self.pods[id];
         let old_request = pod.spec.memory_request_gb();
@@ -213,6 +255,7 @@ impl Cluster {
     /// Returns how many pods were displaced.
     pub fn drain_node(&mut self, node: usize) -> usize {
         let now = self.now;
+        self.sched_epoch += 1;
         self.nodes[node].cordon();
         let victims: Vec<PodId> = self.nodes[node].pods.clone();
         for &id in &victims {
@@ -239,6 +282,7 @@ impl Cluster {
         }
         let node = self.pods[id].node.expect("running pod is bound");
         let req = self.pods[id].spec.memory_request_gb();
+        self.sched_epoch += 1;
         self.nodes[node].unbind(id, req);
         self.displace(id, node);
         self.events.push(now, id, EventKind::PodKilled { node });
@@ -273,6 +317,7 @@ impl Cluster {
                 Self::fresh_container(pod);
                 pod.phase = PodPhase::Pending;
                 pod.restarts += 1;
+                self.sched_epoch += 1; // converted → next pass may place it
                 self.events.push(now, id, EventKind::PodRequeued);
                 continue;
             }
@@ -285,6 +330,7 @@ impl Cluster {
                     // churn-induced replacements cost what policy-induced
                     // ones do. PodStarted is emitted when the latency
                     // expires (the step() restart path).
+                    self.sched_epoch += 1;
                     self.nodes[n].bind(id, request);
                     self.pods[id].node = Some(n);
                     self.events.push(now, id, EventKind::PodScheduled { node: n });
@@ -354,6 +400,7 @@ impl Cluster {
             if pods[id].phase == PodPhase::Succeeded {
                 let req = pods[id].spec.memory_request_gb();
                 nodes[node_idx].unbind(id, req);
+                self.sched_epoch += 1;
             }
         }
 
@@ -389,6 +436,7 @@ impl Cluster {
                 self.pods[v].phase = PodPhase::Evicted;
                 let req = self.pods[v].spec.memory_request_gb();
                 self.nodes[n].unbind(v, req);
+                self.sched_epoch += 1;
                 self.events
                     .push(now, v, EventKind::Evicted { node: n, qos_rank });
             }
@@ -396,10 +444,19 @@ impl Cluster {
 
         // metrics sampling
         if self.metrics.is_sampling_tick(now) {
-            for pod in &self.pods {
-                if pod.phase == PodPhase::Running {
-                    self.metrics.record(now, pod);
-                }
+            self.sample_metrics_now();
+        }
+    }
+
+    /// Record the cAdvisor samples for every Running pod at the current
+    /// tick — shared by `step` (per-second path) and coast landings in
+    /// [`Self::advance_to`], so both clocks feed policies identical
+    /// windows.
+    fn sample_metrics_now(&mut self) {
+        let now = self.now;
+        for pod in &self.pods {
+            if pod.phase == PodPhase::Running {
+                self.metrics.record(now, pod);
             }
         }
     }
@@ -415,6 +472,188 @@ impl Cluster {
             }
         }
         self.now - start
+    }
+
+    /// Advance the cluster clock to `target`, stopping early (with
+    /// [`Advance::Interrupted`]) at the exact tick an OOM kill, pressure
+    /// eviction, or pod completion fires so the driver can react on the
+    /// same tick the legacy per-second loops did.
+    ///
+    /// With `opts.event_driven`, quiescent stretches — every running pod
+    /// provably away from its limit (per the [`MemoryProcess::
+    /// max_slope_gb_per_sec`] contract), no swap residency, no I/O debt,
+    /// no pending resize, no restart in flight, every node provably under
+    /// its eviction threshold — are coasted in one jump: progress and the
+    /// footprint integrals accumulate term-by-term through
+    /// [`MemoryProcess::accumulate_usage`], bit-identical to stepping,
+    /// while the per-tick scans (restart queue, eviction pass, scheduler,
+    /// metrics check) are skipped entirely. Anywhere quiescence cannot be
+    /// proven the clock falls back to exact 1 s [`Self::step`]s.
+    pub fn advance_to(&mut self, target: u64, opts: AdvanceOpts) -> Advance {
+        while self.now < target {
+            let h = if opts.event_driven {
+                self.coast_horizon(target, opts.sample_metrics)
+            } else {
+                0
+            };
+            if h >= 2 {
+                self.coast(h);
+                if opts.sample_metrics && self.metrics.is_sampling_tick(self.now) {
+                    self.sample_metrics_now();
+                }
+            } else {
+                let seen = self.events.events.len();
+                self.step();
+                // PodStarted is in the interrupt set because a restart-
+                // latency expiry can resume a pod whose (frozen) decision
+                // interval is already overdue: the legacy poll acted on
+                // that exact tick, so the controller must wake then too
+                let interrupted = self.events.events[seen..].iter().any(|e| {
+                    matches!(
+                        e.kind,
+                        EventKind::OomKilled { .. }
+                            | EventKind::Evicted { .. }
+                            | EventKind::PodCompleted
+                            | EventKind::PodStarted
+                    )
+                });
+                if interrupted {
+                    return Advance::Interrupted;
+                }
+            }
+        }
+        Advance::Reached
+    }
+
+    /// How many ticks (≥ 2, else 0) the cluster can provably coast from
+    /// `now` without any per-second work becoming observable. Every bound
+    /// here is conservative: when in doubt the answer is 0 and
+    /// [`Self::advance_to`] falls back to exact stepping.
+    fn coast_horizon(&self, target: u64, sample_metrics: bool) -> u64 {
+        if !self.restarting.is_empty() {
+            return 0; // restart-latency expiries are per-second events
+        }
+        let mut h = target.saturating_sub(self.now);
+        if sample_metrics {
+            // never skip a sampling tick someone scrapes
+            h = h.min(next_multiple(self.now, self.metrics.period_secs) - self.now);
+        }
+        if h < 2 {
+            return 0;
+        }
+        for pod in &self.pods {
+            if pod.phase != PodPhase::Running {
+                continue; // idle pods have no per-second behaviour
+            }
+            // any swap / resize / fractional-progress state falls back to
+            // stepping: those paths have per-second kubelet semantics
+            if self.io[pod.id].debt_secs != 0.0
+                || pod.usage.swap_gb != 0.0
+                || pod.pending_resize.is_some()
+                || pod.progress_secs.fract() != 0.0
+                || pod.wall_running_secs == 0
+            {
+                return 0;
+            }
+            let lim = pod.effective_limit_gb;
+            if !lim.is_finite() {
+                return 0; // BestEffort accounting integrates usage per tick
+            }
+            // phase-local slope over a bounded probe window (the bound is
+            // only valid inside it, so the coast is capped there too)
+            h = h.min(COAST_PROBE_TICKS);
+            let slope = pod.process.max_slope_over(pod.progress_secs, h);
+            if !slope.is_finite() || slope < 0.0 {
+                return 0; // no slope contract → exact stepping
+            }
+            let v0 = pod.usage.usage_gb;
+            if v0 >= lim {
+                return 0;
+            }
+            // completion: the pod finishes on the step where progress
+            // reaches duration; the coast must stop strictly before it
+            let rem = pod.process.duration_secs() - pod.progress_secs;
+            let k_done = rem.max(0.0).ceil() as u64;
+            if k_done < 2 {
+                return 0;
+            }
+            h = h.min(k_done - 1);
+            // limit crossing: usage is confined to v0 + slope·k, so no
+            // OOM / swap-out before k_lim (−1 absorbs division rounding)
+            if slope > 0.0 {
+                let k_lim = ((lim - v0) / slope).floor();
+                if k_lim < 2.0 {
+                    return 0;
+                }
+                h = h.min((k_lim as u64).saturating_sub(1));
+            }
+            if h < 2 {
+                return 0;
+            }
+        }
+        // node pressure: worst-case Σ rss (≤ Σ v0 + Σ slope·k) must stay
+        // within capacity, else the eviction scan must run per second
+        for node in &self.nodes {
+            let mut v_sum = 0.0;
+            let mut slope_sum = 0.0;
+            let mut any_running = false;
+            for &id in &node.pods {
+                let pod = &self.pods[id];
+                if pod.phase != PodPhase::Running {
+                    continue;
+                }
+                any_running = true;
+                v_sum += pod.usage.usage_gb;
+                // h is already within every pod's probe window here
+                slope_sum += pod.process.max_slope_over(pod.progress_secs, h);
+            }
+            if !any_running {
+                continue;
+            }
+            if v_sum > node.capacity_gb {
+                return 0;
+            }
+            if slope_sum > 0.0 {
+                let k_ev = ((node.capacity_gb - v_sum) / slope_sum).floor();
+                if k_ev < 2.0 {
+                    return 0;
+                }
+                h = h.min((k_ev as u64).saturating_sub(1));
+            }
+            if h < 2 {
+                return 0;
+            }
+        }
+        h
+    }
+
+    /// Jump the clock `h` ticks across a proven-quiescent window. Each
+    /// running pod's progress advances exactly as `h` repeated `+1.0`
+    /// steps would (progress is integral here — a coast precondition),
+    /// and the footprint integrals accumulate term-by-term via
+    /// [`MemoryProcess::accumulate_usage`], so the resulting state is
+    /// bit-identical to per-second stepping.
+    fn coast(&mut self, h: u64) {
+        self.now += h;
+        for pod in &mut self.pods {
+            if pod.phase != PodPhase::Running {
+                continue;
+            }
+            let p0 = pod.progress_secs;
+            let lim = pod.effective_limit_gb;
+            let (process, used) = (&pod.process, &mut pod.used_gb_secs);
+            let last = process.accumulate_usage(p0, h, used);
+            // the provisioned integral adds the (constant) limit once per
+            // tick — repeated adds, so rounding matches the 1 s loop
+            for _ in 0..h {
+                pod.provisioned_gb_secs += lim;
+            }
+            pod.progress_secs = p0 + h as f64;
+            pod.wall_running_secs += h;
+            pod.usage.usage_gb = last;
+            pod.usage.rss_gb = last.min(lim).max(0.0);
+            // swap_gb stays 0 (a coast precondition)
+        }
     }
 
     pub fn node_of(&self, id: PodId) -> Option<&Node> {
@@ -637,6 +876,57 @@ mod tests {
         c.run_until(c.config.restart_latency_secs + 1, |_| false);
         assert!(c.pod(be).is_running());
         assert!(c.pod(g).is_running(), "guaranteed pod unaffected");
+    }
+
+    #[test]
+    fn event_advance_matches_stepping_bitwise() {
+        // the coast fast path must be indistinguishable from per-second
+        // stepping: same events, same tick, bit-identical integrals
+        let build = || {
+            let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+            let id = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 300.0));
+            (c, id)
+        };
+        let (mut a, pa) = build();
+        let (mut b, pb) = build();
+        a.run_until(1000, |c| c.all_done());
+        let opts = AdvanceOpts { event_driven: true, sample_metrics: true };
+        while !b.all_done() && b.now < 1000 {
+            let target = (b.now + 50).min(1000);
+            b.advance_to(target, opts);
+        }
+        assert_eq!(a.now, b.now);
+        assert_eq!(a.events.events, b.events.events);
+        let (x, y) = (a.pod(pa), b.pod(pb));
+        assert_eq!(x.phase, y.phase);
+        assert_eq!(x.progress_secs, y.progress_secs);
+        assert_eq!(x.wall_running_secs, y.wall_running_secs);
+        assert_eq!(x.provisioned_gb_secs, y.provisioned_gb_secs);
+        assert_eq!(x.used_gb_secs, y.used_gb_secs);
+        assert_eq!(
+            a.metrics.pod(pa).unwrap().count,
+            b.metrics.pod(pb).unwrap().count,
+            "coast landings must record the same samples stepping does"
+        );
+    }
+
+    #[test]
+    fn event_advance_interrupts_on_oom_at_exact_tick() {
+        let build = || {
+            let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+            let id = c.create_pod("a", ResourceSpec::memory_exact(1.5), ramp(1.0, 3.0, 100.0));
+            (c, id)
+        };
+        let (mut a, pa) = build();
+        let (mut b, pb) = build();
+        a.run_until(1000, |c| c.pod(pa).phase == PodPhase::OomKilled);
+        let oom_tick = a.now;
+        let opts = AdvanceOpts { event_driven: true, sample_metrics: true };
+        let outcome = b.advance_to(1000, opts);
+        assert_eq!(outcome, Advance::Interrupted);
+        assert_eq!(b.now, oom_tick, "interrupt lands on the legacy OOM tick");
+        assert_eq!(b.pod(pb).phase, PodPhase::OomKilled);
+        assert_eq!(a.events.events, b.events.events);
     }
 
     #[test]

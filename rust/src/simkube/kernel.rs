@@ -1,0 +1,233 @@
+//! The discrete-event simulation kernel: ONE drive loop under both the
+//! experiment harness and the scenario engine.
+//!
+//! The legacy loops advanced wall-clock one second at a time and polled
+//! everything — controller, scheduler queue, fault list, series sampler —
+//! every tick, even across long quiescent stretches where nothing could
+//! possibly happen. The kernel inverts that: sources and controllers
+//! *declare* their next due tick, the clock jumps straight to the
+//! earliest one (coasting quiescent pods analytically via
+//! [`Cluster::advance_to`]), and [`Cluster`]-internal occurrences that
+//! cannot be scheduled ahead of time — OOM kills, pressure evictions,
+//! completions, restart-latency resumes — interrupt the jump at their
+//! exact tick.
+//!
+//! Event kinds flowing through one run:
+//! - **job arrival** / **fault firing** — timed events a source seeds into
+//!   its [`SimClock`](super::clock::SimClock) and dispatches in
+//!   [`EventSource::fire_pre`];
+//! - **policy wake-up** — [`Tick::next_wake`] (decision intervals and
+//!   observation cadences declared by the policies themselves);
+//! - **restart-latency expiry** — per-second stepping regions inside
+//!   [`Cluster::advance_to`] (a restart in flight blocks coasting);
+//! - **pod completion** and **memory-threshold crossings** (OOM, swap
+//!   spill, pressure eviction) — interrupts from the cluster, either
+//!   predicted away by the `max_slope_gb_per_sec` coast contract or hit
+//!   exactly by 1 s stepping;
+//! - **sample points** — metric scrapes land on the sampling grid via the
+//!   coast clamp; the harness's series sampler fires in
+//!   [`EventSource::fire_post`].
+//!
+//! [`KernelMode::Lockstep`] runs the identical per-tick order the legacy
+//! loops used (fire_pre → controller → fire_post → stop-check → step) and
+//! is the bit-for-bit reference the equivalence suite and the perf benches
+//! compare [`KernelMode::EventDriven`] against.
+
+use super::cluster::{Advance, AdvanceOpts, Cluster};
+use crate::coordinator::controller::Tick;
+
+/// How the kernel advances the clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Exact 1 s stepping with the controller polled every tick — the
+    /// seed loops' behaviour, kept as the equivalence reference.
+    Lockstep,
+    /// Event-driven: jump to the next declared event, coasting quiescent
+    /// stretches. Produces bit-identical results (the equivalence suite
+    /// proves it) at a fraction of the wall-clock cost.
+    EventDriven,
+}
+
+/// Counters one kernel run accumulates (the perf benches report these).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    /// Simulated seconds advanced.
+    pub sim_ticks: u64,
+    /// Event-loop iterations (≈ events processed: arrivals, faults,
+    /// wakes, sample points, interrupts). In lockstep mode this equals
+    /// `sim_ticks` + 1 — one iteration per tick.
+    pub events: u64,
+    /// Controller wake-ups actually delivered.
+    pub ctl_wakes: u64,
+}
+
+/// What a drive loop plugs into the kernel: the experiment harness and
+/// the scenario engine are both thin implementations of this.
+///
+/// `C` is the controller type `fire_pre` receives — the scenario engine
+/// needs its concrete `Controller` back (to attach policies to pods it
+/// submits mid-run), while the harness is happy with `dyn Tick`.
+pub trait EventSource<C: Tick + ?Sized> {
+    /// The next tick (strictly after `cluster.now`) at which this source
+    /// must act, or `None` if it has nothing scheduled. The kernel never
+    /// advances past it.
+    fn next_event(&mut self, cluster: &Cluster) -> Option<u64>;
+
+    /// Act at the current tick, *before* the controller runs: submit due
+    /// jobs, fire due faults, requeue Pending pods (the legacy scenario
+    /// per-tick order).
+    fn fire_pre(&mut self, _cluster: &mut Cluster, _ctl: &mut C) {}
+
+    /// Act at the current tick, *after* the controller ran: sample the
+    /// harness's report series (the legacy harness per-tick order).
+    fn fire_post(&mut self, _cluster: &mut Cluster) {}
+
+    /// Stop condition, checked at every event tick after the controller
+    /// ran (mirrors the legacy loops' break placement).
+    fn done(&mut self, cluster: &Cluster) -> bool;
+
+    /// Whether the controller must also run at the very first tick
+    /// (the scenario loop did; the harness loop did not).
+    fn tick_ctl_at_start(&self) -> bool {
+        false
+    }
+}
+
+/// Drive `cluster` + `ctl` + `src` until the source reports done or the
+/// clock reaches `end_tick`. Returns the run's kernel counters.
+pub fn run_kernel<C: Tick + ?Sized>(
+    mode: KernelMode,
+    cluster: &mut Cluster,
+    ctl: &mut C,
+    src: &mut dyn EventSource<C>,
+    end_tick: u64,
+) -> KernelStats {
+    let start = cluster.now;
+    let mut stats = KernelStats::default();
+    let event_driven = mode == KernelMode::EventDriven;
+    let mut pending_wake = if event_driven { ctl.next_wake(cluster) } else { 0 };
+    let mut interrupted = false;
+    let mut first = true;
+    loop {
+        stats.events += 1;
+        src.fire_pre(cluster, ctl);
+        let ctl_due = if event_driven {
+            interrupted || cluster.now >= pending_wake || (first && src.tick_ctl_at_start())
+        } else {
+            !first || src.tick_ctl_at_start()
+        };
+        if ctl_due {
+            ctl.tick(cluster);
+            stats.ctl_wakes += 1;
+        }
+        if event_driven {
+            // recompute every iteration: fire_pre may have attached new
+            // policies whose cadence is earlier than the stale wake
+            pending_wake = ctl.next_wake(cluster);
+        }
+        interrupted = false;
+        src.fire_post(cluster);
+        if src.done(cluster) || cluster.now >= end_tick {
+            break;
+        }
+        let target = if event_driven {
+            let mut t = end_tick.min(pending_wake);
+            if let Some(e) = src.next_event(cluster) {
+                t = t.min(e);
+            }
+            t.max(cluster.now + 1) // forward progress, whatever sources say
+        } else {
+            cluster.now + 1
+        };
+        let opts = AdvanceOpts {
+            event_driven,
+            // re-asked every advance: mid-run submissions can attach the
+            // first metrics-scraping policy to a previously idle
+            // controller (lockstep records in step() regardless)
+            sample_metrics: !event_driven || ctl.wants_observe(),
+        };
+        if cluster.advance_to(target, opts) == Advance::Interrupted {
+            interrupted = true;
+        }
+        first = false;
+    }
+    stats.sim_ticks = cluster.now - start;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::controller::Controller;
+    use crate::simkube::node::Node;
+    use crate::simkube::pod::testutil::ramp;
+    use crate::simkube::pod::PodId;
+    use crate::simkube::resources::ResourceSpec;
+    use crate::simkube::swap::SwapDevice;
+
+    /// Minimal harness-shaped source: stop when everything finished.
+    struct UntilDone {
+        samples: Vec<(u64, f64)>,
+        pod: PodId,
+        start: u64,
+    }
+
+    impl<C: Tick + ?Sized> EventSource<C> for UntilDone {
+        fn next_event(&mut self, cluster: &Cluster) -> Option<u64> {
+            Some((cluster.now / 5 + 1) * 5)
+        }
+
+        fn fire_post(&mut self, cluster: &mut Cluster) {
+            let now = cluster.now;
+            if now == self.start || now % 5 != 0 {
+                return;
+            }
+            let p = cluster.pod(self.pod);
+            if p.is_running() {
+                self.samples.push((now, p.usage.usage_gb));
+            }
+        }
+
+        fn done(&mut self, cluster: &Cluster) -> bool {
+            cluster.all_done()
+        }
+    }
+
+    fn scene() -> (Cluster, PodId) {
+        let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::disabled()));
+        let id = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 200.0));
+        (c, id)
+    }
+
+    fn drive(mode: KernelMode) -> (Cluster, Vec<(u64, f64)>, KernelStats) {
+        let (mut c, id) = scene();
+        let mut ctl = Controller::new();
+        let mut src = UntilDone { samples: Vec::new(), pod: id, start: c.now };
+        let stats = run_kernel(mode, &mut c, &mut ctl, &mut src, 10_000);
+        (c, src.samples, stats)
+    }
+
+    #[test]
+    fn event_mode_reproduces_lockstep_exactly() {
+        let (ca, sa, stats_a) = drive(KernelMode::Lockstep);
+        let (cb, sb, stats_b) = drive(KernelMode::EventDriven);
+        assert_eq!(ca.now, cb.now);
+        assert_eq!(ca.events.events, cb.events.events);
+        assert_eq!(sa, sb, "sampled series must match tick for tick");
+        assert_eq!(stats_a.sim_ticks, stats_b.sim_ticks);
+        assert!(
+            stats_b.events < stats_a.events / 2,
+            "event mode must visit far fewer ticks ({} vs {})",
+            stats_b.events,
+            stats_a.events
+        );
+    }
+
+    #[test]
+    fn lockstep_visits_every_tick() {
+        let (c, _, stats) = drive(KernelMode::Lockstep);
+        assert_eq!(c.now, 200, "ramp completes at its nominal duration");
+        assert_eq!(stats.sim_ticks, 200);
+        assert_eq!(stats.events, stats.sim_ticks + 1);
+    }
+}

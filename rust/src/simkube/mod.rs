@@ -1,5 +1,9 @@
-//! `simkube` — a discrete-time simulator of a swap-enabled, in-place-
-//! resizable Kubernetes cluster (DESIGN.md §1, systems S1–S7).
+//! `simkube` — a simulator of a swap-enabled, in-place-resizable
+//! Kubernetes cluster (DESIGN.md §1, systems S1–S7), advanced by a
+//! discrete-event kernel ([`kernel`] + [`clock`]): drivers jump the
+//! clock between declared events via [`Cluster::advance_to`] instead of
+//! polling every simulated second, with exact 1 s stepping
+//! ([`kernel::KernelMode::Lockstep`]) kept as the bit-for-bit reference.
 //!
 //! This substrate replaces the paper's CloudLab K3s testbed. It reproduces
 //! every interface the ARC-V controller and the VPA baseline touch:
@@ -10,8 +14,10 @@
 //! Prometheus exposition.
 
 pub mod api;
+pub mod clock;
 pub mod cluster;
 pub mod events;
+pub mod kernel;
 pub mod kubelet;
 pub mod metrics;
 pub mod node;
@@ -24,7 +30,9 @@ pub mod swap;
 pub use api::{
     ActionRecord, AdmissionPlugin, AdmissionRequest, ApiClient, ApiError, Outcome, PodView, Verb,
 };
-pub use cluster::{Cluster, ClusterConfig};
+pub use clock::{next_multiple, SimClock, TimedEvent};
+pub use cluster::{Advance, AdvanceOpts, Cluster, ClusterConfig};
+pub use kernel::{run_kernel, EventSource, KernelMode, KernelStats};
 pub use events::{Event, EventKind, EventLog};
 pub use kubelet::{Kubelet, KubeletConfig};
 pub use metrics::{MetricsStore, Sample};

@@ -20,6 +20,48 @@ pub trait MemoryProcess: Send {
     fn duration_secs(&self) -> f64;
     /// Display name ("kripke", "minife", ...).
     fn name(&self) -> &str;
+
+    /// Conservative bound on how fast the trace can move between two
+    /// consecutive integer-second evaluations: a value `s` such that
+    /// `|usage_gb(p + 1) - usage_gb(p)| <= s` for every progress `p` the
+    /// simulation can visit (noise included). The event kernel uses it to
+    /// prove "no OOM / eviction / swap crossing before tick T" and jump
+    /// the clock there. The default, `f64::INFINITY`, promises nothing —
+    /// the kernel then falls back to exact 1 s stepping for this pod.
+    ///
+    /// Contract: this must be a TRUE upper bound. An optimistic bound can
+    /// delay a limit crossing past its real tick and silently change
+    /// results (`rust/tests/kernel_equivalence.rs` pins the nine
+    /// registered apps against the 1 s reference).
+    fn max_slope_gb_per_sec(&self) -> f64 {
+        f64::INFINITY
+    }
+
+    /// [`Self::max_slope_gb_per_sec`] restricted to the next `span`
+    /// integer steps from progress `p0`: a bound on
+    /// `|usage_gb(p + 1) - usage_gb(p)|` for every `p ∈ [p0, p0 + span]`.
+    /// A phase-local bound lets the kernel coast tight-limit stretches a
+    /// global worst case (e.g. a steep setup ramp long past) would
+    /// forbid. Same TRUE-upper-bound contract; the default falls back to
+    /// the global bound.
+    fn max_slope_over(&self, _p0: f64, _span: u64) -> f64 {
+        self.max_slope_gb_per_sec()
+    }
+
+    /// Accumulate `usage_gb(p0 + k)` for `k = 1..=steps` into `used_acc`
+    /// (term by term, in order — bit-identical to the per-second kubelet
+    /// loop) and return the final term. The event kernel calls this to
+    /// integrate a coast window in one call; implementations may override
+    /// it with a cheaper evaluation as long as every term stays
+    /// bit-identical to `usage_gb` (the equivalence suite enforces this).
+    fn accumulate_usage(&self, p0: f64, steps: u64, used_acc: &mut f64) -> f64 {
+        let mut last = 0.0;
+        for k in 1..=steps {
+            last = self.usage_gb(p0 + k as f64);
+            *used_acc += last;
+        }
+        last
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -184,6 +226,12 @@ pub(crate) mod testutil {
 
         fn name(&self) -> &str {
             &self.name
+        }
+
+        fn max_slope_gb_per_sec(&self) -> f64 {
+            // linear ramp: at most |Δ|/duration per second (clamp only
+            // flattens); the factor pads out floating-point evaluation noise
+            ((self.end_gb - self.start_gb) / self.duration).abs() * 1.0001 + 1e-12
         }
     }
 

@@ -115,6 +115,49 @@ mod tests {
     }
 
     #[test]
+    fn declared_slopes_bound_all_nine_apps() {
+        // the coast contract: every registered model's declared slope must
+        // truly bound its per-second movement on the integer progress grid
+        for m in [
+            amr(3),
+            bfs(3),
+            cm1(3),
+            gromacs(3),
+            kripke(3),
+            lammps(3),
+            lulesh(3),
+            minife(3),
+            sputnipic(3),
+        ] {
+            let slope = m.max_slope_gb_per_sec();
+            assert!(slope.is_finite() && slope > 0.0, "{}", m.name());
+            let end = m.duration_secs() as u64;
+            // windowed bounds re-checked on a sliding grid: every step in
+            // [w, w+64] must fit under max_slope_over(w, 64)
+            let mut window_start = 0u64;
+            let mut local = m.max_slope_over(0.0, 64);
+            for t in 0..end {
+                if t >= window_start + 64 {
+                    window_start = t;
+                    local = m.max_slope_over(t as f64, 64);
+                }
+                let d = (m.usage_gb(t as f64 + 1.0) - m.usage_gb(t as f64)).abs();
+                assert!(
+                    d <= slope,
+                    "{} at t={t}: per-second delta {d} exceeds declared slope {slope}",
+                    m.name()
+                );
+                assert!(
+                    d <= local,
+                    "{} at t={t}: delta {d} exceeds windowed slope {local} (window {window_start})",
+                    m.name()
+                );
+                assert!(local <= slope * (1.0 + 1e-12), "{}", m.name());
+            }
+        }
+    }
+
+    #[test]
     fn minife_ends_with_dip_then_spike() {
         let m = minife(1);
         let near_end = m.usage_gb(0.92 * 352.0);

@@ -101,6 +101,33 @@ impl Shape {
         }
         0.0
     }
+
+    /// [`Self::eval`] with a resumable segment cursor: for non-decreasing
+    /// `x` sequences (a coast window sweeping progress forward) the
+    /// segment scan is amortized O(1) instead of O(segments) per call.
+    /// Bit-identical to `eval` — the cursor accumulates the same prefix
+    /// sums the scan would.
+    pub fn eval_from(&self, x: f64, cur: &mut ShapeCursor) -> f64 {
+        if self.segments.is_empty() {
+            return 0.0;
+        }
+        let x = x.clamp(0.0, 1.0) * self.total;
+        while cur.idx + 1 < self.segments.len() && x > cur.acc + self.segments[cur.idx].0 {
+            cur.acc += self.segments[cur.idx].0;
+            cur.idx += 1;
+        }
+        let (w, f) = &self.segments[cur.idx];
+        let local = ((x - cur.acc) / w).clamp(0.0, 1.0);
+        f(local)
+    }
+}
+
+/// Resumable position inside a [`Shape`]'s segment list (see
+/// [`Shape::eval_from`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShapeCursor {
+    idx: usize,
+    acc: f64,
 }
 
 impl Default for Shape {
@@ -135,7 +162,19 @@ pub struct AppModel {
     shape_max: f64,
     pub noise_amp: f64,
     pub seed: u64,
+    /// Conservative bound on |usage(p+1) − usage(p)| over the integer
+    /// progress grid (noise included) — the coast contract the event
+    /// kernel relies on. Computed once at calibration.
+    max_slope: f64,
+    /// Block maxima (blocks of [`SLOPE_BLOCK`] seconds) of the per-second
+    /// movement bound, for the phase-local [`MemoryProcess::
+    /// max_slope_over`] queries: a flat phase coasts on its own tiny
+    /// slope even when a steep setup ramp dominates the global bound.
+    slope_blocks: Vec<f64>,
 }
+
+/// Seconds per entry of [`AppModel`]'s windowed slope-bound table.
+pub const SLOPE_BLOCK: u64 = 64;
 
 impl AppModel {
     /// Calibrate `shape` to hit `max_gb` and `footprint_gbs` over
@@ -173,6 +212,37 @@ impl AppModel {
             a = 0.0;
             b = max_gb;
         }
+        // Slope bounds for the event kernel: the simulator only evaluates
+        // usage at integer progress during coasts (a coast precondition),
+        // so scanning every integer-second pair of the noiseless base and
+        // adding the worst noise excursion yields a true per-second bound:
+        //   |v(t+1) − v(t)| ≤ |Δbase|·(1 + amp) + 2·amp·max(bases) .
+        // Bounds are kept per SLOPE_BLOCK-second block so tight-limit
+        // phases coast on their local movement, not the global worst.
+        let ticks = exec_secs.ceil().max(1.0) as u64 + 1;
+        let mut slope_blocks: Vec<f64> = Vec::with_capacity((ticks / SLOPE_BLOCK + 2) as usize);
+        let mut max_slope = 0.0_f64;
+        let mut block_max = 0.0_f64;
+        let mut prev = f64::NAN;
+        for t in 0..=ticks {
+            let x = (t as f64 / exec_secs).clamp(0.0, 1.0);
+            let base = a + b * (shape.eval(x) / smax);
+            if prev.is_finite() {
+                let dv = ((base - prev).abs() * (1.0 + noise_amp)
+                    + 2.0 * noise_amp * base.max(prev))
+                    * 1.01
+                    + 1e-9;
+                block_max = block_max.max(dv);
+                max_slope = max_slope.max(dv);
+                // dv at index t−1 describes the step t−1 → t
+                if t % SLOPE_BLOCK == 0 {
+                    slope_blocks.push(block_max);
+                    block_max = 0.0;
+                }
+            }
+            prev = base;
+        }
+        slope_blocks.push(block_max.max(1e-9));
         Self {
             name: name.to_string(),
             pattern,
@@ -185,6 +255,8 @@ impl AppModel {
             shape_max: smax,
             noise_amp,
             seed,
+            max_slope,
+            slope_blocks,
         }
     }
 
@@ -208,6 +280,48 @@ impl MemoryProcess for AppModel {
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn max_slope_gb_per_sec(&self) -> f64 {
+        self.max_slope
+    }
+
+    /// Phase-local movement bound: the max of every slope block the
+    /// window `[p0, p0 + span]` touches (whole blocks — over-approximate,
+    /// never under). Progress past the trace end stays in the last block
+    /// (the clamped-flat noise band).
+    fn max_slope_over(&self, p0: f64, span: u64) -> f64 {
+        if self.slope_blocks.is_empty() {
+            return self.max_slope;
+        }
+        let last = self.slope_blocks.len() - 1;
+        let lo = (p0.max(0.0) as u64 / SLOPE_BLOCK) as usize;
+        let hi = ((p0.max(0.0) as u64).saturating_add(span) / SLOPE_BLOCK) as usize;
+        let (lo, hi) = (lo.min(last), hi.min(last));
+        let mut m = 0.0_f64;
+        for b in &self.slope_blocks[lo..=hi] {
+            m = m.max(*b);
+        }
+        m
+    }
+
+    /// Coast-window accumulation with a resumable segment cursor: every
+    /// term performs exactly the operations `usage_gb` performs (same
+    /// clamp, same division, same noise hash, same floor), so the sum —
+    /// and the returned final term — are bit-identical to per-second
+    /// stepping while skipping the repeated segment scans.
+    fn accumulate_usage(&self, p0: f64, steps: u64, used_acc: &mut f64) -> f64 {
+        let mut cur = ShapeCursor::default();
+        let mut last = 0.0;
+        for k in 1..=steps {
+            let p = p0 + k as f64;
+            let x = (p / self.exec_secs).clamp(0.0, 1.0);
+            let s = self.shape.eval_from(x, &mut cur) / self.shape_max;
+            let base = self.a + self.b * s;
+            last = (base * self.noise(p as u64)).max(1e-4);
+            *used_acc += last;
+        }
+        last
     }
 }
 
@@ -258,6 +372,75 @@ mod tests {
         let shape = Shape::new().linear(1.0, 0.0, 1.0);
         let m = AppModel::calibrated("p", Pattern::Growth, 100.0, 4.0, 250.0, shape, 0.01, 3);
         assert_eq!(m.usage_gb(42.0), m.usage_gb(42.0));
+    }
+
+    #[test]
+    fn eval_from_matches_eval_on_monotone_sweep() {
+        let s = Shape::new()
+            .linear(0.3, 0.0, 1.0)
+            .flat(0.4, 1.0)
+            .satexp(0.3, 1.0, 0.2, 3.0);
+        let mut cur = ShapeCursor::default();
+        for i in 0..=2000 {
+            let x = i as f64 / 2000.0;
+            assert_eq!(s.eval(x), s.eval_from(x, &mut cur), "x={x}");
+        }
+    }
+
+    #[test]
+    fn accumulate_usage_is_bitwise_identical_to_stepping() {
+        let shape = Shape::new()
+            .linear(0.4, 0.1, 1.0)
+            .bursts(0.3, 0.4, 1.0, 5, 11)
+            .flat(0.3, 0.9);
+        let m = AppModel::calibrated("t", Pattern::Dynamic, 500.0, 8.0, 2500.0, shape, 0.004, 7);
+        let p0 = 13.0;
+        let mut fast = 0.125; // non-zero accumulator: rounding must match too
+        let last_fast = m.accumulate_usage(p0, 200, &mut fast);
+        let mut slow = 0.125;
+        let mut last_slow = 0.0;
+        for k in 1..=200u64 {
+            last_slow = m.usage_gb(p0 + k as f64);
+            slow += last_slow;
+        }
+        assert_eq!(fast, slow);
+        assert_eq!(last_fast, last_slow);
+    }
+
+    #[test]
+    fn max_slope_bounds_every_integer_step() {
+        let shape = Shape::new()
+            .satexp(0.1, 0.05, 0.9, 4.0)
+            .bursts(0.9, 0.3, 1.0, 15, 5);
+        let m = AppModel::calibrated("t", Pattern::Dynamic, 700.0, 4.0, 1500.0, shape, 0.004, 9);
+        let slope = m.max_slope_gb_per_sec();
+        assert!(slope.is_finite() && slope > 0.0);
+        let mut worst = 0.0_f64;
+        for t in 0..700u64 {
+            let d = (m.usage_gb(t as f64 + 1.0) - m.usage_gb(t as f64)).abs();
+            worst = worst.max(d);
+            assert!(d <= slope, "t={t}: delta {d} exceeds declared slope {slope}");
+        }
+        assert!(worst > 0.0);
+    }
+
+    #[test]
+    fn windowed_slope_is_local_yet_still_a_bound() {
+        // steep setup then a long flat phase: the local bound in the flat
+        // tail must sit far below the global one (set by the setup ramp)
+        // while still bounding every step inside its window
+        let shape = Shape::new().satexp(0.05, 0.05, 0.9, 4.0).flat(0.95, 0.9);
+        let m = AppModel::calibrated("w", Pattern::Growth, 2000.0, 6.0, 9000.0, shape, 0.003, 5);
+        let global = m.max_slope_gb_per_sec();
+        let local = m.max_slope_over(1000.0, 64);
+        assert!(local <= global);
+        assert!(local < global / 3.0, "local {local} vs global {global}");
+        for t in 1000..1064u64 {
+            let d = (m.usage_gb(t as f64 + 1.0) - m.usage_gb(t as f64)).abs();
+            assert!(d <= local, "t={t}: {d} > {local}");
+        }
+        // windows past the trace end stay finite and positive
+        assert!(m.max_slope_over(5000.0, 64) > 0.0);
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! The kernel equivalence suite: the event-driven clock must reproduce
+//! the 1 s-tick reference **bit for bit** — same `RunResult` (counters
+//! AND float integrals: coasts accumulate term-by-term with the same
+//! rounding), same `EventLog` order — on every registered app × the four
+//! single-pod policies, and through the scenario engine's churn paths
+//! (arrivals, faults, drain, kill, leak, requeue).
+//!
+//! This is the contract that lets `harness::run` and
+//! `scenario::run_scenario` default to `KernelMode::EventDriven`.
+
+use arcv::harness::{run_with_mode, ExperimentConfig, PolicyKind, RunOutput, SwapKind};
+use arcv::policy::arcv::ArcvParams;
+use arcv::scenario::{
+    run_scenario_mode, Arrivals, Fault, ScenarioPolicy, ScenarioSpec, WorkloadMix,
+};
+use arcv::simkube::KernelMode;
+use arcv::workloads::AppId;
+
+/// The four registered policy environments of the suite. Rebuilt per call
+/// because `PolicyKind` holds boxed backends (not `Clone`).
+fn case(app: AppId, i: usize) -> (ExperimentConfig, PolicyKind) {
+    match i {
+        0 => (
+            ExperimentConfig::arcv_env(app),
+            PolicyKind::ArcvNative(ArcvParams::default()),
+        ),
+        1 => (ExperimentConfig::vpa_env(app), PolicyKind::VpaSim),
+        2 => (ExperimentConfig::arcv_env(app), PolicyKind::Fixed),
+        _ => (ExperimentConfig::arcv_env(app), PolicyKind::Oracle),
+    }
+}
+
+const CASE_NAMES: [&str; 4] = ["arcv", "vpa-sim", "fixed", "oracle"];
+
+fn run_case(app: AppId, i: usize, mode: KernelMode) -> RunOutput {
+    let (cfg, kind) = case(app, i);
+    run_with_mode(&cfg, kind, mode)
+}
+
+#[test]
+fn nine_apps_times_four_policies_match_bit_for_bit() {
+    for app in AppId::all() {
+        for i in 0..4 {
+            let reference = run_case(app, i, KernelMode::Lockstep);
+            let event = run_case(app, i, KernelMode::EventDriven);
+            // the whole RunResult — integer counters, f64 integrals, and
+            // the downsampled report series — must be identical
+            assert_eq!(
+                reference.result, event.result,
+                "{app}/{} RunResult diverged",
+                CASE_NAMES[i]
+            );
+            assert_eq!(
+                reference.events, event.events,
+                "{app}/{} EventLog diverged",
+                CASE_NAMES[i]
+            );
+            assert!(
+                event.stats.events <= reference.stats.events,
+                "{app}/{}: event kernel visited more ticks ({}) than lockstep ({})",
+                CASE_NAMES[i],
+                event.stats.events,
+                reference.stats.events
+            );
+        }
+    }
+}
+
+#[test]
+fn event_kernel_skips_most_ticks_on_the_app_sweep() {
+    // the point of the kernel: quiescent stretches are jumped, so the
+    // event loop runs far fewer iterations than seconds simulated
+    let out = run_case(AppId::Kripke, 2, KernelMode::EventDriven); // fixed policy
+    assert!(out.result.completed);
+    assert!(
+        out.stats.events * 3 < out.stats.sim_ticks,
+        "expected <1/3 of ticks visited, got {} events for {} ticks",
+        out.stats.events,
+        out.stats.sim_ticks
+    );
+}
+
+fn churn_spec() -> ScenarioSpec {
+    ScenarioSpec::new("equiv-churn")
+        .pool("hi", 2, 64.0, SwapKind::Hdd(32.0))
+        .pool("lo", 1, 32.0, SwapKind::Ssd(16.0))
+        .arrivals(Arrivals::Bursty { period_secs: 60, burst: 3 })
+        .jobs(9)
+        .mix(WorkloadMix::uniform(&[
+            AppId::Amr,
+            AppId::Cm1,
+            AppId::Kripke,
+            AppId::Lulesh,
+            AppId::Sputnipic,
+        ]))
+        .fault(Fault::KillRandomPod { at: 120 })
+        .fault(Fault::LeakyPod {
+            at: 200,
+            base_gb: 2.0,
+            leak_gb_per_sec: 0.01,
+            lifetime_secs: 400.0,
+        })
+        .fault(Fault::DrainNode { at: 300, node: 2 })
+        .max_ticks(60_000)
+}
+
+#[test]
+fn scenario_engine_matches_reference_through_churn() {
+    let spec = churn_spec();
+    for policy in [
+        ScenarioPolicy::Arcv(ArcvParams::default()),
+        ScenarioPolicy::VpaSim,
+        ScenarioPolicy::Fixed,
+    ] {
+        let reference = run_scenario_mode(&spec, policy, 7, KernelMode::Lockstep);
+        let event = run_scenario_mode(&spec, policy, 7, KernelMode::EventDriven);
+        assert_eq!(
+            reference.outcome,
+            event.outcome,
+            "{} outcome diverged",
+            policy.label()
+        );
+        assert_eq!(
+            reference.cluster.events.events,
+            event.cluster.events.events,
+            "{} EventLog diverged",
+            policy.label()
+        );
+    }
+}
+
+#[test]
+fn starved_queue_idles_to_the_budget_identically() {
+    // drain the only node: everything re-enters the queue with no
+    // capacity anywhere; both kernels must report the same stuck state at
+    // exactly max_ticks (the event kernel jumps there, the reference
+    // idles tick by tick)
+    let spec = ScenarioSpec::new("equiv-starved")
+        .pool("n", 1, 64.0, SwapKind::Disabled)
+        .mix(WorkloadMix::uniform(&[AppId::Kripke]))
+        .arrivals(Arrivals::Backlog)
+        .jobs(2)
+        .fault(Fault::DrainNode { at: 100, node: 0 })
+        .max_ticks(400);
+    let reference = run_scenario_mode(&spec, ScenarioPolicy::Fixed, 9, KernelMode::Lockstep);
+    let event = run_scenario_mode(&spec, ScenarioPolicy::Fixed, 9, KernelMode::EventDriven);
+    assert_eq!(reference.outcome, event.outcome);
+    assert_eq!(reference.cluster.events.events, event.cluster.events.events);
+    assert_eq!(event.outcome.wall_ticks, 400);
+    assert_eq!(event.outcome.stuck_pending, 2);
+}
