@@ -128,31 +128,36 @@ fn main() {
     let mut sim_ticks_total = 0u64;
     let mut kernel_events_total = 0u64;
     let mut mismatches = 0usize;
+    let mut sharded_ns_total = 0.0_f64;
     for app in AppId::all() {
         for i in 0..POLICY_NAMES.len() {
             let (lock_ns, reference) = timed(app, i, KernelMode::Lockstep);
             let (event_ns, event) = timed(app, i, KernelMode::EventDriven);
+            let (sharded_ns, sharded) = timed(app, i, KernelMode::Sharded { threads: 0 });
             // the full equivalence proof lives in
             // rust/tests/kernel_equivalence.rs; this is the bench's own
             // cheap tripwire so a perf number never ships off a wrong sim
-            let identical = reference.result == event.result;
+            let identical =
+                reference.result == event.result && reference.result == sharded.result;
             if !identical {
                 mismatches += 1;
                 eprintln!("MISMATCH: {app}/{} diverged between kernels", POLICY_NAMES[i]);
             }
             let case_speedup = lock_ns / event_ns.max(1.0);
             println!(
-                "  {:<10} {:<8} {:>8} ticks  lockstep {:>9.3} ms  event {:>9.3} ms  ({:>5.1}x, {} events)",
+                "  {:<10} {:<8} {:>8} ticks  lockstep {:>9.3} ms  event {:>9.3} ms  sharded {:>9.3} ms  ({:>5.1}x, {} events)",
                 app.name(),
                 POLICY_NAMES[i],
                 event.stats.sim_ticks,
                 lock_ns / 1e6,
                 event_ns / 1e6,
+                sharded_ns / 1e6,
                 case_speedup,
                 event.stats.events,
             );
             lock_ns_total += lock_ns;
             event_ns_total += event_ns;
+            sharded_ns_total += sharded_ns;
             sim_ticks_total += event.stats.sim_ticks;
             kernel_events_total += event.stats.events;
             rows.push(obj(vec![
@@ -163,6 +168,7 @@ fn main() {
                 ("ctl_wakes", num(event.stats.ctl_wakes as f64)),
                 ("lockstep_ms", num(lock_ns / 1e6)),
                 ("event_ms", num(event_ns / 1e6)),
+                ("sharded_ms", num(sharded_ns / 1e6)),
                 ("speedup", num(case_speedup)),
                 ("identical", Json::Bool(identical)),
             ]));
@@ -191,6 +197,7 @@ fn main() {
         ("kernel_events", num(kernel_events_total as f64)),
         ("lockstep_secs", num(lock_ns_total * 1e-9)),
         ("event_secs", num(event_ns_total * 1e-9)),
+        ("sharded_secs", num(sharded_ns_total * 1e-9)),
         ("speedup", num(speedup)),
         ("ticks_per_sec_lockstep", num(ticks_per_sec_lockstep)),
         ("ticks_per_sec_event", num(ticks_per_sec_event)),

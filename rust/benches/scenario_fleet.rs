@@ -1,14 +1,21 @@
 //! Bench: fleet-scale scenario throughput + the parallel multi-seed
 //! executor. Runs a 4-node, 36-job Poisson-arrival scenario (with a node
-//! drain and a random kill) under ARC-V and the VPA simulator, then times
-//! an 8-seed ARC-V grid serially vs. in parallel and verifies the fan-out
-//! is bit-identical to the serial reference.
+//! drain and a random kill) under ARC-V and the VPA simulator, times an
+//! 8-seed ARC-V grid serially vs. in parallel (verifying the fan-out is
+//! bit-identical to the serial reference), and then runs the fleet-SCALE
+//! ladder: 1k/10k/100k-pod backlogs with one swap-thrashing leaker, under
+//! {lockstep, serial event kernel, sharded kernel}, emitting
+//! `bench_out/BENCH_scale.json` (ticks/s + wall-clock per cell).
 //!
 //!   cargo bench --bench scenario_fleet
 //!
+//! Set `SCALE_MAX_JOBS` to trim the ladder on small machines.
+//!
 //! Emits a machine-readable `BENCH {json}` block at the end. Exits
-//! non-zero if any pod is stuck Pending at drain or the parallel grid
-//! diverges from the serial one.
+//! non-zero if any pod is stuck Pending at drain, the parallel grid
+//! diverges from the serial one, any kernel flavor diverges from
+//! lockstep on the scale ladder, or the sharded kernel is slower than
+//! the serial event kernel there (the fleet-scale regression gate).
 
 use arcv::harness::SwapKind;
 use arcv::policy::arcv::ArcvParams;
@@ -42,6 +49,43 @@ fn fleet_spec() -> ScenarioSpec {
         .fault(Fault::KillRandomPod { at: 300 })
         .fault(Fault::DrainNode { at: 600, node: 3 })
         .max_ticks(120_000)
+}
+
+/// One rung of the fleet-scale ladder: `jobs` flat-start jobs from the
+/// three smooth Growth apps (so coast windows stay long), one node per
+/// ~10 jobs, plus a mid-life leaker that outgrows its 120 % limit at
+/// t ≈ 85 and thrashes in swap for the rest of the run — the mixed
+/// cluster that used to collapse the whole fleet to 1 s stepping.
+fn scale_spec(jobs: usize) -> ScenarioSpec {
+    let nodes = (jobs / 10).max(1);
+    ScenarioSpec::new(&format!("scale-{jobs}"))
+        .pool("w", nodes, 64.0, SwapKind::Hdd(32.0))
+        .mix(WorkloadMix::uniform(&[AppId::Amr, AppId::Cm1, AppId::Sputnipic]))
+        .arrivals(Arrivals::Backlog)
+        .jobs(jobs)
+        .fault(Fault::LeakyPod {
+            at: 60,
+            base_gb: 2.0,
+            leak_gb_per_sec: 0.02,
+            lifetime_secs: 3_000.0,
+        })
+        // rings are preallocated per sampled pod: keep them shallow at
+        // fleet scale (nothing scrapes them under the fixed policy)
+        .metrics_history(64)
+        .max_ticks(if jobs >= 100_000 { 1_000 } else { 2_000 })
+}
+
+/// Run one `(spec, mode)` cell, returning (wall secs, outcome, events,
+/// sim ticks) — the cluster itself is dropped so three 100k-pod runs
+/// never coexist in memory.
+fn scale_cell(
+    spec: &ScenarioSpec,
+    mode: KernelMode,
+) -> (f64, arcv::scenario::ScenarioOutcome, Vec<arcv::simkube::Event>, u64) {
+    let t0 = Instant::now();
+    let run = run_scenario_mode(spec, ScenarioPolicy::Fixed, 42, mode);
+    let secs = t0.elapsed().as_secs_f64();
+    (secs, run.outcome, run.cluster.events.events, run.stats.sim_ticks)
 }
 
 fn main() {
@@ -150,6 +194,77 @@ fn main() {
     let grid_stuck: usize = serial.iter().map(|o| o.stuck_pending).sum();
     let grid_unfinished: usize = serial.iter().map(|o| o.unfinished + o.jobs_dropped).sum();
 
+    println!("\n=== fleet scale: sharded vs serial event kernel vs lockstep ===\n");
+    let scale_max: usize = std::env::var("SCALE_MAX_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let mut scale_rows = Vec::new();
+    let mut scale_diverged = false;
+    let mut scale_sharded_slow = false;
+    // 0.0 = "rung not run" (SCALE_MAX_JOBS trimmed it) — keeps the json valid
+    let mut speedup_10k = 0.0_f64;
+    for jobs in [1_000usize, 10_000, 100_000] {
+        if jobs > scale_max {
+            println!("  (skipping {jobs}-pod rung: SCALE_MAX_JOBS={scale_max})");
+            continue;
+        }
+        let sspec = scale_spec(jobs);
+        // one run in memory at a time: each cell drops its cluster
+        let (lock_secs, lock_out, lock_events, _) = scale_cell(&sspec, KernelMode::Lockstep);
+        let (serial_secs, serial_out, serial_events, _) =
+            scale_cell(&sspec, KernelMode::EventDriven);
+        let (shard_secs, shard_out, shard_events, ticks) =
+            scale_cell(&sspec, KernelMode::Sharded { threads: 0 });
+        let identical = lock_out == serial_out
+            && lock_out == shard_out
+            && lock_events == serial_events
+            && lock_events == shard_events;
+        if !identical {
+            scale_diverged = true;
+        }
+        let vs_serial = serial_secs / shard_secs.max(1e-9);
+        let vs_lockstep = lock_secs / shard_secs.max(1e-9);
+        if jobs == 10_000 {
+            speedup_10k = vs_serial;
+        }
+        // the regression gate: sharded must never be slower than the
+        // PR 3 serial event kernel (5 % tolerance for runner noise)
+        if shard_secs > serial_secs * 1.05 {
+            scale_sharded_slow = true;
+        }
+        println!(
+            "  {jobs:>6} pods over {ticks} sim-s: lockstep {lock_secs:>7.2}s  serial-event \
+             {serial_secs:>7.2}s  sharded {shard_secs:>7.2}s  -> {vs_serial:.2}x vs serial, \
+             {vs_lockstep:.2}x vs lockstep, {}",
+            if identical { "bit-identical" } else { "DIVERGED" },
+        );
+        scale_rows.push(obj(vec![
+            ("jobs", num(jobs as f64)),
+            ("nodes", num(sspec.node_count() as f64)),
+            ("sim_ticks", num(ticks as f64)),
+            ("lockstep_secs", num(lock_secs)),
+            ("serial_event_secs", num(serial_secs)),
+            ("sharded_secs", num(shard_secs)),
+            ("sharded_vs_serial_speedup", num(vs_serial)),
+            ("sharded_vs_lockstep_speedup", num(vs_lockstep)),
+            ("ticks_per_sec_lockstep", num(ticks as f64 / lock_secs.max(1e-9))),
+            ("ticks_per_sec_serial_event", num(ticks as f64 / serial_secs.max(1e-9))),
+            ("ticks_per_sec_sharded", num(ticks as f64 / shard_secs.max(1e-9))),
+            ("identical", Json::Bool(identical)),
+        ]));
+    }
+    let scale_json = obj(vec![
+        ("bench", s("scenario_fleet/scale")),
+        ("threads", num(threads as f64)),
+        ("sharded_vs_serial_speedup_10k", num(speedup_10k)),
+        ("rows", arr(scale_rows)),
+    ]);
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/BENCH_scale.json", scale_json.to_string_pretty())
+        .expect("write bench_out/BENCH_scale.json");
+    println!("\nwrote bench_out/BENCH_scale.json");
+
     let bench_json = obj(vec![
         ("bench", s("scenario_fleet")),
         ("nodes", num(spec.node_count() as f64)),
@@ -163,6 +278,7 @@ fn main() {
         ("stuck_pending_total", num((stuck_total + grid_stuck) as f64)),
         ("unfinished_total", num((unfinished_total + grid_unfinished) as f64)),
         ("kernel", kernel_json),
+        ("scale", scale_json),
         ("singles", arr(singles.iter().map(outcome_json).collect())),
     ]);
     println!("\nBENCH {}", bench_json.to_string_pretty());
@@ -197,6 +313,17 @@ fn main() {
     // on the single-app sweep; the fleet scenario reports its own ratio)
     if kernel_speedup < 1.0 {
         eprintln!("FAIL: event kernel slower than 1 s stepping ({kernel_speedup:.2}x)");
+        std::process::exit(1);
+    }
+    if scale_diverged {
+        eprintln!("FAIL: a kernel flavor diverged from lockstep on the scale ladder");
+        std::process::exit(1);
+    }
+    // CI gate: the sharded kernel must never be slower than the PR 3
+    // serial event kernel at fleet scale (target >= 3x on the 10k rung;
+    // the json records the actual ratio)
+    if scale_sharded_slow {
+        eprintln!("FAIL: sharded kernel slower than the serial event kernel at fleet scale");
         std::process::exit(1);
     }
 }

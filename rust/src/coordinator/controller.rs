@@ -160,7 +160,17 @@ impl<P: NodePolicy> Tick for Controller<P> {
     fn tick(&mut self, cluster: &mut Cluster) {
         let now = cluster.now;
         // informer refresh: all reads below go through the cache
-        self.client.sync(cluster);
+        let relisted = self.client.sync(cluster);
+
+        // 0. lifecycle sync: completed pods retire their per-pod policy
+        // bookkeeping (dead cadences must stop capping coast length),
+        // revived pods lazily re-register it. Phase changes always emit
+        // events (the PLEG contract), so an un-relisted cache proves this
+        // O(pods) sweep would see nothing new — skip it.
+        if relisted {
+            let all: Vec<&_> = self.client.cached_views().collect();
+            self.policy.sync_lifecycle(now, &all);
+        }
 
         // 1. OOM recovery first (the policy decides the restart size)
         let ooms: Vec<(PodId, f64)> = self
@@ -175,8 +185,11 @@ impl<P: NodePolicy> Tick for Controller<P> {
             }
         }
 
-        // 2. scrape fresh samples into the policy on sampling ticks
-        if cluster.metrics.is_sampling_tick(now) {
+        // 2. scrape fresh samples into the policy on sampling ticks —
+        // skipped outright when no hosted kernel consumes metrics
+        // (observe is contractually a no-op then, and the per-pod
+        // dispatch is O(running pods) per sampling tick at fleet scale)
+        if self.policy.wants_observe() && cluster.metrics.is_sampling_tick(now) {
             let running: Vec<PodId> = self
                 .client
                 .cached_views()
@@ -286,6 +299,26 @@ mod tests {
         run_to_completion(&mut c, &mut ctl, 10_000);
         assert!(!ctl.rec_log.is_empty());
         assert!(ctl.rec_log.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn completed_pod_policy_retires_then_revives_on_restart() {
+        let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::disabled()));
+        let id = c.create_pod("app", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 60.0));
+        let mut ctl = Controller::new();
+        ctl.manage(id, Box::new(VpaSimPolicy::new(4.0)));
+        run_to_completion(&mut c, &mut ctl, 10_000);
+        assert!(c.pod(id).is_done());
+        assert_eq!(ctl.policy().len(), 0, "completed pod's kernel is parked");
+        assert_eq!(ctl.policy().retired_len(), 1);
+        // an external supervisor revives the Succeeded pod (the API
+        // deliberately allows it); management must resume, not be lost
+        c.restart_pod(id, 4.0);
+        c.run_until(c.config.restart_latency_secs + 2, |_| false);
+        assert!(c.pod(id).is_running());
+        ctl.tick(&mut c);
+        assert_eq!(ctl.policy().len(), 1, "revived pod is managed again");
+        assert_eq!(ctl.policy().retired_len(), 0);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod vpa;
 
 use crate::simkube::api::PodView;
 use crate::simkube::metrics::Sample;
-use crate::simkube::pod::PodId;
+use crate::simkube::pod::{PodId, PodPhase};
 
 /// What a policy wants done to a pod.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -141,6 +141,16 @@ pub trait NodePolicy {
         true
     }
 
+    /// Pod lifecycle sync: called once per controller tick with the
+    /// cached views of *every* pod (all phases, id order), before any
+    /// decision work. Policies use it to retire per-pod bookkeeping when
+    /// a pod completes — a Succeeded pod's decision cadence must stop
+    /// capping [`Self::next_wake`] in aged fleets — and to revive that
+    /// bookkeeping if the pod is later restarted (the API deliberately
+    /// allows reviving Succeeded pods, so dropping management outright
+    /// would silently orphan the revived container). Default: no-op.
+    fn sync_lifecycle(&mut self, _now: u64, _views: &[&PodView]) {}
+
     /// Called every tick with the cached views of the node's Running pods.
     /// Returns the batch of actions to submit this tick (possibly empty).
     fn decide(&mut self, now: u64, pods: &[&PodView]) -> Vec<PodAction>;
@@ -158,45 +168,80 @@ pub trait NodePolicy {
 /// Lifts per-pod [`VerticalPolicy`] instances into a [`NodePolicy`]: each
 /// managed pod keeps its own decision kernel, and the adapter batches
 /// their actions per tick.
+///
+/// Fleet-scale shape: both entry lists are kept sorted by pod id, so
+/// every per-pod dispatch (`observe`, `on_oom`, `decide` view matching)
+/// is a binary search instead of the old linear sweep — at 10⁴–10⁵
+/// managed pods the sweep was quadratic per tick.
 pub struct PerPodAdapter {
+    /// Active kernels, sorted by pod id.
     entries: Vec<(PodId, Box<dyn VerticalPolicy>)>,
+    /// Kernels whose pod reached Succeeded, parked by
+    /// [`NodePolicy::sync_lifecycle`]: their cadence no longer feeds
+    /// [`NodePolicy::next_wake`] (dead cadences were capping coast length
+    /// in aged fleets), but the kernel is kept so a revived pod — the API
+    /// deliberately allows restarting Succeeded pods — lazily re-registers
+    /// instead of silently losing management. Sorted by pod id.
+    retired: Vec<(PodId, Box<dyn VerticalPolicy>)>,
 }
 
 impl PerPodAdapter {
     pub fn new() -> Self {
-        Self { entries: Vec::new() }
+        Self {
+            entries: Vec::new(),
+            retired: Vec::new(),
+        }
     }
 
     /// Attach `policy` to `pod`. Managing the same pod twice is last-wins:
     /// the displaced policy is returned (a second policy fighting the
-    /// first every tick was the old failure mode — now impossible).
+    /// first every tick was the old failure mode — now impossible). An
+    /// explicit manage also supersedes any parked (retired) kernel.
     pub fn manage(
         &mut self,
         pod: PodId,
         policy: Box<dyn VerticalPolicy>,
     ) -> Option<Box<dyn VerticalPolicy>> {
-        match self.entries.iter_mut().find(|(p, _)| *p == pod) {
-            Some(entry) => Some(std::mem::replace(&mut entry.1, policy)),
-            None => {
-                self.entries.push((pod, policy));
-                None
+        let parked = match self.retired.binary_search_by_key(&pod, |e| e.0) {
+            Ok(i) => Some(self.retired.remove(i).1),
+            Err(_) => None,
+        };
+        match self.entries.binary_search_by_key(&pod, |e| e.0) {
+            Ok(i) => Some(std::mem::replace(&mut self.entries[i].1, policy)),
+            Err(i) => {
+                self.entries.insert(i, (pod, policy));
+                parked
             }
         }
     }
 
+    fn active(&self, pod: PodId) -> Option<usize> {
+        self.entries.binary_search_by_key(&pod, |e| e.0).ok()
+    }
+
     pub fn policy_of(&self, pod: PodId) -> Option<&dyn VerticalPolicy> {
-        self.entries
-            .iter()
-            .find(|(p, _)| *p == pod)
-            .map(|(_, pol)| pol.as_ref())
+        if let Some(i) = self.active(pod) {
+            return Some(self.entries[i].1.as_ref());
+        }
+        // retired kernels remain inspectable (reports read final recs)
+        self.retired
+            .binary_search_by_key(&pod, |e| e.0)
+            .ok()
+            .map(|i| self.retired[i].1.as_ref())
     }
 
     pub fn managed_pods(&self) -> impl Iterator<Item = PodId> + '_ {
         self.entries.iter().map(|(p, _)| *p)
     }
 
+    /// Active (non-retired) kernels.
     pub fn len(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Kernels parked for Succeeded pods, awaiting potential revival.
+    pub fn retired_len(&self) -> usize {
+        self.retired.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -216,13 +261,14 @@ impl NodePolicy for PerPodAdapter {
     }
 
     fn observe(&mut self, now: u64, pod: PodId, sample: &Sample) {
-        if let Some((_, p)) = self.entries.iter_mut().find(|(id, _)| *id == pod) {
-            p.observe(now, sample);
+        if let Some(i) = self.active(pod) {
+            self.entries[i].1.observe(now, sample);
         }
     }
 
     fn on_oom(&mut self, now: u64, pod: PodId, usage_at_oom_gb: f64) -> Option<PodAction> {
-        let (_, p) = self.entries.iter_mut().find(|(id, _)| *id == pod)?;
+        let i = self.active(pod)?;
+        let p = &mut self.entries[i].1;
         match p.on_oom(now, usage_at_oom_gb) {
             Action::RestartWith(gb) => Some(
                 PodAction::new(pod, Action::RestartWith(gb), format!("{}: oom recovery", p.name()))
@@ -232,10 +278,39 @@ impl NodePolicy for PerPodAdapter {
         }
     }
 
+    /// Retire kernels of Succeeded pods (their cadences stop feeding
+    /// [`Self::next_wake`]) and lazily re-register a parked kernel the
+    /// moment its pod is seen in any non-Succeeded phase again.
+    fn sync_lifecycle(&mut self, _now: u64, views: &[&PodView]) {
+        for v in views {
+            if v.phase == PodPhase::Succeeded {
+                if let Ok(i) = self.entries.binary_search_by_key(&v.id, |e| e.0) {
+                    let e = self.entries.remove(i);
+                    match self.retired.binary_search_by_key(&v.id, |r| r.0) {
+                        Ok(j) => self.retired[j] = e, // stale duplicate: last wins
+                        Err(j) => self.retired.insert(j, e),
+                    }
+                }
+            } else if !self.retired.is_empty() {
+                if let Ok(i) = self.retired.binary_search_by_key(&v.id, |r| r.0) {
+                    let e = self.retired.remove(i);
+                    match self.entries.binary_search_by_key(&v.id, |x| x.0) {
+                        // an explicit re-manage already took over: the
+                        // parked kernel is obsolete, drop it
+                        Ok(_) => {}
+                        Err(j) => self.entries.insert(j, e),
+                    }
+                }
+            }
+        }
+    }
+
     fn decide(&mut self, now: u64, pods: &[&PodView]) -> Vec<PodAction> {
+        // `pods` comes from the informer cache in id order; binary search
+        // keeps the per-tick matching O(entries · log views)
         let mut out = Vec::new();
         for (pod, policy) in &mut self.entries {
-            if !pods.iter().any(|v| v.id == *pod) {
+            if pods.binary_search_by_key(pod, |v| v.id).is_err() {
                 continue; // not Running on this node this tick
             }
             match policy.decide(now) {
@@ -251,7 +326,8 @@ impl NodePolicy for PerPodAdapter {
     }
 
     fn next_wake(&self, now: u64, sampling_period_secs: u64) -> u64 {
-        // earliest cadence across the hosted kernels; an empty adapter
+        // earliest cadence across the ACTIVE kernels — retired (Succeeded)
+        // pods' cadences no longer cap coast length; an empty adapter
         // never needs waking (interrupts still arrive event-driven)
         let mut wake = u64::MAX;
         for (_, p) in &self.entries {
@@ -300,5 +376,67 @@ mod tests {
         a.manage(0, Box::new(VpaSimPolicy::new(1.0)));
         // no views at all → no actions (and no panic)
         assert!(a.decide(5, &[]).is_empty());
+    }
+
+    fn view(id: PodId, phase: PodPhase) -> PodView {
+        PodView {
+            id,
+            name: format!("p{id}"),
+            phase,
+            qos: crate::simkube::qos::QosClass::Guaranteed,
+            node: Some(0),
+            resource_version: 1,
+            spec_memory_gb: Some(2.0),
+            effective_limit_gb: 2.0,
+            usage_gb: 1.0,
+            rss_gb: 1.0,
+            swap_gb: 0.0,
+            restarts: 0,
+        }
+    }
+
+    #[test]
+    fn succeeded_pod_retires_and_stops_capping_next_wake() {
+        let mut a = PerPodAdapter::new();
+        // vpa-sim polls every tick; fixed never does
+        a.manage(3, Box::new(VpaSimPolicy::new(1.0)));
+        a.manage(7, Box::new(FixedPolicy::new(4.0)));
+        assert_eq!(a.next_wake(100, 5), 101, "active vpa kernel polls per tick");
+        // pod 3 completes: its kernel is parked, not dropped
+        let done = view(3, PodPhase::Succeeded);
+        let running = view(7, PodPhase::Running);
+        a.sync_lifecycle(200, &[&done, &running]);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.retired_len(), 1);
+        assert_eq!(
+            a.next_wake(200, 5),
+            u64::MAX,
+            "a dead cadence must no longer cap coast length"
+        );
+        assert!(!a.wants_observe(), "only the never-observing kernel is active");
+        // the parked kernel is still inspectable for reports
+        assert_eq!(a.policy_of(3).unwrap().name(), "vpa-sim");
+    }
+
+    #[test]
+    fn revived_pod_lazily_reregisters_its_parked_kernel() {
+        let mut a = PerPodAdapter::new();
+        a.manage(3, Box::new(VpaSimPolicy::new(1.0)));
+        let done = view(3, PodPhase::Succeeded);
+        a.sync_lifecycle(10, &[&done]);
+        assert_eq!(a.len(), 0);
+        // the API restarts the Succeeded pod: management must resume
+        let back = view(3, PodPhase::Running);
+        a.sync_lifecycle(20, &[&back]);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.retired_len(), 0);
+        assert_eq!(a.next_wake(20, 5), 21, "revived kernel polls again");
+        // an explicit re-manage while parked supersedes the parked kernel
+        let done2 = view(3, PodPhase::Succeeded);
+        a.sync_lifecycle(30, &[&done2]);
+        let displaced = a.manage(3, Box::new(FixedPolicy::new(2.0)));
+        assert_eq!(displaced.unwrap().name(), "vpa-sim");
+        assert_eq!(a.retired_len(), 0);
+        assert_eq!(a.policy_of(3).unwrap().name(), "fixed");
     }
 }

@@ -7,11 +7,17 @@
 //! itself — clock jumps, policy wake-ups, OOM/eviction/completion
 //! interrupts — is [`run_kernel`], shared with the experiment harness.
 //!
-//! Per-tick order (identical to the legacy hand-rolled loop, which
-//! [`KernelMode::Lockstep`] still reproduces verbatim): submissions due
-//! now → fault injectors due now → requeue loop → policy controller →
-//! stop check → advance. A run ends when the event queue is drained and
-//! every pod reached a terminal state — or at `spec.max_ticks` (queue
+//! Within any tick the engine acts on, the order is identical to the
+//! legacy hand-rolled loop (which [`KernelMode::Lockstep`] still
+//! reproduces verbatim): submissions due now → fault injectors due now →
+//! requeue pass → policy controller → stop check → advance. The requeue
+//! pass itself is NOT per-tick: it is epoch-gated (`Cluster::sched_epoch`
+//! proves when a pass could possibly place something) and indexed, so
+//! idle stretches cost nothing and a pass costs O(waiting · log nodes).
+//! Same-tick arrivals are batched — the clock carries one event per
+//! distinct submission tick, not one per job, so a 10⁵-job backlog seeds
+//! a single event. A run ends when the event queue is drained and every
+//! pod reached a terminal state — or at `spec.max_ticks` (queue
 //! starvation is reported, not looped on forever).
 //!
 //! Admission rejections of scenario pods are counted in
@@ -204,11 +210,19 @@ impl EventSource<Controller> for ScenarioSource<'_> {
         while let Some((_, ev)) = self.clock.pop_due(cluster.now) {
             match ev {
                 TimedEvent::JobArrival(i) => {
-                    // arrivals landing at/after the budget boundary count
-                    // as dropped, not as zero-runtime submissions
-                    if cluster.now < self.spec.max_ticks {
-                        self.attempted += 1;
-                        self.submit_job(cluster, ctl, i);
+                    // one event per distinct submission tick: submit the
+                    // whole same-tick batch (the schedule is sorted, so
+                    // the group is contiguous from i), in schedule order
+                    let at = self.schedule[i].submit_at;
+                    let mut j = i;
+                    while j < self.schedule.len() && self.schedule[j].submit_at == at {
+                        // arrivals landing at/after the budget boundary
+                        // count as dropped, not zero-runtime submissions
+                        if cluster.now < self.spec.max_ticks {
+                            self.attempted += 1;
+                            self.submit_job(cluster, ctl, j);
+                        }
+                        j += 1;
                     }
                 }
                 TimedEvent::FaultFire(i) => self.fire_fault(cluster, ctl, i),
@@ -254,9 +268,21 @@ pub fn run_scenario_mode(
     let schedule = build_schedule(spec, run_seed);
     let mut cluster = spec.build_cluster(&policy);
     let mut ctl = Controller::new();
-    let mut clock = SimClock::new();
-    for (i, js) in schedule.iter().enumerate() {
-        clock.schedule(js.submit_at, TimedEvent::JobArrival(i));
+    // batch same-tick arrivals: one JobArrival event per distinct
+    // submission tick (fire_pre submits the whole contiguous group), so a
+    // backlog of 10^5 jobs seeds one heap entry instead of 10^5
+    let mut group_starts: Vec<usize> = Vec::new();
+    let mut i = 0;
+    while i < schedule.len() {
+        group_starts.push(i);
+        let at = schedule[i].submit_at;
+        while i < schedule.len() && schedule[i].submit_at == at {
+            i += 1;
+        }
+    }
+    let mut clock = SimClock::with_capacity(group_starts.len() + spec.faults.len());
+    for &g in &group_starts {
+        clock.schedule(schedule[g].submit_at, TimedEvent::JobArrival(g));
     }
     for (i, f) in spec.faults.iter().enumerate() {
         clock.schedule(f.at(), TimedEvent::FaultFire(i));

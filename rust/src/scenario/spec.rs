@@ -181,6 +181,11 @@ pub struct ScenarioSpec {
     pub strategy: Strategy,
     /// Hard stop for one run, in ticks (covers queue-starvation stalls).
     pub max_ticks: u64,
+    /// Ring length per metric series. The default mirrors
+    /// `ClusterConfig::default()`; fleet-scale specs shrink it — rings
+    /// are preallocated per sampled pod, so 10⁵ pods at the default
+    /// 8192-sample depth would pin gigabytes nobody reads.
+    pub metrics_history: usize,
 }
 
 impl ScenarioSpec {
@@ -194,7 +199,13 @@ impl ScenarioSpec {
             faults: Vec::new(),
             strategy: Strategy::BestFit,
             max_ticks: 50_000,
+            metrics_history: ClusterConfig::default().metrics_history,
         }
+    }
+
+    pub fn metrics_history(mut self, metrics_history: usize) -> Self {
+        self.metrics_history = metrics_history;
+        self
     }
 
     pub fn pool(mut self, name: &str, count: usize, capacity_gb: f64, swap: SwapKind) -> Self {
@@ -337,6 +348,7 @@ impl ScenarioSpec {
         }
         let config = ClusterConfig {
             scheduler: self.strategy,
+            metrics_history: self.metrics_history,
             ..ClusterConfig::default()
         };
         Cluster::new(nodes, config)

@@ -343,12 +343,16 @@ impl ApiClient {
     /// cursor means the cached lifecycle state is still exact. Usage
     /// figures in cached views refresh on those event ticks; live metrics
     /// flow through the scrape pipeline, not the informer.
-    pub fn sync(&mut self, cluster: &Cluster) {
+    ///
+    /// Returns whether anything was relisted: `false` proves every cached
+    /// view — phases included — is unchanged since the last sync, which
+    /// lets callers skip their own O(pods) per-tick sweeps.
+    pub fn sync(&mut self, cluster: &Cluster) -> bool {
         let next = cluster.events.events.len();
         let fresh = next != self.cursor || self.cache.len() < cluster.pods.len();
         self.cursor = next;
         if !fresh {
-            return;
+            return false;
         }
         if self.cache.len() < cluster.pods.len() {
             self.cache.resize(cluster.pods.len(), None);
@@ -356,6 +360,7 @@ impl ApiClient {
         for id in 0..cluster.pods.len() {
             self.cache[id] = Self::build_view(cluster, id);
         }
+        true
     }
 
     /// The cached view of one pod (None until the first [`Self::sync`]

@@ -39,6 +39,16 @@ impl SimClock {
         Self::default()
     }
 
+    /// A clock pre-sized for `n` scheduled events. Fleet-scale scenarios
+    /// seed their whole (batched) arrival schedule up front; reserving
+    /// once avoids the heap's doubling reallocations during seeding.
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            heap: BinaryHeap::with_capacity(n),
+            seq: 0,
+        }
+    }
+
     /// Schedule `ev` at tick `at`.
     pub fn schedule(&mut self, at: u64, ev: TimedEvent) {
         self.heap.push(Reverse((at, self.seq, ev)));

@@ -1,5 +1,20 @@
 //! The cluster: nodes + pods + kubelet + metrics + events, advanced on a
 //! discrete 1-second clock. This is the substrate every experiment runs on.
+//!
+//! Three clock disciplines share one state machine:
+//!
+//! - **Lockstep** — [`Cluster::step`], the exact 1 s reference;
+//! - **serial event** — [`Cluster::advance_to`] with `shards == 0`:
+//!   cluster-wide coast horizons (PR 3), falling back to stepping the
+//!   moment any single pod cannot be proven quiescent;
+//! - **sharded event** — `shards >= 1`: coast horizons are computed *per
+//!   node*, so a swap-thrashing pod steps alone while every
+//!   provably-quiescent neighbor keeps coasting (lazily, integrated in
+//!   batch), and the integration work fans out across worker threads.
+//!
+//! All three are bit-for-bit identical in `RunResult` + `EventLog`
+//! (`rust/tests/kernel_equivalence.rs`); the scheduling queue below keeps
+//! a requeue pass at O(waiting · log nodes) instead of O(all pods ever).
 
 use super::clock::next_multiple;
 use super::events::{EventKind, EventLog, NODE_EVENT};
@@ -9,7 +24,8 @@ use super::node::Node;
 use super::pod::{MemoryProcess, PendingResize, Pod, PodId, PodPhase};
 use super::qos::QosClass;
 use super::resources::ResourceSpec;
-use super::scheduler::{Scheduler, Strategy};
+use super::scheduler::{CapacityIndex, OrdF64, Scheduler, Strategy};
+use std::collections::BTreeSet;
 
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -34,6 +50,31 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Where simulated pod-seconds were spent — the observability the perf
+/// benches and the mixed-cluster tests read. Not part of any run result;
+/// purely diagnostic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CoastStats {
+    /// Pod-ticks integrated analytically by cluster-wide coasts.
+    pub coasted_pod_ticks: u64,
+    /// Pod-ticks integrated lazily by per-pod coasting inside sharded
+    /// stepping regions (quiescent neighbors of a thrashing pod).
+    pub deferred_pod_ticks: u64,
+    /// Pod-ticks advanced by exact per-second kubelet stepping.
+    pub stepped_pod_ticks: u64,
+}
+
+/// One pod's lazy-coast bookkeeping inside a sharded stepping region: its
+/// state is frozen (exact) as of `anchor`; the quiescence proof covers
+/// every tick of `(anchor, anchor + window]`, during which its usage is
+/// confined to `v0 ± slope·k`.
+#[derive(Clone, Copy, Debug)]
+struct Deferral {
+    anchor: u64,
+    v0: f64,
+    slope: f64,
+}
+
 pub struct Cluster {
     pub config: ClusterConfig,
     pub nodes: Vec<Node>,
@@ -52,6 +93,20 @@ pub struct Cluster {
     /// [`Self::schedule_pending`] pass could possibly do something —
     /// an unchanged epoch proves the pass would be a no-op.
     pub sched_epoch: u64,
+    /// The scheduling queue: pods waiting for a node (Pending + unbound),
+    /// keyed `(request_gb, arrival)` where arrival is the pod id
+    /// (creation order, stable across requeues). Ascending order lets a
+    /// requeue pass stop at the first request no node fits — every later
+    /// request is at least as large.
+    waiting: BTreeSet<(OrdF64, PodId)>,
+    /// Pressure-evicted pods awaiting their requeue conversion (id order,
+    /// like the scan the set replaces).
+    evicted_queue: BTreeSet<PodId>,
+    /// Free-capacity index over schedulable nodes (see [`CapacityIndex`]),
+    /// maintained at every reservation/cordon change.
+    cap_index: CapacityIndex,
+    /// Clock-discipline accounting (diagnostic only).
+    pub coast_stats: CoastStats,
 }
 
 /// How [`Cluster::advance_to`] returned.
@@ -72,16 +127,32 @@ pub enum Advance {
 /// not slope-bounded and jump without this cap.
 const COAST_PROBE_TICKS: u64 = 64;
 
+/// Below this much integration work (pod-ticks), a coast runs on the
+/// calling thread: `thread::scope` spawn latency would dominate.
+const PAR_MIN_POD_TICKS: u64 = 16_384;
+
+/// Below this many pods, per-node horizon classification stays serial.
+const PAR_MIN_CLASSIFY_PODS: usize = 4_096;
+
 /// Options for [`Cluster::advance_to`].
 #[derive(Clone, Copy, Debug)]
 pub struct AdvanceOpts {
     /// `true`: jump quiescent stretches (the event kernel). `false`:
     /// exact 1 s stepping (the legacy reference).
     pub event_driven: bool,
-    /// Whether coast landings on metric sampling ticks must record
-    /// samples (required whenever any policy consumes scraped metrics;
-    /// per-second stepping always records, exactly like `step`).
+    /// Whether the sampling grid must be honored: coast/region landings
+    /// on sampling ticks record samples and jumps never skip a grid tick
+    /// (required whenever any policy consumes scraped metrics). When
+    /// `false`, nothing scrapes the store: full `step()` fallbacks still
+    /// record (as `step` always does), but sharded regions leave deferred
+    /// pods unsampled — the store's contents are unobservable then, and
+    /// only `RunResult` + `EventLog` equivalence is promised.
     pub sample_metrics: bool,
+    /// `0`: the PR 3 serial event path (cluster-wide horizons). `>= 1`:
+    /// the sharded path — per-node horizons, per-pod coasting inside
+    /// mixed stepping regions, and up to this many worker threads for
+    /// the integration fan-out. Results are bit-identical either way.
+    pub shards: usize,
 }
 
 impl Cluster {
@@ -89,6 +160,7 @@ impl Cluster {
         let kubelet = Kubelet::new(config.kubelet);
         let scheduler = Scheduler::new(config.scheduler);
         let metrics = MetricsStore::new(config.sampling_period_secs, config.metrics_history);
+        let cap_index = CapacityIndex::build(&nodes);
         Self {
             config,
             nodes,
@@ -101,6 +173,10 @@ impl Cluster {
             events: EventLog::new(),
             now: 0,
             sched_epoch: 0,
+            waiting: BTreeSet::new(),
+            evicted_queue: BTreeSet::new(),
+            cap_index,
+            coast_stats: CoastStats::default(),
         }
     }
 
@@ -120,6 +196,7 @@ impl Cluster {
         self.sched_epoch += 1;
         let request = self.pods[id].spec.memory_request_gb();
         self.nodes[n].bind(id, request);
+        self.cap_index.refresh(n, &self.nodes[n]);
         let pod = &mut self.pods[id];
         pod.node = Some(n);
         pod.phase = PodPhase::Running;
@@ -141,10 +218,11 @@ impl Cluster {
         let request = pod.spec.memory_request_gb();
         self.pods.push(pod);
         self.io.push(IoState::default());
-        match self.scheduler.place(&self.nodes, request) {
+        match self.cap_index.place(&self.nodes, self.scheduler.strategy, request) {
             Some(n) => self.start_on(id, n),
             None => {
                 self.sched_epoch += 1; // a new waiting pod arms the requeue loop
+                self.waiting.insert((OrdF64(request), id));
                 self.events.push(
                     self.now,
                     id,
@@ -184,7 +262,12 @@ impl Cluster {
             // reservation (evicted pods were unbound but keep `node` set)
             if self.nodes[n].pods.contains(&id) {
                 self.nodes[n].adjust_reservation(old_request, mem_gb);
+                self.cap_index.refresh(n, &self.nodes[n]);
             }
+        }
+        // a waiting pod is queued under its request: re-key it
+        if self.waiting.remove(&(OrdF64(old_request), id)) {
+            self.waiting.insert((OrdF64(mem_gb), id));
         }
         self.events.push(now, id, EventKind::ResizeIssued { target_gb: mem_gb });
     }
@@ -195,8 +278,10 @@ impl Cluster {
         let now = self.now;
         self.sched_epoch += 1;
         let ready_at = now + self.config.restart_latency_secs;
+        let old_request = self.pods[id].spec.memory_request_gb();
+        let was_waiting = self.waiting.remove(&(OrdF64(old_request), id));
+        self.evicted_queue.remove(&id);
         let pod = &mut self.pods[id];
-        let old_request = pod.spec.memory_request_gb();
         pod.restart(Some(new_mem_gb));
         pod.resource_version += 1;
         pod.phase = PodPhase::Pending; // waits out restart latency
@@ -208,6 +293,10 @@ impl Cluster {
                 // restart re-admits them to the node's accounting
                 self.nodes[n].bind(id, new_mem_gb);
             }
+            self.cap_index.refresh(n, &self.nodes[n]);
+        } else if was_waiting {
+            // a displaced pod keeps waiting, under its new request
+            self.waiting.insert((OrdF64(new_mem_gb), id));
         }
         self.io[id] = IoState::default();
         self.restarting.push((id, ready_at));
@@ -236,7 +325,8 @@ impl Cluster {
 
     /// Displace a pod from `from_node`: swap residency is returned to the
     /// node's device, any in-flight restart is cancelled, and the pod goes
-    /// back to Pending as a fresh container.
+    /// back to Pending as a fresh container (re-entering the waiting
+    /// queue).
     fn displace(&mut self, id: PodId, from_node: usize) {
         self.nodes[from_node].swap.page_in(self.pods[id].usage.swap_gb);
         self.restarting.retain(|&(p, _)| p != id);
@@ -245,6 +335,8 @@ impl Cluster {
         if !pod.is_done() {
             pod.phase = PodPhase::Pending;
             pod.restarts += 1;
+            let request = self.pods[id].spec.memory_request_gb();
+            self.waiting.insert((OrdF64(request), id));
         }
         self.io[id] = IoState::default();
     }
@@ -264,12 +356,20 @@ impl Cluster {
             self.displace(id, node);
             self.events.push(now, id, EventKind::PodDrained { node });
         }
+        self.cap_index.refresh(node, &self.nodes[node]);
         self.events.push(
             now,
             NODE_EVENT,
             EventKind::NodeDrained { node, displaced: victims.len() },
         );
         victims.len()
+    }
+
+    /// Re-enable scheduling on a cordoned node (`kubectl uncordon`).
+    pub fn uncordon_node(&mut self, node: usize) {
+        self.nodes[node].uncordon();
+        self.cap_index.refresh(node, &self.nodes[node]);
+        self.sched_epoch += 1;
     }
 
     /// Crash a running container (the random-kill fault injector). The pod
@@ -284,60 +384,135 @@ impl Cluster {
         let req = self.pods[id].spec.memory_request_gb();
         self.sched_epoch += 1;
         self.nodes[node].unbind(id, req);
+        self.cap_index.refresh(node, &self.nodes[node]);
         self.displace(id, node);
         self.events.push(now, id, EventKind::PodKilled { node });
         true
     }
 
-    /// The requeue loop: try to place every pod waiting for a node —
-    /// Pending and unbound (failed admission-time scheduling, drained,
-    /// killed), or pressure-Evicted (converted back to Pending here, as a
-    /// fresh container). Called by the scenario engine every tick so no
-    /// pod is stuck Pending forever while capacity exists; returns how
-    /// many pods were placed.
-    pub fn schedule_pending(&mut self) -> usize {
+    /// Convert a pressure-Evicted pod back to Pending as a fresh
+    /// container and enqueue it for placement. Placement waits for the
+    /// NEXT pass (eviction cooldown): re-admitting in the same tick the
+    /// eviction fired would flap the pod straight back onto the
+    /// still-loaded node.
+    fn requeue_evicted(&mut self, id: PodId) {
         let now = self.now;
+        {
+            let pod = &mut self.pods[id];
+            Self::fresh_container(pod);
+            pod.phase = PodPhase::Pending;
+            pod.restarts += 1;
+        }
+        self.sched_epoch += 1; // converted → next pass may place it
+        self.events.push(now, id, EventKind::PodRequeued);
+        let request = self.pods[id].spec.memory_request_gb();
+        self.waiting.insert((OrdF64(request), id));
+    }
+
+    /// Bind a waiting pod onto node `n` — first start or replacement
+    /// container — removing it from the waiting queue. Shared by the
+    /// indexed requeue pass and the linear-scan reference so the two can
+    /// never drift.
+    fn admit_waiting(&mut self, id: PodId, request: f64, n: usize) {
+        self.waiting.remove(&(OrdF64(request), id));
+        self.io[id] = IoState::default();
+        if self.pods[id].started_at.is_some() {
+            // replacement container (the pod ran before): pays the same
+            // restart latency as the API restart path, so churn-induced
+            // replacements cost what policy-induced ones do. PodStarted
+            // is emitted when the latency expires (the step() restart
+            // path).
+            self.sched_epoch += 1;
+            self.nodes[n].bind(id, request);
+            self.cap_index.refresh(n, &self.nodes[n]);
+            self.pods[id].node = Some(n);
+            self.events.push(self.now, id, EventKind::PodScheduled { node: n });
+            self.restarting
+                .push((id, self.now + self.config.restart_latency_secs));
+        } else {
+            self.start_on(id, n);
+        }
+    }
+
+    /// The requeue pass: place pods waiting for a node — Pending and
+    /// unbound (failed admission-time scheduling, drained, killed), after
+    /// converting pressure-Evicted pods back to Pending as fresh
+    /// containers. Epoch-gated by the scenario engine (it runs only when
+    /// [`Self::sched_epoch`] shows a pass could act, not every tick), and
+    /// indexed: the waiting queue is keyed `(request_gb, arrival)` and
+    /// placement queries the free-capacity index, so a pass costs
+    /// O(waiting · log nodes) — and stops early at the first request no
+    /// node can fit, since every later request is at least as large.
+    /// Returns how many pods were placed.
+    pub fn schedule_pending(&mut self) -> usize {
+        // O(log) fast path: if even the SMALLEST waiting request fits
+        // nowhere, this pass cannot place anything (requests ascend), so
+        // skip the queue snapshot outright — epoch-armed passes on a full
+        // cluster then cost one index probe, not an O(waiting) copy
+        let placeable = match self.waiting.iter().next() {
+            None => false,
+            Some(&(OrdF64(smallest), _)) => self
+                .cap_index
+                .place(&self.nodes, self.scheduler.strategy, smallest)
+                .is_some(),
+        };
+        // snapshot the queue BEFORE conversions: a pod converted in this
+        // pass waits for the next one (eviction cooldown — re-admitting
+        // in the same pass the eviction fired would flap the pod straight
+        // back onto the still-loaded node)
+        let queue: Vec<(f64, PodId)> = if placeable {
+            self.waiting.iter().map(|&(r, id)| (r.0, id)).collect()
+        } else {
+            Vec::new()
+        };
+        let evicted: Vec<PodId> = std::mem::take(&mut self.evicted_queue).into_iter().collect();
+        for id in evicted {
+            self.requeue_evicted(id);
+        }
         let mut placed = 0;
-        for id in 0..self.pods.len() {
-            let waiting = match self.pods[id].phase {
-                PodPhase::Pending => self.pods[id].node.is_none(),
-                PodPhase::Evicted => true,
-                _ => false,
+        for (request, id) in queue {
+            let Some(n) = self.cap_index.place(&self.nodes, self.scheduler.strategy, request)
+            else {
+                break; // ascending requests: nothing later fits either
             };
-            if !waiting {
-                continue;
-            }
+            self.admit_waiting(id, request, n);
+            placed += 1;
+        }
+        placed
+    }
+
+    /// Reference implementation of [`Self::schedule_pending`]: classifies
+    /// waiting pods by a full scan over every pod ever created and places
+    /// through the linear scheduler sweep — the shape the seed used.
+    /// Semantically identical to the indexed fast path
+    /// (`rust/tests/sched_queue_prop.rs` pins the two against each other
+    /// on randomized churn); kept as executable documentation of what the
+    /// incremental queue maintains, and as the property-test oracle.
+    pub fn schedule_pending_scan(&mut self) -> usize {
+        // eviction cooldown, scan-style: pods converted in THIS pass are
+        // excluded from this pass's placement (see `schedule_pending`)
+        let mut converted: Vec<PodId> = Vec::new();
+        for id in 0..self.pods.len() {
             if self.pods[id].phase == PodPhase::Evicted {
-                // evictions released the reservation but kept `node` for
-                // audit; requeue as a fresh container. Placement waits for
-                // the NEXT tick (eviction cooldown): re-admitting in the
-                // same tick the pressure eviction fired would flap the pod
-                // straight back onto the still-loaded node.
-                let pod = &mut self.pods[id];
-                Self::fresh_container(pod);
-                pod.phase = PodPhase::Pending;
-                pod.restarts += 1;
-                self.sched_epoch += 1; // converted → next pass may place it
-                self.events.push(now, id, EventKind::PodRequeued);
-                continue;
+                self.evicted_queue.remove(&id);
+                self.requeue_evicted(id);
+                converted.push(id);
             }
-            let request = self.pods[id].spec.memory_request_gb();
+        }
+        let mut candidates: Vec<(OrdF64, PodId)> = Vec::new();
+        for id in 0..self.pods.len() {
+            if self.pods[id].phase == PodPhase::Pending
+                && self.pods[id].node.is_none()
+                && converted.binary_search(&id).is_err()
+            {
+                candidates.push((OrdF64(self.pods[id].spec.memory_request_gb()), id));
+            }
+        }
+        candidates.sort();
+        let mut placed = 0;
+        for (OrdF64(request), id) in candidates {
             if let Some(n) = self.scheduler.place(&self.nodes, request) {
-                self.io[id] = IoState::default();
-                if self.pods[id].started_at.is_some() {
-                    // replacement container (the pod ran before): pays the
-                    // same restart latency as the API restart path, so
-                    // churn-induced replacements cost what policy-induced
-                    // ones do. PodStarted is emitted when the latency
-                    // expires (the step() restart path).
-                    self.sched_epoch += 1;
-                    self.nodes[n].bind(id, request);
-                    self.pods[id].node = Some(n);
-                    self.events.push(now, id, EventKind::PodScheduled { node: n });
-                    self.restarting.push((id, now + self.config.restart_latency_secs));
-                } else {
-                    self.start_on(id, n);
-                }
+                self.admit_waiting(id, request, n);
                 placed += 1;
             }
         }
@@ -350,12 +525,13 @@ impl Cluster {
 
     // -------------------------------------------------------------- clock --
 
-    /// Advance one second of cluster time.
-    pub fn step(&mut self) {
-        self.now += 1;
+    /// Start-of-tick restart-latency expiry: pods whose latency elapsed
+    /// resume Running — but only BOUND pods start; a restart issued
+    /// against a displaced (unbound) pod must wait for the requeue loop
+    /// to place it, not become a zombie Running pod no kubelet ever
+    /// ticks.
+    fn process_restart_expiries(&mut self) {
         let now = self.now;
-
-        // restart latency expiry
         let mut ready = Vec::new();
         self.restarting.retain(|&(id, at)| {
             if at <= now {
@@ -367,85 +543,112 @@ impl Cluster {
         });
         for id in ready {
             let pod = &mut self.pods[id];
-            // only BOUND pods start: a restart issued against a displaced
-            // (unbound) pod must wait for the requeue loop to place it,
-            // not become a zombie Running pod no kubelet ever ticks
             if pod.phase == PodPhase::Pending && pod.node.is_some() {
                 pod.phase = PodPhase::Running;
                 pod.started_at.get_or_insert(now);
                 self.events.push(now, id, EventKind::PodStarted);
             }
         }
+    }
 
-        // kubelet tick per running pod
+    /// One kubelet tick for one pod (a no-op unless Running and bound),
+    /// including the completion → reservation-release transition. The
+    /// lockstep loop, the serial fallback, and sharded stepping regions
+    /// all advance pods exclusively through here.
+    fn kubelet_tick_one(&mut self, id: PodId) {
+        let now = self.now;
+        let node_idx = match self.pods[id].node {
+            Some(n) if self.pods[id].phase == PodPhase::Running => n,
+            _ => return,
+        };
+        let (pods, io, nodes, events) = (
+            &mut self.pods,
+            &mut self.io,
+            &mut self.nodes,
+            &mut self.events,
+        );
+        self.kubelet.tick_pod(
+            now,
+            &mut pods[id],
+            &mut io[id],
+            &mut nodes[node_idx].swap,
+            events,
+        );
+        // a completed pod releases its reservation (kube GC semantics)
+        if pods[id].phase == PodPhase::Succeeded {
+            let req = pods[id].spec.memory_request_gb();
+            nodes[node_idx].unbind(id, req);
+            self.sched_epoch += 1;
+            self.cap_index.refresh(node_idx, &nodes[node_idx]);
+        }
+        self.coast_stats.stepped_pod_ticks += 1;
+    }
+
+    /// Node-pressure eviction scan for one node, in QoS order (BestEffort
+    /// first), repeating until the node fits. Evicted pods enter the
+    /// requeue conversion queue.
+    fn eviction_pass_node(&mut self, n: usize) {
+        let now = self.now;
+        loop {
+            let rss_sum: f64 = self.nodes[n]
+                .pods
+                .iter()
+                .map(|&p| self.pods[p].usage.rss_gb)
+                .sum();
+            if rss_sum <= self.nodes[n].capacity_gb {
+                break;
+            }
+            // victim: lowest QoS rank, largest RSS
+            let victim = self.nodes[n]
+                .pods
+                .iter()
+                .copied()
+                .filter(|&p| self.pods[p].phase == PodPhase::Running)
+                .min_by(|&a, &b| {
+                    let pa = &self.pods[a];
+                    let pb = &self.pods[b];
+                    pa.qos
+                        .eviction_rank()
+                        .cmp(&pb.qos.eviction_rank())
+                        .then(pb.usage.rss_gb.total_cmp(&pa.usage.rss_gb))
+                });
+            let Some(v) = victim else { break };
+            let qos_rank = self.pods[v].qos.eviction_rank();
+            self.nodes[n].swap.page_in(self.pods[v].usage.swap_gb);
+            self.pods[v].usage = Default::default();
+            self.pods[v].phase = PodPhase::Evicted;
+            let req = self.pods[v].spec.memory_request_gb();
+            self.nodes[n].unbind(v, req);
+            self.sched_epoch += 1;
+            self.cap_index.refresh(n, &self.nodes[n]);
+            self.evicted_queue.insert(v);
+            self.events
+                .push(now, v, EventKind::Evicted { node: n, qos_rank });
+        }
+    }
+
+    /// Advance one second of cluster time.
+    pub fn step(&mut self) {
+        self.now += 1;
+        self.process_restart_expiries();
         for id in 0..self.pods.len() {
-            let node_idx = match self.pods[id].node {
-                Some(n) if self.pods[id].phase == PodPhase::Running => n,
-                _ => continue,
-            };
-            let (pods, io, nodes, events) = (
-                &mut self.pods,
-                &mut self.io,
-                &mut self.nodes,
-                &mut self.events,
-            );
-            self.kubelet.tick_pod(
-                now,
-                &mut pods[id],
-                &mut io[id],
-                &mut nodes[node_idx].swap,
-                events,
-            );
-            // a completed pod releases its reservation (kube GC semantics)
-            if pods[id].phase == PodPhase::Succeeded {
-                let req = pods[id].spec.memory_request_gb();
-                nodes[node_idx].unbind(id, req);
-                self.sched_epoch += 1;
-            }
+            self.kubelet_tick_one(id);
         }
-
-        // node-pressure eviction in QoS order (BestEffort first)
         for n in 0..self.nodes.len() {
-            loop {
-                let rss_sum: f64 = self.nodes[n]
-                    .pods
-                    .iter()
-                    .map(|&p| self.pods[p].usage.rss_gb)
-                    .sum();
-                if rss_sum <= self.nodes[n].capacity_gb {
-                    break;
-                }
-                // victim: lowest QoS rank, largest RSS
-                let victim = self.nodes[n]
-                    .pods
-                    .iter()
-                    .copied()
-                    .filter(|&p| self.pods[p].phase == PodPhase::Running)
-                    .min_by(|&a, &b| {
-                        let pa = &self.pods[a];
-                        let pb = &self.pods[b];
-                        pa.qos
-                            .eviction_rank()
-                            .cmp(&pb.qos.eviction_rank())
-                            .then(pb.usage.rss_gb.total_cmp(&pa.usage.rss_gb))
-                    });
-                let Some(v) = victim else { break };
-                let qos_rank = self.pods[v].qos.eviction_rank();
-                self.nodes[n].swap.page_in(self.pods[v].usage.swap_gb);
-                self.pods[v].usage = Default::default();
-                self.pods[v].phase = PodPhase::Evicted;
-                let req = self.pods[v].spec.memory_request_gb();
-                self.nodes[n].unbind(v, req);
-                self.sched_epoch += 1;
-                self.events
-                    .push(now, v, EventKind::Evicted { node: n, qos_rank });
-            }
+            self.eviction_pass_node(n);
         }
-
-        // metrics sampling
-        if self.metrics.is_sampling_tick(now) {
+        if self.metrics.is_sampling_tick(self.now) {
             self.sample_metrics_now();
         }
+    }
+
+    /// [`Self::step`] plus the interrupt check: returns `true` when the
+    /// tick emitted an event the driver must react to on this exact tick
+    /// (see [`EventKind::is_interrupt`]).
+    fn step_checked(&mut self) -> bool {
+        let seen = self.events.events.len();
+        self.step();
+        self.events.events[seen..].iter().any(|e| e.kind.is_interrupt())
     }
 
     /// Record the cAdvisor samples for every Running pod at the current
@@ -489,7 +692,16 @@ impl Cluster {
     /// while the per-tick scans (restart queue, eviction pass, scheduler,
     /// metrics check) are skipped entirely. Anywhere quiescence cannot be
     /// proven the clock falls back to exact 1 s [`Self::step`]s.
+    ///
+    /// With `opts.shards >= 1` the fallback is much narrower: horizons
+    /// are per node, and inside mixed stepping regions only the pods that
+    /// actually defeat the proof (swap-bound, resizing, near a limit)
+    /// step per-second while their neighbors coast lazily (see
+    /// [`Self::step_region`]). Same results, bit for bit.
     pub fn advance_to(&mut self, target: u64, opts: AdvanceOpts) -> Advance {
+        if opts.event_driven && opts.shards > 0 {
+            return self.advance_sharded(target, opts);
+        }
         while self.now < target {
             let h = if opts.event_driven {
                 self.coast_horizon(target, opts.sample_metrics)
@@ -501,34 +713,25 @@ impl Cluster {
                 if opts.sample_metrics && self.metrics.is_sampling_tick(self.now) {
                     self.sample_metrics_now();
                 }
-            } else {
-                let seen = self.events.events.len();
-                self.step();
+            } else if self.step_checked() {
                 // PodStarted is in the interrupt set because a restart-
                 // latency expiry can resume a pod whose (frozen) decision
                 // interval is already overdue: the legacy poll acted on
                 // that exact tick, so the controller must wake then too
-                let interrupted = self.events.events[seen..].iter().any(|e| {
-                    matches!(
-                        e.kind,
-                        EventKind::OomKilled { .. }
-                            | EventKind::Evicted { .. }
-                            | EventKind::PodCompleted
-                            | EventKind::PodStarted
-                    )
-                });
-                if interrupted {
-                    return Advance::Interrupted;
-                }
+                return Advance::Interrupted;
             }
         }
         Advance::Reached
     }
 
     /// How many ticks (≥ 2, else 0) the cluster can provably coast from
-    /// `now` without any per-second work becoming observable. Every bound
-    /// here is conservative: when in doubt the answer is 0 and
-    /// [`Self::advance_to`] falls back to exact stepping.
+    /// `now` without any per-second work becoming observable: the
+    /// cluster-wide minimum of the per-node proofs
+    /// ([`Self::node_coast_horizon`] — ONE implementation of the
+    /// quiescence conditions serves both the serial and sharded paths),
+    /// clamped by the serial-only events (restart expiries, the sampling
+    /// grid). Every bound is conservative: when in doubt the answer is 0
+    /// and [`Self::advance_to`] falls back to exact stepping.
     fn coast_horizon(&self, target: u64, sample_metrics: bool) -> u64 {
         if !self.restarting.is_empty() {
             return 0; // restart-latency expiries are per-second events
@@ -541,85 +744,8 @@ impl Cluster {
         if h < 2 {
             return 0;
         }
-        for pod in &self.pods {
-            if pod.phase != PodPhase::Running {
-                continue; // idle pods have no per-second behaviour
-            }
-            // any swap / resize / fractional-progress state falls back to
-            // stepping: those paths have per-second kubelet semantics
-            if self.io[pod.id].debt_secs != 0.0
-                || pod.usage.swap_gb != 0.0
-                || pod.pending_resize.is_some()
-                || pod.progress_secs.fract() != 0.0
-                || pod.wall_running_secs == 0
-            {
-                return 0;
-            }
-            let lim = pod.effective_limit_gb;
-            if !lim.is_finite() {
-                return 0; // BestEffort accounting integrates usage per tick
-            }
-            // phase-local slope over a bounded probe window (the bound is
-            // only valid inside it, so the coast is capped there too)
-            h = h.min(COAST_PROBE_TICKS);
-            let slope = pod.process.max_slope_over(pod.progress_secs, h);
-            if !slope.is_finite() || slope < 0.0 {
-                return 0; // no slope contract → exact stepping
-            }
-            let v0 = pod.usage.usage_gb;
-            if v0 >= lim {
-                return 0;
-            }
-            // completion: the pod finishes on the step where progress
-            // reaches duration; the coast must stop strictly before it
-            let rem = pod.process.duration_secs() - pod.progress_secs;
-            let k_done = rem.max(0.0).ceil() as u64;
-            if k_done < 2 {
-                return 0;
-            }
-            h = h.min(k_done - 1);
-            // limit crossing: usage is confined to v0 + slope·k, so no
-            // OOM / swap-out before k_lim (−1 absorbs division rounding)
-            if slope > 0.0 {
-                let k_lim = ((lim - v0) / slope).floor();
-                if k_lim < 2.0 {
-                    return 0;
-                }
-                h = h.min((k_lim as u64).saturating_sub(1));
-            }
-            if h < 2 {
-                return 0;
-            }
-        }
-        // node pressure: worst-case Σ rss (≤ Σ v0 + Σ slope·k) must stay
-        // within capacity, else the eviction scan must run per second
-        for node in &self.nodes {
-            let mut v_sum = 0.0;
-            let mut slope_sum = 0.0;
-            let mut any_running = false;
-            for &id in &node.pods {
-                let pod = &self.pods[id];
-                if pod.phase != PodPhase::Running {
-                    continue;
-                }
-                any_running = true;
-                v_sum += pod.usage.usage_gb;
-                // h is already within every pod's probe window here
-                slope_sum += pod.process.max_slope_over(pod.progress_secs, h);
-            }
-            if !any_running {
-                continue;
-            }
-            if v_sum > node.capacity_gb {
-                return 0;
-            }
-            if slope_sum > 0.0 {
-                let k_ev = ((node.capacity_gb - v_sum) / slope_sum).floor();
-                if k_ev < 2.0 {
-                    return 0;
-                }
-                h = h.min((k_ev as u64).saturating_sub(1));
-            }
+        for n in 0..self.nodes.len() {
+            h = h.min(self.node_coast_horizon(n, h));
             if h < 2 {
                 return 0;
             }
@@ -627,33 +753,453 @@ impl Cluster {
         h
     }
 
-    /// Jump the clock `h` ticks across a proven-quiescent window. Each
-    /// running pod's progress advances exactly as `h` repeated `+1.0`
-    /// steps would (progress is integral here — a coast precondition),
-    /// and the footprint integrals accumulate term-by-term via
+    /// Integrate one running pod across `h` proven-quiescent ticks: its
+    /// progress advances exactly as `h` repeated `+1.0` steps would
+    /// (progress is integral here — a coast precondition), and the
+    /// footprint integrals accumulate term-by-term via
     /// [`MemoryProcess::accumulate_usage`], so the resulting state is
-    /// bit-identical to per-second stepping.
+    /// bit-identical to per-second stepping. Pure per-pod work — the
+    /// sharded path fans it across worker threads.
+    fn integrate_pod(pod: &mut Pod, h: u64) {
+        let p0 = pod.progress_secs;
+        let lim = pod.effective_limit_gb;
+        let (process, used) = (&pod.process, &mut pod.used_gb_secs);
+        let last = process.accumulate_usage(p0, h, used);
+        // the provisioned integral adds the (constant) limit once per
+        // tick — repeated adds, so rounding matches the 1 s loop
+        for _ in 0..h {
+            pod.provisioned_gb_secs += lim;
+        }
+        pod.progress_secs = p0 + h as f64;
+        pod.wall_running_secs += h;
+        pod.usage.usage_gb = last;
+        pod.usage.rss_gb = last.min(lim).max(0.0);
+        // swap_gb stays 0 (a coast precondition)
+    }
+
+    /// Jump the clock `h` ticks across a proven-quiescent window (serial
+    /// event path).
     fn coast(&mut self, h: u64) {
         self.now += h;
         for pod in &mut self.pods {
             if pod.phase != PodPhase::Running {
                 continue;
             }
-            let p0 = pod.progress_secs;
-            let lim = pod.effective_limit_gb;
-            let (process, used) = (&pod.process, &mut pod.used_gb_secs);
-            let last = process.accumulate_usage(p0, h, used);
-            // the provisioned integral adds the (constant) limit once per
-            // tick — repeated adds, so rounding matches the 1 s loop
-            for _ in 0..h {
-                pod.provisioned_gb_secs += lim;
-            }
-            pod.progress_secs = p0 + h as f64;
-            pod.wall_running_secs += h;
-            pod.usage.usage_gb = last;
-            pod.usage.rss_gb = last.min(lim).max(0.0);
-            // swap_gb stays 0 (a coast precondition)
+            Self::integrate_pod(pod, h);
+            self.coast_stats.coasted_pod_ticks += h;
         }
+    }
+
+    // ------------------------------------------------ sharded event path --
+
+    /// Per-pod coast preconditions plus the window they hold over, from
+    /// the pod's current (exact) state: `Some((w, slope, v0))` with
+    /// `w >= 2` when the pod provably needs no per-second work for the
+    /// next `w` ticks (`w <= cap`), else `None`. This is THE per-pod
+    /// quiescence proof — serial coasts, sharded coasts, and per-pod
+    /// deferral all build on it, so the preconditions cannot drift apart.
+    fn pod_defer_window(&self, id: PodId, cap: u64) -> Option<(u64, f64, f64)> {
+        let pod = &self.pods[id];
+        if self.io[id].debt_secs != 0.0
+            || pod.usage.swap_gb != 0.0
+            || pod.pending_resize.is_some()
+            || pod.progress_secs.fract() != 0.0
+            || pod.wall_running_secs == 0
+        {
+            return None;
+        }
+        let lim = pod.effective_limit_gb;
+        if !lim.is_finite() {
+            return None;
+        }
+        let mut w = cap.min(COAST_PROBE_TICKS);
+        if w < 2 {
+            return None;
+        }
+        let slope = pod.process.max_slope_over(pod.progress_secs, w);
+        if !slope.is_finite() || slope < 0.0 {
+            return None;
+        }
+        let v0 = pod.usage.usage_gb;
+        if v0 >= lim {
+            return None;
+        }
+        let rem = pod.process.duration_secs() - pod.progress_secs;
+        let k_done = rem.max(0.0).ceil() as u64;
+        if k_done < 2 {
+            return None;
+        }
+        w = w.min(k_done - 1);
+        if slope > 0.0 {
+            let k_lim = ((lim - v0) / slope).floor();
+            if k_lim < 2.0 {
+                return None;
+            }
+            w = w.min((k_lim as u64).saturating_sub(1));
+        }
+        if w < 2 {
+            None
+        } else {
+            Some((w, slope, v0))
+        }
+    }
+
+    /// Node-local coast horizon over `window` ticks: every bound pod's
+    /// [`Self::pod_defer_window`] plus the node-pressure proof (worst-case
+    /// Σ usage must stay within capacity, else the eviction scan must run
+    /// per second). Returns 0 when the node needs per-second attention,
+    /// `window` (uncapped) for pod-free nodes, else a horizon ≥ 2.
+    /// [`Self::coast_horizon`] takes the cluster-wide minimum of these.
+    fn node_coast_horizon(&self, n: usize, window: u64) -> u64 {
+        let node = &self.nodes[n];
+        let mut h = window.min(COAST_PROBE_TICKS);
+        if h < 2 {
+            return 0;
+        }
+        let mut v_sum = 0.0;
+        let mut slope_sum = 0.0;
+        let mut any_running = false;
+        for &id in &node.pods {
+            if self.pods[id].phase != PodPhase::Running {
+                continue;
+            }
+            any_running = true;
+            let Some((w, slope, v0)) = self.pod_defer_window(id, h) else {
+                return 0;
+            };
+            h = h.min(w);
+            v_sum += v0;
+            slope_sum += slope;
+        }
+        if !any_running {
+            return window; // pod-free node: nothing per-second can happen
+        }
+        if v_sum > node.capacity_gb {
+            return 0;
+        }
+        if slope_sum > 0.0 {
+            let k_ev = ((node.capacity_gb - v_sum) / slope_sum).floor();
+            if k_ev < 2.0 {
+                return 0;
+            }
+            h = h.min((k_ev as u64).saturating_sub(1));
+        }
+        if h < 2 {
+            0
+        } else {
+            h
+        }
+    }
+
+    /// Per-node horizons over `window`, classified in parallel when the
+    /// fleet is large enough to amortize the fan-out.
+    fn node_horizons(&self, window: u64, shards: usize) -> Vec<u64> {
+        let n = self.nodes.len();
+        let mut out = vec![0u64; n];
+        let workers = shards.min(n);
+        if workers < 2 || self.pods.len() < PAR_MIN_CLASSIFY_PODS {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = self.node_coast_horizon(i, window);
+            }
+            return out;
+        }
+        let chunk = n.div_ceil(workers);
+        let this = &*self;
+        std::thread::scope(|scope| {
+            for (ci, slots) in out.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || {
+                    for (k, slot) in slots.iter_mut().enumerate() {
+                        *slot = this.node_coast_horizon(ci * chunk + k, window);
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    /// Cluster-wide coast with the integration fanned across up to
+    /// `shards` workers. Each pod integrates independently
+    /// ([`Self::integrate_pod`]), so chunking across threads is
+    /// bit-identical to the serial loop.
+    fn coast_parallel(&mut self, h: u64, shards: usize) {
+        self.now += h;
+        let mut work: Vec<&mut Pod> = self
+            .pods
+            .iter_mut()
+            .filter(|p| p.phase == PodPhase::Running)
+            .collect();
+        self.coast_stats.coasted_pod_ticks += work.len() as u64 * h;
+        let workers = shards.min(work.len());
+        if workers < 2 || (work.len() as u64) * h < PAR_MIN_POD_TICKS {
+            for pod in work.iter_mut() {
+                Self::integrate_pod(pod, h);
+            }
+            return;
+        }
+        let chunk = work.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            for ch in work.chunks_mut(chunk) {
+                scope.spawn(move || {
+                    for pod in ch.iter_mut() {
+                        Self::integrate_pod(pod, h);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Whether node `n` provably cannot evict at tick `t`: exact pods
+    /// contribute their just-stepped RSS, deferred pods their worst-case
+    /// envelope `v0 + slope·k`. An upper bound within capacity means the
+    /// true Σ rss is too, so the eviction scan is skipped whole.
+    fn node_pressure_safe(&self, n: usize, t: u64, defer: &[Option<Deferral>]) -> bool {
+        let node = &self.nodes[n];
+        let mut upper = 0.0;
+        for &id in &node.pods {
+            let pod = &self.pods[id];
+            if pod.phase != PodPhase::Running {
+                continue;
+            }
+            upper += match &defer[id] {
+                Some(d) => d.v0 + d.slope * (t - d.anchor) as f64,
+                None => pod.usage.rss_gb,
+            };
+        }
+        upper <= node.capacity_gb
+    }
+
+    /// Catch one node's deferred pods up to tick `to` (exact integration)
+    /// and move them to the exact set — used when a pressure proof fails
+    /// and the eviction scan needs true RSS values.
+    fn materialize_node(
+        &mut self,
+        n: usize,
+        defer: &mut [Option<Deferral>],
+        exact: &mut Vec<PodId>,
+        to: u64,
+    ) {
+        let ids: Vec<PodId> = self.nodes[n].pods.clone();
+        for id in ids {
+            if let Some(d) = defer[id].take() {
+                let h = to - d.anchor;
+                self.coast_stats.deferred_pod_ticks += h;
+                if h > 0 {
+                    Self::integrate_pod(&mut self.pods[id], h);
+                }
+                if let Err(pos) = exact.binary_search(&id) {
+                    exact.insert(pos, id);
+                }
+            }
+        }
+    }
+
+    /// Catch every deferred pod up to tick `to`, in parallel when the
+    /// backlog is large. Ends a stepping region: after this, all pod
+    /// state is exact at `to`.
+    fn materialize_all(&mut self, defer: &mut [Option<Deferral>], to: u64, shards: usize) {
+        let mut work: Vec<(&mut Pod, u64)> = Vec::new();
+        let mut total = 0u64;
+        for (id, pod) in self.pods.iter_mut().enumerate() {
+            if let Some(d) = defer[id].take() {
+                let h = to - d.anchor;
+                if h > 0 {
+                    total += h;
+                    work.push((pod, h));
+                }
+            }
+        }
+        self.coast_stats.deferred_pod_ticks += total;
+        let workers = shards.min(work.len());
+        if workers < 2 || total < PAR_MIN_POD_TICKS {
+            for (pod, h) in work.iter_mut() {
+                Self::integrate_pod(pod, *h);
+            }
+            return;
+        }
+        let chunk = work.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            for ch in work.chunks_mut(chunk) {
+                scope.spawn(move || {
+                    for (pod, h) in ch.iter_mut() {
+                        Self::integrate_pod(pod, *h);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Cheap instantaneous quiescence flags (no slope probing): the
+    /// re-quiescence tripwire that lets a stepping region end as soon as
+    /// the pods that forced it (swap drained, resize synced) calm down.
+    fn pod_is_calm(&self, id: PodId) -> bool {
+        let pod = &self.pods[id];
+        if pod.phase != PodPhase::Running {
+            return true; // terminal/pending pods no longer force stepping
+        }
+        self.io[id].debt_secs == 0.0
+            && pod.usage.swap_gb == 0.0
+            && pod.pending_resize.is_none()
+            && pod.progress_secs.fract() == 0.0
+            && pod.wall_running_secs > 0
+            && pod.effective_limit_gb.is_finite()
+    }
+
+    /// One per-pod-coasting stepping region of the sharded path, covering
+    /// at most `(now, ceiling]`: pods that defeat the quiescence proof
+    /// step per-second (events, evictions, completions exactly as
+    /// lockstep), while every provably-quiescent neighbor — on this node
+    /// or any other — is deferred: untouched until the region ends, then
+    /// integrated in one batch that is bit-identical to having stepped
+    /// it. Node-pressure safety for mixed nodes is re-proven every tick
+    /// from the deferred pods' worst-case envelopes; if a proof fails,
+    /// the node's pods materialize and the real eviction scan runs.
+    fn step_region(
+        &mut self,
+        ceiling: u64,
+        sample_metrics: bool,
+        shards: usize,
+        horizons: &[u64],
+    ) -> Advance {
+        let start = self.now;
+        let cap = (ceiling - start).min(COAST_PROBE_TICKS);
+        let mut defer: Vec<Option<Deferral>> = vec![None; self.pods.len()];
+        let mut exact: Vec<PodId> = Vec::new();
+        let hot: Vec<bool> = horizons.iter().map(|&h| h < 2).collect();
+        // the region's shared proof window: every deferral below is valid
+        // for at least `wstar` ticks, so one region never outlives any
+        // pod's (or cold node's) proof
+        let mut wstar = cap;
+        for id in 0..self.pods.len() {
+            let pod = &self.pods[id];
+            if pod.phase != PodPhase::Running {
+                continue;
+            }
+            let Some(n) = pod.node else { continue };
+            if !hot[n] {
+                // the node-level proof (pressure included) covers all of
+                // this node's pods; v0/slope are never consulted for them
+                wstar = wstar.min(horizons[n]);
+                defer[id] = Some(Deferral {
+                    anchor: start,
+                    v0: pod.usage.usage_gb,
+                    slope: 0.0,
+                });
+            } else if cap >= 2 {
+                match self.pod_defer_window(id, cap) {
+                    Some((w, slope, v0)) => {
+                        wstar = wstar.min(w);
+                        defer[id] = Some(Deferral { anchor: start, v0, slope });
+                    }
+                    None => exact.push(id),
+                }
+            } else {
+                exact.push(id);
+            }
+        }
+        // the pods that actually forced this region (failed the cheap
+        // flags): once they all calm down, bail out so the outer loop can
+        // try a full coast again
+        let dirty: Vec<PodId> = exact
+            .iter()
+            .copied()
+            .filter(|&id| !self.pod_is_calm(id))
+            .collect();
+        let region_end = start + wstar.max(1);
+        loop {
+            self.now += 1;
+            let t = self.now;
+            let seen = self.events.events.len();
+            // restart expiries cannot land inside a sharded window (the
+            // ceiling stops short of the earliest one), so the per-tick
+            // retain scan is provably a no-op and skipped
+            for &id in &exact {
+                self.kubelet_tick_one(id);
+            }
+            for n in 0..self.nodes.len() {
+                if !hot[n] {
+                    continue; // node-level proof: no eviction this region
+                }
+                if self.node_pressure_safe(n, t, &defer) {
+                    continue;
+                }
+                self.materialize_node(n, &mut defer, &mut exact, t);
+                self.eviction_pass_node(n);
+            }
+            let interrupted = self.events.events[seen..].iter().any(|e| e.kind.is_interrupt());
+            let at_end = interrupted
+                || t >= region_end
+                || t >= ceiling
+                || (!dirty.is_empty() && dirty.iter().all(|&id| self.pod_is_calm(id)));
+            if at_end {
+                self.materialize_all(&mut defer, t, shards);
+            }
+            if sample_metrics && self.metrics.is_sampling_tick(t) {
+                // the ceiling lands on the sampling grid, so everyone was
+                // just materialized — the scrape sees exact state, like
+                // step() does
+                self.sample_metrics_now();
+            }
+            if interrupted {
+                return Advance::Interrupted;
+            }
+            if at_end {
+                return Advance::Reached; // region done; caller continues
+            }
+        }
+    }
+
+    /// The sharded drive loop behind [`Self::advance_to`]: per-node
+    /// horizons, whole-cluster parallel coasts when every node is
+    /// quiescent, per-pod-coasting stepping regions when any is not.
+    fn advance_sharded(&mut self, target: u64, opts: AdvanceOpts) -> Advance {
+        let shards = opts.shards.max(1);
+        while self.now < target {
+            let mut ceiling = target;
+            if let Some(expiry) = self.restarting.iter().map(|&(_, at)| at).min() {
+                if expiry <= self.now + 1 {
+                    // due on the next tick: take it as an exact step (the
+                    // resume may interrupt, exactly like lockstep)
+                    if self.step_checked() {
+                        return Advance::Interrupted;
+                    }
+                    continue;
+                }
+                // a jump may not swallow the expiry tick's start-of-tick
+                // processing: stop the window one tick short of it
+                ceiling = ceiling.min(expiry - 1);
+            }
+            if opts.sample_metrics {
+                // never skip a sampling tick someone scrapes
+                ceiling = ceiling.min(next_multiple(self.now, self.metrics.period_secs));
+            }
+            let window = ceiling - self.now;
+            if window < 2 {
+                if self.step_checked() {
+                    return Advance::Interrupted;
+                }
+                continue;
+            }
+            let horizons = self.node_horizons(window, shards);
+            let h = horizons
+                .iter()
+                .copied()
+                .min()
+                .unwrap_or(window)
+                .min(window);
+            if h >= 2 {
+                self.coast_parallel(h, shards);
+                if opts.sample_metrics && self.metrics.is_sampling_tick(self.now) {
+                    self.sample_metrics_now();
+                }
+                continue;
+            }
+            if self.step_region(ceiling, opts.sample_metrics, shards, &horizons)
+                == Advance::Interrupted
+            {
+                return Advance::Interrupted;
+            }
+        }
+        Advance::Reached
     }
 
     pub fn node_of(&self, id: PodId) -> Option<&Node> {
@@ -807,6 +1353,10 @@ mod tests {
             .events
             .iter()
             .any(|e| e.pod == a && matches!(e.kind, EventKind::PodDrained { .. })));
+        // uncordon re-admits the node to the scheduler's index
+        c.uncordon_node(home);
+        let b = c.create_pod("b", ResourceSpec::memory_exact(10.0), ramp(1.0, 1.0, 10.0));
+        assert!(c.pod(b).is_running());
     }
 
     #[test]
@@ -890,7 +1440,7 @@ mod tests {
         let (mut a, pa) = build();
         let (mut b, pb) = build();
         a.run_until(1000, |c| c.all_done());
-        let opts = AdvanceOpts { event_driven: true, sample_metrics: true };
+        let opts = AdvanceOpts { event_driven: true, sample_metrics: true, shards: 0 };
         while !b.all_done() && b.now < 1000 {
             let target = (b.now + 50).min(1000);
             b.advance_to(target, opts);
@@ -911,6 +1461,36 @@ mod tests {
     }
 
     #[test]
+    fn sharded_advance_matches_stepping_bitwise_at_every_shard_count() {
+        let build = || {
+            let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+            let id = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 300.0));
+            (c, id)
+        };
+        let (mut a, pa) = build();
+        a.run_until(1000, |c| c.all_done());
+        for shards in [1usize, 2, 8] {
+            let (mut b, pb) = build();
+            let opts = AdvanceOpts { event_driven: true, sample_metrics: true, shards };
+            while !b.all_done() && b.now < 1000 {
+                let target = (b.now + 50).min(1000);
+                b.advance_to(target, opts);
+            }
+            assert_eq!(a.now, b.now, "shards={shards}");
+            assert_eq!(a.events.events, b.events.events, "shards={shards}");
+            let (x, y) = (a.pod(pa), b.pod(pb));
+            assert_eq!(x.progress_secs, y.progress_secs, "shards={shards}");
+            assert_eq!(x.provisioned_gb_secs, y.provisioned_gb_secs, "shards={shards}");
+            assert_eq!(x.used_gb_secs, y.used_gb_secs, "shards={shards}");
+            assert_eq!(
+                a.metrics.pod(pa).unwrap().count,
+                b.metrics.pod(pb).unwrap().count,
+                "shards={shards}"
+            );
+        }
+    }
+
+    #[test]
     fn event_advance_interrupts_on_oom_at_exact_tick() {
         let build = || {
             let mut c = one_node_cluster(64.0, SwapDevice::disabled());
@@ -921,12 +1501,131 @@ mod tests {
         let (mut b, pb) = build();
         a.run_until(1000, |c| c.pod(pa).phase == PodPhase::OomKilled);
         let oom_tick = a.now;
-        let opts = AdvanceOpts { event_driven: true, sample_metrics: true };
+        let opts = AdvanceOpts { event_driven: true, sample_metrics: true, shards: 0 };
         let outcome = b.advance_to(1000, opts);
         assert_eq!(outcome, Advance::Interrupted);
         assert_eq!(b.now, oom_tick, "interrupt lands on the legacy OOM tick");
         assert_eq!(b.pod(pb).phase, PodPhase::OomKilled);
         assert_eq!(a.events.events, b.events.events);
+        // the sharded path interrupts on the identical tick
+        let (mut s, ps) = build();
+        let opts = AdvanceOpts { event_driven: true, sample_metrics: true, shards: 2 };
+        assert_eq!(s.advance_to(1000, opts), Advance::Interrupted);
+        assert_eq!(s.now, oom_tick);
+        assert_eq!(s.pod(ps).phase, PodPhase::OomKilled);
+        assert_eq!(a.events.events, s.events.events);
+    }
+
+    #[test]
+    fn thrashing_pod_no_longer_forces_whole_cluster_stepping() {
+        // node 0 hosts a pod permanently over its limit (swap-resident
+        // from the first tick); node 1 hosts a quiescent ramp. The serial
+        // event kernel collapses to 1 s stepping for the WHOLE cluster;
+        // the sharded kernel must keep the neighbor coasting (lazily) —
+        // bit-for-bit identical to lockstep all the while.
+        let build = || {
+            let mut c = Cluster::new(
+                vec![
+                    Node::new("hot", 32.0, SwapDevice::hdd(16.0)),
+                    Node::new("cold", 32.0, SwapDevice::disabled()),
+                ],
+                ClusterConfig::default(),
+            );
+            // 20 GB request on the empty tie → node 0 (best-fit, lowest id)
+            let t =
+                c.create_pod("thrash", ResourceSpec::memory_exact(20.0), ramp(22.0, 25.0, 400.0));
+            // 16 GB no longer fits node 0 (12 GB free) → node 1
+            let q = c.create_pod("quiet", ResourceSpec::memory_exact(16.0), ramp(1.0, 4.0, 400.0));
+            assert_eq!(c.pod(t).node, Some(0));
+            assert_eq!(c.pod(q).node, Some(1));
+            (c, t, q)
+        };
+        let drive = |c: &mut Cluster, opts: AdvanceOpts| {
+            while c.now < 600 {
+                c.advance_to(600, opts);
+            }
+        };
+        // lockstep reference
+        let (mut a, ta, qa) = build();
+        while a.now < 600 {
+            a.step();
+        }
+        // serial event kernel: the thrashing pod defeats every coast
+        let (mut b, _, _) = build();
+        drive(&mut b, AdvanceOpts { event_driven: true, sample_metrics: true, shards: 0 });
+        assert_eq!(a.events.events, b.events.events);
+        assert_eq!(b.coast_stats.coasted_pod_ticks, 0, "serial kernel cannot coast here");
+        assert_eq!(b.coast_stats.deferred_pod_ticks, 0);
+        // sharded kernel: neighbor coasts lazily, results still identical
+        let (mut s, ts, qs) = build();
+        drive(&mut s, AdvanceOpts { event_driven: true, sample_metrics: true, shards: 2 });
+        assert_eq!(a.now, s.now);
+        assert_eq!(a.events.events, s.events.events);
+        for (x, y) in [(ta, ts), (qa, qs)] {
+            assert_eq!(a.pod(x).phase, s.pod(y).phase);
+            assert_eq!(a.pod(x).progress_secs, s.pod(y).progress_secs);
+            assert_eq!(a.pod(x).provisioned_gb_secs, s.pod(y).provisioned_gb_secs);
+            assert_eq!(a.pod(x).used_gb_secs, s.pod(y).used_gb_secs);
+            assert_eq!(a.pod(x).usage.swap_gb, s.pod(y).usage.swap_gb);
+        }
+        assert!(
+            s.coast_stats.deferred_pod_ticks > 100,
+            "the quiet neighbor must coast through the thrash window (got {:?})",
+            s.coast_stats
+        );
+        assert!(
+            s.coast_stats.stepped_pod_ticks < b.coast_stats.stepped_pod_ticks * 7 / 10,
+            "sharded stepping must be mostly confined to the thrashing pod: {:?} vs {:?}",
+            s.coast_stats,
+            b.coast_stats
+        );
+    }
+
+    #[test]
+    fn indexed_requeue_matches_linear_scan_reference() {
+        // same churn sequence on two clusters, one per requeue flavor
+        let build = || {
+            let mut c = Cluster::new(
+                vec![
+                    Node::new("w0", 24.0, SwapDevice::disabled()),
+                    Node::new("w1", 16.0, SwapDevice::disabled()),
+                ],
+                ClusterConfig::default(),
+            );
+            for i in 0..6 {
+                let req = 4.0 + i as f64 * 2.0; // 4..14 GB, mixed sizes
+                let proc_ = ramp(1.0, 2.0, 40.0);
+                c.create_pod(&format!("p{i}"), ResourceSpec::memory_exact(req), proc_);
+            }
+            c
+        };
+        let mut a = build();
+        let mut b = build();
+        for round in 0..30 {
+            a.run_until(7, |_| false);
+            b.run_until(7, |_| false);
+            if round == 3 {
+                a.kill_pod(1);
+                b.kill_pod(1);
+            }
+            if round == 5 {
+                a.drain_node(0);
+                b.drain_node(0);
+            }
+            if round == 8 {
+                a.uncordon_node(0);
+                b.uncordon_node(0);
+            }
+            assert_eq!(a.schedule_pending(), b.schedule_pending_scan(), "round {round}");
+        }
+        assert_eq!(a.events.events, b.events.events);
+        for id in 0..a.pods.len() {
+            assert_eq!(a.pod(id).phase, b.pod(id).phase, "pod {id}");
+            assert_eq!(a.pod(id).node, b.pod(id).node, "pod {id}");
+        }
+        for n in 0..a.nodes.len() {
+            assert_eq!(a.nodes[n].reserved_gb, b.nodes[n].reserved_gb);
+        }
     }
 
     #[test]

@@ -49,6 +49,26 @@ pub enum EventKind {
     PodRequeued,
 }
 
+impl EventKind {
+    /// Whether this event must interrupt [`Cluster::advance_to`] so the
+    /// driver reacts on the exact tick the legacy per-second loops did:
+    /// OOM kills, pressure evictions, completions, and restart-latency
+    /// resumes (`PodStarted` — a resumed pod's frozen decision interval
+    /// can already be overdue). One shared predicate keeps the serial and
+    /// sharded kernel paths' interrupt sets from drifting apart.
+    ///
+    /// [`Cluster::advance_to`]: super::cluster::Cluster::advance_to
+    pub fn is_interrupt(&self) -> bool {
+        matches!(
+            self,
+            EventKind::OomKilled { .. }
+                | EventKind::Evicted { .. }
+                | EventKind::PodCompleted
+                | EventKind::PodStarted
+        )
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Event {
     pub time: u64,

@@ -46,6 +46,14 @@ pub enum KernelMode {
     /// stretches. Produces bit-identical results (the equivalence suite
     /// proves it) at a fraction of the wall-clock cost.
     EventDriven,
+    /// Event-driven on the sharded cluster path: coast horizons are
+    /// computed per node, a thrashing pod steps alone while its
+    /// provably-quiescent neighbors integrate lazily (per-pod coasting),
+    /// and the integration work fans out across `threads` workers
+    /// (`0` = the machine's available parallelism). Bit-for-bit identical
+    /// to the other modes at every thread count — the equivalence suite
+    /// pins it.
+    Sharded { threads: usize },
 }
 
 /// Counters one kernel run accumulates (the perf benches report these).
@@ -104,7 +112,14 @@ pub fn run_kernel<C: Tick + ?Sized>(
 ) -> KernelStats {
     let start = cluster.now;
     let mut stats = KernelStats::default();
-    let event_driven = mode == KernelMode::EventDriven;
+    let event_driven = mode != KernelMode::Lockstep;
+    let shards = match mode {
+        KernelMode::Sharded { threads: 0 } => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        KernelMode::Sharded { threads } => threads,
+        _ => 0,
+    };
     let mut pending_wake = if event_driven { ctl.next_wake(cluster) } else { 0 };
     let mut interrupted = false;
     let mut first = true;
@@ -145,6 +160,7 @@ pub fn run_kernel<C: Tick + ?Sized>(
             // first metrics-scraping policy to a previously idle
             // controller (lockstep records in step() regardless)
             sample_metrics: !event_driven || ctl.wants_observe(),
+            shards,
         };
         if cluster.advance_to(target, opts) == Advance::Interrupted {
             interrupted = true;
@@ -221,6 +237,18 @@ mod tests {
             stats_b.events,
             stats_a.events
         );
+    }
+
+    #[test]
+    fn sharded_mode_reproduces_lockstep_at_every_thread_count() {
+        let (ca, sa, _) = drive(KernelMode::Lockstep);
+        for threads in [1usize, 2, 0] {
+            let (cb, sb, stats_b) = drive(KernelMode::Sharded { threads });
+            assert_eq!(ca.now, cb.now, "threads={threads}");
+            assert_eq!(ca.events.events, cb.events.events, "threads={threads}");
+            assert_eq!(sa, sb, "threads={threads}: sampled series diverged");
+            assert!(stats_b.events < 2 * stats_b.sim_ticks);
+        }
     }
 
     #[test]

@@ -13,7 +13,13 @@ use super::resources::ResourceSpec;
 ///
 /// `progress_secs` counts *application* seconds (it advances slower than
 /// wall time when the pod thrashes in swap, and resets on restart).
-pub trait MemoryProcess: Send {
+///
+/// `Send + Sync`: the sharded kernel probes slope bounds from worker
+/// threads and fans coast integration across them, so a process must be
+/// shareable by `&` and movable across threads. Every implementation is a
+/// pure function of progress plus immutable calibration data, so this
+/// costs nothing in practice.
+pub trait MemoryProcess: Send + Sync {
     /// Desired (virtual) memory at `progress_secs` into the run, in GB.
     fn usage_gb(&self, progress_secs: f64) -> f64;
     /// Total application seconds needed to complete.

@@ -6,6 +6,28 @@
 //! of §5) and worst-fit (spreads load).
 
 use super::node::Node;
+use std::collections::BTreeSet;
+
+/// `f64` with the IEEE total order, so it can key ordered collections
+/// (the free-capacity index and the waiting queue). Matches the
+/// `total_cmp` the linear scan uses, so the indexed and scanned paths
+/// order candidates identically — NaN included.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
@@ -41,6 +63,75 @@ impl Scheduler {
             Strategy::WorstFit => fits
                 .max_by(|a, b| a.1.allocatable_gb().total_cmp(&b.1.allocatable_gb()))
                 .map(|(i, _)| i),
+        }
+    }
+}
+
+/// Ordered index of schedulable nodes keyed by `(allocatable, index)`,
+/// maintained incrementally by the cluster at every placement-relevant
+/// mutation (bind/unbind, reservation adjust, cordon). Placement becomes
+/// O(log nodes) instead of the linear sweep, which is what makes a
+/// requeue pass O(waiting · log nodes) at fleet scale.
+///
+/// Tie-breaking replicates [`Scheduler::place`] exactly: best-fit takes
+/// the *lowest* index among equally tight nodes (`Iterator::min_by`
+/// returns the first minimum), worst-fit the *highest* (`max_by` returns
+/// the last maximum) — `rust/tests/sched_queue_prop.rs` pins the two
+/// paths against each other on randomized churn.
+#[derive(Debug, Default)]
+pub struct CapacityIndex {
+    entries: BTreeSet<(OrdF64, usize)>,
+    /// The key each node is currently filed under (`None` = cordoned or
+    /// never indexed), so refresh can remove the stale entry exactly.
+    keys: Vec<Option<f64>>,
+}
+
+impl CapacityIndex {
+    pub fn build(nodes: &[Node]) -> Self {
+        let mut ix = Self {
+            entries: BTreeSet::new(),
+            keys: vec![None; nodes.len()],
+        };
+        for (i, node) in nodes.iter().enumerate() {
+            ix.refresh(i, node);
+        }
+        ix
+    }
+
+    /// Re-file node `i` after any change to its allocatable memory or
+    /// cordon state. Cordoned nodes leave the index entirely (they never
+    /// fit anything).
+    pub fn refresh(&mut self, i: usize, node: &Node) {
+        if i >= self.keys.len() {
+            self.keys.resize(i + 1, None);
+        }
+        if let Some(k) = self.keys[i].take() {
+            self.entries.remove(&(OrdF64(k), i));
+        }
+        if !node.cordoned {
+            let k = node.allocatable_gb();
+            self.entries.insert((OrdF64(k), i));
+            self.keys[i] = Some(k);
+        }
+    }
+
+    /// Indexed counterpart of [`Scheduler::place`]: same node choice, same
+    /// tie-breaks, O(log nodes). The `fits` re-check is a cheap guard —
+    /// every in-range entry already has `allocatable >= request` and
+    /// cordoned nodes are absent by construction.
+    pub fn place(&self, nodes: &[Node], strategy: Strategy, request_gb: f64) -> Option<usize> {
+        match strategy {
+            Strategy::BestFit => self
+                .entries
+                .range((OrdF64(request_gb), 0)..)
+                .find(|&&(_, i)| nodes[i].fits(request_gb))
+                .map(|&(_, i)| i),
+            Strategy::WorstFit => self
+                .entries
+                .iter()
+                .next_back()
+                .filter(|&&(_, i)| nodes[i].fits(request_gb))
+                .map(|&(_, i)| i),
         }
     }
 }
@@ -120,6 +211,74 @@ mod tests {
         assert_eq!(s.place(&ns, 25.0), Some(0));
         ns[0].cordon();
         assert_eq!(s.place(&ns, 25.0), None);
+    }
+
+    #[test]
+    fn index_matches_linear_scan_on_randomized_nodes() {
+        // the indexed place() must agree with the linear sweep — node
+        // choice AND tie-breaks — across random capacities, reservations,
+        // cordons, and degenerate (NaN/inf) values
+        crate::util::prop::check("capacity-index-vs-scan", 200, |g| {
+            let n = g.usize(1, 12);
+            let mut ns: Vec<Node> = (0..n)
+                .map(|i| {
+                    let cap = match g.usize(0, 10) {
+                        0 => f64::NAN,
+                        1 => f64::INFINITY,
+                        _ => g.f64(4.0, 128.0),
+                    };
+                    let mut node = Node::new(&format!("w{i}"), cap, SwapDevice::disabled());
+                    node.reserved_gb = g.f64(0.0, 96.0);
+                    if g.bool(0.2) {
+                        node.cordon();
+                    }
+                    node
+                })
+                .collect();
+            // duplicate allocatables force tie-break coverage
+            if ns.len() >= 2 {
+                ns[0].capacity_gb = 64.0;
+                ns[0].reserved_gb = 32.0;
+                ns[1].capacity_gb = 48.0;
+                ns[1].reserved_gb = 16.0;
+            }
+            let ix = CapacityIndex::build(&ns);
+            for strategy in [Strategy::BestFit, Strategy::WorstFit] {
+                let s = Scheduler::new(strategy);
+                for _ in 0..8 {
+                    let req = if g.bool(0.1) { f64::NAN } else { g.f64(0.0, 96.0) };
+                    let linear = s.place(&ns, req);
+                    let indexed = ix.place(&ns, strategy, req);
+                    if linear != indexed {
+                        return Err(format!(
+                            "{strategy:?} req={req}: linear {linear:?} vs indexed {indexed:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn index_refresh_tracks_binds_and_cordons() {
+        let mut ns = nodes(&[100.0, 30.0, 60.0]);
+        let mut ix = CapacityIndex::build(&ns);
+        let s = Scheduler::new(Strategy::BestFit);
+        assert_eq!(ix.place(&ns, Strategy::BestFit, 25.0), s.place(&ns, 25.0));
+        // bind shrinks node 1 below the request; the index must follow
+        ns[1].bind(0, 10.0);
+        ix.refresh(1, &ns[1]);
+        assert_eq!(ix.place(&ns, Strategy::BestFit, 25.0), s.place(&ns, 25.0));
+        // cordon removes a node outright
+        ns[2].cordon();
+        ix.refresh(2, &ns[2]);
+        assert_eq!(ix.place(&ns, Strategy::BestFit, 25.0), Some(0));
+        assert_eq!(ix.place(&ns, Strategy::BestFit, 25.0), s.place(&ns, 25.0));
+        // uncordon restores it
+        ns[2].uncordon();
+        ix.refresh(2, &ns[2]);
+        assert_eq!(ix.place(&ns, Strategy::BestFit, 25.0), Some(2));
     }
 
     #[test]

@@ -1,12 +1,14 @@
-//! The kernel equivalence suite: the event-driven clock must reproduce
-//! the 1 s-tick reference **bit for bit** — same `RunResult` (counters
-//! AND float integrals: coasts accumulate term-by-term with the same
-//! rounding), same `EventLog` order — on every registered app × the four
-//! single-pod policies, and through the scenario engine's churn paths
-//! (arrivals, faults, drain, kill, leak, requeue).
+//! The kernel equivalence suite: the event-driven clock — serial AND
+//! sharded, at every tested worker count — must reproduce the 1 s-tick
+//! reference **bit for bit**: same `RunResult` (counters AND float
+//! integrals: coasts accumulate term-by-term with the same rounding),
+//! same `EventLog` order — on every registered app × the four single-pod
+//! policies, and through the scenario engine's churn paths (arrivals,
+//! faults, drain, kill, leak, requeue) across several seeds.
 //!
 //! This is the contract that lets `harness::run` and
-//! `scenario::run_scenario` default to `KernelMode::EventDriven`.
+//! `scenario::run_scenario` default to `KernelMode::EventDriven`, and
+//! that makes `KernelMode::Sharded` safe to opt into at fleet scale.
 
 use arcv::harness::{run_with_mode, ExperimentConfig, PolicyKind, RunOutput, SwapKind};
 use arcv::policy::arcv::ArcvParams;
@@ -31,6 +33,11 @@ fn case(app: AppId, i: usize) -> (ExperimentConfig, PolicyKind) {
 }
 
 const CASE_NAMES: [&str; 4] = ["arcv", "vpa-sim", "fixed", "oracle"];
+
+/// The sharded worker counts under test: single worker, two workers, and
+/// whatever the machine offers (`0`). Results must be identical at all
+/// of them — thread count may only change wall-clock, never state.
+const SHARD_COUNTS: [usize; 3] = [1, 2, 0];
 
 fn run_case(app: AppId, i: usize, mode: KernelMode) -> RunOutput {
     let (cfg, kind) = case(app, i);
@@ -62,6 +69,21 @@ fn nine_apps_times_four_policies_match_bit_for_bit() {
                 event.stats.events,
                 reference.stats.events
             );
+            // the sharded path, at every tested worker count, against the
+            // same lockstep reference
+            for threads in SHARD_COUNTS {
+                let sharded = run_case(app, i, KernelMode::Sharded { threads });
+                assert_eq!(
+                    reference.result, sharded.result,
+                    "{app}/{} RunResult diverged (sharded, threads={threads})",
+                    CASE_NAMES[i]
+                );
+                assert_eq!(
+                    reference.events, sharded.events,
+                    "{app}/{} EventLog diverged (sharded, threads={threads})",
+                    CASE_NAMES[i]
+                );
+            }
         }
     }
 }
@@ -106,34 +128,50 @@ fn churn_spec() -> ScenarioSpec {
 
 #[test]
 fn scenario_engine_matches_reference_through_churn() {
+    // ≥ 3 seeds × every kernel flavor: the churn paths (arrivals, faults,
+    // drain, kill, leak, requeue) must agree bit-for-bit at every tested
+    // thread count
     let spec = churn_spec();
-    for policy in [
-        ScenarioPolicy::Arcv(ArcvParams::default()),
-        ScenarioPolicy::VpaSim,
-        ScenarioPolicy::Fixed,
-    ] {
-        let reference = run_scenario_mode(&spec, policy, 7, KernelMode::Lockstep);
-        let event = run_scenario_mode(&spec, policy, 7, KernelMode::EventDriven);
-        assert_eq!(
-            reference.outcome,
-            event.outcome,
-            "{} outcome diverged",
-            policy.label()
-        );
-        assert_eq!(
-            reference.cluster.events.events,
-            event.cluster.events.events,
-            "{} EventLog diverged",
-            policy.label()
-        );
+    for seed in [7u64, 11, 23] {
+        for policy in [
+            ScenarioPolicy::Arcv(ArcvParams::default()),
+            ScenarioPolicy::VpaSim,
+            ScenarioPolicy::Fixed,
+        ] {
+            let reference = run_scenario_mode(&spec, policy, seed, KernelMode::Lockstep);
+            let mut contenders = vec![(
+                "event".to_string(),
+                run_scenario_mode(&spec, policy, seed, KernelMode::EventDriven),
+            )];
+            for threads in SHARD_COUNTS {
+                contenders.push((
+                    format!("sharded/{threads}"),
+                    run_scenario_mode(&spec, policy, seed, KernelMode::Sharded { threads }),
+                ));
+            }
+            for (label, run) in &contenders {
+                assert_eq!(
+                    reference.outcome,
+                    run.outcome,
+                    "{} seed {seed} outcome diverged ({label})",
+                    policy.label()
+                );
+                assert_eq!(
+                    reference.cluster.events.events,
+                    run.cluster.events.events,
+                    "{} seed {seed} EventLog diverged ({label})",
+                    policy.label()
+                );
+            }
+        }
     }
 }
 
 #[test]
 fn starved_queue_idles_to_the_budget_identically() {
     // drain the only node: everything re-enters the queue with no
-    // capacity anywhere; both kernels must report the same stuck state at
-    // exactly max_ticks (the event kernel jumps there, the reference
+    // capacity anywhere; every kernel must report the same stuck state at
+    // exactly max_ticks (the event kernels jump there, the reference
     // idles tick by tick)
     let spec = ScenarioSpec::new("equiv-starved")
         .pool("n", 1, 64.0, SwapKind::Disabled)
@@ -148,4 +186,13 @@ fn starved_queue_idles_to_the_budget_identically() {
     assert_eq!(reference.cluster.events.events, event.cluster.events.events);
     assert_eq!(event.outcome.wall_ticks, 400);
     assert_eq!(event.outcome.stuck_pending, 2);
+    for threads in SHARD_COUNTS {
+        let sharded =
+            run_scenario_mode(&spec, ScenarioPolicy::Fixed, 9, KernelMode::Sharded { threads });
+        assert_eq!(reference.outcome, sharded.outcome, "threads={threads}");
+        assert_eq!(
+            reference.cluster.events.events, sharded.cluster.events.events,
+            "threads={threads}"
+        );
+    }
 }
