@@ -13,7 +13,7 @@ use arcv::simkube::cluster::Cluster;
 use arcv::simkube::node::Node;
 use arcv::simkube::resources::ResourceSpec;
 use arcv::simkube::swap::SwapDevice;
-use arcv::simkube::KernelMode;
+use arcv::simkube::{ApiClient, KernelMode};
 use arcv::util::bench::bench;
 use arcv::util::json::{arr, num, obj, s, Json};
 use arcv::workloads::{build, AppId};
@@ -211,6 +211,93 @@ fn main() {
     println!("\nBENCH {}", bench_json.to_string_pretty());
     println!("wrote bench_out/BENCH_kernel.json");
 
+    // ---- the informer gate: delta replay vs full relist per wake -----------
+    // Two informers over one live cluster, synced back to back every wake:
+    // the delta informer replays watch records, the relist oracle rebuilds
+    // every view (the pre-PR 5 cost). A trickle of patches keeps the delta
+    // path honest (non-empty tails), and auto-compaction runs live to show
+    // the cursor-pinned log staying bounded.
+    println!("\n=== informer: delta replay vs full relist, per controller wake ===\n");
+    let mut informer_rows = Vec::new();
+    let mut informer_slow = false;
+    for n in [1_000usize, 10_000, 50_000] {
+        let (mut c, _ids) = cluster_with_pods(n);
+        c.events.set_auto_compact(true);
+        let mut delta_client = ApiClient::new();
+        let mut relist_client = ApiClient::new();
+        // the initial LIST is paid once by both; not part of the per-wake cost
+        delta_client.sync(&mut c);
+        relist_client.sync_relist(&mut c);
+        let wakes = 200u64;
+        let mut delta_ns = 0.0f64;
+        let mut relist_ns = 0.0f64;
+        let mut next_patch = 0usize;
+        for w in 0..wakes {
+            c.step();
+            if w % 4 == 0 {
+                // churn trickle: re-apply one pod's current spec limit (a
+                // real ResizeIssued record, no behavioural change)
+                let id = next_patch % n;
+                next_patch += 7;
+                let lim = c.pod(id).effective_limit_gb;
+                if lim.is_finite() {
+                    c.patch_pod_memory(id, lim);
+                }
+            }
+            let t0 = Instant::now();
+            let _delta = delta_client.sync(&mut c);
+            delta_ns += t0.elapsed().as_nanos() as f64;
+            let t0 = Instant::now();
+            let _full = relist_client.sync_relist(&mut c);
+            relist_ns += t0.elapsed().as_nanos() as f64;
+        }
+        let dstats = delta_client.informer_stats();
+        let rstats = relist_client.informer_stats();
+        let delta_us = delta_ns / wakes as f64 / 1e3;
+        let relist_us = relist_ns / wakes as f64 / 1e3;
+        let speedup = relist_ns / delta_ns.max(1.0);
+        // the gate: delta replay must never be slower than relisting
+        // (5 % tolerance for shared-runner noise)
+        if delta_ns > relist_ns * 1.05 {
+            informer_slow = true;
+        }
+        let retained = c.events.events.len() as u64;
+        let total = c.events.revision();
+        println!(
+            "  {n:>6} pods: delta {delta_us:>9.2} us/wake ({} views rebuilt over {wakes} wakes) \
+             vs relist {relist_us:>9.2} us/wake ({} rebuilt) -> {speedup:>6.1}x; \
+             log retained {retained}/{total} records",
+            dstats.views_rebuilt, rstats.views_rebuilt,
+        );
+        assert_eq!(dstats.relists, 1, "delta informer must never relist after the LIST");
+        assert!(
+            retained < total || total < 128,
+            "cursor-pinned auto-compaction must bound the log ({retained}/{total})"
+        );
+        informer_rows.push(obj(vec![
+            ("pods", num(n as f64)),
+            ("wakes", num(wakes as f64)),
+            ("delta_us_per_wake", num(delta_us)),
+            ("relist_us_per_wake", num(relist_us)),
+            ("speedup", num(speedup)),
+            ("delta_views_rebuilt", num(dstats.views_rebuilt as f64)),
+            ("relist_views_rebuilt", num(rstats.views_rebuilt as f64)),
+            ("delta_relists", num(dstats.relists as f64)),
+            ("events_replayed", num(dstats.events_replayed as f64)),
+            ("log_retained", num(retained as f64)),
+            ("log_revision", num(total as f64)),
+        ]));
+    }
+    let informer_json = obj(vec![
+        ("bench", s("perf_sim/informer")),
+        ("rows", arr(informer_rows)),
+        ("delta_never_slower", Json::Bool(!informer_slow)),
+    ]);
+    std::fs::write("bench_out/BENCH_informer.json", informer_json.to_string_pretty())
+        .expect("write bench_out/BENCH_informer.json");
+    println!("\nBENCH {}", informer_json.to_string_pretty());
+    println!("wrote bench_out/BENCH_informer.json");
+
     if mismatches > 0 {
         eprintln!("FAIL: {mismatches} sweep cases diverged between kernel modes");
         std::process::exit(1);
@@ -220,6 +307,12 @@ fn main() {
     // conservative floor so shared-runner noise can't flake the build)
     if speedup < 1.0 {
         eprintln!("FAIL: event kernel slower than the per-second loop ({speedup:.2}x)");
+        std::process::exit(1);
+    }
+    // CI gate: the delta informer must never be slower than the relist
+    // informer it replaced (BENCH_informer.json carries the real ratios)
+    if informer_slow {
+        eprintln!("FAIL: delta informer sync slower than a full relist");
         std::process::exit(1);
     }
 }

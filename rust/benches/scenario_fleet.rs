@@ -3,29 +3,39 @@
 //! drain and a random kill) under ARC-V and the VPA simulator, times an
 //! 8-seed ARC-V grid serially vs. in parallel (verifying the fan-out is
 //! bit-identical to the serial reference), and then runs the fleet-SCALE
-//! ladder: 1k/10k/100k-pod backlogs with one swap-thrashing leaker, under
-//! {lockstep, serial event kernel, sharded kernel}, emitting
-//! `bench_out/BENCH_scale.json` (ticks/s + wall-clock per cell).
+//! ladder: 1k/10k/100k-pod backlogs (plus the 10⁶-pod rung, sharded
+//! kernel only) with one swap-thrashing leaker, under {lockstep, serial
+//! event kernel, sharded kernel}, emitting `bench_out/BENCH_scale.json`
+//! (ticks/s + wall-clock per cell, the informer's per-wake delta cost,
+//! and the interned-calibration-table RSS proxy).
 //!
 //!   cargo bench --bench scenario_fleet
 //!
-//! Set `SCALE_MAX_JOBS` to trim the ladder on small machines.
+//! Env knobs:
+//!   SCALE_MAX_JOBS — largest ladder rung to run (default 100_000; set
+//!                    1_000_000 to include the million-pod rung)
+//!   SCALE_MIN_JOBS — smallest rung to run (default 0)
+//!   SCALE_ONLY=1   — skip the fleet-scenario / grid sections and run
+//!                    just the ladder (the CI million-rung smoke job)
 //!
 //! Emits a machine-readable `BENCH {json}` block at the end. Exits
 //! non-zero if any pod is stuck Pending at drain, the parallel grid
 //! diverges from the serial one, any kernel flavor diverges from
-//! lockstep on the scale ladder, or the sharded kernel is slower than
-//! the serial event kernel there (the fleet-scale regression gate).
+//! lockstep on the scale ladder, the sharded kernel is slower than the
+//! serial event kernel there (the fleet-scale regression gate), or the
+//! delta informer relists after its initial LIST. (Per-wake informer
+//! rebuild counts are *reported* in BENCH_scale.json; the controlled
+//! delta-vs-relist cost gate lives in perf_sim's BENCH_informer.)
 
 use arcv::harness::SwapKind;
 use arcv::policy::arcv::ArcvParams;
 use arcv::scenario::{
     outcome_json, outcome_line, run_grid, run_scenario, run_scenario_mode, summarize,
-    summary_line, Arrivals, Fault, ScenarioPolicy, ScenarioSpec, WorkloadMix,
+    summary_line, Arrivals, Fault, ScenarioOutcome, ScenarioPolicy, ScenarioSpec, WorkloadMix,
 };
-use arcv::simkube::KernelMode;
+use arcv::simkube::{Event, InformerStats, KernelMode};
 use arcv::util::json::{arr, num, obj, s, Json};
-use arcv::workloads::AppId;
+use arcv::workloads::{intern_stats, live_tables, AppId};
 use std::time::Instant;
 
 fn fleet_spec() -> ScenarioSpec {
@@ -52,12 +62,20 @@ fn fleet_spec() -> ScenarioSpec {
 }
 
 /// One rung of the fleet-scale ladder: `jobs` flat-start jobs from the
-/// three smooth Growth apps (so coast windows stay long), one node per
-/// ~10 jobs, plus a mid-life leaker that outgrows its 120 % limit at
-/// t ≈ 85 and thrashes in swap for the rest of the run — the mixed
-/// cluster that used to collapse the whole fleet to 1 s stepping.
+/// three smooth Growth apps (so coast windows stay long — and so the
+/// calibration-table interner collapses the fleet to THREE table sets),
+/// one node per ~10 jobs, plus a mid-life leaker that outgrows its 120 %
+/// limit at t ≈ 85 and thrashes in swap for the rest of the run — the
+/// mixed cluster that used to collapse the whole fleet to 1 s stepping.
 fn scale_spec(jobs: usize) -> ScenarioSpec {
     let nodes = (jobs / 10).max(1);
+    let max_ticks = if jobs >= 1_000_000 {
+        300 // the smoke horizon: past the leaker's swap collapse at t≈85
+    } else if jobs >= 100_000 {
+        1_000
+    } else {
+        2_000
+    };
     ScenarioSpec::new(&format!("scale-{jobs}"))
         .pool("w", nodes, 64.0, SwapKind::Hdd(32.0))
         .mix(WorkloadMix::uniform(&[AppId::Amr, AppId::Cm1, AppId::Sputnipic]))
@@ -72,157 +90,227 @@ fn scale_spec(jobs: usize) -> ScenarioSpec {
         // rings are preallocated per sampled pod: keep them shallow at
         // fleet scale (nothing scrapes them under the fixed policy)
         .metrics_history(64)
-        .max_ticks(if jobs >= 100_000 { 1_000 } else { 2_000 })
+        .max_ticks(max_ticks)
 }
 
-/// Run one `(spec, mode)` cell, returning (wall secs, outcome, events,
-/// sim ticks) — the cluster itself is dropped so three 100k-pod runs
-/// never coexist in memory.
-fn scale_cell(
-    spec: &ScenarioSpec,
-    mode: KernelMode,
-) -> (f64, arcv::scenario::ScenarioOutcome, Vec<arcv::simkube::Event>, u64) {
+/// One `(spec, mode)` ladder cell. The cluster is dropped before
+/// returning so multi-hundred-thousand-pod runs never coexist in memory;
+/// `keep_events` controls whether the event log survives for the
+/// divergence comparison (off at the million rung, where only one kernel
+/// flavor runs).
+struct Cell {
+    secs: f64,
+    outcome: ScenarioOutcome,
+    events: Vec<Event>,
+    ticks: u64,
+    informer: InformerStats,
+    /// Distinct calibration-table sets alive while the fleet existed —
+    /// the RSS proxy (vs `jobs` pods).
+    live_tables: usize,
+}
+
+fn scale_cell(spec: &ScenarioSpec, mode: KernelMode, keep_events: bool) -> Cell {
     let t0 = Instant::now();
     let run = run_scenario_mode(spec, ScenarioPolicy::Fixed, 42, mode);
     let secs = t0.elapsed().as_secs_f64();
-    (secs, run.outcome, run.cluster.events.events, run.stats.sim_ticks)
+    let live = live_tables(); // counted while the fleet's models are alive
+    Cell {
+        secs,
+        outcome: run.outcome,
+        events: if keep_events { run.cluster.events.events } else { Vec::new() },
+        ticks: run.stats.sim_ticks,
+        informer: run.informer,
+        live_tables: live,
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
 fn main() {
-    let spec = fleet_spec();
-    let policies = [
-        ScenarioPolicy::Arcv(ArcvParams::default()),
-        ScenarioPolicy::VpaSim,
-    ];
-
-    println!("=== single-seed fleet scenario: ARC-V vs VPA-sim ===\n");
-    let mut singles = Vec::new();
-    let mut stuck_total = 0usize;
-    let mut unfinished_total = 0usize;
-    for policy in policies {
-        let t0 = Instant::now();
-        let run = run_scenario(&spec, policy, 42);
-        let secs = t0.elapsed().as_secs_f64();
-        println!("{}   ({secs:.2}s wall)", outcome_line(&run.outcome));
-        stuck_total += run.outcome.stuck_pending;
-        // a truncated or livelocked run must fail loudly, not slip past a
-        // stuck-Pending-only gate
-        unfinished_total += run.outcome.unfinished + run.outcome.jobs_dropped;
-        singles.push(run.outcome);
-    }
-    let arcv = &singles[0];
-    let vpa = &singles[1];
-    if arcv.used_gb_h > 0.0 && vpa.used_gb_h > 0.0 {
-        println!(
-            "\nallocated/used: arcv {:.2}x  vpa-sim {:.2}x  (reclaimed capacity is what \
-             admits more queued work per node)",
-            arcv.allocated_gb_h / arcv.used_gb_h,
-            vpa.allocated_gb_h / vpa.used_gb_h,
-        );
-    }
-
-    println!("\n=== kernel: event-driven clock vs 1 s-stepping on the fleet scenario ===\n");
-    let arcv_policy = ScenarioPolicy::Arcv(ArcvParams::default());
-    let t0 = Instant::now();
-    let lockstep_run = run_scenario_mode(&spec, arcv_policy, 42, KernelMode::Lockstep);
-    let kernel_lockstep_secs = t0.elapsed().as_secs_f64();
-    let t0 = Instant::now();
-    let event_run = run_scenario_mode(&spec, arcv_policy, 42, KernelMode::EventDriven);
-    let kernel_event_secs = t0.elapsed().as_secs_f64();
-    let kernel_identical = lockstep_run.outcome == event_run.outcome
-        && lockstep_run.cluster.events.events == event_run.cluster.events.events;
-    let kernel_speedup = kernel_lockstep_secs / kernel_event_secs.max(1e-9);
-    let ticks = event_run.stats.sim_ticks;
-    println!(
-        "lockstep {kernel_lockstep_secs:.3}s  event {kernel_event_secs:.3}s over {ticks} \
-         sim-seconds -> {kernel_speedup:.2}x speedup, {} kernel events, results {}",
-        event_run.stats.events,
-        if kernel_identical { "bit-identical" } else { "DIVERGED" },
-    );
-    let kernel_json = obj(vec![
-        ("bench", s("scenario_fleet/kernel")),
-        ("sim_ticks", num(ticks as f64)),
-        ("kernel_events", num(event_run.stats.events as f64)),
-        ("ctl_wakes", num(event_run.stats.ctl_wakes as f64)),
-        ("lockstep_secs", num(kernel_lockstep_secs)),
-        ("event_secs", num(kernel_event_secs)),
-        ("speedup", num(kernel_speedup)),
-        ("events_per_sec", num(event_run.stats.events as f64 / kernel_event_secs.max(1e-9))),
-        ("ticks_per_sec_event", num(ticks as f64 / kernel_event_secs.max(1e-9))),
-        ("identical", Json::Bool(kernel_identical)),
-    ]);
-    std::fs::create_dir_all("bench_out").ok();
-    std::fs::write("bench_out/BENCH_kernel_fleet.json", kernel_json.to_string_pretty())
-        .expect("write bench_out/BENCH_kernel_fleet.json");
-
-    println!("\n=== parallel multi-seed executor: 8 ARC-V seeds, serial vs parallel ===\n");
-    let seeds: Vec<u64> = (1..=8).collect();
-    let grid_policies = [ScenarioPolicy::Arcv(ArcvParams::default())];
-    let specs = [fleet_spec()];
-
-    let t0 = Instant::now();
-    let serial = run_grid(&specs, &grid_policies, &seeds, 1);
-    let serial_s = t0.elapsed().as_secs_f64();
+    let scale_only = std::env::var("SCALE_ONLY").map(|v| v == "1").unwrap_or(false);
+    let scale_max = env_usize("SCALE_MAX_JOBS", 100_000);
+    let scale_min = env_usize("SCALE_MIN_JOBS", 0);
 
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    let t0 = Instant::now();
-    let parallel = run_grid(&specs, &grid_policies, &seeds, 0);
-    let parallel_s = t0.elapsed().as_secs_f64();
 
-    let identical = serial == parallel;
-    let speedup = serial_s / parallel_s.max(1e-9);
-    // parallelism-aware gate: a fully-serialized executor regression shows
-    // up as ~1.0x on any machine, so require scaling proportional to the
-    // cores actually available (on >=8 cores this demands the >=3x of the
-    // acceptance criterion; on a 2-core box it still catches serialization)
-    let eff_threads = threads.min(seeds.len()) as f64;
-    let required = 1.0 + 0.3 * (eff_threads - 1.0);
-    println!("serial:   {serial_s:.2}s for {} runs", serial.len());
-    println!(
-        "parallel: {parallel_s:.2}s on {threads} threads  -> {speedup:.2}x speedup \
-         (required >= {required:.2}x)"
-    );
-    println!(
-        "parallel results {} the serial reference",
-        if identical { "bit-identical to" } else { "DIVERGE FROM" }
-    );
-    for line in summarize(&serial).iter().map(summary_line) {
-        println!("{line}");
+    let mut stuck_total = 0usize;
+    let mut unfinished_total = 0usize;
+    let mut singles: Vec<ScenarioOutcome> = Vec::new();
+    let mut kernel_json = Json::Null;
+    let mut kernel_identical = true;
+    let mut kernel_speedup = f64::INFINITY;
+    let mut grid_identical = true;
+    let mut grid_speedup = f64::INFINITY;
+    let mut grid_required = 0.0f64;
+    let mut grid_serial_s = 0.0f64;
+    let mut grid_parallel_s = 0.0f64;
+
+    if !scale_only {
+        let spec = fleet_spec();
+        let policies = [
+            ScenarioPolicy::Arcv(ArcvParams::default()),
+            ScenarioPolicy::VpaSim,
+        ];
+
+        println!("=== single-seed fleet scenario: ARC-V vs VPA-sim ===\n");
+        for policy in policies {
+            let t0 = Instant::now();
+            let run = run_scenario(&spec, policy, 42);
+            let secs = t0.elapsed().as_secs_f64();
+            println!("{}   ({secs:.2}s wall)", outcome_line(&run.outcome));
+            stuck_total += run.outcome.stuck_pending;
+            // a truncated or livelocked run must fail loudly, not slip past
+            // a stuck-Pending-only gate
+            unfinished_total += run.outcome.unfinished + run.outcome.jobs_dropped;
+            singles.push(run.outcome);
+        }
+        let arcv = &singles[0];
+        let vpa = &singles[1];
+        if arcv.used_gb_h > 0.0 && vpa.used_gb_h > 0.0 {
+            println!(
+                "\nallocated/used: arcv {:.2}x  vpa-sim {:.2}x  (reclaimed capacity is what \
+                 admits more queued work per node)",
+                arcv.allocated_gb_h / arcv.used_gb_h,
+                vpa.allocated_gb_h / vpa.used_gb_h,
+            );
+        }
+
+        println!("\n=== kernel: event-driven clock vs 1 s-stepping on the fleet scenario ===\n");
+        let arcv_policy = ScenarioPolicy::Arcv(ArcvParams::default());
+        let t0 = Instant::now();
+        let lockstep_run = run_scenario_mode(&spec, arcv_policy, 42, KernelMode::Lockstep);
+        let kernel_lockstep_secs = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let event_run = run_scenario_mode(&spec, arcv_policy, 42, KernelMode::EventDriven);
+        let kernel_event_secs = t0.elapsed().as_secs_f64();
+        kernel_identical = lockstep_run.outcome == event_run.outcome
+            && lockstep_run.cluster.events.events == event_run.cluster.events.events;
+        kernel_speedup = kernel_lockstep_secs / kernel_event_secs.max(1e-9);
+        let ticks = event_run.stats.sim_ticks;
+        println!(
+            "lockstep {kernel_lockstep_secs:.3}s  event {kernel_event_secs:.3}s over {ticks} \
+             sim-seconds -> {kernel_speedup:.2}x speedup, {} kernel events, results {}",
+            event_run.stats.events,
+            if kernel_identical { "bit-identical" } else { "DIVERGED" },
+        );
+        kernel_json = obj(vec![
+            ("bench", s("scenario_fleet/kernel")),
+            ("sim_ticks", num(ticks as f64)),
+            ("kernel_events", num(event_run.stats.events as f64)),
+            ("ctl_wakes", num(event_run.stats.ctl_wakes as f64)),
+            ("lockstep_secs", num(kernel_lockstep_secs)),
+            ("event_secs", num(kernel_event_secs)),
+            ("speedup", num(kernel_speedup)),
+            ("events_per_sec", num(event_run.stats.events as f64 / kernel_event_secs.max(1e-9))),
+            ("ticks_per_sec_event", num(ticks as f64 / kernel_event_secs.max(1e-9))),
+            ("identical", Json::Bool(kernel_identical)),
+        ]);
+        std::fs::create_dir_all("bench_out").ok();
+        std::fs::write("bench_out/BENCH_kernel_fleet.json", kernel_json.to_string_pretty())
+            .expect("write bench_out/BENCH_kernel_fleet.json");
+
+        println!("\n=== parallel multi-seed executor: 8 ARC-V seeds, serial vs parallel ===\n");
+        let seeds: Vec<u64> = (1..=8).collect();
+        let grid_policies = [ScenarioPolicy::Arcv(ArcvParams::default())];
+        let specs = [fleet_spec()];
+
+        let t0 = Instant::now();
+        let serial = run_grid(&specs, &grid_policies, &seeds, 1);
+        let serial_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let parallel = run_grid(&specs, &grid_policies, &seeds, 0);
+        let parallel_s = t0.elapsed().as_secs_f64();
+
+        grid_identical = serial == parallel;
+        grid_speedup = serial_s / parallel_s.max(1e-9);
+        grid_serial_s = serial_s;
+        grid_parallel_s = parallel_s;
+        // parallelism-aware gate: a fully-serialized executor regression
+        // shows up as ~1.0x on any machine, so require scaling
+        // proportional to the cores actually available (on >=8 cores this
+        // demands the >=3x of the acceptance criterion; on a 2-core box
+        // it still catches serialization)
+        let eff_threads = threads.min(seeds.len()) as f64;
+        grid_required = 1.0 + 0.3 * (eff_threads - 1.0);
+        println!("serial:   {serial_s:.2}s for {} runs", serial.len());
+        println!(
+            "parallel: {parallel_s:.2}s on {threads} threads  -> {grid_speedup:.2}x speedup \
+             (required >= {grid_required:.2}x)"
+        );
+        println!(
+            "parallel results {} the serial reference",
+            if grid_identical { "bit-identical to" } else { "DIVERGE FROM" }
+        );
+        for line in summarize(&serial).iter().map(summary_line) {
+            println!("{line}");
+        }
+        stuck_total += serial.iter().map(|o| o.stuck_pending).sum::<usize>();
+        unfinished_total += serial.iter().map(|o| o.unfinished + o.jobs_dropped).sum::<usize>();
     }
-    let grid_stuck: usize = serial.iter().map(|o| o.stuck_pending).sum();
-    let grid_unfinished: usize = serial.iter().map(|o| o.unfinished + o.jobs_dropped).sum();
 
     println!("\n=== fleet scale: sharded vs serial event kernel vs lockstep ===\n");
-    let scale_max: usize = std::env::var("SCALE_MAX_JOBS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(100_000);
     let mut scale_rows = Vec::new();
     let mut scale_diverged = false;
     let mut scale_sharded_slow = false;
+    let mut informer_relisted = false;
     // 0.0 = "rung not run" (SCALE_MAX_JOBS trimmed it) — keeps the json valid
     let mut speedup_10k = 0.0_f64;
-    for jobs in [1_000usize, 10_000, 100_000] {
-        if jobs > scale_max {
-            println!("  (skipping {jobs}-pod rung: SCALE_MAX_JOBS={scale_max})");
+    for jobs in [1_000usize, 10_000, 100_000, 1_000_000] {
+        if jobs > scale_max || jobs < scale_min {
+            println!(
+                "  (skipping {jobs}-pod rung: SCALE_MIN_JOBS={scale_min} \
+                 SCALE_MAX_JOBS={scale_max})"
+            );
             continue;
         }
         let sspec = scale_spec(jobs);
-        // one run in memory at a time: each cell drops its cluster
-        let (lock_secs, lock_out, lock_events, _) = scale_cell(&sspec, KernelMode::Lockstep);
-        let (serial_secs, serial_out, serial_events, _) =
-            scale_cell(&sspec, KernelMode::EventDriven);
-        let (shard_secs, shard_out, shard_events, ticks) =
-            scale_cell(&sspec, KernelMode::Sharded { threads: 0 });
-        let identical = lock_out == serial_out
-            && lock_out == shard_out
-            && lock_events == serial_events
-            && lock_events == shard_events;
+        let million = jobs >= 1_000_000;
+        // one run in memory at a time: each cell drops its cluster.
+        // The million rung runs the sharded kernel only — lockstep at 10⁶
+        // pods × 300 ticks is 3·10⁸ kubelet ticks of pure reference; the
+        // ≤100k rungs pin all three flavors bit-for-bit, and the
+        // kernel-equivalence suite covers the kernels at test scale.
+        let sharded = scale_cell(&sspec, KernelMode::Sharded { threads: 0 }, !million);
+        let (lock, serial) = if million {
+            (None, None)
+        } else {
+            let lock = scale_cell(&sspec, KernelMode::Lockstep, true);
+            let serial = scale_cell(&sspec, KernelMode::EventDriven, true);
+            (Some(lock), Some(serial))
+        };
+
+        // informer gate, every rung: no relist after the initial LIST.
+        // (Per-wake rebuild counts are REPORTED below — an individual wake
+        // may legitimately carry a fleet-sized delta when completions
+        // batch onto one tick; the controlled per-wake delta-vs-relist
+        // gate lives in perf_sim's BENCH_informer.)
+        if sharded.informer.relists > 1 {
+            informer_relisted = true;
+        }
+        let rebuilds_per_sync =
+            sharded.informer.views_rebuilt as f64 / sharded.informer.syncs.max(1) as f64;
+
+        let identical = match (&lock, &serial) {
+            (Some(l), Some(sv)) => {
+                l.outcome == sv.outcome
+                    && l.outcome == sharded.outcome
+                    && l.events == sv.events
+                    && l.events == sharded.events
+            }
+            _ => true, // million rung: single flavor, nothing to diverge
+        };
         if !identical {
             scale_diverged = true;
         }
+        let lock_secs = lock.as_ref().map(|c| c.secs).unwrap_or(0.0);
+        let serial_secs = serial.as_ref().map(|c| c.secs).unwrap_or(0.0);
+        let shard_secs = sharded.secs;
+        let ticks = sharded.ticks;
         let vs_serial = serial_secs / shard_secs.max(1e-9);
         let vs_lockstep = lock_secs / shard_secs.max(1e-9);
         if jobs == 10_000 {
@@ -230,15 +318,26 @@ fn main() {
         }
         // the regression gate: sharded must never be slower than the
         // PR 3 serial event kernel (5 % tolerance for runner noise)
-        if shard_secs > serial_secs * 1.05 {
+        if serial.is_some() && shard_secs > serial_secs * 1.05 {
             scale_sharded_slow = true;
         }
-        println!(
-            "  {jobs:>6} pods over {ticks} sim-s: lockstep {lock_secs:>7.2}s  serial-event \
-             {serial_secs:>7.2}s  sharded {shard_secs:>7.2}s  -> {vs_serial:.2}x vs serial, \
-             {vs_lockstep:.2}x vs lockstep, {}",
-            if identical { "bit-identical" } else { "DIVERGED" },
-        );
+        if million {
+            println!(
+                "  {jobs:>7} pods over {ticks} sim-s: sharded {shard_secs:>7.2}s \
+                 ({} tables interned for {jobs} pods, {rebuilds_per_sync:.0} view \
+                 rebuilds/wake, {} ctl syncs)",
+                sharded.live_tables, sharded.informer.syncs,
+            );
+        } else {
+            println!(
+                "  {jobs:>7} pods over {ticks} sim-s: lockstep {lock_secs:>7.2}s  serial-event \
+                 {serial_secs:>7.2}s  sharded {shard_secs:>7.2}s  -> {vs_serial:.2}x vs serial, \
+                 {vs_lockstep:.2}x vs lockstep, {} ({} tables, {rebuilds_per_sync:.0} \
+                 rebuilds/wake)",
+                if identical { "bit-identical" } else { "DIVERGED" },
+                sharded.live_tables,
+            );
+        }
         scale_rows.push(obj(vec![
             ("jobs", num(jobs as f64)),
             ("nodes", num(sspec.node_count() as f64)),
@@ -248,16 +347,39 @@ fn main() {
             ("sharded_secs", num(shard_secs)),
             ("sharded_vs_serial_speedup", num(vs_serial)),
             ("sharded_vs_lockstep_speedup", num(vs_lockstep)),
-            ("ticks_per_sec_lockstep", num(ticks as f64 / lock_secs.max(1e-9))),
-            ("ticks_per_sec_serial_event", num(ticks as f64 / serial_secs.max(1e-9))),
+            (
+                "ticks_per_sec_lockstep",
+                num(if lock_secs > 0.0 { ticks as f64 / lock_secs } else { 0.0 }),
+            ),
+            (
+                "ticks_per_sec_serial_event",
+                num(if serial_secs > 0.0 { ticks as f64 / serial_secs } else { 0.0 }),
+            ),
             ("ticks_per_sec_sharded", num(ticks as f64 / shard_secs.max(1e-9))),
-            ("identical", Json::Bool(identical)),
+            // the RSS proxy: distinct interned table sets vs fleet size
+            ("live_model_tables", num(sharded.live_tables as f64)),
+            // per-wake informer cost: rebuilds track the delta, not jobs
+            ("informer_syncs", num(sharded.informer.syncs as f64)),
+            ("informer_relists", num(sharded.informer.relists as f64)),
+            ("informer_views_rebuilt", num(sharded.informer.views_rebuilt as f64)),
+            ("informer_rebuilds_per_sync", num(rebuilds_per_sync)),
+            // whether cross-kernel equivalence actually ran on this rung:
+            // the million rung runs one flavor only, so `identical` would
+            // be an unearned claim there — record null instead
+            ("kernels_compared", Json::Bool(!million)),
+            (
+                "identical",
+                if million { Json::Null } else { Json::Bool(identical) },
+            ),
         ]));
     }
+    let istats = intern_stats();
     let scale_json = obj(vec![
         ("bench", s("scenario_fleet/scale")),
         ("threads", num(threads as f64)),
         ("sharded_vs_serial_speedup_10k", num(speedup_10k)),
+        ("intern_hits", num(istats.hits as f64)),
+        ("intern_table_builds", num(istats.table_builds as f64)),
         ("rows", arr(scale_rows)),
     ]);
     std::fs::create_dir_all("bench_out").ok();
@@ -267,40 +389,36 @@ fn main() {
 
     let bench_json = obj(vec![
         ("bench", s("scenario_fleet")),
-        ("nodes", num(spec.node_count() as f64)),
-        ("jobs", num(spec.jobs as f64)),
         ("threads", num(threads as f64)),
-        ("serial_secs", num(serial_s)),
-        ("parallel_secs", num(parallel_s)),
-        ("speedup", num(speedup)),
-        ("speedup_required", num(required)),
-        ("parallel_identical", Json::Bool(identical)),
-        ("stuck_pending_total", num((stuck_total + grid_stuck) as f64)),
-        ("unfinished_total", num((unfinished_total + grid_unfinished) as f64)),
+        ("scale_only", Json::Bool(scale_only)),
+        ("serial_secs", num(grid_serial_s)),
+        ("parallel_secs", num(grid_parallel_s)),
+        ("grid_speedup", num(if grid_speedup.is_finite() { grid_speedup } else { 0.0 })),
+        ("grid_speedup_required", num(grid_required)),
+        ("parallel_identical", Json::Bool(grid_identical)),
+        ("stuck_pending_total", num(stuck_total as f64)),
+        ("unfinished_total", num(unfinished_total as f64)),
         ("kernel", kernel_json),
         ("scale", scale_json),
         ("singles", arr(singles.iter().map(outcome_json).collect())),
     ]);
     println!("\nBENCH {}", bench_json.to_string_pretty());
 
-    if stuck_total + grid_stuck > 0 {
-        eprintln!("FAIL: {} pods stuck Pending at drain", stuck_total + grid_stuck);
+    if stuck_total > 0 {
+        eprintln!("FAIL: {stuck_total} pods stuck Pending at drain");
         std::process::exit(1);
     }
-    if unfinished_total + grid_unfinished > 0 {
-        eprintln!(
-            "FAIL: {} jobs unfinished or dropped at the tick budget",
-            unfinished_total + grid_unfinished
-        );
+    if unfinished_total > 0 {
+        eprintln!("FAIL: {unfinished_total} jobs unfinished or dropped at the tick budget");
         std::process::exit(1);
     }
-    if !identical {
+    if !grid_identical {
         eprintln!("FAIL: parallel grid diverged from serial reference");
         std::process::exit(1);
     }
-    if threads >= 2 && speedup < required {
+    if !scale_only && threads >= 2 && grid_speedup < grid_required {
         eprintln!(
-            "FAIL: parallel speedup {speedup:.2}x below the {required:.2}x required \
+            "FAIL: parallel speedup {grid_speedup:.2}x below the {grid_required:.2}x required \
              on {threads} threads"
         );
         std::process::exit(1);
@@ -324,6 +442,13 @@ fn main() {
     // the json records the actual ratio)
     if scale_sharded_slow {
         eprintln!("FAIL: sharded kernel slower than the serial event kernel at fleet scale");
+        std::process::exit(1);
+    }
+    // PR 5 gate: the delta informer must never fall back to relisting
+    // mid-run (the per-wake delta-vs-relist cost gate is perf_sim's
+    // BENCH_informer; the ladder reports rebuilds-per-wake alongside)
+    if informer_relisted {
+        eprintln!("FAIL: the delta informer relisted after its initial LIST");
         std::process::exit(1);
     }
 }

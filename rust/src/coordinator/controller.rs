@@ -1,7 +1,8 @@
-//! The controller: syncs its informer cache, scrapes sampled metrics,
-//! drives a node-scoped policy, and submits the decided batch through its
-//! typed [`ApiClient`] — the process the paper runs "on another node ...
-//! requiring only Kubernetes access permissions" (§5 Overhead).
+//! The controller: replays its informer's watch delta, scrapes sampled
+//! metrics, drives a node-scoped policy, and submits the decided batch
+//! through its typed [`ApiClient`] — the process the paper runs "on
+//! another node ... requiring only Kubernetes access permissions" (§5
+//! Overhead).
 //!
 //! `Controller<P>` is generic over the [`NodePolicy`] it drives: the
 //! default `Controller<PerPodAdapter>` hosts per-pod [`VerticalPolicy`]
@@ -11,11 +12,21 @@
 //! [`PodView`](crate::simkube::api::PodView)s — never `cluster.pods` —
 //! and every action lands in the API audit log as
 //! applied / deferred / rejected.
+//!
+//! Per-wake cost is delta-driven end to end: lifecycle sync receives only
+//! the pods that *transitioned* since the last wake, OOM recovery walks
+//! the informer's delta-maintained OomKilled index, and observe/decide
+//! batches come from its Running index — no step rescans the cached
+//! views. A wake where nothing happened (an empty [`SyncDelta`] with no
+//! sampling or decision due) costs O(1), not O(pods); that is what keeps
+//! controller wakes cheap at the 10⁵–10⁶-pod ladder rungs.
+//!
+//! [`SyncDelta`]: crate::simkube::api::SyncDelta
 
 use crate::policy::{Action, NodePolicy, PerPodAdapter, PodAction, VerticalPolicy};
-use crate::simkube::api::{ActionRecord, ApiClient, Verb};
+use crate::simkube::api::{ActionRecord, ApiClient, InformerStats, Verb};
 use crate::simkube::cluster::Cluster;
-use crate::simkube::pod::{PodId, PodPhase};
+use crate::simkube::pod::PodId;
 
 /// Anything that reacts to a cluster tick (per-pod or fleet controllers,
 /// gang supervisors, and the remote bridge).
@@ -44,6 +55,13 @@ pub trait Tick {
     /// event kernel skip the sampling pipeline across coasted stretches.
     fn wants_observe(&self) -> bool {
         true
+    }
+
+    /// This coordinator's informer counters, if it keeps an informer
+    /// (the benches and the kernel-equivalence suite read relist/rebuild
+    /// counts off this).
+    fn informer(&self) -> Option<InformerStats> {
+        None
     }
 }
 
@@ -157,45 +175,44 @@ impl<P: NodePolicy> Tick for Controller<P> {
         self.policy.wants_observe()
     }
 
+    fn informer(&self) -> Option<InformerStats> {
+        Some(self.client.informer_stats())
+    }
+
     fn tick(&mut self, cluster: &mut Cluster) {
         let now = cluster.now;
-        // informer refresh: all reads below go through the cache
-        let relisted = self.client.sync(cluster);
+        // informer refresh: replay the watch records since the last wake;
+        // all reads below go through the cache + its phase indexes
+        let delta = self.client.sync(cluster);
 
-        // 0. lifecycle sync: completed pods retire their per-pod policy
-        // bookkeeping (dead cadences must stop capping coast length),
-        // revived pods lazily re-register it. Phase changes always emit
-        // events (the PLEG contract), so an un-relisted cache proves this
-        // O(pods) sweep would see nothing new — skip it.
-        if relisted {
-            let all: Vec<&_> = self.client.cached_views().collect();
-            self.policy.sync_lifecycle(now, &all);
+        // 0. lifecycle sync, fed ONLY the transitioned pods: completed
+        // pods retire their per-pod policy bookkeeping (dead cadences
+        // must stop capping coast length), revived pods lazily
+        // re-register it. Phase changes always emit events (the PLEG
+        // contract), so an empty transition set proves there is nothing
+        // to retire or revive — the old O(pods) relist sweep is gone.
+        if !delta.transitioned.is_empty() {
+            self.policy.sync_lifecycle(now, &delta.transitioned);
         }
 
-        // 1. OOM recovery first (the policy decides the restart size)
-        let ooms: Vec<(PodId, f64)> = self
-            .client
-            .cached_views()
-            .filter(|v| v.phase == PodPhase::OomKilled)
-            .map(|v| (v.id, v.usage_gb))
-            .collect();
-        for (pod, usage) in ooms {
-            if let Some(act) = self.policy.on_oom(now, pod, usage) {
-                self.apply(cluster, now, act);
+        // 1. OOM recovery first (the policy decides the restart size):
+        // the informer's OomKilled index holds exactly the killed pods
+        // with their usage at the breach, so a wake with no kills pays
+        // O(1) here instead of the old every-wake O(pods) phase scan.
+        if !self.client.oom_killed().is_empty() {
+            let ooms: Vec<(PodId, f64)> = self.client.oom_killed().to_vec();
+            for (pod, usage) in ooms {
+                if let Some(act) = self.policy.on_oom(now, pod, usage) {
+                    self.apply(cluster, now, act);
+                }
             }
         }
 
         // 2. scrape fresh samples into the policy on sampling ticks —
-        // skipped outright when no hosted kernel consumes metrics
-        // (observe is contractually a no-op then, and the per-pod
-        // dispatch is O(running pods) per sampling tick at fleet scale)
+        // the Running set comes from the delta-maintained index, and the
+        // whole step is skipped when no hosted kernel consumes metrics
         if self.policy.wants_observe() && cluster.metrics.is_sampling_tick(now) {
-            let running: Vec<PodId> = self
-                .client
-                .cached_views()
-                .filter(|v| v.phase == PodPhase::Running)
-                .map(|v| v.id)
-                .collect();
+            let running: Vec<PodId> = self.client.running().to_vec();
             for pod in running {
                 if let Some(s) = cluster.metrics.last(pod) {
                     if s.time == now {
@@ -206,16 +223,15 @@ impl<P: NodePolicy> Tick for Controller<P> {
         }
 
         // 3. one node-scoped decision batch, highest priority first
-        // (interval-gated policies skip the view pass on off ticks)
+        // (interval-gated policies skip the view pass on off ticks); the
+        // Running views come straight off the index, id order
         if !self.policy.wants_decision(now) {
             return;
         }
-        let views: Vec<&_> = self
-            .client
-            .cached_views()
-            .filter(|v| v.phase == PodPhase::Running)
-            .collect();
-        let mut actions = self.policy.decide(now, &views);
+        let mut actions = {
+            let views: Vec<&_> = self.client.running_views().collect();
+            self.policy.decide(now, &views)
+        };
         actions.sort_by(|a, b| b.priority.cmp(&a.priority));
         for act in actions {
             self.apply(cluster, now, act);

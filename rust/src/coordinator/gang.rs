@@ -69,6 +69,14 @@ impl GangSupervisor {
             .map(|g| g.members.iter().all(|&m| cluster.pod(m).is_done()))
             .unwrap_or(false)
     }
+
+    /// Retire the supervisor's informer once every gang is done: releases
+    /// its registered watch cursor so a compacting event log is not
+    /// pinned at the supervisor's last-synced revision for the rest of
+    /// the run. A later tick re-registers transparently (fresh LIST).
+    pub fn detach(&mut self, cluster: &mut Cluster) {
+        self.client.detach(cluster);
+    }
 }
 
 impl Default for GangSupervisor {
@@ -97,10 +105,19 @@ impl Tick for GangSupervisor {
             if any_failed {
                 gang.gang_restarts += 1;
                 for (i, &m) in gang.members.iter().enumerate() {
-                    let view = self.client.cached(m);
-                    let (usage_gb, limit_gb) = view
-                        .map(|v| (v.usage_gb, v.effective_limit_gb))
-                        .unwrap_or((0.0, 0.0));
+                    // limits come off the watch-backed view; live usage is
+                    // metrics state, read through (the informer cache
+                    // deliberately carries no usage figures)
+                    let limit_gb = self
+                        .client
+                        .cached(m)
+                        .map(|v| v.effective_limit_gb)
+                        .unwrap_or(0.0);
+                    let usage_gb = self
+                        .client
+                        .usage(cluster, m)
+                        .map(|u| u.usage_gb)
+                        .unwrap_or(0.0);
                     let usage = usage_gb.max(limit_gb.min(1e6)); // fallback scale
                     let new_mem = match gang.policies[i].on_oom(now, usage) {
                         Action::RestartWith(gb) => gb,

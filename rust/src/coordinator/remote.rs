@@ -171,6 +171,9 @@ pub fn run_remote(
         std::thread::yield_now();
     }
     handle.shutdown();
+    // the bridge's informer is done: release its watch cursor so a
+    // compacting event log is not pinned at this run's last revision
+    api.detach(cluster);
     cluster.now - start
 }
 

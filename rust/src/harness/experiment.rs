@@ -7,7 +7,7 @@ use crate::policy::arcv::{ArcvParams, ArcvPolicy, DecisionBackend};
 use crate::policy::fixed::FixedPolicy;
 use crate::policy::oracle::OraclePolicy;
 use crate::policy::vpa::{UpdateMode, VpaFullPolicy, VpaSimPolicy};
-use crate::simkube::api::{ApiClient, Outcome};
+use crate::simkube::api::{ApiClient, InformerStats, Outcome};
 use crate::simkube::clock::next_multiple;
 use crate::simkube::cluster::{Cluster, ClusterConfig};
 use crate::simkube::events::Event;
@@ -239,12 +239,14 @@ pub struct RunResult {
 }
 
 /// Everything one experiment produces: the reportable result plus the
-/// full event log and kernel counters (what the equivalence suite and the
-/// perf benches compare across kernel modes).
+/// full event log, kernel counters, and the controller's informer
+/// counters (what the equivalence suite and the perf benches compare
+/// across kernel modes).
 pub struct RunOutput {
     pub result: RunResult,
     pub events: Vec<Event>,
     pub stats: KernelStats,
+    pub informer: InformerStats,
 }
 
 /// Run one experiment to completion (or budget) on the event-driven
@@ -356,6 +358,7 @@ pub fn run_with_mode(cfg: &ExperimentConfig, kind: PolicyKind, mode: KernelMode)
         result,
         events: cluster.events.events,
         stats,
+        informer: controller.informer().unwrap_or_default(),
     }
 }
 

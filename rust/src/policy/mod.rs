@@ -141,15 +141,25 @@ pub trait NodePolicy {
         true
     }
 
-    /// Pod lifecycle sync: called once per controller tick with the
-    /// cached views of *every* pod (all phases, id order), before any
-    /// decision work. Policies use it to retire per-pod bookkeeping when
-    /// a pod completes — a Succeeded pod's decision cadence must stop
-    /// capping [`Self::next_wake`] in aged fleets — and to revive that
-    /// bookkeeping if the pod is later restarted (the API deliberately
-    /// allows reviving Succeeded pods, so dropping management outright
-    /// would silently orphan the revived container). Default: no-op.
-    fn sync_lifecycle(&mut self, _now: u64, _views: &[&PodView]) {}
+    /// Pod lifecycle sync: called before any decision work with the pods
+    /// whose phase *transitioned* since the last controller wake (id
+    /// order, new phase attached — the informer's [`SyncDelta`]), never
+    /// with the whole fleet. Transitions the controller itself caused
+    /// through its own applied actions (an OOM-recovery restart it just
+    /// submitted) are NOT re-delivered — the client's cache reflects its
+    /// own writes at apply time — so implementations must not rely on
+    /// seeing phases they themselves changed; the policy already knows
+    /// about actions it emitted. Policies use it to retire per-pod
+    /// bookkeeping when a pod completes — a Succeeded pod's decision
+    /// cadence must stop capping [`Self::next_wake`] in aged fleets —
+    /// and to revive that bookkeeping if the pod is later restarted (the
+    /// API deliberately allows reviving Succeeded pods, so dropping
+    /// management outright would silently orphan the revived container;
+    /// every revival emits an event, so it always shows up here).
+    /// Default: no-op.
+    ///
+    /// [`SyncDelta`]: crate::simkube::api::SyncDelta
+    fn sync_lifecycle(&mut self, _now: u64, _transitions: &[(PodId, PodPhase)]) {}
 
     /// Called every tick with the cached views of the node's Running pods.
     /// Returns the batch of actions to submit this tick (possibly empty).
@@ -278,23 +288,25 @@ impl NodePolicy for PerPodAdapter {
         }
     }
 
-    /// Retire kernels of Succeeded pods (their cadences stop feeding
-    /// [`Self::next_wake`]) and lazily re-register a parked kernel the
-    /// moment its pod is seen in any non-Succeeded phase again.
-    fn sync_lifecycle(&mut self, _now: u64, views: &[&PodView]) {
-        for v in views {
-            if v.phase == PodPhase::Succeeded {
-                if let Ok(i) = self.entries.binary_search_by_key(&v.id, |e| e.0) {
+    /// Retire kernels of pods that transitioned to Succeeded (their
+    /// cadences stop feeding [`Self::next_wake`]) and lazily re-register
+    /// a parked kernel the moment its pod transitions to any
+    /// non-Succeeded phase again. Cost is O(transitions · log entries) —
+    /// a quiescent wake passes nothing here at all.
+    fn sync_lifecycle(&mut self, _now: u64, transitions: &[(PodId, PodPhase)]) {
+        for &(id, phase) in transitions {
+            if phase == PodPhase::Succeeded {
+                if let Ok(i) = self.entries.binary_search_by_key(&id, |e| e.0) {
                     let e = self.entries.remove(i);
-                    match self.retired.binary_search_by_key(&v.id, |r| r.0) {
+                    match self.retired.binary_search_by_key(&id, |r| r.0) {
                         Ok(j) => self.retired[j] = e, // stale duplicate: last wins
                         Err(j) => self.retired.insert(j, e),
                     }
                 }
             } else if !self.retired.is_empty() {
-                if let Ok(i) = self.retired.binary_search_by_key(&v.id, |r| r.0) {
+                if let Ok(i) = self.retired.binary_search_by_key(&id, |r| r.0) {
                     let e = self.retired.remove(i);
-                    match self.entries.binary_search_by_key(&v.id, |x| x.0) {
+                    match self.entries.binary_search_by_key(&id, |x| x.0) {
                         // an explicit re-manage already took over: the
                         // parked kernel is obsolete, drop it
                         Ok(_) => {}
@@ -378,23 +390,6 @@ mod tests {
         assert!(a.decide(5, &[]).is_empty());
     }
 
-    fn view(id: PodId, phase: PodPhase) -> PodView {
-        PodView {
-            id,
-            name: format!("p{id}"),
-            phase,
-            qos: crate::simkube::qos::QosClass::Guaranteed,
-            node: Some(0),
-            resource_version: 1,
-            spec_memory_gb: Some(2.0),
-            effective_limit_gb: 2.0,
-            usage_gb: 1.0,
-            rss_gb: 1.0,
-            swap_gb: 0.0,
-            restarts: 0,
-        }
-    }
-
     #[test]
     fn succeeded_pod_retires_and_stops_capping_next_wake() {
         let mut a = PerPodAdapter::new();
@@ -402,10 +397,9 @@ mod tests {
         a.manage(3, Box::new(VpaSimPolicy::new(1.0)));
         a.manage(7, Box::new(FixedPolicy::new(4.0)));
         assert_eq!(a.next_wake(100, 5), 101, "active vpa kernel polls per tick");
-        // pod 3 completes: its kernel is parked, not dropped
-        let done = view(3, PodPhase::Succeeded);
-        let running = view(7, PodPhase::Running);
-        a.sync_lifecycle(200, &[&done, &running]);
+        // pod 3 transitions to Succeeded: its kernel is parked, not
+        // dropped (pod 7 did not transition, so the delta omits it)
+        a.sync_lifecycle(200, &[(3, PodPhase::Succeeded)]);
         assert_eq!(a.len(), 1);
         assert_eq!(a.retired_len(), 1);
         assert_eq!(
@@ -422,18 +416,16 @@ mod tests {
     fn revived_pod_lazily_reregisters_its_parked_kernel() {
         let mut a = PerPodAdapter::new();
         a.manage(3, Box::new(VpaSimPolicy::new(1.0)));
-        let done = view(3, PodPhase::Succeeded);
-        a.sync_lifecycle(10, &[&done]);
+        a.sync_lifecycle(10, &[(3, PodPhase::Succeeded)]);
         assert_eq!(a.len(), 0);
-        // the API restarts the Succeeded pod: management must resume
-        let back = view(3, PodPhase::Running);
-        a.sync_lifecycle(20, &[&back]);
+        // the API restarts the Succeeded pod: the transition back out of
+        // Succeeded (restarts re-enter as Pending) resumes management
+        a.sync_lifecycle(20, &[(3, PodPhase::Pending)]);
         assert_eq!(a.len(), 1);
         assert_eq!(a.retired_len(), 0);
         assert_eq!(a.next_wake(20, 5), 21, "revived kernel polls again");
         // an explicit re-manage while parked supersedes the parked kernel
-        let done2 = view(3, PodPhase::Succeeded);
-        a.sync_lifecycle(30, &[&done2]);
+        a.sync_lifecycle(30, &[(3, PodPhase::Succeeded)]);
         let displaced = a.manage(3, Box::new(FixedPolicy::new(2.0)));
         assert_eq!(displaced.unwrap().name(), "vpa-sim");
         assert_eq!(a.retired_len(), 0);

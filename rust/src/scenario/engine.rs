@@ -31,7 +31,7 @@ use crate::coordinator::controller::Controller;
 use crate::simkube::api::Outcome as ApiOutcome;
 use crate::simkube::kernel::{run_kernel, EventSource, KernelMode, KernelStats};
 use crate::simkube::{
-    ApiClient, Cluster, MemoryProcess, PodId, ResourceSpec, SimClock, TimedEvent,
+    ApiClient, Cluster, InformerStats, MemoryProcess, PodId, ResourceSpec, SimClock, TimedEvent,
 };
 use crate::util::rng::{hash2, Xoshiro256};
 use crate::workloads::build;
@@ -77,13 +77,14 @@ pub struct JobRecord {
 }
 
 /// Everything one scenario run produces: the aggregate outcome plus the
-/// raw records, final cluster, and kernel counters for tests and deeper
-/// reports.
+/// raw records, final cluster, kernel counters, and the policy
+/// controller's informer counters for tests and deeper reports.
 pub struct ScenarioRun {
     pub outcome: ScenarioOutcome,
     pub jobs: Vec<JobRecord>,
     pub cluster: Cluster,
     pub stats: KernelStats,
+    pub informer: InformerStats,
 }
 
 /// The scenario engine's kernel adapter: arrival + fault events from its
@@ -303,6 +304,7 @@ pub fn run_scenario_mode(
     };
     let stats = run_kernel(mode, &mut cluster, &mut ctl, &mut src, spec.max_ticks);
 
+    let informer = ctl.client().informer_stats();
     let audit = ctl.actions();
     let api_applied = audit
         .iter()
@@ -326,7 +328,7 @@ pub fn run_scenario_mode(
         api_applied,
         api_rejected,
     );
-    ScenarioRun { outcome, jobs: src.jobs, cluster, stats }
+    ScenarioRun { outcome, jobs: src.jobs, cluster, stats, informer }
 }
 
 #[cfg(test)]

@@ -58,31 +58,47 @@ pub struct ScenarioOutcome {
 
 /// Total queue wait reconstructed from the event log, so re-queue waits
 /// caused by churn count — not just the wait before first placement.
+///
+/// ONE pass over the log with per-pod waiting slots: the old shape
+/// (filter the whole log once per job) was O(jobs · events), which at the
+/// 10⁶-pod ladder rung is ~10¹² visits; this is O(jobs + events) with
+/// identical arithmetic (the global log is time-ordered, so each pod's
+/// filtered subsequence is processed in the same order).
 fn queue_wait_secs(cluster: &Cluster, jobs: &[JobRecord], end: u64) -> u64 {
-    let mut wait = 0u64;
+    let n = cluster.pods.len();
+    // pods wait from submission (and from every displacement) until the
+    // next PodScheduled; slots are None for pods not in `jobs`
+    let mut waiting_since: Vec<Option<u64>> = vec![None; n];
+    let mut tracked = vec![false; n];
     for j in jobs {
-        // pods wait from submission (and from every displacement) until
-        // the next PodScheduled
-        let mut waiting_since = Some(j.submit_at);
-        for e in cluster.events.iter().filter(|e| e.pod == j.pod) {
-            match e.kind {
-                EventKind::PodScheduled { .. } => {
-                    if let Some(t0) = waiting_since.take() {
-                        wait += e.time.saturating_sub(t0);
-                    }
+        if j.pod < n {
+            tracked[j.pod] = true;
+            waiting_since[j.pod] = Some(j.submit_at);
+        }
+    }
+    let mut wait = 0u64;
+    for e in cluster.events.iter() {
+        if e.pod >= n || !tracked[e.pod] {
+            continue; // node-scoped or non-job events
+        }
+        match e.kind {
+            EventKind::PodScheduled { .. } => {
+                if let Some(t0) = waiting_since[e.pod].take() {
+                    wait += e.time.saturating_sub(t0);
                 }
-                EventKind::PodDrained { .. }
-                | EventKind::PodKilled { .. }
-                | EventKind::Evicted { .. }
-                | EventKind::PodRequeued => {
-                    waiting_since.get_or_insert(e.time);
-                }
-                _ => {}
             }
+            EventKind::PodDrained { .. }
+            | EventKind::PodKilled { .. }
+            | EventKind::Evicted { .. }
+            | EventKind::PodRequeued => {
+                waiting_since[e.pod].get_or_insert(e.time);
+            }
+            _ => {}
         }
-        if let Some(t0) = waiting_since {
-            wait += end.saturating_sub(t0);
-        }
+    }
+    // pods still waiting when the run stopped accrue until then
+    for slot in waiting_since.into_iter().flatten() {
+        wait += end.saturating_sub(slot);
     }
     wait
 }

@@ -17,15 +17,34 @@
 //! - every pod carries a `resource_version`; a patch submitted with a
 //!   stale expected version is refused with [`ApiError::Conflict`]
 //!   (optimistic concurrency, the multi-writer safety net);
-//! - a **PLEG-style informer cache**: [`ApiClient::sync`] drains the watch
-//!   stream and relists, so controllers read cached [`PodView`]s instead
-//!   of poking `cluster.pods` directly;
+//! - a **delta-driven informer**: [`ApiClient::sync`] REPLAYS the watch
+//!   records past its revision cursor and rebuilds only the touched
+//!   [`PodView`]s — list-then-watch, the real informer protocol — and
+//!   returns a structured [`SyncDelta`] (changed / transitioned / retired
+//!   pods) so consumers dispatch off the delta instead of rescanning the
+//!   world. A full relist runs only on the first sync and after a
+//!   watch-cursor gap (`rust/tests/informer_delta_prop.rs` pins replay
+//!   bit-for-bit against the retained full-relist oracle,
+//!   [`ApiClient::sync_relist`]);
+//! - **phase indexes** maintained from those deltas: the Running and
+//!   OomKilled sets ([`ApiClient::running`], [`ApiClient::oom_killed`])
+//!   cost O(transitions) to keep current, so a controller wake where
+//!   nothing happened costs O(1) — not O(pods);
 //! - a structured **audit log** ([`ActionRecord`]): every request is
 //!   recorded as applied / deferred / rejected with its reason.
+//!
+//! What the cache does NOT carry: live usage figures. A pod's
+//! usage/rss/swap change every tick *without* API events (cAdvisor state,
+//! not API-server state — real pod objects do not carry live usage
+//! either), so they cannot be watch-maintained. Usage reads go through
+//! the scrape pipeline (`cluster.metrics`) or the read-through
+//! [`ApiClient::usage`], the metrics-server analogue. This split is what
+//! makes delta replay *exact*: every remaining [`PodView`] field changes
+//! only via a logged event (the PLEG contract in `events.rs`).
 
 use super::cluster::Cluster;
-use super::events::Event;
-use super::pod::{MemoryProcess, PodId, PodPhase};
+use super::events::{CursorId, Event, NODE_EVENT};
+use super::pod::{MemoryProcess, PodId, PodPhase, PodUsage};
 use super::qos::QosClass;
 use super::resources::ResourceSpec;
 
@@ -43,9 +62,17 @@ pub enum ApiError {
         expected: u64,
         actual: u64,
     },
+    #[error("watch cursor {cursor} expired: log compacted to revision {floor}; relist required")]
+    Expired { cursor: u64, floor: u64 },
 }
 
 /// What `kubectl get pod -o json` would show (the policy-visible view).
+///
+/// Every field here changes only via a logged watch record — that is the
+/// invariant that lets [`ApiClient::sync`] maintain the cache by replay.
+/// Live usage figures are deliberately NOT part of the view (see the
+/// module doc); read them through [`ApiClient::usage`] or the metrics
+/// pipeline.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PodView {
     pub id: PodId,
@@ -58,10 +85,54 @@ pub struct PodView {
     pub resource_version: u64,
     pub spec_memory_gb: Option<f64>,
     pub effective_limit_gb: f64,
-    pub usage_gb: f64,
-    pub rss_gb: f64,
-    pub swap_gb: f64,
     pub restarts: u32,
+}
+
+/// What one [`ApiClient::sync`] observed, pod ids ascending in every
+/// list. Consumers dispatch off this instead of rescanning cached views:
+/// an empty delta proves every cached view — phases included — is
+/// exactly as it was, so a quiescent wake costs O(1).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SyncDelta {
+    /// Pods whose cached view changed (the rebuilt view differs from the
+    /// cached one bit-for-bit — events that touch only non-view state,
+    /// like swap spills, do not count).
+    pub changed: Vec<PodId>,
+    /// Pods whose *phase* changed, with the new phase. First sight of a
+    /// pod counts as a transition into its current phase.
+    pub transitioned: Vec<(PodId, PodPhase)>,
+    /// Pods that entered `Succeeded` this sync — the retirement subset of
+    /// `transitioned`, precomputed for consumers that only care about
+    /// completions (the in-tree controller feeds `transitioned` whole to
+    /// `sync_lifecycle`, which also needs the revival direction).
+    pub retired: Vec<PodId>,
+    /// Whether this sync had to relist (first sync, or the event log
+    /// compacted past the cursor — impossible for registered cursors).
+    pub relisted: bool,
+}
+
+impl SyncDelta {
+    /// Nothing changed: every cached view and phase index is still exact.
+    pub fn is_empty(&self) -> bool {
+        !self.relisted && self.changed.is_empty()
+    }
+}
+
+/// Informer bookkeeping counters (the perf benches gate on these: delta
+/// replay must keep `views_rebuilt` proportional to churn, not fleet
+/// size, and `relists` must stay at the initial LIST).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InformerStats {
+    /// Total [`ApiClient::sync`]/[`ApiClient::sync_relist`] calls.
+    pub syncs: u64,
+    /// Syncs that rebuilt every view (first LIST + cursor-gap recoveries).
+    pub relists: u64,
+    /// Individual view rebuilds across all syncs (the per-wake cost).
+    /// Own-write refreshes at apply time are deliberately NOT counted —
+    /// they are action cost, not observation cost.
+    pub views_rebuilt: u64,
+    /// Watch records replayed across all delta syncs.
+    pub events_replayed: u64,
 }
 
 /// The API verb of a request, for audit records.
@@ -226,8 +297,20 @@ pub struct ApiClient {
     admission: Vec<Box<dyn AdmissionPlugin>>,
     /// Informer cache, indexed by `PodId`.
     cache: Vec<Option<PodView>>,
-    /// Watch cursor for [`Self::sync`].
-    cursor: usize,
+    /// Watch cursor: the event-log revision this informer has replayed
+    /// through (exclusive).
+    cursor: u64,
+    /// This informer's registered cursor slot in the cluster's event log
+    /// (registered on first sync; pins the log's compaction floor).
+    slot: Option<CursorId>,
+    /// Pods whose cached phase is Running, ascending — maintained from
+    /// deltas, O(transitions) per sync.
+    running: Vec<PodId>,
+    /// Pods whose cached phase is OomKilled, ascending, with the usage at
+    /// the kill (the kubelet freezes `usage` at the breach value, so this
+    /// equals the `OomKilled` event payload).
+    oom_killed: Vec<(PodId, f64)>,
+    stats: InformerStats,
     actions: Vec<ActionRecord>,
 }
 
@@ -249,6 +332,10 @@ impl ApiClient {
             ],
             cache: Vec::new(),
             cursor: 0,
+            slot: None,
+            running: Vec::new(),
+            oom_killed: Vec::new(),
+            stats: InformerStats::default(),
             actions: Vec::new(),
         }
     }
@@ -312,9 +399,6 @@ impl ApiClient {
             resource_version: p.resource_version,
             spec_memory_gb: p.spec.memory_limit_gb(),
             effective_limit_gb: p.effective_limit_gb,
-            usage_gb: p.usage.usage_gb,
-            rss_gb: p.usage.rss_gb,
-            swap_gb: p.usage.swap_gb,
             restarts: p.restarts,
         })
     }
@@ -324,6 +408,13 @@ impl ApiClient {
         Self::build_view(cluster, id).ok_or(ApiError::NotFound(id))
     }
 
+    /// Read-through live usage figures — the metrics-server analogue.
+    /// Usage changes every tick WITHOUT watch records, so it lives
+    /// outside the replay-maintained cache (see the module doc).
+    pub fn usage(&self, cluster: &Cluster, id: PodId) -> Result<PodUsage, ApiError> {
+        cluster.pods.get(id).map(|p| p.usage).ok_or(ApiError::NotFound(id))
+    }
+
     /// LIST of live views.
     pub fn list_pods(cluster: &Cluster) -> Vec<PodView> {
         (0..cluster.pods.len())
@@ -331,36 +422,183 @@ impl ApiClient {
             .collect()
     }
 
-    /// Watch: events at or after `cursor`; returns (events, next_cursor).
-    pub fn watch(cluster: &Cluster, cursor: usize) -> (Vec<Event>, usize) {
-        let evs = cluster.events.events[cursor.min(cluster.events.events.len())..].to_vec();
-        (evs, cluster.events.events.len())
+    /// Watch: retained events at or after revision `cursor`; returns
+    /// (events, next_cursor). A cursor below the log's compaction floor
+    /// is [`ApiError::Expired`] — the kube "too old resourceVersion"
+    /// error: records were compacted away, so a contiguous resume is
+    /// impossible and the caller must relist (which [`Self::sync`] does
+    /// automatically for its own cursor).
+    pub fn watch(cluster: &Cluster, cursor: u64) -> Result<(Vec<Event>, u64), ApiError> {
+        match cluster.events.since(cursor) {
+            Some(evs) => Ok((evs.to_vec(), cluster.events.revision())),
+            None => Err(ApiError::Expired {
+                cursor,
+                floor: cluster.events.first_revision(),
+            }),
+        }
     }
 
-    /// Informer refresh (PLEG-style): advance the watch cursor and relist
-    /// only when it moved — every phase transition and accepted mutation
-    /// emits an event (the PLEG contract in `events.rs`), so an unmoved
-    /// cursor means the cached lifecycle state is still exact. Usage
-    /// figures in cached views refresh on those event ticks; live metrics
-    /// flow through the scrape pipeline, not the informer.
-    ///
-    /// Returns whether anything was relisted: `false` proves every cached
-    /// view — phases included — is unchanged since the last sync, which
-    /// lets callers skip their own O(pods) per-tick sweeps.
-    pub fn sync(&mut self, cluster: &Cluster) -> bool {
-        let next = cluster.events.events.len();
-        let fresh = next != self.cursor || self.cache.len() < cluster.pods.len();
-        self.cursor = next;
-        if !fresh {
-            return false;
+    /// Rebuild one pod's cached view, maintain the phase indexes, and
+    /// fold the observed change into `delta`. A rebuilt view identical to
+    /// the cached one is NOT a change (events that touch only non-view
+    /// state, e.g. swap spills, land here).
+    fn refresh_view(&mut self, cluster: &Cluster, id: PodId, delta: &mut SyncDelta) {
+        let Some(fresh) = Self::build_view(cluster, id) else {
+            return; // pods are never deleted; defensive only
+        };
+        if self.cache.len() <= id {
+            self.cache.resize(id + 1, None);
         }
+        if self.cache[id].as_ref() == Some(&fresh) {
+            return;
+        }
+        let old_phase = self.cache[id].as_ref().map(|v| v.phase);
+        let new_phase = fresh.phase;
+        self.cache[id] = Some(fresh);
+        delta.changed.push(id);
+        if old_phase == Some(new_phase) {
+            // a restart + re-kill can collapse inside one replay window
+            // (phase lands back on OomKilled with no visible transition):
+            // refresh the recorded kill usage so it matches the new kill
+            if new_phase == PodPhase::OomKilled {
+                if let Ok(i) = self.oom_killed.binary_search_by_key(&id, |e| e.0) {
+                    self.oom_killed[i].1 = cluster.pods[id].usage.usage_gb;
+                }
+            }
+            return;
+        }
+        delta.transitioned.push((id, new_phase));
+        if new_phase == PodPhase::Succeeded {
+            delta.retired.push(id);
+        }
+        // Running index
+        if old_phase == Some(PodPhase::Running) {
+            if let Ok(i) = self.running.binary_search(&id) {
+                self.running.remove(i);
+            }
+        } else if new_phase == PodPhase::Running {
+            if let Err(i) = self.running.binary_search(&id) {
+                self.running.insert(i, id);
+            }
+        }
+        // OomKilled index (usage frozen at the breach by the kubelet)
+        if old_phase == Some(PodPhase::OomKilled) {
+            if let Ok(i) = self.oom_killed.binary_search_by_key(&id, |e| e.0) {
+                self.oom_killed.remove(i);
+            }
+        } else if new_phase == PodPhase::OomKilled {
+            let usage = cluster.pods[id].usage.usage_gb;
+            if let Err(i) = self.oom_killed.binary_search_by_key(&id, |e| e.0) {
+                self.oom_killed.insert(i, (id, usage));
+            }
+        }
+    }
+
+    /// Full relist: rebuild every view (used by the first sync, by cursor
+    /// gaps, and by [`Self::sync_relist`] as the property-test oracle).
+    fn relist(&mut self, cluster: &mut Cluster, head: u64) -> SyncDelta {
+        self.stats.relists += 1;
+        let mut delta = SyncDelta {
+            relisted: true,
+            ..SyncDelta::default()
+        };
         if self.cache.len() < cluster.pods.len() {
             self.cache.resize(cluster.pods.len(), None);
         }
+        self.stats.views_rebuilt += cluster.pods.len() as u64;
         for id in 0..cluster.pods.len() {
-            self.cache[id] = Self::build_view(cluster, id);
+            self.refresh_view(cluster, id, &mut delta);
         }
-        true
+        self.cursor = head;
+        if let Some(slot) = self.slot {
+            cluster.events.advance_cursor(slot, head);
+        }
+        delta
+    }
+
+    /// Informer refresh — list-then-watch, like a real informer: the
+    /// first call LISTs (full relist) and registers this informer's
+    /// cursor with the event log (pinning its compaction floor; see
+    /// [`Self::detach`]); every later call REPLAYS only the watch records
+    /// past the cursor and rebuilds only the touched views. Returns the
+    /// [`SyncDelta`]; an empty delta proves every cached view and phase
+    /// index is exact, so a quiescent controller wake costs O(1), not
+    /// O(pods).
+    ///
+    /// Two deliberate exclusions from the delta:
+    ///
+    /// - usage figures are NOT refreshed here — they are not view state
+    ///   (see the module doc); live metrics flow through the scrape
+    ///   pipeline or [`Self::usage`];
+    /// - transitions caused by THIS client's own applied mutations do not
+    ///   reappear: a mutation updates the cache and phase indexes at
+    ///   apply time (read-your-writes), so the replayed record rebuilds
+    ///   an identical view. The caller initiated those changes and the
+    ///   indexes already reflect them; only *foreign* state changes
+    ///   surface as transitions.
+    pub fn sync(&mut self, cluster: &mut Cluster) -> SyncDelta {
+        self.stats.syncs += 1;
+        let head = cluster.events.revision();
+        if self.slot.is_none() {
+            self.slot = Some(cluster.events.register_cursor());
+            return self.relist(cluster, head);
+        }
+        let touched: Option<Vec<PodId>> = match cluster.events.since(self.cursor) {
+            None => None,
+            Some(tail) => {
+                let mut t: Vec<PodId> = tail
+                    .iter()
+                    .filter(|e| e.pod != NODE_EVENT)
+                    .map(|e| e.pod)
+                    .collect();
+                t.sort_unstable();
+                t.dedup();
+                Some(t)
+            }
+        };
+        let Some(touched) = touched else {
+            // compaction passed the cursor — cannot happen for registered
+            // cursors (they pin the floor), kept as the reconnect path
+            return self.relist(cluster, head);
+        };
+        self.stats.events_replayed += head - self.cursor;
+        let mut delta = SyncDelta::default();
+        if self.cache.len() < cluster.pods.len() {
+            self.cache.resize(cluster.pods.len(), None);
+        }
+        self.stats.views_rebuilt += touched.len() as u64;
+        for id in touched {
+            self.refresh_view(cluster, id, &mut delta);
+        }
+        self.cursor = head;
+        cluster.events.advance_cursor(self.slot.expect("registered above"), head);
+        delta
+    }
+
+    /// The full-relist informer refresh — the pre-PR 5 behaviour,
+    /// retained solely as the property-test oracle ([`Self::sync`] must
+    /// produce a bit-identical cache, phase indexes, and transition sets
+    /// under any event history; `rust/tests/informer_delta_prop.rs`).
+    pub fn sync_relist(&mut self, cluster: &mut Cluster) -> SyncDelta {
+        self.stats.syncs += 1;
+        let head = cluster.events.revision();
+        if self.slot.is_none() {
+            self.slot = Some(cluster.events.register_cursor());
+        }
+        self.relist(cluster, head)
+    }
+
+    /// Retire this informer: release its registered watch cursor so it
+    /// stops pinning the log's compaction floor. A client that registered
+    /// (first sync) but then stops syncing forever would otherwise freeze
+    /// auto-compaction at its last cursor — call this when a transient
+    /// actor (a finished gang supervisor, a one-off diagnostic client) is
+    /// done. The cache stays readable; a later sync re-registers and
+    /// relists, like a fresh informer.
+    pub fn detach(&mut self, cluster: &mut Cluster) {
+        if let Some(slot) = self.slot.take() {
+            cluster.events.release_cursor(slot);
+        }
     }
 
     /// The cached view of one pod (None until the first [`Self::sync`]
@@ -372,6 +610,40 @@ impl ApiClient {
     /// All cached views, id order.
     pub fn cached_views(&self) -> impl Iterator<Item = &PodView> {
         self.cache.iter().flatten()
+    }
+
+    /// Pods whose cached phase is Running, ascending (delta-maintained).
+    pub fn running(&self) -> &[PodId] {
+        &self.running
+    }
+
+    /// Cached views of the Running set, id order — what `decide` batches
+    /// are built from without an O(pods) scan.
+    pub fn running_views(&self) -> impl Iterator<Item = &PodView> {
+        self.running
+            .iter()
+            .filter_map(|&id| self.cache.get(id).and_then(|v| v.as_ref()))
+    }
+
+    /// Pods whose cached phase is OomKilled, ascending, with usage at the
+    /// kill (delta-maintained; empty on quiescent fleets, so OOM-recovery
+    /// sweeps cost O(kills), not O(pods)).
+    pub fn oom_killed(&self) -> &[(PodId, f64)] {
+        &self.oom_killed
+    }
+
+    /// Informer counters (syncs / relists / view rebuilds / replays).
+    pub fn informer_stats(&self) -> InformerStats {
+        self.stats
+    }
+
+    /// Refresh one pod after a mutation this client itself applied, so
+    /// its own cache and indexes are current without waiting for the next
+    /// sync (the replayed record then rebuilds to an identical view and
+    /// is not double-counted as a change).
+    fn refresh_own_write(&mut self, cluster: &Cluster, id: PodId) {
+        let mut scratch = SyncDelta::default();
+        self.refresh_view(cluster, id, &mut scratch);
     }
 
     // --------------------------------------------------------- mutations --
@@ -400,10 +672,7 @@ impl ApiClient {
         }
         let id = cluster.create_pod(name, spec, process);
         self.record(now, Some(id), Verb::Create, Outcome::Applied, "created", Some(req_gb), false);
-        if self.cache.len() <= id {
-            self.cache.resize(id + 1, None);
-        }
-        self.cache[id] = Self::build_view(cluster, id);
+        self.refresh_own_write(cluster, id);
         Ok(id)
     }
 
@@ -479,10 +748,7 @@ impl ApiClient {
         cluster.patch_pod_memory(id, mem_gb);
         let rv = cluster.pods[id].resource_version;
         self.record(now, Some(id), Verb::Patch, Outcome::Applied, "resize issued", Some(mem_gb), false);
-        if self.cache.len() <= id {
-            self.cache.resize(id + 1, None);
-        }
-        self.cache[id] = Self::build_view(cluster, id);
+        self.refresh_own_write(cluster, id);
         Ok(rv)
     }
 
@@ -546,16 +812,14 @@ impl ApiClient {
         cluster.restart_pod(id, mem_gb);
         let rv = cluster.pods[id].resource_version;
         self.record(now, Some(id), Verb::Restart, Outcome::Applied, "restarted", Some(mem_gb), false);
-        if self.cache.len() <= id {
-            self.cache.resize(id + 1, None);
-        }
-        self.cache[id] = Self::build_view(cluster, id);
+        self.refresh_own_write(cluster, id);
         Ok(rv)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::events::EventKind;
     use super::super::node::Node;
     use super::super::pod::testutil::ramp;
     use super::super::swap::SwapDevice;
@@ -615,9 +879,11 @@ mod tests {
         assert_eq!(v.phase, PodPhase::Running);
         assert_eq!(v.qos, QosClass::Guaranteed);
         assert_eq!(v.resource_version, 1);
-        assert!(v.usage_gb > 0.9);
+        // live usage is read-through (not view state)
+        assert!(api.usage(&c, id).unwrap().usage_gb > 0.9);
         assert_eq!(ApiClient::list_pods(&c).len(), 1);
         assert_eq!(api.get_pod(&c, 99), Err(ApiError::NotFound(99)));
+        assert_eq!(api.usage(&c, 99), Err(ApiError::NotFound(99)));
     }
 
     #[test]
@@ -696,15 +962,33 @@ mod tests {
         let id = api
             .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 30.0))
             .unwrap();
-        let (evs, cur) = ApiClient::watch(&c, 0);
+        let (evs, cur) = ApiClient::watch(&c, 0).unwrap();
         assert!(evs.len() >= 2); // Scheduled + Started
         api.patch_pod_memory(&mut c, id, 3.0, None).unwrap();
-        let (evs2, cur2) = ApiClient::watch(&c, cur);
+        let (evs2, cur2) = ApiClient::watch(&c, cur).unwrap();
         assert_eq!(evs2.len(), 1); // just the ResizeIssued
         assert!(cur2 > cur);
         // cursor beyond the end is safe
-        let (evs3, _) = ApiClient::watch(&c, 10_000);
+        let (evs3, _) = ApiClient::watch(&c, 10_000).unwrap();
         assert!(evs3.is_empty());
+    }
+
+    #[test]
+    fn watch_below_the_compaction_floor_is_expired() {
+        let mut c = cluster();
+        let mut api = ApiClient::new();
+        api.create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 30.0))
+            .unwrap();
+        c.run_until(40, |c| c.all_done());
+        api.sync(&mut c); // registers + replays to the head
+        let floor = c.events.revision();
+        assert!(c.events.compact() > 0, "everything below the cursor compacts");
+        assert_eq!(
+            ApiClient::watch(&c, 0),
+            Err(ApiError::Expired { cursor: 0, floor })
+        );
+        // at/after the floor the stream is contiguous again
+        assert!(ApiClient::watch(&c, floor).is_ok());
     }
 
     #[test]
@@ -715,11 +999,62 @@ mod tests {
             .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 30.0))
             .unwrap();
         assert_eq!(api.cached(id).unwrap().phase, PodPhase::Running);
+        assert_eq!(api.running(), &[id]);
         c.run_until(40, |c| c.all_done());
         // cache is stale until the next sync ...
         assert_eq!(api.cached(id).unwrap().phase, PodPhase::Running);
-        api.sync(&c);
+        let delta = api.sync(&mut c);
         assert_eq!(api.cached(id).unwrap().phase, PodPhase::Succeeded);
         assert_eq!(api.cached_views().count(), 1);
+        // ... and the delta names exactly what happened
+        assert_eq!(delta.transitioned, vec![(id, PodPhase::Succeeded)]);
+        assert_eq!(delta.retired, vec![id]);
+        assert!(api.running().is_empty());
+    }
+
+    #[test]
+    fn quiescent_sync_is_an_empty_delta() {
+        let mut c = cluster();
+        let mut api = ApiClient::new();
+        let id = api
+            .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 500.0))
+            .unwrap();
+        let first = api.sync(&mut c);
+        assert!(first.relisted, "first sync is the LIST");
+        c.run_until(10, |_| false); // quiescent: no events at all
+        let delta = api.sync(&mut c);
+        assert!(delta.is_empty(), "{delta:?}");
+        assert_eq!(api.cached(id).unwrap().phase, PodPhase::Running);
+        let stats = api.informer_stats();
+        assert_eq!(stats.relists, 1, "no relist after the initial LIST");
+    }
+
+    #[test]
+    fn oom_index_carries_usage_at_kill() {
+        let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::disabled()));
+        let mut api = ApiClient::new();
+        let id = api
+            .create_pod(&mut c, "a", ResourceSpec::memory_exact(1.5), ramp(1.0, 3.0, 100.0))
+            .unwrap();
+        c.run_until(1000, |c| c.pod(id).phase == PodPhase::OomKilled);
+        let delta = api.sync(&mut c);
+        assert_eq!(delta.transitioned.last(), Some(&(id, PodPhase::OomKilled)));
+        let &[(pod, usage)] = api.oom_killed() else {
+            panic!("oom index must hold the killed pod");
+        };
+        assert_eq!(pod, id);
+        // the index usage equals the OomKilled event payload
+        let event_usage = c
+            .events
+            .iter()
+            .find_map(|e| match e.kind {
+                EventKind::OomKilled { usage_gb, .. } if e.pod == id => Some(usage_gb),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(usage, event_usage);
+        // restart clears the index via the next delta
+        api.restart_pod(&mut c, id, 2.0).unwrap();
+        assert!(api.oom_killed().is_empty());
     }
 }

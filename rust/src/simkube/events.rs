@@ -1,13 +1,27 @@
 //! Cluster event log — what `kubectl get events` would show, and what the
 //! harness asserts on (OOM counts, restarts, resize latencies).
 //!
+//! Since the delta-driven observation plane (PR 5), entries double as
+//! **replayable watch records**: every event has a *revision* — its
+//! position in the all-time stream, monotonic and stable across
+//! compaction — and informers ([`ApiClient::sync`]) replay only the
+//! records past their cursor instead of relisting the world. Registered
+//! cursors make compaction safe: [`EventLog::compact`] may only drop
+//! records below the minimum live cursor, so no informer can ever miss a
+//! record it has not replayed (a cursor below the retained floor forces a
+//! relist, the kube watch-reconnect semantics).
+//!
 //! PLEG contract: every pod phase transition emits exactly one event
 //! (`PodScheduled`/`PodStarted`, `PodCompleted`, `OomKilled`, `Evicted`,
 //! `PodRestarted`, `PodDrained`, `PodKilled`, `PodRequeued`,
 //! `SchedulingFailed`), and every accepted API mutation emits
-//! `ResizeIssued` or `PodRestarted`. The `ApiClient` informer relies
-//! on this to keep its cached `PodView`s lifecycle-accurate, and
-//! `rust/tests/api_surface.rs` pins the mutation half.
+//! `ResizeIssued` or `PodRestarted`. This is what makes delta replay
+//! exact: a pod without a record since the informer's cursor provably has
+//! an unchanged API-visible state (`rust/tests/informer_delta_prop.rs`
+//! pins replay against the full-relist oracle; `rust/tests/api_surface.rs`
+//! pins the mutation half).
+//!
+//! [`ApiClient::sync`]: super::api::ApiClient::sync
 
 use super::pod::PodId;
 
@@ -76,9 +90,35 @@ pub struct Event {
     pub kind: EventKind,
 }
 
+/// Identifier of one registered informer cursor (see
+/// [`EventLog::register_cursor`]).
+pub type CursorId = usize;
+
+/// Compaction never runs below this many dead records: tiny logs are not
+/// worth the copy, and the threshold keeps the amortized cost O(1) (a
+/// prefix is only dropped once it is at least as long as the retained
+/// suffix, like a doubling `Vec` in reverse).
+const COMPACT_MIN_DEAD: u64 = 64;
+
 #[derive(Debug, Default)]
 pub struct EventLog {
+    /// The retained suffix of the all-time stream. `events[i]` has
+    /// revision `first_revision() + i`. With compaction disabled (the
+    /// default) this is the whole stream, exactly as before PR 5.
     pub events: Vec<Event>,
+    /// Revision of `events[0]` — the number of records compacted away.
+    base: u64,
+    /// Registered informer cursors: the revision each informer has
+    /// replayed through (exclusive); `None` marks a released slot. The
+    /// minimum live cursor is the compaction floor — an informer that
+    /// stops syncing pins it, so retire transient informers with
+    /// [`Self::release_cursor`] (`ApiClient::detach`) under
+    /// auto-compaction.
+    cursors: Vec<Option<u64>>,
+    /// Opt-in: compact automatically as cursors advance. Off by default —
+    /// the harness and the equivalence suites compare whole logs, and the
+    /// scenario outcome collector folds the full stream at the end.
+    auto_compact: bool,
 }
 
 impl EventLog {
@@ -86,10 +126,106 @@ impl EventLog {
         Self::default()
     }
 
+    /// Revision the NEXT pushed record will get; equivalently, the
+    /// exclusive upper bound of the stream so far. Monotonic across
+    /// compaction (compaction moves `first_revision`, never this).
+    pub fn revision(&self) -> u64 {
+        self.base + self.events.len() as u64
+    }
+
+    /// Revision of the oldest retained record (0 until compaction runs).
+    pub fn first_revision(&self) -> u64 {
+        self.base
+    }
+
     pub fn push(&mut self, time: u64, pod: PodId, kind: EventKind) {
         self.events.push(Event { time, pod, kind });
     }
 
+    /// The records at/after revision `rev`, or `None` when `rev` lies
+    /// below the retained floor (compaction passed it — the caller must
+    /// relist, exactly like a kube watch reconnect after "too old
+    /// resource version").
+    pub fn since(&self, rev: u64) -> Option<&[Event]> {
+        if rev < self.base {
+            return None;
+        }
+        let i = (rev - self.base).min(self.events.len() as u64) as usize;
+        Some(&self.events[i..])
+    }
+
+    /// Register an informer cursor at the current retained floor. The log
+    /// will never compact past the minimum live cursor, so a registered
+    /// informer can always replay incrementally. Under auto-compaction a
+    /// cursor that stops advancing pins the floor forever — release it
+    /// ([`Self::release_cursor`]) when the informer retires. Released
+    /// slots are reused, so the slot table stays bounded by the peak
+    /// number of CONCURRENT informers, not by lifetime registrations.
+    pub fn register_cursor(&mut self) -> CursorId {
+        if let Some(i) = self.cursors.iter().position(Option::is_none) {
+            self.cursors[i] = Some(self.base);
+            return i;
+        }
+        self.cursors.push(Some(self.base));
+        self.cursors.len() - 1
+    }
+
+    /// Record that informer `id` has replayed through `rev` (exclusive),
+    /// then auto-compact if enabled and the dead prefix has outgrown the
+    /// live suffix (amortized O(1) per record).
+    pub fn advance_cursor(&mut self, id: CursorId, rev: u64) {
+        debug_assert!(
+            self.cursors[id].is_some_and(|c| rev >= c),
+            "cursors are monotonic and never advance after release"
+        );
+        self.cursors[id] = Some(rev);
+        if self.auto_compact {
+            let dead = self.compactable();
+            let live = self.events.len() as u64 - dead;
+            if dead >= COMPACT_MIN_DEAD && dead >= live {
+                self.compact();
+            }
+        }
+    }
+
+    /// Retire informer `id`: its cursor stops pinning the compaction
+    /// floor (and may never advance again). Idempotent.
+    pub fn release_cursor(&mut self, id: CursorId) {
+        self.cursors[id] = None;
+    }
+
+    /// Enable/disable automatic compaction (off by default; see the
+    /// field doc for why consumers that fold the whole stream keep it
+    /// off).
+    pub fn set_auto_compact(&mut self, on: bool) {
+        self.auto_compact = on;
+    }
+
+    /// How many retained records sit below the minimum live cursor (0
+    /// when no live cursor is registered: an unwatched log is never
+    /// shrunk implicitly, since end-of-run consumers fold the whole
+    /// stream).
+    fn compactable(&self) -> u64 {
+        let Some(min) = self.cursors.iter().flatten().copied().min() else {
+            return 0;
+        };
+        (min - self.base).min(self.events.len() as u64)
+    }
+
+    /// Drop every record below the minimum registered cursor, returning
+    /// how many were dropped. Revisions of surviving records are
+    /// unchanged and [`Self::revision`] stays monotonic; counters like
+    /// [`Self::count_ooms`] subsequently see only the retained suffix.
+    pub fn compact(&mut self) -> usize {
+        let dead = self.compactable() as usize;
+        if dead > 0 {
+            self.events.drain(..dead);
+            self.base += dead as u64;
+        }
+        dead
+    }
+
+    /// OOM kills for `pod` among the retained records.
     pub fn count_ooms(&self, pod: PodId) -> usize {
         self.events
             .iter()
@@ -97,6 +233,7 @@ impl EventLog {
             .count()
     }
 
+    /// Restarts for `pod` among the retained records.
     pub fn count_restarts(&self, pod: PodId) -> usize {
         self.events
             .iter()
@@ -136,5 +273,91 @@ mod tests {
         assert_eq!(log.count_restarts(0), 1);
         assert_eq!(log.resize_latencies(0), vec![7]);
         assert!(log.resize_latencies(1).is_empty());
+    }
+
+    fn filled(n: u64) -> EventLog {
+        let mut log = EventLog::new();
+        for t in 0..n {
+            log.push(t, 0, EventKind::PodStarted);
+        }
+        log
+    }
+
+    #[test]
+    fn revisions_survive_compaction() {
+        let mut log = filled(100);
+        assert_eq!(log.revision(), 100);
+        let a = log.register_cursor();
+        let b = log.register_cursor();
+        log.advance_cursor(a, 100);
+        log.advance_cursor(b, 40);
+        // the floor is the MINIMUM live cursor
+        assert_eq!(log.compact(), 40);
+        assert_eq!(log.first_revision(), 40);
+        assert_eq!(log.revision(), 100, "head revision is monotonic");
+        assert_eq!(log.events.len(), 60);
+        // the laggard can still replay incrementally ...
+        assert_eq!(log.since(40).unwrap().len(), 60);
+        // ... while anything below the floor forces a relist
+        assert!(log.since(39).is_none());
+        // pushing keeps revisions contiguous
+        log.push(200, 1, EventKind::PodCompleted);
+        assert_eq!(log.revision(), 101);
+        assert_eq!(log.since(100).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn auto_compact_is_cursor_safe_and_amortized() {
+        let mut log = filled(0);
+        log.set_auto_compact(true);
+        let a = log.register_cursor();
+        let b = log.register_cursor();
+        for t in 0..1000u64 {
+            log.push(t, 0, EventKind::PodStarted);
+            // a replays every record promptly; b lags 100 behind
+            log.advance_cursor(a, log.revision());
+            log.advance_cursor(b, log.revision().saturating_sub(100));
+        }
+        // the lagging cursor pins the floor: nothing it still needs is gone
+        assert!(log.first_revision() <= 900);
+        // and the log stayed bounded near the laggard's window
+        assert!(
+            log.events.len() <= 100 + 2 * COMPACT_MIN_DEAD as usize + 100,
+            "retained {} records",
+            log.events.len()
+        );
+        assert_eq!(log.revision(), 1000);
+    }
+
+    #[test]
+    fn unregistered_log_never_compacts() {
+        let mut log = filled(500);
+        log.set_auto_compact(true);
+        assert_eq!(log.compact(), 0);
+        assert_eq!(log.events.len(), 500);
+    }
+
+    #[test]
+    fn released_cursor_stops_pinning_the_floor() {
+        let mut log = filled(100);
+        let live = log.register_cursor();
+        let dead = log.register_cursor(); // a transient informer
+        log.advance_cursor(live, 100);
+        log.advance_cursor(dead, 10);
+        // the transient informer pins the floor at 10 ...
+        assert_eq!(log.compact(), 10);
+        // ... until it is released; then the live cursor governs
+        log.release_cursor(dead);
+        log.release_cursor(dead); // idempotent
+        assert_eq!(log.compact(), 90);
+        assert_eq!(log.first_revision(), 100);
+        // with every cursor released, nothing pins — and nothing compacts
+        log.release_cursor(live);
+        log.push(1, 0, EventKind::PodStarted);
+        assert_eq!(log.compact(), 0);
+        // released slots are reused: the table stays bounded by
+        // concurrent informers, not lifetime registrations
+        let reused = log.register_cursor();
+        assert!(reused <= 1, "a released slot must be reused, got {reused}");
     }
 }

@@ -28,7 +28,8 @@ pub mod scheduler;
 pub mod swap;
 
 pub use api::{
-    ActionRecord, AdmissionPlugin, AdmissionRequest, ApiClient, ApiError, Outcome, PodView, Verb,
+    ActionRecord, AdmissionPlugin, AdmissionRequest, ApiClient, ApiError, InformerStats, Outcome,
+    PodView, SyncDelta, Verb,
 };
 pub use clock::{next_multiple, SimClock, TimedEvent};
 pub use cluster::{Advance, AdvanceOpts, Cluster, ClusterConfig};

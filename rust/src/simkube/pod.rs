@@ -90,7 +90,7 @@ pub struct PendingResize {
 }
 
 /// Container/pod runtime status as cAdvisor would report it.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PodUsage {
     /// Desired virtual memory of the process (GB).
     pub usage_gb: f64,

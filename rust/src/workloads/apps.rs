@@ -7,9 +7,26 @@
 //! stability band so their classification matches the paper's.
 
 use super::model::{AppModel, Pattern, Shape};
+use super::registry::AppId;
 
 /// Per-second multiplicative jitter for "clean" growth apps.
 const QUIET_NOISE: f64 = 0.003;
+
+/// Which part of `seed` flows into an app's *calibration tables* (the
+/// shape and everything derived from it), as opposed to the per-instance
+/// noise stream. Two builds with equal table class share bit-identical
+/// tables, which is what lets `registry::build` intern them per
+/// (app, class): `bfs` and `lulesh` draw their burst heights from the
+/// seed (one class per distinct draw seed, mirroring the `bursts(...)`
+/// argument below), every other app's shape ignores the seed entirely
+/// (class 0 — one table set per app, fleet-wide).
+pub fn table_class(app: AppId, seed: u64) -> u64 {
+    match app {
+        AppId::Bfs => seed ^ 0xBF5,
+        AppId::Lulesh => seed ^ 0x1A1E5,
+        _ => 0,
+    }
+}
 
 /// MiniAMR, two moving spheres: quick allocation of the base mesh then
 /// stepwise refinement growth as the spheres move.

@@ -9,6 +9,6 @@ pub mod registry;
 pub mod trace;
 
 pub use calibrate::{check, check_all, Table1Row, TABLE1};
-pub use model::{AppModel, Pattern, Shape, ShapeCursor};
-pub use registry::{build, AppId};
+pub use model::{AppModel, ModelTables, Pattern, Shape, ShapeCursor};
+pub use registry::{build, intern_stats, live_tables, AppId, InternStats};
 pub use trace::{Trace, TraceProcess};

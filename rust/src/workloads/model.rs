@@ -6,9 +6,19 @@
 //! generated trace hits Table 1's max memory and memory footprint exactly
 //! (DESIGN.md §5). Deterministic multiplicative noise (seeded, per-second)
 //! models measurement jitter without disturbing the calibration targets.
+//!
+//! Memory layout at fleet scale: everything the calibration produces —
+//! the shape, the affine coefficients, and the windowed slope-bound table
+//! — is immutable after construction and identical for every instance of
+//! the same (app, table-class), so it lives in a shared
+//! [`ModelTables`] behind an `Arc`. An [`AppModel`] is just
+//! `(Arc<ModelTables>, noise seed)`: 10⁵–10⁶ pods of the same app share
+//! ONE set of tables instead of duplicating the ROADMAP-flagged RSS
+//! dominator per pod (`workloads::registry` does the interning).
 
 use super::super::simkube::pod::MemoryProcess;
 use crate::util::rng::hash2;
+use std::sync::Arc;
 
 /// The paper's two memory-consumption classes (§3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -145,9 +155,12 @@ fn unit(h: u64) -> f64 {
     (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
 }
 
-/// A calibrated application model. Implements [`MemoryProcess`] so pods can
-/// host it directly.
-pub struct AppModel {
+/// The immutable, shareable half of a calibrated model: shape, affine
+/// calibration, and the slope-bound tables. Identical for every instance
+/// of the same (app, table-class), so fleets intern ONE copy behind an
+/// `Arc` (see `workloads::registry::build`); the per-instance noise seed
+/// lives in [`AppModel`].
+pub struct ModelTables {
     pub name: String,
     pub pattern: Pattern,
     pub exec_secs: f64,
@@ -161,7 +174,6 @@ pub struct AppModel {
     /// max of the raw shape over the evaluation grid (normalizer).
     shape_max: f64,
     pub noise_amp: f64,
-    pub seed: u64,
     /// Conservative bound on |usage(p+1) − usage(p)| over the integer
     /// progress grid (noise included) — the coast contract the event
     /// kernel relies on. Computed once at calibration.
@@ -173,12 +185,32 @@ pub struct AppModel {
     slope_blocks: Vec<f64>,
 }
 
-/// Seconds per entry of [`AppModel`]'s windowed slope-bound table.
+/// A calibrated application model: shared [`ModelTables`] plus this
+/// instance's noise seed. Implements [`MemoryProcess`] so pods can host
+/// it directly; `Deref`s to its tables so calibration fields read as
+/// before (`model.exec_secs`, `model.max_gb`, ...). The noise bound is a
+/// function of `noise_amp` only — never of the seed — so sharing tables
+/// across seeds is bit-exact.
+pub struct AppModel {
+    pub seed: u64,
+    tables: Arc<ModelTables>,
+}
+
+impl std::ops::Deref for AppModel {
+    type Target = ModelTables;
+
+    fn deref(&self) -> &ModelTables {
+        &self.tables
+    }
+}
+
+/// Seconds per entry of [`ModelTables`]' windowed slope-bound table.
 pub const SLOPE_BLOCK: u64 = 64;
 
 impl AppModel {
-    /// Calibrate `shape` to hit `max_gb` and `footprint_gbs` over
-    /// `exec_secs` (±5 %, see workloads::calibrate).
+    /// Calibrate `shape` into fresh (unshared) tables — see
+    /// [`ModelTables::calibrate`]. `workloads::registry::build` is the
+    /// interning entry point fleets should use instead.
     pub fn calibrated(
         name: &str,
         pattern: Pattern,
@@ -188,6 +220,48 @@ impl AppModel {
         shape: Shape,
         noise_amp: f64,
         seed: u64,
+    ) -> Self {
+        Self::from_tables(
+            Arc::new(ModelTables::calibrate(
+                name,
+                pattern,
+                exec_secs,
+                max_gb,
+                footprint_gbs,
+                shape,
+                noise_amp,
+            )),
+            seed,
+        )
+    }
+
+    /// An instance over already-calibrated (possibly shared) tables.
+    pub fn from_tables(tables: Arc<ModelTables>, seed: u64) -> Self {
+        Self { seed, tables }
+    }
+
+    /// The shared calibration tables (what the registry interns).
+    pub fn tables(&self) -> &Arc<ModelTables> {
+        &self.tables
+    }
+
+    /// Noise factor at integer second `t` — deterministic, mean ≈ 1.
+    fn noise(&self, t: u64) -> f64 {
+        1.0 + self.tables.noise_amp * (2.0 * unit(hash2(self.seed, t)) - 1.0)
+    }
+}
+
+impl ModelTables {
+    /// Calibrate `shape` to hit `max_gb` and `footprint_gbs` over
+    /// `exec_secs` (±5 %, see workloads::calibrate).
+    pub fn calibrate(
+        name: &str,
+        pattern: Pattern,
+        exec_secs: f64,
+        max_gb: f64,
+        footprint_gbs: f64,
+        shape: Shape,
+        noise_amp: f64,
     ) -> Self {
         // numeric max + mean of the shape on a 1s-equivalent grid
         let n = (exec_secs as usize).max(1000);
@@ -254,15 +328,9 @@ impl AppModel {
             b,
             shape_max: smax,
             noise_amp,
-            seed,
             max_slope,
             slope_blocks,
         }
-    }
-
-    /// Noise factor at integer second `t` — deterministic, mean ≈ 1.
-    fn noise(&self, t: u64) -> f64 {
-        1.0 + self.noise_amp * (2.0 * unit(hash2(self.seed, t)) - 1.0)
     }
 }
 

@@ -1,7 +1,27 @@
-//! Application registry: ids, names, builders.
+//! Application registry: ids, names, builders — and the fleet-scale
+//! calibration-table interner.
+//!
+//! [`build`] is the one entry point experiments, scenarios, and benches
+//! create models through. Since PR 5 it interns [`ModelTables`] per
+//! **(app, table-class)**: the tables (shape, affine calibration, slope
+//! bounds) depend on the seed only for apps whose shape draws burst
+//! heights from it (`bfs`, `lulesh` — see [`apps::table_class`]); for
+//! every other app they are seed-independent, so a 10⁶-pod fleet of
+//! `amr`/`cm1`/`sputnipic` shares THREE table sets instead of carrying
+//! one per pod (the ROADMAP-flagged RSS dominator at 100k pods). The
+//! per-instance noise seed stays per-model, so traces are unchanged
+//! bit-for-bit — the noise *bound* baked into the tables depends only on
+//! the noise amplitude, never the seed.
+//!
+//! The interner holds [`Weak`] references: tables die with their last
+//! pod, so a finished 10⁶-pod run releases its memory, and dead entries
+//! are pruned opportunistically on insert.
 
 use super::apps;
-use super::model::AppModel;
+use super::model::{AppModel, ModelTables};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AppId {
@@ -64,8 +84,9 @@ impl std::fmt::Display for AppId {
     }
 }
 
-/// Build the calibrated model for an app with a noise seed.
-pub fn build(app: AppId, seed: u64) -> AppModel {
+/// Build an app model the uninterned way (one fresh table set). Kept
+/// private: [`build`] wraps it with the interner.
+fn build_fresh(app: AppId, seed: u64) -> AppModel {
     match app {
         AppId::Amr => apps::amr(seed),
         AppId::Bfs => apps::bfs(seed),
@@ -79,9 +100,89 @@ pub fn build(app: AppId, seed: u64) -> AppModel {
     }
 }
 
+/// Interner counters — the RSS proxy the scale bench reports: with
+/// interning working, `table_builds` (distinct tables actually
+/// calibrated) stays near the app count while `hits` grows with the
+/// fleet.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InternStats {
+    /// `build` calls served from an existing shared table set.
+    pub hits: u64,
+    /// `build` calls that had to calibrate fresh tables.
+    pub table_builds: u64,
+}
+
+static INTERN_HITS: AtomicU64 = AtomicU64::new(0);
+static INTERN_BUILDS: AtomicU64 = AtomicU64::new(0);
+/// Map size at which the next dead-entry prune runs (doubling schedule —
+/// a prune walks the whole map, so it must amortize against growth).
+static PRUNE_AT: AtomicUsize = AtomicUsize::new(64);
+
+fn interner() -> &'static Mutex<HashMap<(AppId, u64), Weak<ModelTables>>> {
+    static MAP: OnceLock<Mutex<HashMap<(AppId, u64), Weak<ModelTables>>>> = OnceLock::new();
+    MAP.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Process-wide interner counters (cumulative across runs).
+pub fn intern_stats() -> InternStats {
+    InternStats {
+        hits: INTERN_HITS.load(Ordering::Relaxed),
+        table_builds: INTERN_BUILDS.load(Ordering::Relaxed),
+    }
+}
+
+/// Table sets currently alive (shared by at least one live model) — the
+/// numerator of the "distinct tables vs pods" RSS proxy.
+pub fn live_tables() -> usize {
+    interner()
+        .lock()
+        .expect("interner poisoned")
+        .values()
+        .filter(|w| w.strong_count() > 0)
+        .count()
+}
+
+/// Build the calibrated model for an app with a noise seed, sharing the
+/// calibration tables per (app, table-class) — see the module doc.
+/// Bit-identical to an uninterned build: the seed only feeds the noise
+/// hash, never the tables.
+pub fn build(app: AppId, seed: u64) -> AppModel {
+    let class = apps::table_class(app, seed);
+    {
+        let map = interner().lock().expect("interner poisoned");
+        if let Some(tables) = map.get(&(app, class)).and_then(Weak::upgrade) {
+            INTERN_HITS.fetch_add(1, Ordering::Relaxed);
+            return AppModel::from_tables(tables, seed);
+        }
+    }
+    // Calibrate outside the lock (it scans the whole trace); a racing
+    // builder of the same class just wins the insert below — both Arcs
+    // carry identical tables, so either is correct.
+    let model = build_fresh(app, seed);
+    INTERN_BUILDS.fetch_add(1, Ordering::Relaxed);
+    let mut map = interner().lock().expect("interner poisoned");
+    match map.get(&(app, class)).and_then(Weak::upgrade) {
+        Some(tables) => AppModel::from_tables(tables, seed),
+        None => {
+            // prune dead classes (finished runs of seed-classed apps) on
+            // a doubling schedule: the O(map) walk runs only after the
+            // map doubled since the last prune, so a miss costs O(1)
+            // amortized even when EVERY build is a distinct class
+            // (bfs/lulesh fleets, one class per seed)
+            if map.len() >= PRUNE_AT.load(Ordering::Relaxed) {
+                map.retain(|_, w| w.strong_count() > 0);
+                PRUNE_AT.store((map.len() * 2).max(64), Ordering::Relaxed);
+            }
+            map.insert((app, class), Arc::downgrade(model.tables()));
+            model
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::simkube::pod::MemoryProcess;
 
     #[test]
     fn parse_round_trips_names() {
@@ -94,9 +195,59 @@ mod tests {
 
     #[test]
     fn build_names_match_ids() {
-        use crate::simkube::pod::MemoryProcess;
         for a in AppId::all() {
             assert_eq!(build(a, 1).name(), a.name());
         }
+    }
+
+    #[test]
+    fn interned_build_is_bit_identical_to_fresh() {
+        for a in AppId::all() {
+            for seed in [1u64, 7, 991] {
+                let interned = build(a, seed);
+                let fresh = build_fresh(a, seed);
+                assert_eq!(interned.duration_secs(), fresh.duration_secs());
+                assert_eq!(
+                    interned.max_slope_gb_per_sec(),
+                    fresh.max_slope_gb_per_sec(),
+                    "{a} seed {seed}"
+                );
+                for t in 0..200u64 {
+                    let p = t as f64 * interned.duration_secs() / 200.0;
+                    assert_eq!(interned.usage_gb(p), fresh.usage_gb(p), "{a} seed {seed} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_class_instances_share_one_table_set() {
+        // cm1's shape ignores the seed → every seed is class 0
+        let a = build(AppId::Cm1, 1);
+        let b = build(AppId::Cm1, 2);
+        assert!(
+            Arc::ptr_eq(a.tables(), b.tables()),
+            "seed-independent app must share tables across seeds"
+        );
+        // ... while the noise streams still differ per instance
+        assert_ne!(a.usage_gb(100.0), b.usage_gb(100.0));
+        // lulesh's burst heights are seed-drawn → distinct classes
+        let c = build(AppId::Lulesh, 1);
+        let d = build(AppId::Lulesh, 2);
+        assert!(!Arc::ptr_eq(c.tables(), d.tables()));
+        let e = build(AppId::Lulesh, 1);
+        assert!(Arc::ptr_eq(c.tables(), e.tables()), "same class re-shares");
+    }
+
+    #[test]
+    fn dead_tables_are_released() {
+        // a seed-classed app with a seed no other test uses, so parallel
+        // tests can never share (and so pin) this table set
+        let probe = {
+            let m = build(AppId::Lulesh, 0xDEAD_BEEF);
+            Arc::downgrade(m.tables())
+        };
+        // the model dropped; only the interner's Weak remains
+        assert_eq!(probe.strong_count(), 0, "interner must not keep tables alive");
     }
 }

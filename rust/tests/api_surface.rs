@@ -47,7 +47,7 @@ fn every_coordinator_action_surfaces_in_watch() {
             .filter(|a| a.verb == verb && a.outcome == Outcome::Applied && !a.dry_run)
             .count()
     };
-    let (events, _) = ApiClient::watch(&c, 0);
+    let (events, _) = ApiClient::watch(&c, 0).unwrap();
     let resize_events = events
         .iter()
         .filter(|e| matches!(e.kind, EventKind::ResizeIssued { .. }))
@@ -66,7 +66,7 @@ fn every_coordinator_action_surfaces_in_watch() {
     let mut ctl = Controller::new();
     ctl.manage(id, Box::new(ArcvPolicy::new(12.0, ArcvParams::default())));
     run_to_completion(&mut c, &mut ctl, 100_000);
-    let (events, _) = ApiClient::watch(&c, 0);
+    let (events, _) = ApiClient::watch(&c, 0).unwrap();
     let resize_events = events
         .iter()
         .filter(|e| matches!(e.kind, EventKind::ResizeIssued { .. }))
@@ -168,8 +168,8 @@ fn two_clients_conflict_on_stale_resource_version() {
         .create_pod(&mut c, "shared", ResourceSpec::memory_exact(4.0), ramp_process(1.0, 1.0, 500.0))
         .unwrap();
     c.run_until(5, |_| false);
-    alice.sync(&c);
-    bob.sync(&c);
+    alice.sync(&mut c);
+    bob.sync(&mut c);
     let rv_a = alice.cached(id).unwrap().resource_version;
     let rv_b = bob.cached(id).unwrap().resource_version;
     assert_eq!(rv_a, rv_b);
@@ -179,7 +179,7 @@ fn two_clients_conflict_on_stale_resource_version() {
     let err = bob.patch_pod_memory(&mut c, id, 3.0, Some(rv_b)).unwrap_err();
     assert!(matches!(err, ApiError::Conflict { .. }), "{err}");
     // Bob re-syncs and retries cleanly.
-    bob.sync(&c);
+    bob.sync(&mut c);
     let fresh = bob.cached(id).unwrap().resource_version;
     bob.patch_pod_memory(&mut c, id, 3.0, Some(fresh)).unwrap();
     assert_eq!(c.pod(id).spec.memory_limit_gb(), Some(3.0));

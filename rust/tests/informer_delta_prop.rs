@@ -1,0 +1,278 @@
+//! Property suite for the delta-driven informer: replaying watch records
+//! past the cursor (`ApiClient::sync`) must be indistinguishable from the
+//! retained full-relist oracle (`ApiClient::sync_relist`) under
+//! randomized churn — arrivals, OOMs, pressure evictions, drains,
+//! uncordons, random kills, patches, restarts, requeue passes — same
+//! cached views bit-for-bit, same Running/OomKilled phase indexes, same
+//! transition/retire deltas, sync after sync. A third, rarely-synced
+//! informer exercises cursor-safe compaction: its registered cursor pins
+//! the log's compaction floor, so auto-compaction may never force a
+//! relist on any registered informer, and `EventLog::revision` stays
+//! monotonic throughout.
+//!
+//! Mirrors the `sched_queue_prop.rs` pattern (one seeded churn script,
+//! incremental structure vs linear oracle, state compared pass by pass).
+
+use arcv::scenario::LeakProcess;
+use arcv::simkube::{
+    ApiClient, Cluster, ClusterConfig, MemoryProcess, Node, ResourceSpec, Strategy, SwapDevice,
+    SyncDelta,
+};
+use arcv::util::prop::{self, require};
+
+/// A flat memory process (LeakProcess with zero leak): usage is constant
+/// at `usage_gb` for `secs` application-seconds.
+fn flat(usage_gb: f64, secs: f64) -> Box<dyn MemoryProcess> {
+    Box::new(LeakProcess {
+        base_gb: usage_gb,
+        leak_gb_per_sec: 0.0,
+        lifetime_secs: secs,
+    })
+}
+
+/// A linear ramp — crosses its limit mid-run, so no-swap nodes OOM it.
+fn leak(base_gb: f64, leak_per_sec: f64, secs: f64) -> Box<dyn MemoryProcess> {
+    Box::new(LeakProcess {
+        base_gb,
+        leak_gb_per_sec: leak_per_sec,
+        lifetime_secs: secs,
+    })
+}
+
+fn build_cluster(caps: &[f64], strategy: Strategy) -> Cluster {
+    let nodes: Vec<Node> = caps
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| Node::new(&format!("w{i}"), c, SwapDevice::disabled()))
+        .collect();
+    let mut c = Cluster::new(
+        nodes,
+        ClusterConfig {
+            scheduler: strategy,
+            ..ClusterConfig::default()
+        },
+    );
+    // compaction on: cursors registered by the informers below must keep
+    // every un-replayed record alive (the cursor-safety property)
+    c.events.set_auto_compact(true);
+    c
+}
+
+/// Compare everything the two informers maintain, bit for bit. The
+/// oracle's delta always has `relisted = true`; everything else must
+/// match exactly.
+fn require_informers_equal(
+    round: usize,
+    cluster: &Cluster,
+    a: &ApiClient,
+    b: &ApiClient,
+    da: &SyncDelta,
+    db: &SyncDelta,
+) -> prop::PropResult {
+    if da.changed != db.changed {
+        return Err(format!(
+            "round {round}: changed diverged — delta {:?} vs oracle {:?}",
+            da.changed, db.changed
+        ));
+    }
+    if da.transitioned != db.transitioned {
+        return Err(format!(
+            "round {round}: transitions diverged — delta {:?} vs oracle {:?}",
+            da.transitioned, db.transitioned
+        ));
+    }
+    if da.retired != db.retired {
+        return Err(format!(
+            "round {round}: retired diverged — delta {:?} vs oracle {:?}",
+            da.retired, db.retired
+        ));
+    }
+    for id in 0..cluster.pods.len() {
+        if a.cached(id) != b.cached(id) {
+            return Err(format!(
+                "round {round}: pod {id} cached view diverged\n  delta:  {:?}\n  oracle: {:?}",
+                a.cached(id),
+                b.cached(id)
+            ));
+        }
+    }
+    if a.running() != b.running() {
+        return Err(format!(
+            "round {round}: Running index diverged — {:?} vs {:?}",
+            a.running(),
+            b.running()
+        ));
+    }
+    if a.oom_killed() != b.oom_killed() {
+        return Err(format!(
+            "round {round}: OomKilled index diverged — {:?} vs {:?}",
+            a.oom_killed(),
+            b.oom_killed()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn delta_replay_is_equivalent_to_full_relist_under_random_churn() {
+    prop::check("informer-delta-vs-relist", 60, |g| {
+        let n_nodes = g.usize(1, 4);
+        let caps: Vec<f64> = (0..n_nodes).map(|_| g.f64(8.0, 48.0)).collect();
+        let strategy = if g.bool(0.5) { Strategy::BestFit } else { Strategy::WorstFit };
+        let mut c = build_cluster(&caps, strategy);
+        // one cluster, three informers: `a` replays deltas, `b` is the
+        // full-relist oracle, `lag` syncs rarely (the compaction pin)
+        let mut a = ApiClient::new();
+        let mut b = ApiClient::new();
+        let mut lag = ApiClient::new();
+        let mut created = 0usize;
+        let mut last_revision = 0u64;
+        for round in 0..40 {
+            match g.usize(0, 8) {
+                0 | 1 => {
+                    // arrival: flats, best-effort balloons (pressure
+                    // evictions), and tight-limit leakers (OOM kills)
+                    let name = format!("p{created}");
+                    let roll = g.f64(0.0, 1.0);
+                    if roll < 0.15 {
+                        let u = g.f64(16.0, 96.0); // balloon: evicted soon
+                        c.create_pod(&name, ResourceSpec::best_effort(), flat(u, g.f64(10.0, 80.0)));
+                    } else if roll < 0.40 {
+                        // leaks past its limit in a handful of ticks
+                        let lim = g.f64(1.0, 6.0);
+                        c.create_pod(
+                            &name,
+                            ResourceSpec::memory_exact(lim),
+                            leak(lim * 0.6, lim * g.f64(0.1, 0.4), g.f64(20.0, 80.0)),
+                        );
+                    } else {
+                        let req = g.f64(1.0, 24.0);
+                        c.create_pod(
+                            &name,
+                            ResourceSpec::memory_exact(req),
+                            flat(req * g.f64(0.3, 0.9), g.f64(10.0, 80.0)),
+                        );
+                    }
+                    created += 1;
+                }
+                2 => {
+                    c.run_until(g.u64(1, 15), |_| false);
+                }
+                3 if created > 0 => {
+                    c.kill_pod(g.usize(0, created - 1));
+                }
+                4 if created > 0 => {
+                    c.patch_pod_memory(g.usize(0, created - 1), g.f64(1.0, 24.0));
+                }
+                5 if created > 0 => {
+                    c.restart_pod(g.usize(0, created - 1), g.f64(1.0, 24.0));
+                }
+                6 => {
+                    let node = g.usize(0, n_nodes - 1);
+                    if g.bool(0.6) {
+                        c.drain_node(node);
+                    } else {
+                        c.uncordon_node(node);
+                    }
+                }
+                7 => {
+                    c.schedule_pending();
+                }
+                _ => {}
+            }
+            // revisions are monotonic across pushes AND compactions
+            require(c.events.revision() >= last_revision, "revision must be monotonic")?;
+            last_revision = c.events.revision();
+            if g.bool(0.7) {
+                let da = a.sync(&mut c);
+                let db = b.sync_relist(&mut c);
+                require_informers_equal(round, &c, &a, &b, &da, &db)?;
+            }
+            if g.bool(0.15) {
+                // the laggard catches up after an arbitrary backlog; its
+                // registered cursor pinned every record it needed
+                let dl = lag.sync(&mut c);
+                if lag.informer_stats().syncs > 1 && dl.relisted {
+                    return Err(format!(
+                        "round {round}: lagging registered informer was forced to relist \
+                         (compaction passed its cursor)"
+                    ));
+                }
+            }
+        }
+        // settle: final syncs, then full three-way comparison
+        c.run_until(5, |_| false);
+        let da = a.sync(&mut c);
+        let db = b.sync_relist(&mut c);
+        require_informers_equal(99, &c, &a, &b, &da, &db)?;
+        lag.sync(&mut c);
+        for id in 0..c.pods.len() {
+            if lag.cached(id) != b.cached(id) {
+                return Err(format!("laggard pod {id} view diverged after catch-up"));
+            }
+        }
+        require(lag.running() == b.running(), "laggard Running index diverged")?;
+        require(lag.oom_killed() == b.oom_killed(), "laggard OomKilled index diverged")?;
+        // the delta informer LISTed once and replayed ever after, even
+        // with live compaction
+        let stats = a.informer_stats();
+        require(stats.relists == 1, "delta informer must not relist after the LIST")?;
+        // compaction actually ran when there was enough history (both
+        // fast informers at head + laggard eventually caught up)
+        require(
+            c.events.first_revision() <= c.events.revision(),
+            "floor can never pass the head",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn compaction_keeps_long_runs_bounded_without_losing_deltas() {
+    // a long quiet grind with steady churn: two synced informers let the
+    // log compact continuously; the informer must keep producing exact
+    // deltas off the shrinking log
+    let mut c = build_cluster(&[32.0, 32.0], Strategy::BestFit);
+    let mut a = ApiClient::new();
+    let mut b = ApiClient::new();
+    // a transient informer: syncs once, then detaches — its registered
+    // cursor must stop pinning the compaction floor once released
+    let mut transient = ApiClient::new();
+    let mut total_transitions = 0usize;
+    for i in 0..200usize {
+        if i == 0 {
+            transient.sync(&mut c);
+        }
+        if i == 5 {
+            transient.detach(&mut c);
+        }
+        let name = format!("j{i}");
+        let id = c.create_pod(&name, ResourceSpec::memory_exact(2.0), flat(1.0, 6.0));
+        let da = a.sync(&mut c);
+        let db = b.sync_relist(&mut c);
+        assert_eq!(da.changed, db.changed, "round {i} (post-create)");
+        assert_eq!(da.transitioned, db.transitioned, "round {i} (post-create)");
+        total_transitions += da.transitioned.len();
+        c.run_until(8, |_| false); // each job completes within its round
+        c.schedule_pending();
+        let da = a.sync(&mut c);
+        let db = b.sync_relist(&mut c);
+        assert_eq!(da.changed, db.changed, "round {i}");
+        assert_eq!(da.transitioned, db.transitioned, "round {i}");
+        assert!(
+            da.retired.contains(&id),
+            "round {i}: the completed job must retire through the delta"
+        );
+        total_transitions += da.transitioned.len();
+    }
+    assert!(total_transitions >= 400, "creates + completions must all surface");
+    // the log was compacted (both cursors ride the head), yet revisions
+    // kept counting the whole stream
+    assert!(
+        (c.events.events.len() as u64) < c.events.revision(),
+        "retained {} of {} revisions — compaction never ran",
+        c.events.events.len(),
+        c.events.revision()
+    );
+    assert_eq!(a.informer_stats().relists, 1);
+}

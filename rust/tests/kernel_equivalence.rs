@@ -44,6 +44,22 @@ fn run_case(app: AppId, i: usize, mode: KernelMode) -> RunOutput {
     run_with_mode(&cfg, kind, mode)
 }
 
+/// All three kernel modes run on the DELTA informer (PR 5): whatever the
+/// wake cadence, the controller's informer must LIST once and replay
+/// watch records ever after — a relist mid-run would mean the delta plane
+/// broke down (and would silently reintroduce the O(pods) wake cost).
+fn assert_delta_informer(label: &str, out: &RunOutput) {
+    assert!(
+        out.informer.syncs >= 1,
+        "{label}: the controller never synced its informer"
+    );
+    assert!(
+        out.informer.relists <= 1,
+        "{label}: informer relisted {} times (only the initial LIST is allowed)",
+        out.informer.relists
+    );
+}
+
 #[test]
 fn nine_apps_times_four_policies_match_bit_for_bit() {
     for app in AppId::all() {
@@ -69,6 +85,8 @@ fn nine_apps_times_four_policies_match_bit_for_bit() {
                 event.stats.events,
                 reference.stats.events
             );
+            assert_delta_informer(&format!("{app}/{} lockstep", CASE_NAMES[i]), &reference);
+            assert_delta_informer(&format!("{app}/{} event", CASE_NAMES[i]), &event);
             // the sharded path, at every tested worker count, against the
             // same lockstep reference
             for threads in SHARD_COUNTS {
@@ -82,6 +100,10 @@ fn nine_apps_times_four_policies_match_bit_for_bit() {
                     reference.events, sharded.events,
                     "{app}/{} EventLog diverged (sharded, threads={threads})",
                     CASE_NAMES[i]
+                );
+                assert_delta_informer(
+                    &format!("{app}/{} sharded/{threads}", CASE_NAMES[i]),
+                    &sharded,
                 );
             }
         }
@@ -161,6 +183,13 @@ fn scenario_engine_matches_reference_through_churn() {
                     run.cluster.events.events,
                     "{} seed {seed} EventLog diverged ({label})",
                     policy.label()
+                );
+                // churn or not, every mode rides the delta informer
+                assert!(
+                    run.informer.relists <= 1,
+                    "{} seed {seed} ({label}): informer relisted {} times",
+                    policy.label(),
+                    run.informer.relists
                 );
             }
         }
