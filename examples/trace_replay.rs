@@ -1,0 +1,97 @@
+//! Loadgen quickstart: capture a churny scenario run to a `$timestamp
+//! $json`-lines trace file, parse it back, replay the captured schedule
+//! through `Arrivals::Trace`, and verify the replayed watch stream is
+//! bit-identical to the captured one — in every kernel mode. This is the
+//! CI smoke for the trace capture/replay paths; it finishes in seconds.
+//!
+//!   cargo run --release --example trace_replay
+
+use arcv::harness::SwapKind;
+use arcv::loadgen::{mode_label, Trace};
+use arcv::policy::arcv::ArcvParams;
+use arcv::scenario::{
+    outcome_line, run_scenario, run_scenario_mode, Arrivals, Fault, ScenarioPolicy, ScenarioSpec,
+    WorkloadMix,
+};
+use arcv::simkube::KernelMode;
+use arcv::workloads::AppId;
+
+fn main() {
+    // a run worth replaying: Poisson arrivals, a kill and a drain, so the
+    // trace carries fault events and requeue churn, not just happy-path
+    // scheduling
+    let spec = ScenarioSpec::new("trace-smoke")
+        .pool("w", 2, 64.0, SwapKind::Hdd(32.0))
+        .arrivals(Arrivals::Poisson { rate_per_min: 6.0 })
+        .jobs(12)
+        .mix(WorkloadMix::uniform(&[AppId::Amr, AppId::Cm1, AppId::Sputnipic]))
+        .fault(Fault::KillRandomPod { at: 150 })
+        .fault(Fault::DrainNode { at: 400, node: 1 })
+        .max_ticks(60_000);
+    let policy = ScenarioPolicy::Arcv(ArcvParams::default());
+    let seed = 7;
+
+    let run = run_scenario(&spec, policy, seed);
+    println!("captured: {}", outcome_line(&run.outcome));
+    let trace = Trace::capture(&spec, &policy, seed, &run);
+    let text = trace.to_lines();
+    println!(
+        "trace: {} jobs + {} watch records -> {} lines / {} bytes\n",
+        trace.header.jobs,
+        trace.header.records,
+        text.lines().count(),
+        text.len(),
+    );
+
+    let mut failed = false;
+
+    // the file round-trips exactly
+    let parsed = match Trace::parse(&text) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("FAIL: captured trace does not parse: {e}");
+            std::process::exit(1);
+        }
+    };
+    if parsed != trace {
+        eprintln!("FAIL: parse(to_lines(trace)) is not the identity");
+        failed = true;
+    }
+
+    // replay is bit-identical in every kernel mode
+    let replay_spec = parsed.replay_spec(&spec).expect("replayable schedule");
+    for mode in [
+        KernelMode::Lockstep,
+        KernelMode::EventDriven,
+        KernelMode::Sharded { threads: 0 },
+    ] {
+        let replayed = run_scenario_mode(&replay_spec, policy, parsed.header.seed, mode);
+        match parsed.verify_replay(&replayed) {
+            Ok(()) => println!(
+                "replay [{}]: bit-identical ({} records, outcome match: {})",
+                mode_label(mode),
+                replayed.cluster.events.events.len(),
+                replayed.outcome == run.outcome,
+            ),
+            Err(e) => {
+                eprintln!("FAIL: replay [{}]: {e}", mode_label(mode));
+                failed = true;
+            }
+        }
+        if replayed.outcome != run.outcome {
+            eprintln!("FAIL: replay [{}] outcome differs", mode_label(mode));
+            failed = true;
+        }
+    }
+
+    // tampered files fail loudly, not quietly
+    if Trace::parse(&text.replace("\"version\":1", "\"version\":99")).is_ok() {
+        eprintln!("FAIL: version mismatch was not rejected");
+        failed = true;
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+    println!("\ntrace paths exercised: capture, serialize, parse, replay — bit-for-bit");
+}

@@ -1,0 +1,232 @@
+//! Bench: the real-traffic bencher — open-loop saturation curves per
+//! kernel mode, plus the trace capture/replay round-trip on a live run.
+//!
+//!   cargo bench --bench scenario_loadgen
+//!
+//! Sweeps offered submission rates (open-loop on the sim clock — no
+//! coordinated omission) against a 2-node fleet under {lockstep, serial
+//! event, sharded} kernels, records per-rate admission-to-running latency
+//! p50/p99/p999, and emits `bench_out/BENCH_loadgen.json` with the max
+//! sustainable submissions/sec per mode. Then captures the highest
+//! unsaturated run to a `$timestamp $json`-lines trace, replays it, and
+//! verifies the replayed `EventLog` record-by-record.
+//!
+//! Emits a machine-readable `BENCH {json}` block. Exits non-zero if:
+//!   - a sweep finds no sustainable rate at all (the curve is empty),
+//!   - an unsaturated point misses its offered rate beyond tolerance
+//!     (the open-loop pacing contract),
+//!   - the saturation curve differs between kernel modes,
+//!   - the trace round-trip is not the identity, or the replay diverges
+//!     from the captured watch stream.
+
+use arcv::harness::SwapKind;
+use arcv::loadgen::{mode_label, sweep, SweepConfig, SweepResult, Trace};
+use arcv::scenario::{run_scenario_mode, ScenarioPolicy, ScenarioSpec, WorkloadMix};
+use arcv::simkube::KernelMode;
+use arcv::util::json::{arr, num, obj, s, Json};
+use arcv::workloads::AppId;
+use std::time::Instant;
+
+/// Relative tolerance for achieved-vs-offered below saturation. The
+/// schedule rounds `rate × window` to whole jobs and submit times to
+/// whole ticks, so the achieved rate can differ by at most one job over
+/// the window; 5 % on top covers the smallest rate in the sweep.
+const RATE_TOLERANCE: f64 = 0.05;
+
+fn base_spec() -> ScenarioSpec {
+    // two 64 GB workers, short-running mixed load (amr ~253 s / 3.1 GB,
+    // sputnipic ~210 s / 10.6 GB at the Fixed policy's 120 % init) — the
+    // knee of the curve lands inside the swept rates below
+    ScenarioSpec::new("loadgen")
+        .pool("w", 2, 64.0, SwapKind::Hdd(32.0))
+        .mix(WorkloadMix::uniform(&[AppId::Amr, AppId::Sputnipic]))
+        .metrics_history(64)
+}
+
+fn sweep_cfg() -> SweepConfig {
+    SweepConfig {
+        window_secs: 600,
+        drain_secs: 2_400,
+        rates_per_sec: vec![0.02, 0.04, 0.08, 0.16, 0.32],
+        seed: 42,
+    }
+}
+
+fn point_json(p: &arcv::loadgen::RatePoint) -> Json {
+    obj(vec![
+        ("offered_per_sec", num(p.offered_per_sec)),
+        ("achieved_per_sec", num(p.achieved_per_sec)),
+        ("jobs", num(p.jobs as f64)),
+        ("completed", num(p.completed as f64)),
+        ("stuck_pending", num(p.stuck_pending as f64)),
+        ("unfinished", num(p.unfinished as f64)),
+        ("dropped", num(p.dropped as f64)),
+        ("rejected", num(p.rejected as f64)),
+        ("saturated", Json::Bool(p.saturated)),
+        ("admission_p50", num(p.admission.p50)),
+        ("admission_p99", num(p.admission.p99)),
+        ("admission_p999", num(p.admission.p999)),
+        ("admission_mean", num(p.admission.mean)),
+        ("wall_ticks", num(p.wall_ticks as f64)),
+    ])
+}
+
+fn sweep_json(r: &SweepResult, secs: f64) -> Json {
+    obj(vec![
+        ("mode", s(&mode_label(r.mode))),
+        (
+            "max_sustainable_per_sec",
+            r.max_sustainable_per_sec.map(num).unwrap_or(Json::Null),
+        ),
+        ("wall_secs", num(secs)),
+        ("points", arr(r.points.iter().map(point_json).collect())),
+    ])
+}
+
+fn main() {
+    let spec = base_spec();
+    let cfg = sweep_cfg();
+    let policy = ScenarioPolicy::Fixed;
+    let modes = [
+        KernelMode::Lockstep,
+        KernelMode::EventDriven,
+        KernelMode::Sharded { threads: 0 },
+    ];
+
+    println!("=== open-loop rate sweep: saturation per kernel mode ===\n");
+    let mut sweeps: Vec<(SweepResult, f64)> = Vec::new();
+    for mode in modes {
+        let t0 = Instant::now();
+        let r = sweep(&spec, policy, mode, &cfg);
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "mode {:<9} max sustainable {}/s  ({secs:.2}s wall)",
+            mode_label(mode),
+            r.max_sustainable_per_sec
+                .map(|x| format!("{x:.3}"))
+                .unwrap_or_else(|| "none".to_string()),
+        );
+        for p in &r.points {
+            println!(
+                "  rate {:>5.3}/s -> {:>3}/{:<3} done, adm p50/p99/p999 \
+                 {:>5.0}/{:>5.0}/{:>5.0}s, {}",
+                p.offered_per_sec,
+                p.completed,
+                p.jobs,
+                p.admission.p50,
+                p.admission.p99,
+                p.admission.p999,
+                if p.saturated { "SATURATED" } else { "ok" },
+            );
+        }
+        sweeps.push((r, secs));
+    }
+
+    // gates over the curves
+    let mut no_sustainable = false;
+    let mut rate_missed = false;
+    for (r, _) in &sweeps {
+        if r.max_sustainable_per_sec.is_none() {
+            no_sustainable = true;
+        }
+        for p in &r.points {
+            if !p.saturated {
+                let rel = (p.achieved_per_sec - p.offered_per_sec).abs() / p.offered_per_sec;
+                if rel > RATE_TOLERANCE {
+                    rate_missed = true;
+                    eprintln!(
+                        "offered {} achieved {} (rel err {rel:.3}) in mode {}",
+                        p.offered_per_sec,
+                        p.achieved_per_sec,
+                        mode_label(r.mode),
+                    );
+                }
+            }
+        }
+    }
+    let modes_identical = sweeps
+        .iter()
+        .all(|(r, _)| r.points == sweeps[0].0.points);
+    println!(
+        "\nsaturation curves across {} kernel modes: {}",
+        sweeps.len(),
+        if modes_identical { "bit-identical" } else { "DIVERGED" },
+    );
+
+    println!("\n=== trace capture -> parse -> replay on the knee run ===\n");
+    // capture the highest unsaturated rate under the event kernel
+    let knee_rate = sweeps[0].0.max_sustainable_per_sec.unwrap_or(0.02);
+    let knee_jobs = ((knee_rate * cfg.window_secs as f64).round() as usize).max(1);
+    let knee_spec = spec
+        .clone()
+        .arrivals(arcv::scenario::Arrivals::OpenLoop { rate_per_sec: knee_rate })
+        .jobs(knee_jobs)
+        .max_ticks(cfg.window_secs + cfg.drain_secs);
+    let captured = run_scenario_mode(&knee_spec, policy, cfg.seed, KernelMode::EventDriven);
+    let trace = Trace::capture(&knee_spec, &policy, cfg.seed, &captured);
+    let text = trace.to_lines();
+    let parsed = Trace::parse(&text).expect("captured trace must parse");
+    let round_trip_ok = parsed == trace;
+    let replay_spec = parsed.replay_spec(&knee_spec).expect("replay spec");
+    let mut replay_ok = round_trip_ok;
+    let mut replay_err = String::new();
+    for mode in modes {
+        let replayed = run_scenario_mode(&replay_spec, policy, parsed.header.seed, mode);
+        if let Err(e) = parsed.verify_replay(&replayed) {
+            replay_ok = false;
+            replay_err = format!("[{}] {e}", mode_label(mode));
+        }
+    }
+    println!(
+        "captured {} jobs / {} watch records ({} bytes); round-trip {}, replay {}",
+        trace.header.jobs,
+        trace.header.records,
+        text.len(),
+        if round_trip_ok { "identity" } else { "NOT identity" },
+        if replay_ok { "bit-identical in every kernel mode" } else { "DIVERGED" },
+    );
+
+    let bench_json = obj(vec![
+        ("bench", s("scenario_loadgen")),
+        ("window_secs", num(cfg.window_secs as f64)),
+        ("drain_secs", num(cfg.drain_secs as f64)),
+        ("seed", num(cfg.seed as f64)),
+        ("rate_tolerance", num(RATE_TOLERANCE)),
+        ("modes_identical", Json::Bool(modes_identical)),
+        ("trace_jobs", num(trace.header.jobs as f64)),
+        ("trace_records", num(trace.header.records as f64)),
+        ("trace_bytes", num(text.len() as f64)),
+        ("trace_round_trip", Json::Bool(round_trip_ok)),
+        ("replay_identical", Json::Bool(replay_ok)),
+        (
+            "modes",
+            arr(sweeps.iter().map(|(r, secs)| sweep_json(r, *secs)).collect()),
+        ),
+    ]);
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/BENCH_loadgen.json", bench_json.to_string_pretty())
+        .expect("write bench_out/BENCH_loadgen.json");
+    println!("\nwrote bench_out/BENCH_loadgen.json");
+    println!("\nBENCH {}", bench_json.to_string_pretty());
+
+    if no_sustainable {
+        eprintln!("FAIL: a sweep found no sustainable rate (curve is empty)");
+        std::process::exit(1);
+    }
+    if rate_missed {
+        eprintln!("FAIL: offered rate not achieved within tolerance below saturation");
+        std::process::exit(1);
+    }
+    if !modes_identical {
+        eprintln!("FAIL: saturation curve differs between kernel modes");
+        std::process::exit(1);
+    }
+    if !round_trip_ok {
+        eprintln!("FAIL: trace capture -> serialize -> parse is not the identity");
+        std::process::exit(1);
+    }
+    if !replay_ok {
+        eprintln!("FAIL: trace replay diverged from the captured run: {replay_err}");
+        std::process::exit(1);
+    }
+}

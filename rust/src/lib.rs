@@ -29,10 +29,15 @@
 //!   (arrival processes, workload mixes, heterogeneous node pools, fault
 //!   injectors), a churn-capable executor with a per-tick requeue loop,
 //!   and a parallel multi-seed grid runner with fleet-level outcomes;
+//! - [`loadgen`] — the real-traffic bencher: versioned trace capture and
+//!   bit-reproducible replay of any scenario run, plus an open-loop
+//!   rate-sweep generator that measures what submission rate the control
+//!   plane can actually sustain (no coordinated omission);
 //! - [`util`] — offline-build support (PRNG, JSON/CSV, args, mini-bench,
 //!   mini-proptest, plots).
 pub mod coordinator;
 pub mod harness;
+pub mod loadgen;
 pub mod policy;
 pub mod runtime;
 pub mod scenario;

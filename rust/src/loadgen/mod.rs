@@ -1,0 +1,30 @@
+//! `loadgen` — the real-traffic bencher: trace capture + open-loop load
+//! generation (system S15).
+//!
+//! The scenario layer answers "what happens under THIS load"; this
+//! subsystem answers the two questions a capacity planner actually asks:
+//!
+//! - [`trace`] — *can I replay what happened?* Any scenario run
+//!   serializes to a versioned `$timestamp $json`-lines trace file (the
+//!   mergeable-etcd bencher format): one header line, the expanded
+//!   arrival schedule, then every revisioned watch record of the run's
+//!   `EventLog`. An `Arrivals::Trace` source replays the captured
+//!   schedule through the unchanged scenario engine, and — because every
+//!   random draw in a run derives from `(run seed, stream tag)` — the
+//!   replay is bit-identical to the original, which
+//!   [`trace::Trace::verify_replay`] checks record-by-record.
+//! - [`openloop`] — *what rate can the control plane sustain?* An
+//!   open-loop generator submits at a target rate on the sim clock
+//!   regardless of completions (no coordinated omission: a saturated
+//!   cluster cannot slow the generator down and flatter its own tail),
+//!   and a rate-sweep driver walks offered rates until saturation,
+//!   recording per-rate admission-to-running latency p50/p99/p999.
+//!
+//! The `scenario_loadgen` bench turns sweeps into
+//! `bench_out/BENCH_loadgen.json` saturation curves per kernel mode.
+
+pub mod openloop;
+pub mod trace;
+
+pub use openloop::{mode_label, sweep, RatePoint, SweepConfig, SweepResult};
+pub use trace::{Trace, TraceError, TraceHeader, TRACE_FORMAT, TRACE_VERSION};

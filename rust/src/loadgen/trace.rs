@@ -1,0 +1,434 @@
+//! Trace capture & bit-reproducible replay.
+//!
+//! Format (`TRACE_VERSION` 1): one record per line, `$timestamp $json`,
+//! following mergeable-etcd's bencher traces. Three record shapes, told
+//! apart by content:
+//!
+//! ```text
+//! 0   {"format":"arcv-trace","kind":"header","version":1,...}   exactly one, first
+//! 17  {"app":"amr","index":0,"kind":"job","model_seed":"..."}   expanded schedule
+//! 17  {"pod":"0","rev":"0","type":"pod_scheduled","node":1}     revisioned watch record
+//! ```
+//!
+//! The timestamp prefix carries the sim-clock second (`submit_at` for job
+//! lines, `Event::time` for watch records; `0` for the header). Values
+//! that can exceed 2⁵³ — run seeds, per-job model seeds, pod ids,
+//! revisions — travel as decimal strings because the mini-JSON number is
+//! f64-backed (see `simkube::events`). Job lines and watch records each
+//! appear in their own section in capture order; the file is therefore
+//! NOT globally time-sorted, and the parser does not require it.
+//!
+//! Replay: the job lines become a `TraceSchedule` (`Arrivals::Trace`),
+//! which `scenario::arrival::build_schedule` returns verbatim, bypassing
+//! every RNG stream. Combined with the captured seed the engine re-derives
+//! identical fault kills and workload noise, so the replayed run's
+//! `EventLog` matches the captured watch records bit-for-bit —
+//! [`Trace::verify_replay`] is the divergence gate CI runs.
+
+use crate::scenario::{
+    build_schedule, JobSpec, ScenarioPolicy, ScenarioRun, ScenarioSpec, SpecError, TraceArrival,
+    TraceSchedule,
+};
+use crate::simkube::Event;
+use crate::util::json::{num, obj, s, Json};
+use crate::workloads::AppId;
+use std::fmt::Write as _;
+
+/// Magic tag in the header line — rejects arbitrary JSON-lines files.
+pub const TRACE_FORMAT: &str = "arcv-trace";
+/// Bump on ANY change to the line shapes or event type tags.
+pub const TRACE_VERSION: u64 = 1;
+
+/// Why a trace file failed to parse.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum TraceError {
+    /// `line` is 1-based; 0 means a whole-file consistency failure
+    /// (header counts vs. records actually present).
+    #[error("trace line {line}: {msg}")]
+    Malformed { line: usize, msg: String },
+    #[error("unsupported trace version {found} (this reader speaks {expected})")]
+    VersionMismatch { found: u64, expected: u64 },
+    #[error("trace has no header line")]
+    MissingHeader,
+}
+
+fn mal(line: usize, msg: impl Into<String>) -> TraceError {
+    TraceError::Malformed { line, msg: msg.into() }
+}
+
+/// The run identity + integrity counts carried by the header line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceHeader {
+    pub version: u64,
+    pub scenario: String,
+    pub policy: String,
+    /// The captured run seed — replaying under it reproduces fault kills
+    /// and workload noise exactly.
+    pub seed: u64,
+    pub jobs: usize,
+    pub records: usize,
+}
+
+/// A captured run: header, expanded arrival schedule, revisioned watch
+/// records. `PartialEq` makes "capture → serialize → parse is identity"
+/// directly assertable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub header: TraceHeader,
+    pub schedule: Vec<JobSpec>,
+    /// `(revision, event)` pairs from `EventLog::records()`.
+    pub records: Vec<(u64, Event)>,
+}
+
+fn u64_str(x: u64) -> Json {
+    Json::Str(format!("{x}"))
+}
+
+fn parse_u64_field(j: &Json, field: &str, line: usize) -> Result<u64, TraceError> {
+    j.get(field)
+        .and_then(Json::as_str)
+        .ok_or_else(|| mal(line, format!("missing string field {field:?}")))?
+        .parse::<u64>()
+        .map_err(|e| mal(line, format!("bad {field}: {e}")))
+}
+
+impl Trace {
+    /// Capture a finished run. The schedule is re-expanded from
+    /// `(spec, run_seed)` — `build_schedule` is deterministic, so this is
+    /// exactly the schedule the engine executed.
+    pub fn capture(
+        spec: &ScenarioSpec,
+        policy: &ScenarioPolicy,
+        run_seed: u64,
+        run: &ScenarioRun,
+    ) -> Trace {
+        let schedule = build_schedule(spec, run_seed);
+        let records: Vec<(u64, Event)> = run
+            .cluster
+            .events
+            .records()
+            .map(|(rev, e)| (rev, e.clone()))
+            .collect();
+        Trace {
+            header: TraceHeader {
+                version: TRACE_VERSION,
+                scenario: spec.name.clone(),
+                policy: policy.label().to_string(),
+                seed: run_seed,
+                jobs: schedule.len(),
+                records: records.len(),
+            },
+            schedule,
+            records,
+        }
+    }
+
+    /// Serialize to `$timestamp $json` lines (see the module doc).
+    pub fn to_lines(&self) -> String {
+        let mut out = String::new();
+        let header = obj(vec![
+            ("format", s(TRACE_FORMAT)),
+            ("jobs", num(self.header.jobs as f64)),
+            ("kind", s("header")),
+            ("policy", s(&self.header.policy)),
+            ("records", num(self.header.records as f64)),
+            ("scenario", s(&self.header.scenario)),
+            ("seed", u64_str(self.header.seed)),
+            ("version", num(self.header.version as f64)),
+        ]);
+        let _ = writeln!(out, "0 {}", header.to_string_compact());
+        for j in &self.schedule {
+            let rec = obj(vec![
+                ("app", s(j.app.name())),
+                ("index", num(j.index as f64)),
+                ("kind", s("job")),
+                ("model_seed", u64_str(j.model_seed)),
+            ]);
+            let _ = writeln!(out, "{} {}", j.submit_at, rec.to_string_compact());
+        }
+        for (rev, e) in &self.records {
+            let _ = writeln!(out, "{} {}", e.time, e.to_trace_json(*rev).to_string_compact());
+        }
+        out
+    }
+
+    /// Parse a serialized trace. Inverse of [`Self::to_lines`]; also
+    /// accepts blank lines, and checks the header's integrity counts
+    /// against what the file actually carries (a truncated capture must
+    /// not replay as a shorter run).
+    pub fn parse(text: &str) -> Result<Trace, TraceError> {
+        let mut header: Option<TraceHeader> = None;
+        let mut schedule: Vec<JobSpec> = Vec::new();
+        let mut records: Vec<(u64, Event)> = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (ts, body) = line
+                .split_once(' ')
+                .ok_or_else(|| mal(lineno, "missing `$timestamp $json` separator"))?;
+            let time: u64 = ts
+                .parse()
+                .map_err(|e| mal(lineno, format!("bad timestamp: {e}")))?;
+            let j = Json::parse(body).map_err(|e| mal(lineno, format!("bad json: {e}")))?;
+            match j.get("kind").and_then(Json::as_str) {
+                Some("header") => {
+                    if header.is_some() {
+                        return Err(mal(lineno, "duplicate header"));
+                    }
+                    if j.get("format").and_then(Json::as_str) != Some(TRACE_FORMAT) {
+                        return Err(mal(lineno, format!("not a {TRACE_FORMAT} file")));
+                    }
+                    let version = j
+                        .get("version")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| mal(lineno, "missing numeric field \"version\""))?
+                        as u64;
+                    if version != TRACE_VERSION {
+                        return Err(TraceError::VersionMismatch {
+                            found: version,
+                            expected: TRACE_VERSION,
+                        });
+                    }
+                    let field_str = |f: &str| -> Result<String, TraceError> {
+                        Ok(j.get(f)
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| mal(lineno, format!("missing string field {f:?}")))?
+                            .to_string())
+                    };
+                    let field_usize = |f: &str| -> Result<usize, TraceError> {
+                        j.get(f)
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| mal(lineno, format!("missing numeric field {f:?}")))
+                    };
+                    header = Some(TraceHeader {
+                        version,
+                        scenario: field_str("scenario")?,
+                        policy: field_str("policy")?,
+                        seed: parse_u64_field(&j, "seed", lineno)?,
+                        jobs: field_usize("jobs")?,
+                        records: field_usize("records")?,
+                    });
+                }
+                Some("job") => {
+                    if header.is_none() {
+                        return Err(TraceError::MissingHeader);
+                    }
+                    let index = j
+                        .get("index")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| mal(lineno, "missing numeric field \"index\""))?;
+                    if index != schedule.len() {
+                        return Err(mal(
+                            lineno,
+                            format!("job index {index} out of order (expected {})", schedule.len()),
+                        ));
+                    }
+                    let app_name = j
+                        .get("app")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| mal(lineno, "missing string field \"app\""))?;
+                    let app = AppId::parse(app_name).map_err(|e| mal(lineno, e))?;
+                    schedule.push(JobSpec {
+                        index,
+                        submit_at: time,
+                        app,
+                        model_seed: parse_u64_field(&j, "model_seed", lineno)?,
+                    });
+                }
+                Some(other) => {
+                    return Err(mal(lineno, format!("unknown line kind {other:?}")));
+                }
+                None => {
+                    if header.is_none() {
+                        return Err(TraceError::MissingHeader);
+                    }
+                    let (rev, ev) = Event::from_trace_json(time, &j).map_err(|m| mal(lineno, m))?;
+                    records.push((rev, ev));
+                }
+            }
+        }
+        let header = header.ok_or(TraceError::MissingHeader)?;
+        if header.jobs != schedule.len() {
+            return Err(mal(
+                0,
+                format!(
+                    "header declares {} jobs but the file carries {}",
+                    header.jobs,
+                    schedule.len()
+                ),
+            ));
+        }
+        if header.records != records.len() {
+            return Err(mal(
+                0,
+                format!(
+                    "header declares {} watch records but the file carries {}",
+                    header.records,
+                    records.len()
+                ),
+            ));
+        }
+        Ok(Trace { header, schedule, records })
+    }
+
+    /// The captured schedule as an `Arrivals::Trace` source.
+    pub fn to_schedule(&self) -> Result<TraceSchedule, SpecError> {
+        TraceSchedule::new(
+            self.schedule
+                .iter()
+                .map(|j| TraceArrival {
+                    submit_at: j.submit_at,
+                    app: j.app,
+                    model_seed: j.model_seed,
+                })
+                .collect(),
+        )
+    }
+
+    /// `base` with its arrivals replaced by this trace's schedule — run it
+    /// with `self.header.seed` (and the captured policy and kernel mode of
+    /// your choice; all modes are bit-identical) to reproduce the run.
+    pub fn replay_spec(&self, base: &ScenarioSpec) -> Result<ScenarioSpec, SpecError> {
+        Ok(base.clone().trace_arrivals(self.to_schedule()?))
+    }
+
+    /// Record-by-record divergence check of a replayed run against the
+    /// captured watch stream — the CI replay gate. `Err` names the first
+    /// diverging record.
+    pub fn verify_replay(&self, run: &ScenarioRun) -> Result<(), String> {
+        let replayed: Vec<(u64, &Event)> = run.cluster.events.records().collect();
+        if replayed.len() != self.records.len() {
+            return Err(format!(
+                "trace replay diverged: captured {} watch records, replay produced {}",
+                self.records.len(),
+                replayed.len()
+            ));
+        }
+        for (i, ((rev_c, ev_c), (rev_r, ev_r))) in
+            self.records.iter().zip(replayed).enumerate()
+        {
+            if *rev_c != rev_r || ev_c != ev_r {
+                return Err(format!(
+                    "trace replay diverged at record {i}: captured rev {rev_c} {ev_c:?}, \
+                     replay rev {rev_r} {ev_r:?}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::experiment::SwapKind;
+    use crate::scenario::{run_scenario, run_scenario_mode, Arrivals, WorkloadMix};
+    use crate::simkube::KernelMode;
+
+    fn small_spec() -> ScenarioSpec {
+        ScenarioSpec::new("trace-t")
+            .pool("n", 1, 24.0, SwapKind::Hdd(8.0))
+            .mix(WorkloadMix::uniform(&[AppId::Sputnipic, AppId::Amr]))
+            .arrivals(Arrivals::Poisson { rate_per_min: 6.0 })
+            .jobs(4)
+            .max_ticks(10_000)
+    }
+
+    #[test]
+    fn capture_serialize_parse_is_identity() {
+        let spec = small_spec();
+        let policy = ScenarioPolicy::Fixed;
+        let run = run_scenario(&spec, policy, 7);
+        let trace = Trace::capture(&spec, &policy, 7, &run);
+        assert_eq!(trace.header.jobs, 4);
+        assert!(trace.header.records > 0);
+        let text = trace.to_lines();
+        // every line is `$timestamp $json`, single line per record
+        assert!(text.lines().all(|l| l.split_once(' ').is_some()));
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn replay_reproduces_the_run_bit_for_bit() {
+        let spec = small_spec();
+        let policy = ScenarioPolicy::Fixed;
+        let run = run_scenario(&spec, policy, 11);
+        let trace = Trace::capture(&spec, &policy, 11, &run);
+        let replay_spec = trace.replay_spec(&spec).unwrap();
+        for mode in [KernelMode::Lockstep, KernelMode::EventDriven] {
+            let replay = run_scenario_mode(&replay_spec, policy, trace.header.seed, mode);
+            trace.verify_replay(&replay).unwrap();
+            assert_eq!(replay.outcome, run.outcome);
+        }
+    }
+
+    #[test]
+    fn divergence_is_detected() {
+        let spec = small_spec();
+        let policy = ScenarioPolicy::Fixed;
+        let run = run_scenario(&spec, policy, 3);
+        let trace = Trace::capture(&spec, &policy, 3, &run);
+        // replaying under a DIFFERENT seed shifts fault/model noise — with
+        // a schedule this small the logs may still be close, so tamper
+        // with the captured stream instead: drop the last record
+        let mut tampered = trace.clone();
+        tampered.records.pop();
+        tampered.header.records -= 1;
+        let replay = run_scenario_mode(
+            &trace.replay_spec(&spec).unwrap(),
+            policy,
+            trace.header.seed,
+            KernelMode::EventDriven,
+        );
+        let err = tampered.verify_replay(&replay).unwrap_err();
+        assert!(err.contains("diverged"), "{err}");
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_with_position() {
+        let spec = small_spec();
+        let policy = ScenarioPolicy::Fixed;
+        let run = run_scenario(&spec, policy, 5);
+        let good = Trace::capture(&spec, &policy, 5, &run).to_lines();
+
+        // no separator
+        let e = Trace::parse("headerjunk").unwrap_err();
+        assert!(matches!(e, TraceError::Malformed { line: 1, .. }), "{e}");
+        // bad timestamp
+        let e = Trace::parse("x {}").unwrap_err();
+        assert!(matches!(e, TraceError::Malformed { line: 1, .. }), "{e}");
+        // watch record before any header
+        let e = Trace::parse("3 {\"rev\":\"0\",\"pod\":\"0\",\"type\":\"pod_started\"}")
+            .unwrap_err();
+        assert_eq!(e, TraceError::MissingHeader);
+        // empty file
+        assert_eq!(Trace::parse("").unwrap_err(), TraceError::MissingHeader);
+        // corrupt one json body mid-file
+        let mut lines: Vec<String> = good.lines().map(String::from).collect();
+        lines[2] = "5 {not json".to_string();
+        let e = Trace::parse(&lines.join("\n")).unwrap_err();
+        assert!(matches!(e, TraceError::Malformed { line: 3, .. }), "{e}");
+        // truncating the file breaks the header's integrity counts
+        let truncated: Vec<String> = good.lines().map(String::from).collect();
+        let e = Trace::parse(&truncated[..truncated.len() - 1].join("\n")).unwrap_err();
+        assert!(matches!(e, TraceError::Malformed { line: 0, .. }), "{e}");
+    }
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        let spec = small_spec();
+        let policy = ScenarioPolicy::Fixed;
+        let run = run_scenario(&spec, policy, 5);
+        let mut trace = Trace::capture(&spec, &policy, 5, &run);
+        trace.header.version = TRACE_VERSION + 1;
+        let e = Trace::parse(&trace.to_lines()).unwrap_err();
+        assert_eq!(
+            e,
+            TraceError::VersionMismatch { found: TRACE_VERSION + 1, expected: TRACE_VERSION }
+        );
+    }
+}

@@ -34,24 +34,47 @@ pub struct JobSpec {
 
 /// Expand the spec's arrival process into submission times and apps,
 /// sorted by `submit_at` (arrival processes are monotone by construction).
+///
+/// Degenerate arrival parameters (zero rates, zero bursts) are a
+/// [`super::SpecError`] from `ScenarioSpec::validate`, not something this
+/// expansion papers over — there is deliberately no clamping here.
 pub fn build_schedule(spec: &ScenarioSpec, run_seed: u64) -> Vec<JobSpec> {
+    // Trace replay bypasses every RNG stream: the captured schedule
+    // already IS the expansion, including each job's model seed.
+    if let Arrivals::Trace(ts) = &spec.arrivals {
+        return ts
+            .entries()
+            .iter()
+            .enumerate()
+            .map(|(index, e)| JobSpec {
+                index,
+                submit_at: e.submit_at,
+                app: e.app,
+                model_seed: e.model_seed,
+            })
+            .collect();
+    }
     let mut gaps = Xoshiro256::new(hash2(run_seed, STREAM_ARRIVALS));
     let mut mix = Xoshiro256::new(hash2(run_seed, STREAM_MIX));
     let mut out = Vec::with_capacity(spec.jobs);
     let mut t = 0.0_f64;
     for index in 0..spec.jobs {
-        let submit_at = match spec.arrivals {
+        let submit_at = match &spec.arrivals {
             Arrivals::Backlog => 0,
             Arrivals::Poisson { rate_per_min } => {
-                let rate_per_sec = (rate_per_min / 60.0).max(1e-9);
+                let rate_per_sec = rate_per_min / 60.0;
                 // exponential gap via inverse CDF; 1-u ∈ (0, 1]
                 let u = gaps.next_f64();
                 t += -(1.0 - u).max(1e-12).ln() / rate_per_sec;
                 t.round() as u64
             }
-            Arrivals::Bursty { period_secs, burst } => {
-                (index / burst.max(1)) as u64 * period_secs
-            }
+            Arrivals::Bursty { period_secs, burst } => (index / burst) as u64 * period_secs,
+            // Open loop: submission i at round(i / rate) on the sim clock,
+            // independent of anything the cluster does — the no-coordinated-
+            // omission property comes from this line being a pure function
+            // of the index.
+            Arrivals::OpenLoop { rate_per_sec } => (index as f64 / rate_per_sec).round() as u64,
+            Arrivals::Trace(_) => unreachable!("handled above"),
         };
         out.push(JobSpec {
             index,
@@ -107,6 +130,47 @@ mod tests {
         let sp = spec(Arrivals::Poisson { rate_per_min: 2.0 }, 20);
         assert_eq!(build_schedule(&sp, 7), build_schedule(&sp, 7));
         assert_ne!(build_schedule(&sp, 7), build_schedule(&sp, 8));
+    }
+
+    #[test]
+    fn open_loop_paces_independent_of_everything() {
+        let s = build_schedule(&spec(Arrivals::OpenLoop { rate_per_sec: 0.25 }, 6), 3);
+        let times: Vec<u64> = s.iter().map(|j| j.submit_at).collect();
+        assert_eq!(times, vec![0, 4, 8, 12, 16, 20]);
+        // pacing is a pure function of the index: the seed moves the mix
+        // draws but never the submission times
+        let s2 = build_schedule(&spec(Arrivals::OpenLoop { rate_per_sec: 0.25 }, 6), 99);
+        let times2: Vec<u64> = s2.iter().map(|j| j.submit_at).collect();
+        assert_eq!(times, times2);
+    }
+
+    #[test]
+    fn trace_arrivals_replay_verbatim() {
+        use super::super::spec::{TraceArrival, TraceSchedule};
+        let entries = vec![
+            TraceArrival {
+                submit_at: 3,
+                app: AppId::Cm1,
+                model_seed: u64::MAX - 1,
+            },
+            TraceArrival {
+                submit_at: 90,
+                app: AppId::Kripke,
+                model_seed: 42,
+            },
+        ];
+        let sp = ScenarioSpec::new("t").trace_arrivals(TraceSchedule::new(entries.clone()).unwrap());
+        // the run seed is irrelevant under trace replay
+        let a = build_schedule(&sp, 1);
+        let b = build_schedule(&sp, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+        for (i, (job, e)) in a.iter().zip(&entries).enumerate() {
+            assert_eq!(job.index, i);
+            assert_eq!(job.submit_at, e.submit_at);
+            assert_eq!(job.app, e.app);
+            assert_eq!(job.model_seed, e.model_seed);
+        }
     }
 
     #[test]

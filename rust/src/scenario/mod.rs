@@ -37,4 +37,7 @@ pub use arrival::{build_schedule, JobSpec, STREAM_FAULTS, STREAM_JOB};
 pub use engine::{run_scenario, run_scenario_mode, JobRecord, LeakProcess, ScenarioRun};
 pub use outcome::{outcome_json, outcome_line, ScenarioOutcome};
 pub use runner::{run_grid, summarize, summary_line, GridSummary};
-pub use spec::{Arrivals, Fault, NodePool, ScenarioPolicy, ScenarioSpec, WorkloadMix};
+pub use spec::{
+    Arrivals, Fault, NodePool, ScenarioPolicy, ScenarioSpec, SpecError, TraceArrival,
+    TraceSchedule, WorkloadMix,
+};

@@ -7,7 +7,7 @@ use super::engine::JobRecord;
 use super::spec::{ScenarioPolicy, ScenarioSpec};
 use crate::simkube::{Cluster, EventKind, PodPhase};
 use crate::util::json::{num, obj, s, Json};
-use crate::util::stats::{mean, percentile};
+use crate::util::stats::percentiles_of;
 
 /// Aggregate result of one `(scenario, policy, seed)` run.
 #[derive(Clone, Debug, PartialEq)]
@@ -50,7 +50,16 @@ pub struct ScenarioOutcome {
     /// nominal exec` over completed, non-injected jobs.
     pub slowdown_p50: f64,
     pub slowdown_p99: f64,
+    pub slowdown_p999: f64,
     pub slowdown_mean: f64,
+    /// Admission-to-running latency samples (seconds from submission to
+    /// the pod's FIRST `PodStarted`), one per job that ever started — the
+    /// loadgen reporter's raw material. Kept in the outcome (not the JSON
+    /// emission) so sweeps can re-aggregate without replaying.
+    pub admission_latency_secs: Vec<f64>,
+    pub admission_p50: f64,
+    pub admission_p99: f64,
+    pub admission_p999: f64,
     /// Policy API actions applied / rejected (the controller audit log).
     pub api_applied: usize,
     pub api_rejected: usize,
@@ -101,6 +110,36 @@ fn queue_wait_secs(cluster: &Cluster, jobs: &[JobRecord], end: u64) -> u64 {
         wait += end.saturating_sub(slot);
     }
     wait
+}
+
+/// Admission-to-running latency per job: submission to the pod's FIRST
+/// `PodStarted` (later starts are restarts/resumes, not admission). Jobs
+/// that never started — stuck pending or dropped mid-queue — yield no
+/// sample; they show up in `stuck_pending`/`unfinished` instead, which is
+/// what makes the open-loop generator immune to coordinated omission at
+/// the reporting layer too: saturation is detected on the queue, not
+/// hidden inside a tail percentile of survivors.
+///
+/// Same O(jobs + events) single-pass shape as [`queue_wait_secs`].
+fn admission_latencies(cluster: &Cluster, jobs: &[JobRecord]) -> Vec<f64> {
+    let n = cluster.pods.len();
+    let mut submitted_at: Vec<Option<u64>> = vec![None; n];
+    for j in jobs {
+        if j.pod < n {
+            submitted_at[j.pod] = Some(j.submit_at);
+        }
+    }
+    let mut out = Vec::with_capacity(jobs.len());
+    for e in cluster.events.iter() {
+        if e.pod >= n || !matches!(e.kind, EventKind::PodStarted) {
+            continue;
+        }
+        // take() keeps only the first start per pod
+        if let Some(t0) = submitted_at[e.pod].take() {
+            out.push(e.time.saturating_sub(t0) as f64);
+        }
+    }
+    out
 }
 
 /// Fold a finished run into its outcome.
@@ -161,15 +200,9 @@ pub fn collect(
             _ => {}
         }
     }
-    let (p50, p99, mu) = if slowdowns.is_empty() {
-        (0.0, 0.0, 0.0)
-    } else {
-        (
-            percentile(&slowdowns, 0.50),
-            percentile(&slowdowns, 0.99),
-            mean(&slowdowns),
-        )
-    };
+    let slow = percentiles_of(&slowdowns);
+    let admission_latency_secs = admission_latencies(cluster, jobs);
+    let adm = percentiles_of(&admission_latency_secs);
     ScenarioOutcome {
         scenario: spec.name.clone(),
         policy: policy.label().to_string(),
@@ -189,9 +222,14 @@ pub fn collect(
         allocated_gb_h: allocated / 3600.0,
         used_gb_h: used / 3600.0,
         pending_wait_secs: queue_wait_secs(cluster, jobs, end),
-        slowdown_p50: p50,
-        slowdown_p99: p99,
-        slowdown_mean: mu,
+        slowdown_p50: slow.p50,
+        slowdown_p99: slow.p99,
+        slowdown_p999: slow.p999,
+        slowdown_mean: slow.mean,
+        admission_latency_secs,
+        admission_p50: adm.p50,
+        admission_p99: adm.p99,
+        admission_p999: adm.p999,
         api_applied,
         api_rejected,
     }
@@ -201,8 +239,8 @@ pub fn collect(
 pub fn outcome_line(o: &ScenarioOutcome) -> String {
     format!(
         "{:<18} {:<8} seed={:<4} jobs {:>3}/{:<3} wall={:>6}s  slowdown p50/p99 {:>5.2}/{:>5.2}  \
-         alloc {:>8.2} GB·h used {:>8.2} GB·h  ooms={} kills={} drains={} evict={} \
-         wait={}s stuck={} dropped={} rejected={}",
+         adm p50/p99 {:>5.0}/{:>5.0}s  alloc {:>8.2} GB·h used {:>8.2} GB·h  ooms={} kills={} \
+         drains={} evict={} wait={}s stuck={} dropped={} rejected={}",
         o.scenario,
         o.policy,
         o.seed,
@@ -211,6 +249,8 @@ pub fn outcome_line(o: &ScenarioOutcome) -> String {
         o.wall_ticks,
         o.slowdown_p50,
         o.slowdown_p99,
+        o.admission_p50,
+        o.admission_p99,
         o.allocated_gb_h,
         o.used_gb_h,
         o.oom_kills,
@@ -247,7 +287,12 @@ pub fn outcome_json(o: &ScenarioOutcome) -> Json {
         ("pending_wait_secs", num(o.pending_wait_secs as f64)),
         ("slowdown_p50", num(o.slowdown_p50)),
         ("slowdown_p99", num(o.slowdown_p99)),
+        ("slowdown_p999", num(o.slowdown_p999)),
         ("slowdown_mean", num(o.slowdown_mean)),
+        ("admission_samples", num(o.admission_latency_secs.len() as f64)),
+        ("admission_p50", num(o.admission_p50)),
+        ("admission_p99", num(o.admission_p99)),
+        ("admission_p999", num(o.admission_p999)),
         ("api_applied", num(o.api_applied as f64)),
         ("api_rejected", num(o.api_rejected as f64)),
     ])
@@ -279,7 +324,12 @@ mod tests {
             pending_wait_secs: 420,
             slowdown_p50: 1.1,
             slowdown_p99: 2.4,
+            slowdown_p999: 2.9,
             slowdown_mean: 1.3,
+            admission_latency_secs: vec![2.0, 5.0, 30.0],
+            admission_p50: 5.0,
+            admission_p99: 29.5,
+            admission_p999: 29.95,
             api_applied: 40,
             api_rejected: 2,
         }
@@ -301,5 +351,11 @@ mod tests {
         assert_eq!(back.get("jobs_completed").unwrap().as_usize(), Some(9));
         assert_eq!(back.get("policy").unwrap().as_str(), Some("arcv"));
         assert_eq!(back.get("allocated_gb_h").unwrap().as_f64(), Some(12.5));
+        // the extended tails are emitted; the raw sample vector is not
+        // (only its length), so outcome JSON stays O(1) per run
+        assert_eq!(back.get("slowdown_p999").unwrap().as_f64(), Some(2.9));
+        assert_eq!(back.get("admission_p999").unwrap().as_f64(), Some(29.95));
+        assert_eq!(back.get("admission_samples").unwrap().as_usize(), Some(3));
+        assert!(back.get("admission_latency_secs").is_none());
     }
 }

@@ -85,6 +85,8 @@ pub struct GridSummary {
     pub oom_rate: f64,
     pub slowdown_p50_mean: f64,
     pub slowdown_p99_mean: f64,
+    /// Mean (over seeds) of the per-run admission-to-running p99.
+    pub admission_p99_mean: f64,
     pub allocated_gb_h_mean: f64,
     pub used_gb_h_mean: f64,
     pub pending_wait_secs_mean: f64,
@@ -124,6 +126,7 @@ pub fn summarize(points: &[ScenarioOutcome]) -> Vec<GridSummary> {
                 oom_rate: ooms as f64 / (submitted as f64).max(1.0),
                 slowdown_p50_mean: f(|o| o.slowdown_p50),
                 slowdown_p99_mean: f(|o| o.slowdown_p99),
+                admission_p99_mean: f(|o| o.admission_p99),
                 allocated_gb_h_mean: f(|o| o.allocated_gb_h),
                 used_gb_h_mean: f(|o| o.used_gb_h),
                 pending_wait_secs_mean: f(|o| o.pending_wait_secs as f64),
@@ -137,7 +140,8 @@ pub fn summarize(points: &[ScenarioOutcome]) -> Vec<GridSummary> {
 pub fn summary_line(s: &GridSummary) -> String {
     format!(
         "{:<18} {:<8} seeds={:<2} jobs {:>4}/{:<4} oom-rate={:.3}  slowdown p50/p99 \
-         {:>5.2}/{:>5.2}  alloc {:>8.2} GB·h used {:>8.2} GB·h  wait≈{:.0}s stuck={}",
+         {:>5.2}/{:>5.2}  adm-p99≈{:.0}s  alloc {:>8.2} GB·h used {:>8.2} GB·h  \
+         wait≈{:.0}s stuck={}",
         s.scenario,
         s.policy,
         s.seeds,
@@ -146,6 +150,7 @@ pub fn summary_line(s: &GridSummary) -> String {
         s.oom_rate,
         s.slowdown_p50_mean,
         s.slowdown_p99_mean,
+        s.admission_p99_mean,
         s.allocated_gb_h_mean,
         s.used_gb_h_mean,
         s.pending_wait_secs_mean,

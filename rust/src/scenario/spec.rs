@@ -14,6 +14,53 @@ use crate::policy::vpa::VpaSimPolicy;
 use crate::policy::VerticalPolicy;
 use crate::simkube::{Cluster, ClusterConfig, Node, Strategy, SwapDevice};
 use crate::workloads::{AppId, TABLE1};
+use std::sync::Arc;
+
+/// Why a spec (or a workload mix / trace schedule) is nonsensical —
+/// rejected with a typed error at build/validate time instead of being
+/// silently clamped into something runnable (the old `.max(1e-9)` /
+/// `.max(1)` escape hatches in `scenario::arrival` are gone).
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum SpecError {
+    #[error("scenario has no node pools")]
+    NoPools,
+    #[error("scenario submits no jobs")]
+    NoJobs,
+    #[error("Poisson rate_per_min must be finite and > 0 (got {rate})")]
+    BadPoissonRate { rate: f64 },
+    #[error("open-loop rate_per_sec must be finite and > 0 (got {rate})")]
+    BadOpenLoopRate { rate: f64 },
+    #[error("bursty arrivals need burst >= 1")]
+    ZeroBurst,
+    #[error("bursty arrivals need period_secs >= 1 (a zero period is a backlog)")]
+    ZeroPeriod,
+    #[error("workload mix cannot be empty")]
+    EmptyMix,
+    #[error("mix weight for {app} must be finite and > 0 (got {weight})")]
+    BadMixWeight { app: &'static str, weight: f64 },
+    #[error("trace schedule is empty")]
+    EmptyTrace,
+    #[error("trace schedule is not sorted by submit time (entry {index})")]
+    UnsortedTrace { index: usize },
+    #[error("trace schedule carries {entries} entries but the spec declares {jobs} jobs")]
+    TraceJobMismatch { entries: usize, jobs: usize },
+    #[error(
+        "{app} initial request {request_gb:.1} GB exceeds the largest node \
+         ({node_gb:.1} GB); it would pend forever"
+    )]
+    Unplaceable {
+        app: String,
+        request_gb: f64,
+        node_gb: f64,
+    },
+    #[error(
+        "fault at t={at} is at/after max_ticks {max_ticks}; it would never fire \
+         (the engine would idle out the whole tick budget waiting)"
+    )]
+    FaultPastBudget { at: u64, max_ticks: u64 },
+    #[error("drain target node {node} out of range (cluster has {nodes})")]
+    DrainOutOfRange { node: usize, nodes: usize },
+}
 
 /// One homogeneous group of worker nodes (heterogeneous clusters declare
 /// several pools). Nodes are named `<pool>-<i>` in declaration order.
@@ -26,8 +73,9 @@ pub struct NodePool {
 }
 
 /// How jobs arrive — the queue regimes elastic-HPC schedulers face
-/// (arXiv:2410.10655, arXiv:2510.15147).
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// (arXiv:2410.10655, arXiv:2510.15147), plus the two loadgen sources:
+/// open-loop pacing and captured-trace replay.
+#[derive(Clone, Debug, PartialEq)]
 pub enum Arrivals {
     /// Memoryless stream: exponential inter-arrival gaps.
     Poisson { rate_per_min: f64 },
@@ -35,6 +83,65 @@ pub enum Arrivals {
     Bursty { period_secs: u64, burst: usize },
     /// Batch-queue backlog: every job queued at t = 0.
     Backlog,
+    /// Open-loop pacing: submission `i` lands at `round(i / rate)` on the
+    /// sim clock, regardless of completions. The schedule is fixed before
+    /// the run starts, so a saturated cluster cannot push back on the
+    /// generator — no coordinated omission.
+    OpenLoop { rate_per_sec: f64 },
+    /// Replay a captured schedule verbatim (see `loadgen::trace`). The
+    /// mix and arrival RNG streams are bypassed entirely; combined with
+    /// the same spec, policy, and run seed this reproduces a captured
+    /// run bit-for-bit.
+    Trace(TraceSchedule),
+}
+
+/// One replayed submission: everything `scenario::arrival::build_schedule`
+/// would have derived from the RNG streams, captured instead.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceArrival {
+    pub submit_at: u64,
+    pub app: AppId,
+    /// Seed for the job's per-pod workload model — full-width hash output,
+    /// so trace files carry it as a decimal string.
+    pub model_seed: u64,
+}
+
+/// An immutable, submit-time-ordered arrival schedule. `Arc`-backed so
+/// grid fan-out clones are O(1) even for million-entry traces.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSchedule {
+    entries: Arc<Vec<TraceArrival>>,
+}
+
+impl TraceSchedule {
+    /// Wrap a captured schedule. Rejects empty schedules and out-of-order
+    /// submit times — sorting here would silently re-pair indices with
+    /// the wrong entries, so disorder is an error, not a fixup.
+    pub fn new(entries: Vec<TraceArrival>) -> Result<Self, SpecError> {
+        if entries.is_empty() {
+            return Err(SpecError::EmptyTrace);
+        }
+        for (i, pair) in entries.windows(2).enumerate() {
+            if pair[1].submit_at < pair[0].submit_at {
+                return Err(SpecError::UnsortedTrace { index: i + 1 });
+            }
+        }
+        Ok(Self {
+            entries: Arc::new(entries),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[TraceArrival] {
+        &self.entries
+    }
 }
 
 /// A scheduled fault injector. Each fires exactly once, at tick `at`.
@@ -81,21 +188,30 @@ impl WorkloadMix {
     }
 
     pub fn weighted(entries: &[(AppId, f64)]) -> Self {
-        assert!(!entries.is_empty(), "workload mix cannot be empty");
+        Self::try_weighted(entries).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible constructor for callers that parse mixes from config or
+    /// traces and want a [`SpecError`] instead of a panic.
+    pub fn try_weighted(entries: &[(AppId, f64)]) -> Result<Self, SpecError> {
+        if entries.is_empty() {
+            return Err(SpecError::EmptyMix);
+        }
         // each weight must be strictly positive: a negative weight would
         // silently shadow every later entry in pick()'s cumulative scan
         for (app, w) in entries {
-            assert!(
-                w.is_finite() && *w > 0.0,
-                "mix weight for {} must be finite and > 0 (got {w})",
-                app.name()
-            );
+            if !(w.is_finite() && *w > 0.0) {
+                return Err(SpecError::BadMixWeight {
+                    app: app.name(),
+                    weight: *w,
+                });
+            }
         }
         let total: f64 = entries.iter().map(|e| e.1).sum();
-        Self {
+        Ok(Self {
             entries: entries.to_vec(),
             total,
-        }
+        })
     }
 
     /// Map `u ∈ [0, 1)` onto an app by cumulative weight.
@@ -223,6 +339,15 @@ impl ScenarioSpec {
         self
     }
 
+    /// Replay a captured schedule. Also pins `jobs` to the trace length —
+    /// under trace arrivals the schedule IS the load, so a separately
+    /// drifting job count could only ever be wrong.
+    pub fn trace_arrivals(mut self, trace: TraceSchedule) -> Self {
+        self.jobs = trace.len();
+        self.arrivals = Arrivals::Trace(trace);
+        self
+    }
+
     pub fn mix(mut self, mix: WorkloadMix) -> Self {
         self.mix = mix;
         self
@@ -252,77 +377,107 @@ impl ScenarioSpec {
         self.pools.iter().map(|p| p.count).sum()
     }
 
-    /// Sanity checks before a run: non-empty infra and load, drain targets
-    /// in range, and every app in the mix placeable at its initial request
-    /// on at least one node (otherwise it pends forever by construction).
-    pub fn validate(&self, policy: &ScenarioPolicy) -> Result<(), String> {
+    /// Sanity checks before a run: non-empty infra and load, arrival
+    /// parameters that actually generate arrivals (no silent clamping),
+    /// drain targets in range, and every app in play placeable at its
+    /// initial request on at least one node (otherwise it pends forever
+    /// by construction). Under [`Arrivals::Trace`] the apps in play are
+    /// the trace's, not the (bypassed) mix's.
+    pub fn validate(&self, policy: &ScenarioPolicy) -> Result<(), SpecError> {
         if self.pools.is_empty() {
-            return Err("scenario has no node pools".into());
+            return Err(SpecError::NoPools);
         }
         if self.jobs == 0 {
-            return Err("scenario submits no jobs".into());
+            return Err(SpecError::NoJobs);
         }
-        match self.arrivals {
+        match &self.arrivals {
             Arrivals::Poisson { rate_per_min } => {
-                if !(rate_per_min.is_finite() && rate_per_min > 0.0) {
-                    return Err(format!(
-                        "Poisson rate_per_min must be finite and > 0 (got {rate_per_min})"
-                    ));
+                if !(rate_per_min.is_finite() && *rate_per_min > 0.0) {
+                    return Err(SpecError::BadPoissonRate {
+                        rate: *rate_per_min,
+                    });
                 }
             }
-            Arrivals::Bursty { burst, .. } => {
-                if burst == 0 {
-                    return Err("bursty arrivals need burst >= 1".into());
+            Arrivals::Bursty { period_secs, burst } => {
+                if *burst == 0 {
+                    return Err(SpecError::ZeroBurst);
+                }
+                if *period_secs == 0 {
+                    return Err(SpecError::ZeroPeriod);
                 }
             }
             Arrivals::Backlog => {}
+            Arrivals::OpenLoop { rate_per_sec } => {
+                if !(rate_per_sec.is_finite() && *rate_per_sec > 0.0) {
+                    return Err(SpecError::BadOpenLoopRate {
+                        rate: *rate_per_sec,
+                    });
+                }
+            }
+            Arrivals::Trace(ts) => {
+                if ts.len() != self.jobs {
+                    return Err(SpecError::TraceJobMismatch {
+                        entries: ts.len(),
+                        jobs: self.jobs,
+                    });
+                }
+            }
         }
         let biggest = self
             .pools
             .iter()
             .map(|p| p.capacity_gb)
             .fold(0.0_f64, f64::max);
-        for app in self.mix.apps() {
+        let apps_in_play: Vec<AppId> = match &self.arrivals {
+            Arrivals::Trace(ts) => {
+                let mut seen = Vec::new();
+                for e in ts.entries() {
+                    if !seen.contains(&e.app) {
+                        seen.push(e.app);
+                    }
+                }
+                seen
+            }
+            _ => self.mix.apps().collect(),
+        };
+        for app in apps_in_play {
             let row = TABLE1
                 .iter()
                 .find(|r| r.app == app)
                 .expect("every AppId has a Table 1 row");
             let init = policy.initial_gb(row.max_gb);
             if init > biggest {
-                return Err(format!(
-                    "{} initial request {:.1} GB exceeds the largest node ({:.1} GB); \
-                     it would pend forever",
-                    app.name(),
-                    init,
-                    biggest
-                ));
+                return Err(SpecError::Unplaceable {
+                    app: app.name().to_string(),
+                    request_gb: init,
+                    node_gb: biggest,
+                });
             }
         }
         for f in &self.faults {
             if f.at() >= self.max_ticks {
-                return Err(format!(
-                    "fault at t={} is at/after max_ticks {}; it would never fire \
-                     (the engine would idle out the whole tick budget waiting)",
-                    f.at(),
-                    self.max_ticks
-                ));
+                return Err(SpecError::FaultPastBudget {
+                    at: f.at(),
+                    max_ticks: self.max_ticks,
+                });
             }
             match f {
                 Fault::DrainNode { node, .. } => {
                     if *node >= self.node_count() {
-                        return Err(format!(
-                            "drain target node {node} out of range (cluster has {})",
-                            self.node_count()
-                        ));
+                        return Err(SpecError::DrainOutOfRange {
+                            node: *node,
+                            nodes: self.node_count(),
+                        });
                     }
                 }
                 Fault::LeakyPod { base_gb, .. } => {
                     let init = policy.initial_gb(*base_gb);
                     if init > biggest {
-                        return Err(format!(
-                            "leak pod initial request {init:.1} GB exceeds the largest \
-                             node ({biggest:.1} GB); it would pend forever"
-                        ));
+                        return Err(SpecError::Unplaceable {
+                            app: "leak pod".to_string(),
+                            request_gb: init,
+                            node_gb: biggest,
+                        });
                     }
                 }
                 Fault::KillRandomPod { .. } => {}
@@ -427,6 +582,101 @@ mod tests {
     #[should_panic(expected = "finite and > 0")]
     fn negative_mix_weights_are_rejected() {
         WorkloadMix::weighted(&[(AppId::Kripke, 2.0), (AppId::Cm1, -1.0)]);
+    }
+
+    #[test]
+    fn nonsense_arrival_parameters_are_typed_errors() {
+        let arcv = ScenarioPolicy::Arcv(ArcvParams::default());
+        let base = || {
+            ScenarioSpec::new("t")
+                .pool("n", 1, 256.0, SwapKind::Disabled)
+                .mix(WorkloadMix::uniform(&[AppId::Kripke]))
+                .jobs(3)
+        };
+        let cases = [
+            (
+                Arrivals::Poisson { rate_per_min: 0.0 },
+                SpecError::BadPoissonRate { rate: 0.0 },
+            ),
+            (
+                Arrivals::Poisson {
+                    rate_per_min: f64::NAN,
+                },
+                SpecError::BadPoissonRate { rate: f64::NAN },
+            ),
+            (
+                Arrivals::Bursty {
+                    period_secs: 60,
+                    burst: 0,
+                },
+                SpecError::ZeroBurst,
+            ),
+            (
+                Arrivals::Bursty {
+                    period_secs: 0,
+                    burst: 4,
+                },
+                SpecError::ZeroPeriod,
+            ),
+            (
+                Arrivals::OpenLoop { rate_per_sec: -1.0 },
+                SpecError::BadOpenLoopRate { rate: -1.0 },
+            ),
+        ];
+        for (arrivals, want) in cases {
+            let got = base().arrivals(arrivals).validate(&arcv).unwrap_err();
+            // NaN != NaN, so compare the rendered message instead
+            assert_eq!(got.to_string(), want.to_string());
+        }
+        // the fallible mix constructor names the offending entry
+        assert_eq!(
+            WorkloadMix::try_weighted(&[]).unwrap_err(),
+            SpecError::EmptyMix
+        );
+        assert_eq!(
+            WorkloadMix::try_weighted(&[(AppId::Cm1, -2.0)]).unwrap_err(),
+            SpecError::BadMixWeight {
+                app: "cm1",
+                weight: -2.0
+            }
+        );
+    }
+
+    #[test]
+    fn trace_schedules_validate_shape() {
+        let e = |t: u64| TraceArrival {
+            submit_at: t,
+            app: AppId::Amr,
+            model_seed: u64::MAX,
+        };
+        assert_eq!(TraceSchedule::new(vec![]).unwrap_err(), SpecError::EmptyTrace);
+        assert_eq!(
+            TraceSchedule::new(vec![e(5), e(3)]).unwrap_err(),
+            SpecError::UnsortedTrace { index: 1 }
+        );
+        let ts = TraceSchedule::new(vec![e(0), e(0), e(7)]).unwrap();
+        assert_eq!(ts.len(), 3);
+        let arcv = ScenarioPolicy::Arcv(ArcvParams::default());
+        // the builder pins jobs to the trace length...
+        let spec = ScenarioSpec::new("t")
+            .pool("n", 1, 64.0, SwapKind::Disabled)
+            .trace_arrivals(ts.clone());
+        assert_eq!(spec.jobs, 3);
+        assert!(spec.validate(&arcv).is_ok());
+        // ...and a manually desynced job count is rejected
+        let desynced = spec.clone().jobs(5);
+        assert_eq!(
+            desynced.validate(&arcv).unwrap_err(),
+            SpecError::TraceJobMismatch { entries: 3, jobs: 5 }
+        );
+        // placeability under Trace checks the trace's apps, not the mix's:
+        // the mix says minife (won't fit at 120% on 64 GB) but the trace
+        // only carries amr, so validation passes
+        let masked = ScenarioSpec::new("t")
+            .pool("n", 1, 64.0, SwapKind::Disabled)
+            .mix(WorkloadMix::uniform(&[AppId::Minife]))
+            .trace_arrivals(ts);
+        assert!(masked.validate(&arcv).is_ok());
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! [`ApiClient::sync`]: super::api::ApiClient::sync
 
 use super::pod::PodId;
+use crate::util::json::{num, obj, s, Json};
 
 /// Sentinel `pod` id for node-scoped entries (`NodeDrained`): the event
 /// log is keyed by pod, so node-level events use this reserved id. It can
@@ -83,11 +84,153 @@ impl EventKind {
     }
 }
 
+impl EventKind {
+    /// Stable snake_case tag for the trace export — the `type` field of a
+    /// serialized watch record. Renaming a variant without bumping
+    /// `loadgen::trace::TRACE_VERSION` is a format break.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::PodScheduled { .. } => "pod_scheduled",
+            EventKind::PodStarted => "pod_started",
+            EventKind::PodCompleted => "pod_completed",
+            EventKind::OomKilled { .. } => "oom_killed",
+            EventKind::Evicted { .. } => "evicted",
+            EventKind::PodRestarted { .. } => "pod_restarted",
+            EventKind::ResizeIssued { .. } => "resize_issued",
+            EventKind::ResizeApplied { .. } => "resize_applied",
+            EventKind::SwappedOut { .. } => "swapped_out",
+            EventKind::SchedulingFailed { .. } => "scheduling_failed",
+            EventKind::NodeDrained { .. } => "node_drained",
+            EventKind::PodDrained { .. } => "pod_drained",
+            EventKind::PodKilled { .. } => "pod_killed",
+            EventKind::PodRequeued => "pod_requeued",
+        }
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Event {
     pub time: u64,
     pub pod: PodId,
     pub kind: EventKind,
+}
+
+/// Ids that may exceed 2⁵³ ([`NODE_EVENT`] is `usize::MAX`, model seeds
+/// are full-width hashes) go through JSON as decimal strings — the
+/// mini-JSON `Num` is f64-backed and would silently round them.
+fn id_str(x: u64) -> Json {
+    Json::Str(format!("{x}"))
+}
+
+fn parse_id(j: Option<&Json>, field: &str) -> Result<u64, String> {
+    j.and_then(Json::as_str)
+        .ok_or_else(|| format!("missing string field {field:?}"))?
+        .parse::<u64>()
+        .map_err(|e| format!("bad {field}: {e}"))
+}
+
+fn get_f64(j: &Json, field: &str) -> Result<f64, String> {
+    j.get(field)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing numeric field {field:?}"))
+}
+
+fn get_usize(j: &Json, field: &str) -> Result<usize, String> {
+    get_f64(j, field).map(|x| x as usize)
+}
+
+impl Event {
+    /// Serialize one revisioned watch record for the loadgen trace
+    /// (`$timestamp $json` lines; the timestamp prefix carries
+    /// `self.time`, so the object holds only revision, pod, and payload).
+    /// Exact round-trip: f64 payloads print their shortest round-tripping
+    /// decimal, wide ids go through strings (see [`id_str`]).
+    pub fn to_trace_json(&self, rev: u64) -> Json {
+        let mut pairs = vec![
+            ("rev", id_str(rev)),
+            ("pod", id_str(self.pod as u64)),
+            ("type", s(self.kind.label())),
+        ];
+        match &self.kind {
+            EventKind::PodScheduled { node } => pairs.push(("node", num(*node as f64))),
+            EventKind::PodStarted | EventKind::PodCompleted | EventKind::PodRequeued => {}
+            EventKind::OomKilled { usage_gb, limit_gb } => {
+                pairs.push(("usage_gb", num(*usage_gb)));
+                pairs.push(("limit_gb", num(*limit_gb)));
+            }
+            EventKind::Evicted { node, qos_rank } => {
+                pairs.push(("node", num(*node as f64)));
+                pairs.push(("qos_rank", num(*qos_rank as f64)));
+            }
+            EventKind::PodRestarted { new_limit_gb } => {
+                pairs.push(("new_limit_gb", num(*new_limit_gb)));
+            }
+            EventKind::ResizeIssued { target_gb } => pairs.push(("target_gb", num(*target_gb))),
+            EventKind::ResizeApplied { target_gb, latency_secs } => {
+                pairs.push(("target_gb", num(*target_gb)));
+                pairs.push(("latency_secs", num(*latency_secs as f64)));
+            }
+            EventKind::SwappedOut { gb } => pairs.push(("gb", num(*gb))),
+            EventKind::SchedulingFailed { reason } => pairs.push(("reason", s(reason))),
+            EventKind::NodeDrained { node, displaced } => {
+                pairs.push(("node", num(*node as f64)));
+                pairs.push(("displaced", num(*displaced as f64)));
+            }
+            EventKind::PodDrained { node } | EventKind::PodKilled { node } => {
+                pairs.push(("node", num(*node as f64)));
+            }
+        }
+        obj(pairs)
+    }
+
+    /// Parse one watch record serialized by [`Self::to_trace_json`];
+    /// `time` is the line's timestamp prefix. Returns `(revision, event)`.
+    pub fn from_trace_json(time: u64, j: &Json) -> Result<(u64, Event), String> {
+        let rev = parse_id(j.get("rev"), "rev")?;
+        let pod = parse_id(j.get("pod"), "pod")? as PodId;
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing string field \"type\"".to_string())?;
+        let kind = match ty {
+            "pod_scheduled" => EventKind::PodScheduled { node: get_usize(j, "node")? },
+            "pod_started" => EventKind::PodStarted,
+            "pod_completed" => EventKind::PodCompleted,
+            "oom_killed" => EventKind::OomKilled {
+                usage_gb: get_f64(j, "usage_gb")?,
+                limit_gb: get_f64(j, "limit_gb")?,
+            },
+            "evicted" => EventKind::Evicted {
+                node: get_usize(j, "node")?,
+                qos_rank: get_f64(j, "qos_rank")? as u8,
+            },
+            "pod_restarted" => EventKind::PodRestarted {
+                new_limit_gb: get_f64(j, "new_limit_gb")?,
+            },
+            "resize_issued" => EventKind::ResizeIssued { target_gb: get_f64(j, "target_gb")? },
+            "resize_applied" => EventKind::ResizeApplied {
+                target_gb: get_f64(j, "target_gb")?,
+                latency_secs: get_f64(j, "latency_secs")? as u64,
+            },
+            "swapped_out" => EventKind::SwappedOut { gb: get_f64(j, "gb")? },
+            "scheduling_failed" => EventKind::SchedulingFailed {
+                reason: j
+                    .get("reason")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "missing string field \"reason\"".to_string())?
+                    .to_string(),
+            },
+            "node_drained" => EventKind::NodeDrained {
+                node: get_usize(j, "node")?,
+                displaced: get_usize(j, "displaced")?,
+            },
+            "pod_drained" => EventKind::PodDrained { node: get_usize(j, "node")? },
+            "pod_killed" => EventKind::PodKilled { node: get_usize(j, "node")? },
+            "pod_requeued" => EventKind::PodRequeued,
+            other => return Err(format!("unknown event type {other:?}")),
+        };
+        Ok((rev, Event { time, pod, kind }))
+    }
 }
 
 /// Identifier of one registered informer cursor (see
@@ -255,6 +398,16 @@ impl EventLog {
     pub fn iter(&self) -> impl Iterator<Item = &Event> {
         self.events.iter()
     }
+
+    /// The retained watch records with their revisions — what the loadgen
+    /// trace capture serializes. With compaction off (the default) this is
+    /// the whole all-time stream starting at revision 0.
+    pub fn records(&self) -> impl Iterator<Item = (u64, &Event)> {
+        self.events
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (self.base + i as u64, e))
+    }
 }
 
 #[cfg(test)]
@@ -281,6 +434,78 @@ mod tests {
             log.push(t, 0, EventKind::PodStarted);
         }
         log
+    }
+
+    #[test]
+    fn every_event_kind_round_trips_through_trace_json() {
+        let kinds = vec![
+            EventKind::PodScheduled { node: 3 },
+            EventKind::PodStarted,
+            EventKind::PodCompleted,
+            EventKind::OomKilled { usage_gb: 2.500000001, limit_gb: 1.9 },
+            EventKind::Evicted { node: 1, qos_rank: 2 },
+            EventKind::PodRestarted { new_limit_gb: 0.1 + 0.2 }, // non-terminating decimal
+            EventKind::ResizeIssued { target_gb: 12.75 },
+            EventKind::ResizeApplied { target_gb: 3.3, latency_secs: 41 },
+            EventKind::SwappedOut { gb: 1e-9 },
+            EventKind::SchedulingFailed { reason: "no node fits \"8 GB\"\n".into() },
+            EventKind::NodeDrained { node: 2, displaced: 5 },
+            EventKind::PodDrained { node: 2 },
+            EventKind::PodKilled { node: 0 },
+            EventKind::PodRequeued,
+        ];
+        for (i, kind) in kinds.into_iter().enumerate() {
+            // NodeDrained entries carry the NODE_EVENT sentinel (usize::MAX,
+            // far beyond f64's exact-integer range) — it must survive
+            let pod = if matches!(kind, EventKind::NodeDrained { .. }) { NODE_EVENT } else { i };
+            let e = Event { time: 17 + i as u64, pod, kind };
+            let text = e.to_trace_json(100 + i as u64).to_string_pretty();
+            let back = Json::parse(&text).unwrap();
+            let (rev, got) = Event::from_trace_json(e.time, &back).unwrap();
+            assert_eq!(rev, 100 + i as u64);
+            assert_eq!(got, e, "variant {i} must round-trip bit-exactly");
+        }
+    }
+
+    #[test]
+    fn trace_json_rejects_malformed_records() {
+        let ok = Event { time: 1, pod: 0, kind: EventKind::PodStarted }.to_trace_json(0);
+        // unknown type tag
+        let mut bad = ok.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("type".into(), Json::Str("pod_vanished".into()));
+        }
+        assert!(Event::from_trace_json(1, &bad).unwrap_err().contains("unknown event type"));
+        // missing payload field
+        let oom = Event {
+            time: 1,
+            pod: 0,
+            kind: EventKind::OomKilled { usage_gb: 2.0, limit_gb: 1.0 },
+        }
+        .to_trace_json(0);
+        let mut truncated = oom;
+        if let Json::Obj(m) = &mut truncated {
+            m.remove("limit_gb");
+        }
+        assert!(Event::from_trace_json(1, &truncated).is_err());
+        // pod id must be a string (wide-id safety), not a number
+        let mut numeric_pod = ok;
+        if let Json::Obj(m) = &mut numeric_pod {
+            m.insert("pod".into(), Json::Num(3.0));
+        }
+        assert!(Event::from_trace_json(1, &numeric_pod).is_err());
+    }
+
+    #[test]
+    fn records_carry_revisions_across_compaction() {
+        let mut log = filled(100);
+        let c = log.register_cursor();
+        log.advance_cursor(c, 30);
+        log.compact();
+        let recs: Vec<u64> = log.records().map(|(r, _)| r).collect();
+        assert_eq!(recs.first(), Some(&30));
+        assert_eq!(recs.last(), Some(&99));
+        assert_eq!(recs.len(), 70);
     }
 
     #[test]

@@ -85,6 +85,49 @@ impl Json {
         out
     }
 
+    /// Single-line rendering with no whitespace — the loadgen trace format
+    /// is `$timestamp $json` per line, so the value itself must not
+    /// contain newlines. Numbers and strings go through the same writers
+    /// as [`Self::to_string_pretty`], so both forms parse back identically.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(x) => write_num(out, *x),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (k, item) in v.iter().enumerate() {
+                    if k > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (k, (key, val)) in m.iter().enumerate() {
+                    if k > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, key);
+                    out.push(':');
+                    val.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -380,6 +423,25 @@ mod tests {
             Some("c")
         );
         assert_eq!(j.get("d").unwrap(), &Json::Bool(false));
+    }
+
+    #[test]
+    fn compact_is_one_line_and_parses_back() {
+        let src = obj(vec![
+            ("name", s("a b\nc")),
+            ("vals", farr(&[1.0, 2.5])),
+            ("empty", Json::Arr(vec![])),
+            ("nested", obj(vec![("x", Json::Null)])),
+        ]);
+        let line = src.to_string_compact();
+        assert!(!line.contains('\n'), "compact output must be one line");
+        assert!(!line.contains(": "), "no pretty separators");
+        assert_eq!(Json::parse(&line).unwrap(), src);
+        // pretty and compact renderings parse to the same value
+        assert_eq!(
+            Json::parse(&src.to_string_pretty()).unwrap(),
+            Json::parse(&line).unwrap()
+        );
     }
 
     #[test]

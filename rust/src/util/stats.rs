@@ -65,6 +65,12 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// [`percentile`] over an already-sorted slice (no copy, no re-sort).
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    assert!(!v.is_empty(), "percentile of empty slice");
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -72,6 +78,34 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         v[lo]
     } else {
         v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// The tail summary every latency-style report in this repo uses —
+/// ONE shared path (scenario outcomes, the loadgen saturation curves)
+/// so p50/p99/p999 always mean the same interpolation everywhere.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub mean: f64,
+}
+
+/// Compute [`Percentiles`] of `xs`; an empty slice collapses to zeros
+/// (an absent tail, not a panic — outcome collectors call this on runs
+/// where nothing completed).
+pub fn percentiles_of(xs: &[f64]) -> Percentiles {
+    if xs.is_empty() {
+        return Percentiles::default();
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Percentiles {
+        p50: percentile_sorted(&v, 0.50),
+        p99: percentile_sorted(&v, 0.99),
+        p999: percentile_sorted(&v, 0.999),
+        mean: mean(&v),
     }
 }
 
@@ -138,6 +172,20 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 1.0), 4.0);
         assert_eq!(percentile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn percentiles_of_matches_percentile() {
+        let xs = [4.0, 1.0, 3.0, 2.0, 9.0, 5.0];
+        let p = percentiles_of(&xs);
+        assert_eq!(p.p50, percentile(&xs, 0.50));
+        assert_eq!(p.p99, percentile(&xs, 0.99));
+        assert_eq!(p.p999, percentile(&xs, 0.999));
+        assert!((p.mean - mean(&xs)).abs() < 1e-12);
+        // the tail percentiles are ordered
+        assert!(p.p50 <= p.p99 && p.p99 <= p.p999);
+        // empty input collapses to zeros instead of panicking
+        assert_eq!(percentiles_of(&[]), Percentiles::default());
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Integration suite for the loadgen trace format: capture → serialize →
+//! parse → replay must be the identity, across random seeds, arrival
+//! processes, policies, and kernel modes — plus the failure modes a
+//! versioned on-disk format owes its readers (malformed lines, version
+//! mismatch, truncation).
+
+use arcv::harness::SwapKind;
+use arcv::loadgen::{Trace, TraceError, TRACE_VERSION};
+use arcv::policy::arcv::ArcvParams;
+use arcv::scenario::{run_scenario_mode, Arrivals, ScenarioPolicy, ScenarioSpec, WorkloadMix};
+use arcv::simkube::KernelMode;
+use arcv::util::prop::{check, require};
+use arcv::workloads::AppId;
+
+/// Capture → parse → replay pins the EventLog and ScenarioOutcome
+/// bit-for-bit: in the capturing kernel mode AND an independently drawn
+/// one (the equivalence contract extends to replays).
+#[test]
+fn roundtrip_replay_is_bit_identical_across_seeds_and_modes() {
+    let apps = [AppId::Amr, AppId::Cm1, AppId::Sputnipic];
+    let modes = [
+        KernelMode::Lockstep,
+        KernelMode::EventDriven,
+        KernelMode::Sharded { threads: 2 },
+    ];
+    check("trace-roundtrip-replay", 10, |g| {
+        let seed = g.u64(1, 1 << 40);
+        let jobs = g.usize(2, 5);
+        let arrivals = match g.usize(0, 2) {
+            0 => Arrivals::Backlog,
+            1 => Arrivals::Poisson { rate_per_min: g.f64(3.0, 12.0) },
+            _ => Arrivals::Bursty {
+                period_secs: g.u64(30, 90),
+                burst: g.usize(1, 3),
+            },
+        };
+        let mut mix_apps = vec![*g.pick(&apps)];
+        let extra = *g.pick(&apps);
+        if g.bool(0.5) && !mix_apps.contains(&extra) {
+            mix_apps.push(extra);
+        }
+        let policy = if g.bool(0.5) {
+            ScenarioPolicy::Fixed
+        } else {
+            ScenarioPolicy::Arcv(ArcvParams::default())
+        };
+        let spec = ScenarioSpec::new("prop-trace")
+            .pool("n", 2, 24.0, SwapKind::Hdd(8.0))
+            .mix(WorkloadMix::uniform(&mix_apps))
+            .arrivals(arrivals)
+            .jobs(jobs)
+            .max_ticks(20_000);
+
+        let capture_mode = *g.pick(&modes);
+        let run = run_scenario_mode(&spec, policy, seed, capture_mode);
+        let trace = Trace::capture(&spec, &policy, seed, &run);
+        let parsed = Trace::parse(&trace.to_lines()).map_err(|e| e.to_string())?;
+        require(parsed == trace, "parse(to_lines(trace)) must be the identity")?;
+        require(
+            parsed.header.seed == seed && parsed.header.jobs == jobs,
+            "header carries the run identity",
+        )?;
+
+        let replay_spec = parsed.replay_spec(&spec).map_err(|e| e.to_string())?;
+        let other_mode = *g.pick(&modes);
+        for mode in [capture_mode, other_mode] {
+            let replay = run_scenario_mode(&replay_spec, policy, parsed.header.seed, mode);
+            parsed.verify_replay(&replay)?;
+            require(
+                replay.outcome == run.outcome,
+                "replayed ScenarioOutcome must be bit-identical",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+fn small_capture() -> Trace {
+    let spec = ScenarioSpec::new("err-trace")
+        .pool("n", 1, 24.0, SwapKind::Hdd(8.0))
+        .mix(WorkloadMix::uniform(&[AppId::Amr]))
+        .arrivals(Arrivals::Backlog)
+        .jobs(2)
+        .max_ticks(5_000);
+    let policy = ScenarioPolicy::Fixed;
+    let run = run_scenario_mode(&spec, policy, 9, KernelMode::EventDriven);
+    Trace::capture(&spec, &policy, 9, &run)
+}
+
+#[test]
+fn version_mismatch_is_a_typed_error() {
+    let trace = small_capture();
+    let bumped = trace.to_lines().replace("\"version\":1", "\"version\":2");
+    assert_eq!(
+        Trace::parse(&bumped).unwrap_err(),
+        TraceError::VersionMismatch { found: 2, expected: TRACE_VERSION }
+    );
+}
+
+#[test]
+fn malformed_files_name_the_offending_line() {
+    let trace = small_capture();
+    let good = trace.to_lines();
+
+    // an unknown watch-record type is a format break, not a skip
+    let unknown = good.replace("pod_scheduled", "pod_teleported");
+    assert!(matches!(
+        Trace::parse(&unknown).unwrap_err(),
+        TraceError::Malformed { .. }
+    ));
+
+    // stripping the header leaves an unreadable file
+    let headerless: String = good.lines().skip(1).collect::<Vec<_>>().join("\n");
+    assert_eq!(Trace::parse(&headerless).unwrap_err(), TraceError::MissingHeader);
+
+    // truncation trips the header's integrity counts (line 0 = whole-file)
+    let lines: Vec<&str> = good.lines().collect();
+    let truncated = lines[..lines.len() - 1].join("\n");
+    assert!(matches!(
+        Trace::parse(&truncated).unwrap_err(),
+        TraceError::Malformed { line: 0, .. }
+    ));
+
+    // a corrupted json body reports its 1-based line
+    let mut corrupt: Vec<String> = good.lines().map(String::from).collect();
+    corrupt[1] = "0 {broken".to_string();
+    assert!(matches!(
+        Trace::parse(&corrupt.join("\n")).unwrap_err(),
+        TraceError::Malformed { line: 2, .. }
+    ));
+}
