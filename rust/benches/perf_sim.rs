@@ -13,7 +13,7 @@ use arcv::simkube::cluster::Cluster;
 use arcv::simkube::node::Node;
 use arcv::simkube::resources::ResourceSpec;
 use arcv::simkube::swap::SwapDevice;
-use arcv::simkube::{ApiClient, KernelMode};
+use arcv::simkube::{ApiClient, KernelMode, ScrapeCadence, SubscriptionSet};
 use arcv::util::bench::bench;
 use arcv::util::json::{arr, num, obj, s, Json};
 use arcv::workloads::{build, AppId};
@@ -288,10 +288,75 @@ fn main() {
             ("log_revision", num(total as f64)),
         ]));
     }
+    // ---- the scrape gate: subscription sampling vs the full-fleet pass ----
+    // Per-wake cost of one scrape pass as the subscribed fraction grows:
+    // the subscription sampler walks only its interest set, the legacy
+    // discipline (cleared subscriptions) walks every pod. The pass is
+    // timed directly (`Cluster::scrape_now`) so simulator stepping cost
+    // cannot mask the difference.
+    println!("\n=== scrape plane: subscription sampling vs full-fleet pass, per wake ===\n");
+    let mut scrape_rows = Vec::new();
+    let mut scrape_slow = false;
+    let mut scrape_sparse_fast = true;
+    for n in [10_000usize, 50_000] {
+        let (mut c, ids) = cluster_with_pods(n);
+        // settle on a grid-aligned tick so Grid cadences are due and the
+        // fleet has scheduled
+        for _ in 0..c.metrics.period_secs * 2 {
+            c.step();
+        }
+        let wakes = 200u32;
+        c.clear_subscriptions();
+        let t0 = Instant::now();
+        for _ in 0..wakes {
+            c.scrape_now();
+        }
+        let full_us = t0.elapsed().as_nanos() as f64 / wakes as f64 / 1e3;
+        for frac in [0.0f64, 0.01, 0.1, 1.0] {
+            let take = ((n as f64 * frac).round() as usize).min(n);
+            let mut subs = SubscriptionSet::new();
+            for &id in ids.iter().take(take) {
+                subs.subscribe(id, ScrapeCadence::Grid);
+            }
+            c.install_subscriptions(subs);
+            let t0 = Instant::now();
+            for _ in 0..wakes {
+                c.scrape_now();
+            }
+            let sub_us = t0.elapsed().as_nanos() as f64 / wakes as f64 / 1e3;
+            let speedup = full_us / sub_us.max(1e-9);
+            // gates: subscribed sampling must never cost more than the
+            // full pass it replaces (5 % tolerance for runner noise), and
+            // a 1 % subscription must be measurably below the full pass
+            if sub_us > full_us * 1.05 {
+                scrape_slow = true;
+            }
+            if frac == 0.01 && sub_us > full_us * 0.5 {
+                scrape_sparse_fast = false;
+            }
+            println!(
+                "  {n:>6} pods @ {:>5.1}% subscribed ({take:>6}): {sub_us:>9.2} us/wake \
+                 vs full pass {full_us:>9.2} us/wake -> {speedup:>7.1}x",
+                frac * 100.0,
+            );
+            scrape_rows.push(obj(vec![
+                ("pods", num(n as f64)),
+                ("frac", num(frac)),
+                ("subscribed", num(take as f64)),
+                ("sub_us_per_wake", num(sub_us)),
+                ("full_us_per_wake", num(full_us)),
+                ("speedup", num(speedup)),
+            ]));
+        }
+    }
+
     let informer_json = obj(vec![
         ("bench", s("perf_sim/informer")),
         ("rows", arr(informer_rows)),
         ("delta_never_slower", Json::Bool(!informer_slow)),
+        ("scrape_rows", arr(scrape_rows)),
+        ("subscription_never_slower", Json::Bool(!scrape_slow)),
+        ("one_pct_below_half_of_full", Json::Bool(scrape_sparse_fast)),
     ]);
     std::fs::write("bench_out/BENCH_informer.json", informer_json.to_string_pretty())
         .expect("write bench_out/BENCH_informer.json");
@@ -313,6 +378,17 @@ fn main() {
     // informer it replaced (BENCH_informer.json carries the real ratios)
     if informer_slow {
         eprintln!("FAIL: delta informer sync slower than a full relist");
+        std::process::exit(1);
+    }
+    // CI gates: subscription sampling must never cost more than the full
+    // pass, and a 1 % interest set must scrape in well under half the
+    // full-fleet cost (the point of per-pod subscriptions)
+    if scrape_slow {
+        eprintln!("FAIL: subscription scrape pass slower than the full-fleet pass");
+        std::process::exit(1);
+    }
+    if !scrape_sparse_fast {
+        eprintln!("FAIL: 1% subscription scrape not measurably below the full pass");
         std::process::exit(1);
     }
 }

@@ -26,6 +26,7 @@
 use crate::policy::{Action, NodePolicy, PerPodAdapter, PodAction, VerticalPolicy};
 use crate::simkube::api::{ActionRecord, ApiClient, InformerStats, Verb};
 use crate::simkube::cluster::Cluster;
+use crate::simkube::metrics::{ScrapeStats, SubscriptionSet};
 use crate::simkube::pod::PodId;
 
 /// Anything that reacts to a cluster tick (per-pod or fleet controllers,
@@ -51,10 +52,23 @@ pub trait Tick {
         cluster.now + 1
     }
 
-    /// Whether this coordinator scrapes sampled metrics. `false` lets the
-    /// event kernel skip the sampling pipeline across coasted stretches.
-    fn wants_observe(&self) -> bool {
-        true
+    /// The per-pod scrape interest this coordinator declares: which pods
+    /// the cluster's sampler should visit, each at what cadence. The
+    /// kernel installs the returned set on the cluster (revision-gated,
+    /// so an unchanged set costs nothing), and the sampler then visits
+    /// ONLY subscribed pods at their own due ticks — an empty set lets
+    /// the kernel coast past every grid tick. `None` (the default) keeps
+    /// legacy full-grid sampling of the whole fleet.
+    fn subscriptions(&self) -> Option<&SubscriptionSet> {
+        None
+    }
+
+    /// This coordinator's informer-side scrape telemetry (consumer count
+    /// and per-consumer watch replays), if it keeps an informer. The
+    /// harness merges it with the cluster-side counters into the run's
+    /// [`ScrapeStats`] block.
+    fn scrape(&self) -> Option<ScrapeStats> {
+        None
     }
 
     /// This coordinator's informer counters, if it keeps an informer
@@ -171,8 +185,16 @@ impl<P: NodePolicy> Tick for Controller<P> {
         self.policy.next_wake(cluster.now, cluster.metrics.period_secs)
     }
 
-    fn wants_observe(&self) -> bool {
-        self.policy.wants_observe()
+    fn subscriptions(&self) -> Option<&SubscriptionSet> {
+        self.policy.subscriptions()
+    }
+
+    fn scrape(&self) -> Option<ScrapeStats> {
+        Some(ScrapeStats {
+            informer_consumers: 1,
+            informer_replays: self.client.informer_stats().events_replayed,
+            ..ScrapeStats::default()
+        })
     }
 
     fn informer(&self) -> Option<InformerStats> {
@@ -208,15 +230,39 @@ impl<P: NodePolicy> Tick for Controller<P> {
             }
         }
 
-        // 2. scrape fresh samples into the policy on sampling ticks —
-        // the Running set comes from the delta-maintained index, and the
-        // whole step is skipped when no hosted kernel consumes metrics
-        if self.policy.wants_observe() && cluster.metrics.is_sampling_tick(now) {
-            let running: Vec<PodId> = self.client.running().to_vec();
-            for pod in running {
-                if let Some(s) = cluster.metrics.last(pod) {
-                    if s.time == now {
-                        self.policy.observe(now, pod, &s);
+        // 2. scrape fresh samples into the policy at each pod's due
+        // ticks. Subscription-aware policies are fed exactly the pods
+        // they declared (the `s.time == now` guard drops pods that were
+        // subscribed but not Running, since the sampler never recorded
+        // them); legacy `None` policies keep the old full-grid pass over
+        // the delta-maintained Running index.
+        match self.policy.subscriptions() {
+            Some(subs) => {
+                let grid = cluster.metrics.period_secs;
+                if subs.any_due(now, grid) {
+                    let due: Vec<PodId> = subs
+                        .iter()
+                        .filter(|&(_, cad)| cad.is_due(now, grid))
+                        .map(|(pod, _)| pod)
+                        .collect();
+                    for pod in due {
+                        if let Some(s) = cluster.metrics.last(pod) {
+                            if s.time == now {
+                                self.policy.observe(now, pod, &s);
+                            }
+                        }
+                    }
+                }
+            }
+            None => {
+                if cluster.metrics.is_sampling_tick(now) {
+                    let running: Vec<PodId> = self.client.running().to_vec();
+                    for pod in running {
+                        if let Some(s) = cluster.metrics.last(pod) {
+                            if s.time == now {
+                                self.policy.observe(now, pod, &s);
+                            }
+                        }
                     }
                 }
             }
@@ -247,7 +293,17 @@ pub fn run_to_completion(
     max_ticks: u64,
 ) -> u64 {
     let start = cluster.now;
+    // mirror the kernel: keep the cluster's observation plane in sync
+    // with the controller's declared interest, reinstalling only when the
+    // set's revision moved (a `None` controller keeps legacy sampling)
+    let mut sub_rev: Option<u64> = None;
     while cluster.now - start < max_ticks && !cluster.all_done() {
+        if let Some(subs) = controller.subscriptions() {
+            if sub_rev != Some(subs.revision()) {
+                sub_rev = Some(subs.revision());
+                cluster.install_subscriptions(subs.clone());
+            }
+        }
         cluster.step();
         controller.tick(cluster);
     }

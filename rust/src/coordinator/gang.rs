@@ -8,14 +8,21 @@
 //! This is the failure amplification that makes per-pod OOMs so expensive
 //! for HPC and motivates ARC-V's top-down, OOM-free approach.
 //!
-//! Like every coordinator, the supervisor holds a typed [`ApiClient`]:
-//! member state is read from the informer cache and every restart/patch is
-//! submitted (and audited) through the API.
+//! Like every coordinator, the supervisor reads member state from an
+//! informer cache and submits (and audits) every restart/patch through
+//! the API — but its gangs share ONE informer plane
+//! ([`SharedInformer`]): each gang registers a consumer cursor, the
+//! supervisor replays the watch stream once per tick, and every gang is
+//! credited with the records a private informer would have replayed.
+//! Before PR 7 the supervisor's `ApiClient` was private; now the plane's
+//! replay-once saving is a first-class telemetry figure
+//! ([`GangSupervisor::scrape`]).
 
 use super::controller::Tick;
 use crate::policy::{Action, VerticalPolicy};
-use crate::simkube::api::ApiClient;
+use crate::simkube::api::{ApiClient, ConsumerId, SharedInformer, SharedInformerHandle};
 use crate::simkube::cluster::Cluster;
+use crate::simkube::metrics::{ScrapeStats, SubscriptionSet};
 use crate::simkube::pod::{PodId, PodPhase};
 
 pub struct Gang {
@@ -25,18 +32,36 @@ pub struct Gang {
     policies: Vec<Box<dyn VerticalPolicy>>,
     /// Gang-level restart count (every member restarts together).
     pub gang_restarts: u32,
+    /// This gang's consumer slot on the shared informer plane.
+    consumer: ConsumerId,
 }
 
 pub struct GangSupervisor {
     pub gangs: Vec<Gang>,
-    client: ApiClient,
+    /// The shared informer plane: one physical watch replay per tick,
+    /// fanned out to every gang's consumer cursor.
+    informer: SharedInformerHandle,
+    /// Per-member scrape interest, aggregated from each member policy's
+    /// declared [`crate::policy::VerticalPolicy::scrape_cadence`].
+    subs: SubscriptionSet,
+    /// Replay credit of consumers already released by [`Self::detach`],
+    /// so telemetry survives retirement.
+    retired_replays: u64,
 }
 
 impl GangSupervisor {
     pub fn new() -> Self {
+        Self::with_informer(SharedInformer::shared())
+    }
+
+    /// Join an existing informer plane (other coordinators on the same
+    /// thread can share it; each gang still gets its own consumer slot).
+    pub fn with_informer(informer: SharedInformerHandle) -> Self {
         Self {
             gangs: Vec::new(),
-            client: ApiClient::new(),
+            informer,
+            subs: SubscriptionSet::new(),
+            retired_replays: 0,
         }
     }
 
@@ -45,12 +70,17 @@ impl GangSupervisor {
         name: &str,
         members: Vec<(PodId, Box<dyn VerticalPolicy>)>,
     ) {
+        let consumer = self.informer.borrow_mut().register();
         let (ids, policies): (Vec<_>, Vec<_>) = members.into_iter().unzip();
+        for (&id, policy) in ids.iter().zip(&policies) {
+            self.subs.subscribe(id, policy.scrape_cadence());
+        }
         self.gangs.push(Gang {
             name: name.to_string(),
             members: ids,
             policies,
             gang_restarts: 0,
+            consumer,
         });
     }
 
@@ -58,9 +88,14 @@ impl GangSupervisor {
         self.gangs.iter().find(|g| g.name == name)
     }
 
-    /// The supervisor's API audit trail.
-    pub fn client(&self) -> &ApiClient {
-        &self.client
+    /// The supervisor's API audit trail (the shared plane's client).
+    pub fn client(&self) -> std::cell::Ref<'_, ApiClient> {
+        std::cell::Ref::map(self.informer.borrow(), |p| p.client())
+    }
+
+    /// The shared plane itself, for replay telemetry.
+    pub fn informer(&self) -> &SharedInformerHandle {
+        &self.informer
     }
 
     /// A gang finishes only when every rank finished (barrier semantics).
@@ -70,12 +105,18 @@ impl GangSupervisor {
             .unwrap_or(false)
     }
 
-    /// Retire the supervisor's informer once every gang is done: releases
-    /// its registered watch cursor so a compacting event log is not
-    /// pinned at the supervisor's last-synced revision for the rest of
-    /// the run. A later tick re-registers transparently (fresh LIST).
+    /// Retire the gangs' informer consumers once every gang is done: the
+    /// last release detaches the shared client's watch cursor, so a
+    /// compacting event log is not pinned at the plane's last-synced
+    /// revision for the rest of the run. A later tick re-registers the
+    /// underlying client transparently (fresh LIST); replay credit earned
+    /// so far is preserved for telemetry.
     pub fn detach(&mut self, cluster: &mut Cluster) {
-        self.client.detach(cluster);
+        let mut plane = self.informer.borrow_mut();
+        for gang in &self.gangs {
+            self.retired_replays += plane.replays(gang.consumer);
+            plane.release(cluster, gang.consumer);
+        }
     }
 }
 
@@ -86,19 +127,34 @@ impl Default for GangSupervisor {
 }
 
 impl Tick for GangSupervisor {
-    fn audit(&self) -> &[crate::simkube::api::ActionRecord] {
-        self.client.actions()
+    fn subscriptions(&self) -> Option<&SubscriptionSet> {
+        Some(&self.subs)
+    }
+
+    fn scrape(&self) -> Option<ScrapeStats> {
+        let plane = self.informer.borrow();
+        Some(ScrapeStats {
+            informer_consumers: plane.consumer_count() as u64,
+            informer_replays: plane.total_replays() + self.retired_replays,
+            ..ScrapeStats::default()
+        })
     }
 
     fn tick(&mut self, cluster: &mut Cluster) {
         let now = cluster.now;
-        self.client.sync(cluster);
-        let sampling = cluster.metrics.is_sampling_tick(now);
+        let grid = cluster.metrics.period_secs;
+        let informer = self.informer.clone();
+        let mut plane = informer.borrow_mut();
+        // ONE physical watch replay for the whole plane; every gang's
+        // consumer is then credited with what a private informer would
+        // have replayed to reach the same head
+        plane.client_mut().sync(cluster);
         for gang in &mut self.gangs {
+            plane.credit(cluster, gang.consumer);
             // 1. failure amplification: any killed member dooms the gang
             let any_failed = gang.members.iter().any(|&m| {
                 matches!(
-                    self.client.cached(m).map(|v| v.phase),
+                    plane.client().cached(m).map(|v| v.phase),
                     Some(PodPhase::OomKilled) | Some(PodPhase::Evicted)
                 )
             });
@@ -108,13 +164,13 @@ impl Tick for GangSupervisor {
                     // limits come off the watch-backed view; live usage is
                     // metrics state, read through (the informer cache
                     // deliberately carries no usage figures)
-                    let limit_gb = self
-                        .client
+                    let limit_gb = plane
+                        .client()
                         .cached(m)
                         .map(|v| v.effective_limit_gb)
                         .unwrap_or(0.0);
-                    let usage_gb = self
-                        .client
+                    let usage_gb = plane
+                        .client()
                         .usage(cluster, m)
                         .map(|u| u.usage_gb)
                         .unwrap_or(0.0);
@@ -124,30 +180,31 @@ impl Tick for GangSupervisor {
                         _ => limit_gb,
                     };
                     // every rank restarts from scratch — even healthy ones
-                    let _ = self.client.restart_pod(cluster, m, new_mem);
+                    let _ = plane.client_mut().restart_pod(cluster, m, new_mem);
                 }
                 continue;
             }
 
-            // 2. normal operation: scrape + per-rank decisions
+            // 2. normal operation: scrape at each member's subscribed
+            // cadence + per-rank decisions
             for (i, &m) in gang.members.iter().enumerate() {
-                if self.client.cached(m).map(|v| v.phase) != Some(PodPhase::Running) {
+                if plane.client().cached(m).map(|v| v.phase) != Some(PodPhase::Running) {
                     continue;
                 }
-                if sampling {
+                if self.subs.due(m, now, grid) {
                     if let Some(s) = cluster.metrics.last(m) {
                         if s.time == now {
                             gang.policies[i].observe(now, &s);
                         }
                     }
                 }
-                let expected = self.client.cached(m).map(|v| v.resource_version);
+                let expected = plane.client().cached(m).map(|v| v.resource_version);
                 match gang.policies[i].decide(now) {
                     Action::Resize(gb) => {
-                        let _ = self.client.patch_pod_memory(cluster, m, gb, expected);
+                        let _ = plane.client_mut().patch_pod_memory(cluster, m, gb, expected);
                     }
                     Action::RestartWith(gb) => {
-                        let _ = self.client.restart_pod(cluster, m, gb);
+                        let _ = plane.client_mut().restart_pod(cluster, m, gb);
                     }
                     Action::None => {}
                 }

@@ -6,9 +6,9 @@
 //! has (tokio is not in the vendored crate set; std threads + mpsc).
 
 use crate::policy::{Action, VerticalPolicy};
-use crate::simkube::api::{ApiClient, Verb};
+use crate::simkube::api::{SharedInformer, Verb};
 use crate::simkube::cluster::Cluster;
-use crate::simkube::metrics::Sample;
+use crate::simkube::metrics::{Sample, ScrapeCadence, SubscriptionSet};
 use crate::simkube::pod::{PodId, PodPhase};
 use std::sync::mpsc;
 use std::thread;
@@ -115,38 +115,53 @@ pub fn run_remote(
     max_ticks: u64,
 ) -> u64 {
     let pods: Vec<PodId> = policies.iter().map(|(id, _)| *id).collect();
+    // capture each policy's declared scrape cadence BEFORE the boxes ship
+    // across the channel: the bridge publishes metrics upstream at exactly
+    // these per-pod cadences, and installs the aggregate on the cluster so
+    // the sampler only visits subscribed pods
+    let cadences: Vec<ScrapeCadence> = policies.iter().map(|(_, p)| p.scrape_cadence()).collect();
+    let mut subs = SubscriptionSet::new();
+    for (&pod, &cad) in pods.iter().zip(&cadences) {
+        subs.subscribe(pod, cad);
+    }
+    cluster.install_subscriptions(subs);
     let handle = spawn(RemoteController::new(policies));
     let start = cluster.now;
     let mut oom_reported: Vec<u32> = vec![0; cluster.pods.len()];
-    let mut api = ApiClient::new();
+    // the bridge's informer plane (one consumer — the loop below); kept a
+    // SharedInformer so its replay telemetry matches the other actors'
+    let mut plane = SharedInformer::new();
+    let consumer = plane.register();
+    let grid = cluster.metrics.period_secs;
 
     while cluster.now - start < max_ticks && !cluster.all_done() {
         cluster.step();
         let now = cluster.now;
-        api.sync(cluster);
+        plane.sync(cluster, consumer);
 
         // apply commands that arrived since the last tick
         while let Ok(cmd) = handle.rx.try_recv() {
             match cmd {
                 Command::Patch { pod, mem_gb } => {
-                    if api.cached(pod).map(|v| v.phase) == Some(PodPhase::Running) {
-                        let _ = api.patch_pod_memory(cluster, pod, mem_gb, None);
+                    if plane.client().cached(pod).map(|v| v.phase) == Some(PodPhase::Running) {
+                        let _ = plane.client_mut().patch_pod_memory(cluster, pod, mem_gb, None);
                     } else {
-                        api.record_deferred(now, pod, Verb::Patch, "pod not running; command dropped");
+                        plane.client_mut().record_deferred(now, pod, Verb::Patch, "pod not running; command dropped");
                     }
                 }
                 Command::Restart { pod, mem_gb } => {
-                    if api.cached(pod).map(|v| v.phase) == Some(PodPhase::OomKilled) {
-                        let _ = api.restart_pod(cluster, pod, mem_gb);
+                    if plane.client().cached(pod).map(|v| v.phase) == Some(PodPhase::OomKilled) {
+                        let _ = plane.client_mut().restart_pod(cluster, pod, mem_gb);
                     } else {
-                        api.record_deferred(now, pod, Verb::Restart, "pod not OOM-killed; command dropped");
+                        plane.client_mut().record_deferred(now, pod, Verb::Restart, "pod not OOM-killed; command dropped");
                     }
                 }
             }
         }
 
-        // publish metrics + OOMs + the clock
-        for &pod in &pods {
+        // publish metrics + OOMs + the clock; metrics flow at each pod's
+        // own subscribed cadence, not the global grid
+        for (&pod, &cad) in pods.iter().zip(&cadences) {
             let p = cluster.pod(pod);
             if p.phase == PodPhase::OomKilled && p.oom_kills > oom_reported[pod] {
                 oom_reported[pod] = p.oom_kills;
@@ -156,7 +171,7 @@ pub fn run_remote(
                     usage_gb: p.usage.usage_gb,
                 });
             }
-            if cluster.metrics.is_sampling_tick(now) {
+            if cad.is_due(now, grid) {
                 if let Some(s) = cluster.metrics.last(pod) {
                     if s.time == now {
                         let _ = handle.tx.send(Upstream::Metrics { now, pod, sample: s });
@@ -171,9 +186,10 @@ pub fn run_remote(
         std::thread::yield_now();
     }
     handle.shutdown();
-    // the bridge's informer is done: release its watch cursor so a
-    // compacting event log is not pinned at this run's last revision
-    api.detach(cluster);
+    // the bridge's informer is done: releasing its only consumer detaches
+    // the plane's watch cursor, so a compacting event log is not pinned at
+    // this run's last revision
+    plane.release(cluster, consumer);
     cluster.now - start
 }
 

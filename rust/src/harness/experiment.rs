@@ -12,6 +12,7 @@ use crate::simkube::clock::next_multiple;
 use crate::simkube::cluster::{Cluster, ClusterConfig};
 use crate::simkube::events::Event;
 use crate::simkube::kernel::{run_kernel, EventSource, KernelMode, KernelStats};
+use crate::simkube::metrics::ScrapeStats;
 use crate::simkube::node::Node;
 use crate::simkube::pod::{PodId, PodPhase};
 use crate::simkube::resources::ResourceSpec;
@@ -247,6 +248,9 @@ pub struct RunOutput {
     pub events: Vec<Event>,
     pub stats: KernelStats,
     pub informer: InformerStats,
+    /// The run's subscription-plane telemetry: cluster-side scrape
+    /// counters merged with the controller's informer-side figures.
+    pub scrape: ScrapeStats,
 }
 
 /// Run one experiment to completion (or budget) on the event-driven
@@ -354,11 +358,15 @@ pub fn run_with_mode(cfg: &ExperimentConfig, kind: PolicyKind, mode: KernelMode)
         usage_series: src.series.usage,
         swap_series: src.series.swap,
     };
+    let scrape = cluster
+        .scrape_stats()
+        .merged(controller.scrape().unwrap_or_default());
     RunOutput {
         result,
         events: cluster.events.events,
         stats,
         informer: controller.informer().unwrap_or_default(),
+        scrape,
     }
 }
 

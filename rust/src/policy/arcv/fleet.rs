@@ -18,7 +18,7 @@ use super::state::{PodState, STATE_LEN};
 use crate::policy::{Action, NodePolicy, PodAction};
 use crate::simkube::api::PodView;
 use crate::simkube::clock::next_multiple;
-use crate::simkube::metrics::Sample;
+use crate::simkube::metrics::{Sample, ScrapeCadence, SubscriptionSet};
 use crate::simkube::pod::PodId;
 use crate::util::ring::RingBuffer;
 
@@ -135,6 +135,10 @@ pub struct FleetPolicy {
     idx_stage: Vec<usize>,
     /// (time, pod, signal code) for event analysis
     pub signal_log: Vec<(u64, PodId, f32)>,
+    /// Managed pods' declared scrape interest: the whole fleet feeds its
+    /// windows from the cAdvisor grid, so every managed pod subscribes at
+    /// [`ScrapeCadence::Grid`].
+    subs: SubscriptionSet,
 }
 
 impl FleetPolicy {
@@ -155,12 +159,14 @@ impl FleetPolicy {
             state_stage: Vec::new(),
             idx_stage: Vec::new(),
             signal_log: Vec::new(),
+            subs: SubscriptionSet::new(),
         }
     }
 
     /// Start managing a pod at `initial_rec_gb`. Managing the same pod
     /// twice is last-wins: its window and packed state are re-initialized.
     pub fn manage(&mut self, pod: PodId, initial_rec_gb: f64) {
+        self.subs.subscribe(pod, ScrapeCadence::Grid);
         let mut st = [0f32; STATE_LEN];
         PodState::initial(initial_rec_gb).pack(&mut st);
         if let Some(i) = self.managed.iter().position(|m| m.pod == pod) {
@@ -317,6 +323,10 @@ impl NodePolicy for FleetPolicy {
 
     fn recommendation_gb(&self, pod: PodId) -> Option<f64> {
         self.managed.iter().find(|m| m.pod == pod).map(|m| m.last_rec)
+    }
+
+    fn subscriptions(&self) -> Option<&SubscriptionSet> {
+        Some(&self.subs)
     }
 }
 

@@ -3,7 +3,7 @@
 //! resized. Used by the Fig 1 ablation scene and the overhead accounting.
 
 use super::{Action, VerticalPolicy};
-use crate::simkube::metrics::Sample;
+use crate::simkube::metrics::{Sample, ScrapeCadence};
 
 pub struct FixedPolicy {
     limit_gb: f64,
@@ -42,8 +42,8 @@ impl VerticalPolicy for FixedPolicy {
         u64::MAX
     }
 
-    fn wants_observe(&self) -> bool {
-        false
+    fn scrape_cadence(&self) -> ScrapeCadence {
+        ScrapeCadence::Never
     }
 }
 

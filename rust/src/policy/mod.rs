@@ -30,7 +30,7 @@ pub mod oracle;
 pub mod vpa;
 
 use crate::simkube::api::PodView;
-use crate::simkube::metrics::Sample;
+use crate::simkube::metrics::{Sample, ScrapeCadence, SubscriptionSet};
 use crate::simkube::pod::{PodId, PodPhase};
 
 /// What a policy wants done to a pod.
@@ -70,12 +70,15 @@ pub trait VerticalPolicy: Send {
         now + 1
     }
 
-    /// Whether this policy consumes scraped metrics (`observe` is
-    /// stateful). Policies returning `false` let the kernel skip the
-    /// sampling pipeline entirely on coasted stretches. Default: true
-    /// (conservative).
-    fn wants_observe(&self) -> bool {
-        true
+    /// The metrics subscription this policy declares for its pod:
+    /// [`ScrapeCadence::Grid`] when `observe` is stateful and wants the
+    /// cAdvisor grid (the default, conservative), a private
+    /// [`ScrapeCadence::EverySecs`] interval (the oracle samples at its
+    /// decision cadence), or [`ScrapeCadence::Never`] for policies that
+    /// ignore scraped metrics entirely — the sampler then never visits
+    /// the pod and the kernel coasts past its grid ticks.
+    fn scrape_cadence(&self) -> ScrapeCadence {
+        ScrapeCadence::Grid
     }
 }
 
@@ -135,10 +138,14 @@ pub trait NodePolicy {
         now + 1
     }
 
-    /// Whether this policy consumes scraped metrics (see
-    /// [`VerticalPolicy::wants_observe`]).
-    fn wants_observe(&self) -> bool {
-        true
+    /// The declarative interest set the cluster's sampler honours: which
+    /// pods to scrape, each at what cadence (the per-pod aggregate of
+    /// [`VerticalPolicy::scrape_cadence`]). `None` (the default) keeps
+    /// legacy full-grid sampling for hand-rolled policies; coordinators
+    /// surface `Some` sets to the kernel through `Tick::subscriptions`,
+    /// which installs them on the cluster.
+    fn subscriptions(&self) -> Option<&SubscriptionSet> {
+        None
     }
 
     /// Pod lifecycle sync: called before any decision work with the pods
@@ -193,6 +200,11 @@ pub struct PerPodAdapter {
     /// deliberately allows restarting Succeeded pods — lazily re-registers
     /// instead of silently losing management. Sorted by pod id.
     retired: Vec<(PodId, Box<dyn VerticalPolicy>)>,
+    /// The per-pod aggregate of the ACTIVE kernels' declared
+    /// [`VerticalPolicy::scrape_cadence`]s — what the cluster's sampler
+    /// honours. Parked (Succeeded) kernels are unsubscribed: a dead pod
+    /// must neither be scraped nor cap the kernel's coast ceiling.
+    subs: SubscriptionSet,
 }
 
 impl PerPodAdapter {
@@ -200,6 +212,7 @@ impl PerPodAdapter {
         Self {
             entries: Vec::new(),
             retired: Vec::new(),
+            subs: SubscriptionSet::new(),
         }
     }
 
@@ -216,6 +229,7 @@ impl PerPodAdapter {
             Ok(i) => Some(self.retired.remove(i).1),
             Err(_) => None,
         };
+        self.subs.subscribe(pod, policy.scrape_cadence());
         match self.entries.binary_search_by_key(&pod, |e| e.0) {
             Ok(i) => Some(std::mem::replace(&mut self.entries[i].1, policy)),
             Err(i) => {
@@ -298,6 +312,7 @@ impl NodePolicy for PerPodAdapter {
             if phase == PodPhase::Succeeded {
                 if let Ok(i) = self.entries.binary_search_by_key(&id, |e| e.0) {
                     let e = self.entries.remove(i);
+                    self.subs.unsubscribe(id);
                     match self.retired.binary_search_by_key(&id, |r| r.0) {
                         Ok(j) => self.retired[j] = e, // stale duplicate: last wins
                         Err(j) => self.retired.insert(j, e),
@@ -310,7 +325,10 @@ impl NodePolicy for PerPodAdapter {
                         // an explicit re-manage already took over: the
                         // parked kernel is obsolete, drop it
                         Ok(_) => {}
-                        Err(j) => self.entries.insert(j, e),
+                        Err(j) => {
+                            self.subs.subscribe(id, e.1.scrape_cadence());
+                            self.entries.insert(j, e);
+                        }
                     }
                 }
             }
@@ -348,8 +366,8 @@ impl NodePolicy for PerPodAdapter {
         wake.max(now + 1)
     }
 
-    fn wants_observe(&self) -> bool {
-        self.entries.iter().any(|(_, p)| p.wants_observe())
+    fn subscriptions(&self) -> Option<&SubscriptionSet> {
+        Some(&self.subs)
     }
 }
 
@@ -407,9 +425,33 @@ mod tests {
             u64::MAX,
             "a dead cadence must no longer cap coast length"
         );
-        assert!(!a.wants_observe(), "only the never-observing kernel is active");
+        assert!(
+            a.subscriptions().unwrap().is_empty(),
+            "no active kernel subscribes"
+        );
         // the parked kernel is still inspectable for reports
         assert_eq!(a.policy_of(3).unwrap().name(), "vpa-sim");
+    }
+
+    #[test]
+    fn subscriptions_track_manage_and_lifecycle() {
+        use crate::policy::arcv::{ArcvParams, ArcvPolicy};
+        use crate::simkube::metrics::ScrapeCadence;
+        let mut a = PerPodAdapter::new();
+        a.manage(3, Box::new(ArcvPolicy::new(8.0, ArcvParams::default())));
+        a.manage(7, Box::new(FixedPolicy::new(4.0)));
+        let subs = a.subscriptions().unwrap();
+        assert_eq!(subs.len(), 1, "fixed declares Never and never subscribes");
+        assert_eq!(subs.cadence(3), Some(ScrapeCadence::Grid));
+        assert_eq!(subs.cadence(7), None);
+        // parking unsubscribes; reviving resubscribes at the kernel's cadence
+        a.sync_lifecycle(10, &[(3, PodPhase::Succeeded)]);
+        assert!(a.subscriptions().unwrap().is_empty());
+        a.sync_lifecycle(20, &[(3, PodPhase::Pending)]);
+        assert_eq!(a.subscriptions().unwrap().cadence(3), Some(ScrapeCadence::Grid));
+        // re-managing with a Never kernel drops the subscription
+        a.manage(3, Box::new(FixedPolicy::new(2.0)));
+        assert!(a.subscriptions().unwrap().is_empty());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! ARC-V's savings against.
 
 use super::{Action, VerticalPolicy};
-use crate::simkube::metrics::Sample;
+use crate::simkube::metrics::{Sample, ScrapeCadence};
 
 pub struct OraclePolicy {
     /// usage at 1 s resolution, GB
@@ -79,8 +79,11 @@ impl VerticalPolicy for OraclePolicy {
         (self.last_decision + self.decision_interval).max(now + 1)
     }
 
-    fn wants_observe(&self) -> bool {
-        false
+    fn scrape_cadence(&self) -> ScrapeCadence {
+        // the oracle reads the future trace, not scraped samples, but it
+        // still declares a subscription at its own decision interval so the
+        // telemetry surface reports what a deployed clairvoyant would cost
+        ScrapeCadence::EverySecs(self.decision_interval)
     }
 }
 

@@ -9,7 +9,7 @@
 //!    than what it requested right before the kill.
 
 use crate::policy::{Action, VerticalPolicy};
-use crate::simkube::metrics::Sample;
+use crate::simkube::metrics::{Sample, ScrapeCadence};
 
 pub struct VpaSimPolicy {
     rec_gb: f64,
@@ -63,8 +63,8 @@ impl VerticalPolicy for VpaSimPolicy {
         u64::MAX
     }
 
-    fn wants_observe(&self) -> bool {
-        false
+    fn scrape_cadence(&self) -> ScrapeCadence {
+        ScrapeCadence::Never
     }
 }
 

@@ -27,11 +27,12 @@
 use super::arrival::{build_schedule, JobSpec, STREAM_FAULTS};
 use super::outcome::{collect, ScenarioOutcome};
 use super::spec::{Fault, ScenarioPolicy, ScenarioSpec};
-use crate::coordinator::controller::Controller;
+use crate::coordinator::controller::{Controller, Tick};
 use crate::simkube::api::Outcome as ApiOutcome;
 use crate::simkube::kernel::{run_kernel, EventSource, KernelMode, KernelStats};
 use crate::simkube::{
-    ApiClient, Cluster, InformerStats, MemoryProcess, PodId, ResourceSpec, SimClock, TimedEvent,
+    ApiClient, Cluster, InformerStats, MemoryProcess, PodId, ResourceSpec, ScrapeStats, SimClock,
+    TimedEvent,
 };
 use crate::util::rng::{hash2, Xoshiro256};
 use crate::workloads::build;
@@ -85,6 +86,12 @@ pub struct ScenarioRun {
     pub cluster: Cluster,
     pub stats: KernelStats,
     pub informer: InformerStats,
+    /// Subscription-plane telemetry: cluster-side scrape counters merged
+    /// with the controller's informer-side figures. Deliberately NOT part
+    /// of [`ScenarioOutcome`] — informer-side counts vary with controller
+    /// wake counts across kernel modes, while the outcome is the
+    /// mode-equivalence surface.
+    pub scrape: ScrapeStats,
 }
 
 /// The scenario engine's kernel adapter: arrival + fault events from its
@@ -328,7 +335,10 @@ pub fn run_scenario_mode(
         api_applied,
         api_rejected,
     );
-    ScenarioRun { outcome, jobs: src.jobs, cluster, stats, informer }
+    let scrape = cluster
+        .scrape_stats()
+        .merged(Tick::scrape(&ctl).unwrap_or_default());
+    ScenarioRun { outcome, jobs: src.jobs, cluster, stats, informer, scrape }
 }
 
 #[cfg(test)]

@@ -817,6 +817,148 @@ impl ApiClient {
     }
 }
 
+// ------------------------------------------------------ shared informer --
+
+/// A consumer's slot on a [`SharedInformer`] — the informer-plane analogue
+/// of [`CursorId`] on the event log.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConsumerId(usize);
+
+/// Per-consumer replay bookkeeping on the shared plane.
+#[derive(Clone, Copy, Debug, Default)]
+struct ConsumerState {
+    /// Event-log revision this consumer has been brought up to.
+    delivered_rev: u64,
+    /// Watch records delivered to this consumer so far. Accounting only:
+    /// the underlying [`ApiClient`] replays each record ONCE for the whole
+    /// plane; this counts what a private informer would have replayed.
+    replayed: u64,
+}
+
+/// One informer plane shared by several coordinator-side consumers:
+/// a single [`ApiClient`] (cache + phase indexes + audit log) fronted by
+/// per-consumer cursors, mirroring `EventLog::register_cursor`.
+///
+/// Before this existed, every actor in a multi-actor run (each gang in a
+/// supervisor, the remote bridge's loop) kept a private `ApiClient` and
+/// replayed the full watch stream independently — N actors paid N× replay
+/// for one cluster's events. The shared plane replays each watch record
+/// exactly once ([`SharedInformer::sync`] is one physical
+/// [`ApiClient::sync`] no matter how many consumers are registered) and
+/// per-consumer [`ConsumerState`] tracks what each consumer *would* have
+/// replayed privately, so the saving is visible in
+/// [`ScrapeStats`](super::metrics::ScrapeStats) telemetry
+/// (`informer_replays` vs the underlying client's `events_replayed`).
+///
+/// The plane is driven by one supervisor loop per tick: the driver calls
+/// [`SharedInformer::sync`] with its own [`ConsumerId`] and fans the
+/// returned [`SyncDelta`] out to the actors it hosts; actors registered
+/// for accounting catch up via [`SharedInformer::credit`].
+#[derive(Default)]
+pub struct SharedInformer {
+    client: ApiClient,
+    consumers: Vec<Option<ConsumerState>>,
+}
+
+/// A cloneable handle to a shared plane. `Rc`, not `Arc`: informer planes
+/// live on the coordinator thread (the remote deployment shape ships
+/// policies across the channel, never informers).
+pub type SharedInformerHandle = std::rc::Rc<std::cell::RefCell<SharedInformer>>;
+
+impl SharedInformer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A fresh plane behind a shareable handle.
+    pub fn shared() -> SharedInformerHandle {
+        std::rc::Rc::new(std::cell::RefCell::new(Self::new()))
+    }
+
+    /// Register a consumer. Slots freed by [`Self::release`] are reused,
+    /// mirroring `EventLog::register_cursor`.
+    pub fn register(&mut self) -> ConsumerId {
+        let state = ConsumerState::default();
+        if let Some(i) = self.consumers.iter().position(Option::is_none) {
+            self.consumers[i] = Some(state);
+            return ConsumerId(i);
+        }
+        self.consumers.push(Some(state));
+        ConsumerId(self.consumers.len() - 1)
+    }
+
+    /// Retire a consumer. When the LAST consumer leaves, the underlying
+    /// client detaches from the event log so the plane stops pinning the
+    /// compaction floor (the gang supervisor's detach contract).
+    pub fn release(&mut self, cluster: &mut Cluster, id: ConsumerId) {
+        if let Some(slot) = self.consumers.get_mut(id.0) {
+            *slot = None;
+        }
+        if self.consumers.iter().all(Option::is_none) {
+            self.client.detach(cluster);
+        }
+    }
+
+    /// Refresh the plane for `id`: ONE physical [`ApiClient::sync`]
+    /// (replaying only the records past the plane's cursor — the whole
+    /// point), then credit this consumer with the records a private
+    /// informer would have replayed to reach head.
+    pub fn sync(&mut self, cluster: &mut Cluster, id: ConsumerId) -> SyncDelta {
+        let delta = self.client.sync(cluster);
+        self.credit(cluster, id);
+        delta
+    }
+
+    /// Bring `id`'s accounting up to the event-log head without a physical
+    /// sync — for consumers that ride a delta someone else replayed.
+    pub fn credit(&mut self, cluster: &Cluster, id: ConsumerId) {
+        let head = cluster.events.revision();
+        if let Some(Some(c)) = self.consumers.get_mut(id.0) {
+            c.replayed += head.saturating_sub(c.delivered_rev);
+            c.delivered_rev = head;
+        }
+    }
+
+    /// The shared client: cached views, phase indexes, audit log, and the
+    /// mutation surface.
+    pub fn client(&self) -> &ApiClient {
+        &self.client
+    }
+
+    pub fn client_mut(&mut self) -> &mut ApiClient {
+        &mut self.client
+    }
+
+    /// Records delivered to one consumer so far.
+    pub fn replays(&self, id: ConsumerId) -> u64 {
+        self.consumers
+            .get(id.0)
+            .and_then(|c| c.as_ref())
+            .map_or(0, |c| c.replayed)
+    }
+
+    /// Records delivered across ALL consumers — what the plane's private
+    /// predecessors would have replayed in total.
+    pub fn total_replays(&self) -> u64 {
+        self.consumers
+            .iter()
+            .flatten()
+            .map(|c| c.replayed)
+            .sum()
+    }
+
+    /// Live consumer count.
+    pub fn consumer_count(&self) -> usize {
+        self.consumers.iter().flatten().count()
+    }
+
+    /// The underlying client's counters: `events_replayed` here counts
+    /// each watch record once for the whole plane.
+    pub fn stats(&self) -> InformerStats {
+        self.client.informer_stats()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::events::EventKind;
@@ -1056,5 +1198,37 @@ mod tests {
         // restart clears the index via the next delta
         api.restart_pod(&mut c, id, 2.0).unwrap();
         assert!(api.oom_killed().is_empty());
+    }
+
+    #[test]
+    fn shared_informer_replays_each_record_once_for_the_plane() {
+        let mut c = cluster();
+        let mut plane = SharedInformer::new();
+        let a = plane.register();
+        let b = plane.register();
+        assert_eq!(plane.consumer_count(), 2);
+        let id = plane
+            .client_mut()
+            .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp(1.0, 1.0, 50.0))
+            .unwrap();
+        plane.sync(&mut c, a); // LIST
+        c.run_until(10, |_| false);
+        c.patch_pod_memory(id, 3.0); // two foreign events past the cursor
+        c.patch_pod_memory(id, 4.0);
+        let head_before = plane.stats().events_replayed;
+        let delta = plane.sync(&mut c, a);
+        assert_eq!(delta.changed, vec![id]);
+        plane.credit(&c, b); // b rides a's delta: accounting only
+        let replayed = plane.stats().events_replayed - head_before;
+        assert!(replayed >= 2, "both patches flow through the one replay");
+        // both consumers are credited the full stream, but the physical
+        // replay did not run twice
+        assert_eq!(plane.replays(a), plane.replays(b));
+        assert!(plane.total_replays() >= 2 * replayed);
+        // slot reuse mirrors EventLog::register_cursor
+        plane.release(&mut c, b);
+        let b2 = plane.register();
+        assert_eq!(plane.replays(b2), 0, "reused slot starts fresh");
+        assert_eq!(plane.consumer_count(), 2);
     }
 }

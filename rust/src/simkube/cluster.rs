@@ -19,7 +19,7 @@
 use super::clock::next_multiple;
 use super::events::{EventKind, EventLog, NODE_EVENT};
 use super::kubelet::{IoState, Kubelet, KubeletConfig};
-use super::metrics::MetricsStore;
+use super::metrics::{MetricsStore, ScrapeStats, SubscriptionSet};
 use super::node::Node;
 use super::pod::{MemoryProcess, PendingResize, Pod, PodId, PodPhase};
 use super::qos::QosClass;
@@ -107,6 +107,18 @@ pub struct Cluster {
     cap_index: CapacityIndex,
     /// Clock-discipline accounting (diagnostic only).
     pub coast_stats: CoastStats,
+    /// The installed observation plane: which pods get sampled, each at
+    /// its own cadence. `None` is the legacy discipline — every Running
+    /// pod on every grid tick (direct-driven tests and benches); the
+    /// kernel installs the controller's declared set and keeps it fresh
+    /// by revision.
+    subscriptions: Option<SubscriptionSet>,
+    /// Scrape telemetry (cluster-side fields of [`ScrapeStats`] only;
+    /// informer-side fields are filled in by coordinators).
+    pub scrape: ScrapeStats,
+    /// Scrape passes that landed on the sampling grid — the input to the
+    /// skipped-grid-tick accounting in [`Self::scrape_stats`].
+    grid_scrapes: u64,
 }
 
 /// How [`Cluster::advance_to`] returned.
@@ -140,13 +152,17 @@ pub struct AdvanceOpts {
     /// `true`: jump quiescent stretches (the event kernel). `false`:
     /// exact 1 s stepping (the legacy reference).
     pub event_driven: bool,
-    /// Whether the sampling grid must be honored: coast/region landings
-    /// on sampling ticks record samples and jumps never skip a grid tick
-    /// (required whenever any policy consumes scraped metrics). When
-    /// `false`, nothing scrapes the store: full `step()` fallbacks still
-    /// record (as `step` always does), but sharded regions leave deferred
-    /// pods unsampled — the store's contents are unobservable then, and
-    /// only `RunResult` + `EventLog` equivalence is promised.
+    /// Whether the scrape plane must be honored: coast/region landings
+    /// on due ticks record samples and jumps never skip a tick any live
+    /// subscription is due at (required whenever any policy consumes
+    /// scraped metrics). With a [`SubscriptionSet`] installed, "due"
+    /// means per-pod cadences — an empty set has no due ticks and the
+    /// fleet coasts past the grid entirely; with none installed it means
+    /// the legacy full grid. When `false`, nothing scrapes the store:
+    /// full `step()` fallbacks still record (as `step` always does), but
+    /// sharded regions leave deferred pods unsampled — the store's
+    /// contents are unobservable then, and only `RunResult` + `EventLog`
+    /// equivalence is promised.
     pub sample_metrics: bool,
     /// `0`: the PR 3 serial event path (cluster-wide horizons). `>= 1`:
     /// the sharded path — per-node horizons, per-pod coasting inside
@@ -177,6 +193,9 @@ impl Cluster {
             evicted_queue: BTreeSet::new(),
             cap_index,
             coast_stats: CoastStats::default(),
+            subscriptions: None,
+            scrape: ScrapeStats::default(),
+            grid_scrapes: 0,
         }
     }
 
@@ -330,6 +349,8 @@ impl Cluster {
     fn displace(&mut self, id: PodId, from_node: usize) {
         self.nodes[from_node].swap.page_in(self.pods[id].usage.swap_gb);
         self.restarting.retain(|&(p, _)| p != id);
+        // the old container's sampled history describes a dead process
+        self.metrics.prune(id);
         let pod = &mut self.pods[id];
         Self::fresh_container(pod);
         if !pod.is_done() {
@@ -397,6 +418,7 @@ impl Cluster {
     /// still-loaded node.
     fn requeue_evicted(&mut self, id: PodId) {
         let now = self.now;
+        self.metrics.prune(id);
         {
             let pod = &mut self.pods[id];
             Self::fresh_container(pod);
@@ -575,11 +597,13 @@ impl Cluster {
             events,
         );
         // a completed pod releases its reservation (kube GC semantics)
+        // and its sampled series (nothing live scrapes a Succeeded pod)
         if pods[id].phase == PodPhase::Succeeded {
             let req = pods[id].spec.memory_request_gb();
             nodes[node_idx].unbind(id, req);
             self.sched_epoch += 1;
             self.cap_index.refresh(node_idx, &nodes[node_idx]);
+            self.metrics.prune(id);
         }
         self.coast_stats.stepped_pod_ticks += 1;
     }
@@ -637,8 +661,8 @@ impl Cluster {
         for n in 0..self.nodes.len() {
             self.eviction_pass_node(n);
         }
-        if self.metrics.is_sampling_tick(self.now) {
-            self.sample_metrics_now();
+        if self.sampling_due(self.now) {
+            self.scrape_now();
         }
     }
 
@@ -651,17 +675,112 @@ impl Cluster {
         self.events.events[seen..].iter().any(|e| e.kind.is_interrupt())
     }
 
-    /// Record the cAdvisor samples for every Running pod at the current
-    /// tick — shared by `step` (per-second path) and coast landings in
-    /// [`Self::advance_to`], so both clocks feed policies identical
-    /// windows.
-    fn sample_metrics_now(&mut self) {
+    // ------------------------------------------------- observation plane --
+
+    /// Install the controller's declared interest set: from here on the
+    /// sampler visits only these pods, each at its own cadence, and the
+    /// event kernel's coast ceiling is their min next-due tick. The
+    /// kernel reinstalls only when [`SubscriptionSet::revision`] moves.
+    pub fn install_subscriptions(&mut self, subs: SubscriptionSet) {
+        self.subscriptions = Some(subs);
+    }
+
+    /// Back to the legacy discipline (every Running pod, every grid tick).
+    pub fn clear_subscriptions(&mut self) {
+        self.subscriptions = None;
+    }
+
+    pub fn subscriptions(&self) -> Option<&SubscriptionSet> {
+        self.subscriptions.as_ref()
+    }
+
+    /// Does any consumer want a sample at tick `t`? Legacy (no installed
+    /// set): every grid tick. Installed set: any live subscription due —
+    /// O(distinct cadences), so an unobserved million-pod fleet answers
+    /// "no" without touching a single entry.
+    fn sampling_due(&self, t: u64) -> bool {
+        match &self.subscriptions {
+            Some(subs) => subs.any_due(t, self.metrics.period_secs),
+            None => self.metrics.is_sampling_tick(t),
+        }
+    }
+
+    /// The first tick strictly after `now` a scrape is due — the coast
+    /// ceiling of the event kernel. `None` (installed-but-empty set):
+    /// nothing ever scrapes, coast past the grid entirely.
+    fn next_scrape_due(&self) -> Option<u64> {
+        match &self.subscriptions {
+            Some(subs) => subs.next_due(self.now, self.metrics.period_secs),
+            None => Some(next_multiple(self.now, self.metrics.period_secs)),
+        }
+    }
+
+    /// One scrape pass at the current tick — shared by `step` (per-second
+    /// path) and coast/region landings in [`Self::advance_to`], so all
+    /// clocks feed policies identical windows. Visits the subscription
+    /// entries (or, legacy, the whole fleet), records the Running pods
+    /// that are due, and accounts the pass in [`ScrapeStats`]. Public so
+    /// out-of-crate harnesses (the perf bench) can time a pass directly.
+    pub fn scrape_now(&mut self) {
         let now = self.now;
-        for pod in &self.pods {
-            if pod.phase == PodPhase::Running {
-                self.metrics.record(now, pod);
+        let grid = self.metrics.period_secs;
+        self.scrape.scrape_passes += 1;
+        self.scrape.fleet_pods = self.pods.len() as u64;
+        if now % grid.max(1) == 0 {
+            self.grid_scrapes += 1;
+        }
+        match &self.subscriptions {
+            Some(subs) => {
+                self.scrape.subscribed_pods = subs.len() as u64;
+                for (id, cadence) in subs.iter() {
+                    if !cadence.is_due(now, grid) {
+                        continue;
+                    }
+                    self.scrape.pods_visited += 1;
+                    let Some(pod) = self.pods.get(id) else { continue };
+                    if pod.phase == PodPhase::Running {
+                        self.metrics.record(now, pod);
+                        self.scrape.samples_recorded += 1;
+                    }
+                }
+            }
+            None => {
+                self.scrape.subscribed_pods = 0;
+                for pod in &self.pods {
+                    self.scrape.pods_visited += 1;
+                    if pod.phase == PodPhase::Running {
+                        self.metrics.record(now, pod);
+                        self.scrape.samples_recorded += 1;
+                    }
+                }
             }
         }
+    }
+
+    /// The cluster-side scrape telemetry, with the skipped-grid-tick
+    /// counter finalized against the current clock. Mode-identical across
+    /// lockstep/event/sharded kernels (scrape passes land on exactly the
+    /// due-tick set in every discipline).
+    pub fn scrape_stats(&self) -> ScrapeStats {
+        let mut s = self.scrape;
+        let grid = self.metrics.period_secs.max(1);
+        s.grid_ticks_skipped = (self.now / grid).saturating_sub(self.grid_scrapes);
+        s
+    }
+
+    /// The full Prometheus exposition a scrape of this cluster would
+    /// serve: the container series of every *live* (Running) pod, plus
+    /// the observation plane's own counters.
+    pub fn prometheus_text(&self) -> String {
+        let mut names = std::collections::BTreeMap::new();
+        for pod in &self.pods {
+            if pod.phase == PodPhase::Running {
+                names.insert(pod.id, pod.name.clone());
+            }
+        }
+        let mut out = self.metrics.prometheus_text(&names);
+        out.push_str(&self.scrape_stats().prometheus_text());
+        out
     }
 
     /// Step until `stop` returns true or `max_ticks` elapse; returns ticks
@@ -710,8 +829,8 @@ impl Cluster {
             };
             if h >= 2 {
                 self.coast(h);
-                if opts.sample_metrics && self.metrics.is_sampling_tick(self.now) {
-                    self.sample_metrics_now();
+                if opts.sample_metrics && self.sampling_due(self.now) {
+                    self.scrape_now();
                 }
             } else if self.step_checked() {
                 // PodStarted is in the interrupt set because a restart-
@@ -738,8 +857,11 @@ impl Cluster {
         }
         let mut h = target.saturating_sub(self.now);
         if sample_metrics {
-            // never skip a sampling tick someone scrapes
-            h = h.min(next_multiple(self.now, self.metrics.period_secs) - self.now);
+            // never skip a tick a live subscription is due at; with no
+            // subscribers there is no scrape ceiling at all
+            if let Some(due) = self.next_scrape_due() {
+                h = h.min(due - self.now);
+            }
         }
         if h < 2 {
             return 0;
@@ -1133,11 +1255,11 @@ impl Cluster {
             if at_end {
                 self.materialize_all(&mut defer, t, shards);
             }
-            if sample_metrics && self.metrics.is_sampling_tick(t) {
-                // the ceiling lands on the sampling grid, so everyone was
-                // just materialized — the scrape sees exact state, like
-                // step() does
-                self.sample_metrics_now();
+            if sample_metrics && self.sampling_due(t) {
+                // the region ceiling stops at the next due tick, so a due
+                // `t` is the ceiling itself and everyone was just
+                // materialized — the scrape sees exact state, like step()
+                self.scrape_now();
             }
             if interrupted {
                 return Advance::Interrupted;
@@ -1169,8 +1291,11 @@ impl Cluster {
                 ceiling = ceiling.min(expiry - 1);
             }
             if opts.sample_metrics {
-                // never skip a sampling tick someone scrapes
-                ceiling = ceiling.min(next_multiple(self.now, self.metrics.period_secs));
+                // never skip a tick a live subscription is due at; an
+                // unobserved fleet has no scrape ceiling and coasts on
+                if let Some(due) = self.next_scrape_due() {
+                    ceiling = ceiling.min(due);
+                }
             }
             let window = ceiling - self.now;
             if window < 2 {
@@ -1188,8 +1313,8 @@ impl Cluster {
                 .min(window);
             if h >= 2 {
                 self.coast_parallel(h, shards);
-                if opts.sample_metrics && self.metrics.is_sampling_tick(self.now) {
-                    self.sample_metrics_now();
+                if opts.sample_metrics && self.sampling_due(self.now) {
+                    self.scrape_now();
                 }
                 continue;
             }
@@ -1293,6 +1418,90 @@ mod tests {
         c.run_until(30, |_| false);
         let series = c.metrics.pod(id).unwrap();
         assert_eq!(series.count, 6); // t=5,10,...,30
+    }
+
+    #[test]
+    fn subscribed_sampler_visits_only_subscribed_pods() {
+        use super::super::metrics::ScrapeCadence;
+        let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+        let a = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 60.0));
+        let b = c.create_pod("b", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 60.0));
+        let mut subs = SubscriptionSet::new();
+        subs.subscribe(a, ScrapeCadence::Grid);
+        c.install_subscriptions(subs);
+        c.run_until(30, |_| false);
+        assert_eq!(c.metrics.pod(a).unwrap().count, 6, "subscribed: t=5..30");
+        assert!(c.metrics.pod(b).is_none(), "unsubscribed pod never sampled");
+        let s = c.scrape_stats();
+        assert_eq!(s.scrape_passes, 6);
+        assert_eq!(s.samples_recorded, 6);
+        assert_eq!(s.subscribed_pods, 1);
+        assert_eq!(s.fleet_pods, 2);
+        assert_eq!(s.grid_ticks_skipped, 0);
+    }
+
+    #[test]
+    fn private_cadence_samples_at_its_own_interval() {
+        use super::super::metrics::ScrapeCadence;
+        let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+        let id = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 60.0));
+        let mut subs = SubscriptionSet::new();
+        subs.subscribe(id, ScrapeCadence::EverySecs(10));
+        c.install_subscriptions(subs);
+        c.run_until(30, |_| false);
+        // the oracle-style cadence: t=10,20,30 — half the grid's ticks
+        assert_eq!(c.metrics.pod(id).unwrap().count, 3);
+        let s = c.scrape_stats();
+        assert_eq!(s.scrape_passes, 3);
+        assert_eq!(s.grid_ticks_skipped, 3, "t=5,15,25 never scraped");
+    }
+
+    #[test]
+    fn empty_subscription_set_coasts_past_the_grid() {
+        let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+        c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 300.0));
+        c.install_subscriptions(SubscriptionSet::new());
+        let opts = AdvanceOpts { event_driven: true, sample_metrics: true, shards: 0 };
+        c.advance_to(100, opts);
+        assert_eq!(c.now, 100);
+        assert_eq!(c.metrics.live_series(), 0, "nobody subscribed, nothing sampled");
+        let s = c.scrape_stats();
+        assert_eq!(s.scrape_passes, 0);
+        assert_eq!(s.grid_ticks_skipped, 20, "all 20 grid ticks skipped");
+        assert!(
+            c.coast_stats.coasted_pod_ticks > 0,
+            "the unobserved fleet must coast, not step"
+        );
+    }
+
+    #[test]
+    fn retired_pods_prune_their_series() {
+        let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+        let a = c.create_pod("a", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 20.0));
+        let b = c.create_pod("b", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 500.0));
+        c.run_until(10, |_| false);
+        assert_eq!(c.metrics.live_series(), 2);
+        // completion retires a's series
+        c.run_until(100, |c| c.pod(a).phase == PodPhase::Succeeded);
+        assert!(c.metrics.pod(a).is_none(), "Succeeded pod pruned");
+        assert_eq!(c.metrics.live_series(), 1);
+        // a kill retires b's series (the fresh container starts clean)
+        assert!(c.kill_pod(b));
+        assert!(c.metrics.pod(b).is_none(), "killed pod pruned");
+        assert_eq!(c.metrics.live_series(), 0);
+    }
+
+    #[test]
+    fn cluster_prometheus_serves_live_pods_and_plane_counters() {
+        let mut c = one_node_cluster(64.0, SwapDevice::disabled());
+        let a = c.create_pod("live-pod", ResourceSpec::memory_exact(4.0), ramp(1.0, 2.0, 500.0));
+        c.run_until(10, |_| false);
+        assert!(c.pod(a).is_running());
+        let text = c.prometheus_text();
+        assert!(text.contains("container_memory_usage_bytes{pod=\"live-pod\"}"));
+        assert!(text.contains("# HELP container_memory_rss "));
+        assert!(text.contains("arcv_scrape_passes_total 2"));
+        assert!(text.contains("arcv_scrape_fleet_pods 1"));
     }
 
     #[test]
@@ -1454,8 +1663,8 @@ mod tests {
         assert_eq!(x.provisioned_gb_secs, y.provisioned_gb_secs);
         assert_eq!(x.used_gb_secs, y.used_gb_secs);
         assert_eq!(
-            a.metrics.pod(pa).unwrap().count,
-            b.metrics.pod(pb).unwrap().count,
+            a.scrape_stats(),
+            b.scrape_stats(),
             "coast landings must record the same samples stepping does"
         );
     }
@@ -1482,11 +1691,7 @@ mod tests {
             assert_eq!(x.progress_secs, y.progress_secs, "shards={shards}");
             assert_eq!(x.provisioned_gb_secs, y.provisioned_gb_secs, "shards={shards}");
             assert_eq!(x.used_gb_secs, y.used_gb_secs, "shards={shards}");
-            assert_eq!(
-                a.metrics.pod(pa).unwrap().count,
-                b.metrics.pod(pb).unwrap().count,
-                "shards={shards}"
-            );
+            assert_eq!(a.scrape_stats(), b.scrape_stats(), "shards={shards}");
         }
     }
 

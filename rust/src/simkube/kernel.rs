@@ -24,9 +24,10 @@
 //!   spill, pressure eviction) — interrupts from the cluster, either
 //!   predicted away by the `max_slope_gb_per_sec` coast contract or hit
 //!   exactly by 1 s stepping;
-//! - **sample points** — metric scrapes land on the sampling grid via the
-//!   coast clamp; the harness's series sampler fires in
-//!   [`EventSource::fire_post`].
+//! - **sample points** — metric scrapes land on each subscribed pod's due
+//!   ticks via the coast clamp (the min over live subscriptions; an
+//!   unobserved fleet has no scrape ceiling at all); the harness's series
+//!   sampler fires in [`EventSource::fire_post`].
 //!
 //! [`KernelMode::Lockstep`] runs the identical per-tick order the legacy
 //! loops used (fire_pre → controller → fire_post → stop-check → step) and
@@ -123,6 +124,9 @@ pub fn run_kernel<C: Tick + ?Sized>(
     let mut pending_wake = if event_driven { ctl.next_wake(cluster) } else { 0 };
     let mut interrupted = false;
     let mut first = true;
+    // the controller's installed subscription revision — `None` until the
+    // first install, so a revision-0 set still gets installed once
+    let mut sub_rev: Option<u64> = None;
     loop {
         stats.events += 1;
         src.fire_pre(cluster, ctl);
@@ -154,12 +158,23 @@ pub fn run_kernel<C: Tick + ?Sized>(
         } else {
             cluster.now + 1
         };
+        // keep the cluster's observation plane in sync with the
+        // controller's declared interest — re-asked every advance because
+        // mid-run submissions subscribe new pods — but reinstalled only
+        // when the set's revision actually moved
+        match ctl.subscriptions() {
+            Some(subs) if sub_rev != Some(subs.revision()) => {
+                sub_rev = Some(subs.revision());
+                cluster.install_subscriptions(subs.clone());
+            }
+            _ => {}
+        }
         let opts = AdvanceOpts {
             event_driven,
-            // re-asked every advance: mid-run submissions can attach the
-            // first metrics-scraping policy to a previously idle
-            // controller (lockstep records in step() regardless)
-            sample_metrics: !event_driven || ctl.wants_observe(),
+            // always honored: the installed plane decides per-pod dueness
+            // itself, and an empty set has no due ticks, so an unobserved
+            // fleet coasts past the grid in every mode
+            sample_metrics: true,
             shards,
         };
         if cluster.advance_to(target, opts) == Advance::Interrupted {

@@ -1,11 +1,28 @@
-//! The metrics pipeline: a cAdvisor-style sampler and Prometheus-format
-//! exposition (paper §2.1).
+//! The metrics pipeline: a *subscription-driven* cAdvisor-style sampler
+//! with Prometheus-format exposition (paper §2.1).
 //!
-//! The kubelet's cAdvisor samples every pod's `container_memory_usage_bytes`,
-//! `container_memory_rss` and `container_memory_swap`; third parties (here:
-//! the ARC-V controller "on another node") scrape those series. Sampling
-//! period is the paper's 5 s.
+//! The kubelet's cAdvisor serves `container_memory_usage_bytes`,
+//! `container_memory_rss` and `container_memory_swap`; third parties
+//! (here: the ARC-V controller "on another node") scrape those series.
+//! Since PR 7 the sampler no longer visits every running pod on every
+//! grid tick: consumers declare interest per pod through a
+//! [`SubscriptionSet`] — each subscription carries its own
+//! [`ScrapeCadence`] (the shared 5 s grid, or a private interval like
+//! the oracle's decision cadence) — and the cluster records **only
+//! subscribed pods, each at its own cadence**. An unobserved fleet is
+//! never scraped at all, and the event kernel's coast ceiling is the
+//! min over *live* subscriptions rather than the global grid, so it
+//! coasts straight past sampling ticks nobody would read. This is the
+//! PLEG lesson applied to observation: scrape cost tracks *interest*,
+//! not fleet size.
+//!
+//! Series are pruned when their pod retires (Succeeded, killed, or
+//! displaced into a fresh container) — [`MetricsStore::live_series`] is
+//! the RSS proxy, like `intern_stats` for model tables. The whole plane
+//! self-reports through [`ScrapeStats`], including its own Prometheus
+//! exposition.
 
+use super::clock::next_multiple;
 use super::pod::{Pod, PodId};
 use crate::util::ring::RingBuffer;
 use std::collections::BTreeMap;
@@ -20,6 +37,210 @@ pub struct Sample {
     pub rss_gb: f64,
     pub swap_gb: f64,
     pub limit_gb: f64,
+}
+
+/// How often a subscribed pod wants to be sampled.
+///
+/// `Never` is the explicit "no interest" value: subscribing with it is
+/// identical to unsubscribing, which lets `VerticalPolicy::scrape_cadence`
+/// stay a plain (non-`Option`) return — vpa-sim and fixed just say `Never`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ScrapeCadence {
+    /// No samples at all (== unsubscribed).
+    Never,
+    /// The shared cAdvisor grid (`MetricsStore::period_secs`).
+    Grid,
+    /// A private cadence in whole seconds (clamped to >= 1 s).
+    EverySecs(u64),
+}
+
+impl ScrapeCadence {
+    /// The concrete period in seconds, given the store's grid period.
+    /// `Never` has no period and is never due (it is also kept out of
+    /// every live-cadence table).
+    pub fn period_secs(self, grid: u64) -> Option<u64> {
+        match self {
+            ScrapeCadence::Never => None,
+            ScrapeCadence::Grid => Some(grid.max(1)),
+            ScrapeCadence::EverySecs(k) => Some(k.max(1)),
+        }
+    }
+
+    /// Is a pod at this cadence due for a sample at tick `now`?
+    pub fn is_due(self, now: u64, grid: u64) -> bool {
+        self.period_secs(grid).is_some_and(|p| now % p == 0)
+    }
+}
+
+/// Which pods get sampled, and how often — the declarative interest set
+/// policies hand the cluster (via `Tick::subscriptions`).
+///
+/// Due-tick queries are O(distinct cadences), not O(pods): a refcount
+/// table over live cadences answers "is anything due at `now`?" and
+/// "when is the next due tick?" without touching per-pod entries, so a
+/// million-pod fleet with no subscribers costs nothing per tick. The
+/// `revision` counter bumps on every effective change; the kernel uses
+/// it to reinstall the set on the cluster only when it actually moved.
+#[derive(Clone, Debug, Default)]
+pub struct SubscriptionSet {
+    entries: BTreeMap<PodId, ScrapeCadence>,
+    /// Refcounts over distinct live cadences (`Never` excluded).
+    cadences: BTreeMap<ScrapeCadence, usize>,
+    revision: u64,
+}
+
+impl SubscriptionSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare `pod`'s cadence. `Never` unsubscribes. Re-subscribing at
+    /// the current cadence is a no-op (no revision bump).
+    pub fn subscribe(&mut self, pod: PodId, cadence: ScrapeCadence) {
+        if cadence == ScrapeCadence::Never {
+            self.unsubscribe(pod);
+            return;
+        }
+        match self.entries.insert(pod, cadence) {
+            Some(old) if old == cadence => return,
+            Some(old) => self.drop_cadence(old),
+            None => {}
+        }
+        *self.cadences.entry(cadence).or_insert(0) += 1;
+        self.revision += 1;
+    }
+
+    /// Remove `pod`'s subscription; returns whether one existed.
+    pub fn unsubscribe(&mut self, pod: PodId) -> bool {
+        match self.entries.remove(&pod) {
+            Some(old) => {
+                self.drop_cadence(old);
+                self.revision += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn drop_cadence(&mut self, c: ScrapeCadence) {
+        if let Some(n) = self.cadences.get_mut(&c) {
+            *n -= 1;
+            if *n == 0 {
+                self.cadences.remove(&c);
+            }
+        }
+    }
+
+    pub fn cadence(&self, pod: PodId) -> Option<ScrapeCadence> {
+        self.entries.get(&pod).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bumped on every effective subscribe/unsubscribe/cadence change.
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Is `pod` subscribed and due at `now`?
+    pub fn due(&self, pod: PodId, now: u64, grid: u64) -> bool {
+        self.entries
+            .get(&pod)
+            .is_some_and(|c| c.is_due(now, grid))
+    }
+
+    /// Is *any* subscription due at `now`? O(distinct cadences).
+    pub fn any_due(&self, now: u64, grid: u64) -> bool {
+        self.cadences.keys().any(|c| c.is_due(now, grid))
+    }
+
+    /// The first tick strictly after `now` where any subscription is due
+    /// — the event kernel's scrape ceiling. `None` when nothing is
+    /// subscribed: the fleet coasts past the grid entirely.
+    pub fn next_due(&self, now: u64, grid: u64) -> Option<u64> {
+        self.cadences
+            .keys()
+            .filter_map(|c| c.period_secs(grid))
+            .map(|p| next_multiple(now, p))
+            .min()
+    }
+
+    /// All subscriptions, in pod-id order.
+    pub fn iter(&self) -> impl Iterator<Item = (PodId, ScrapeCadence)> + '_ {
+        self.entries.iter().map(|(&p, &c)| (p, c))
+    }
+}
+
+/// Self-telemetry of the whole observation plane: what the sampler
+/// visited vs what exists, and how the shared informer fanned watch
+/// records out. Cluster-side fields (everything but the `informer_*`
+/// pair) are mode-identical across lockstep/event/sharded kernels —
+/// scrape passes happen at exactly the due-tick set in every mode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScrapeStats {
+    /// Gauge: pods in the cluster at the last scrape pass.
+    pub fleet_pods: u64,
+    /// Gauge: live subscriptions at the last scrape pass.
+    pub subscribed_pods: u64,
+    /// Counter: passes where at least one subscription was due.
+    pub scrape_passes: u64,
+    /// Counter: subscription entries visited across all passes.
+    pub pods_visited: u64,
+    /// Counter: samples actually recorded (visited, due, and Running).
+    pub samples_recorded: u64,
+    /// Counter: grid ticks the sampler never touched (no due subscription).
+    pub grid_ticks_skipped: u64,
+    /// Gauge: consumers registered on the shared informer.
+    pub informer_consumers: u64,
+    /// Counter: watch records replayed, summed over informer consumers.
+    pub informer_replays: u64,
+}
+
+impl ScrapeStats {
+    /// Field-wise sum — the cluster-side sampler block and the
+    /// coordinator-side informer block populate disjoint fields, so the
+    /// merged value is the whole plane's telemetry.
+    pub fn merged(self, other: ScrapeStats) -> ScrapeStats {
+        ScrapeStats {
+            fleet_pods: self.fleet_pods + other.fleet_pods,
+            subscribed_pods: self.subscribed_pods + other.subscribed_pods,
+            scrape_passes: self.scrape_passes + other.scrape_passes,
+            pods_visited: self.pods_visited + other.pods_visited,
+            samples_recorded: self.samples_recorded + other.samples_recorded,
+            grid_ticks_skipped: self.grid_ticks_skipped + other.grid_ticks_skipped,
+            informer_consumers: self.informer_consumers + other.informer_consumers,
+            informer_replays: self.informer_replays + other.informer_replays,
+        }
+    }
+
+    /// Prometheus self-exposition of the plane's own counters — served
+    /// next to the container series so the scrape pipeline is observable
+    /// with the same tooling it implements.
+    pub fn prometheus_text(&self) -> String {
+        let rows: [(&str, &str, &str, u64); 8] = [
+            ("arcv_scrape_fleet_pods", "gauge", "pods in the cluster at the last scrape pass", self.fleet_pods),
+            ("arcv_scrape_subscribed_pods", "gauge", "live metric subscriptions at the last scrape pass", self.subscribed_pods),
+            ("arcv_scrape_passes_total", "counter", "scrape passes with at least one due subscription", self.scrape_passes),
+            ("arcv_scrape_pods_visited_total", "counter", "subscription entries visited by the sampler", self.pods_visited),
+            ("arcv_scrape_samples_recorded_total", "counter", "samples recorded (visited, due and Running)", self.samples_recorded),
+            ("arcv_scrape_grid_ticks_skipped_total", "counter", "sampling-grid ticks skipped for lack of subscribers", self.grid_ticks_skipped),
+            ("arcv_informer_consumers", "gauge", "consumers registered on the shared informer", self.informer_consumers),
+            ("arcv_informer_replays_total", "counter", "watch records replayed, summed over consumers", self.informer_replays),
+        ];
+        let mut out = String::new();
+        for (name, kind, help, v) in rows {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        out
+    }
 }
 
 /// Per-pod sampled history (bounded ring per series).
@@ -70,7 +291,7 @@ impl MetricsStore {
         now % self.period_secs == 0
     }
 
-    /// Record one pod's current status (call on sampling ticks).
+    /// Record one pod's current status (call on the pod's due ticks).
     pub fn record(&mut self, now: u64, pod: &Pod) {
         let entry = self
             .series
@@ -95,6 +316,20 @@ impl MetricsStore {
         self.series.get(&id)
     }
 
+    /// Drop a retired pod's rings (Succeeded, killed, or displaced into
+    /// a fresh container — the history would describe a dead process).
+    /// Returns whether a series existed. Without this, churn scenarios
+    /// leak four rings per pod forever.
+    pub fn prune(&mut self, id: PodId) -> bool {
+        self.series.remove(&id).is_some()
+    }
+
+    /// Live series count — the store's RSS proxy (like `intern_stats`
+    /// for model tables): steady-state fleets hold one per *live* pod.
+    pub fn live_series(&self) -> usize {
+        self.series.len()
+    }
+
     /// Newest `n` usage samples, oldest-first, into a caller buffer.
     pub fn usage_window(&self, id: PodId, n: usize, out: &mut [f64]) -> usize {
         self.series
@@ -107,21 +342,29 @@ impl MetricsStore {
         self.series.get(&id).map(|s| s.last)
     }
 
-    /// Prometheus text exposition of the current values — what the scrape
-    /// endpoint of the kubelet would serve.
+    /// Prometheus text exposition of the current values — what the
+    /// scrape endpoint of the kubelet would serve. `pod_names` is the
+    /// set of pods the caller considers live: series without an entry
+    /// (retired pods whose prune raced the scrape, foreign pods) are
+    /// skipped rather than served as frozen gauges. Label values are
+    /// escaped per the exposition format.
     pub fn prometheus_text(&self, pod_names: &BTreeMap<PodId, String>) -> String {
         let mut out = String::new();
-        for (metric, get) in [
-            ("container_memory_usage_bytes", 0usize),
-            ("container_memory_rss", 1),
-            ("container_memory_swap", 2),
+        for (metric, help, get) in [
+            (
+                "container_memory_usage_bytes",
+                "Current memory usage in bytes, including all memory regardless of when it was accessed",
+                0usize,
+            ),
+            ("container_memory_rss", "Size of RSS in bytes", 1),
+            ("container_memory_swap", "Container swap usage in bytes", 2),
         ] {
+            let _ = writeln!(out, "# HELP {metric} {help}");
             let _ = writeln!(out, "# TYPE {metric} gauge");
             for (id, s) in &self.series {
-                let name = pod_names
-                    .get(id)
-                    .map(|s| s.as_str())
-                    .unwrap_or("unknown");
+                let Some(name) = pod_names.get(id) else {
+                    continue; // retired or unknown: never a live gauge
+                };
                 let gb = match get {
                     0 => s.last.usage_gb,
                     1 => s.last.rss_gb,
@@ -129,13 +372,29 @@ impl MetricsStore {
                 };
                 let _ = writeln!(
                     out,
-                    "{metric}{{pod=\"{name}\"}} {:.0}",
+                    "{metric}{{pod=\"{}\"}} {:.0}",
+                    escape_label_value(name),
                     gb * 1e9
                 );
             }
         }
         out
     }
+}
+
+/// Escape a label value per the Prometheus text exposition format:
+/// backslash, double-quote and line-feed must be escaped.
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -194,6 +453,20 @@ mod tests {
     }
 
     #[test]
+    fn prune_drops_series_and_tracks_live_count() {
+        let mut m = MetricsStore::new(5, 8);
+        m.record(0, &pod_with_usage(1, 1.0, 0.0));
+        m.record(0, &pod_with_usage(2, 2.0, 0.0));
+        assert_eq!(m.live_series(), 2);
+        assert!(m.prune(1));
+        assert_eq!(m.live_series(), 1);
+        assert!(m.pod(1).is_none());
+        assert!(m.last(1).is_none());
+        assert!(!m.prune(1), "second prune is a no-op");
+        assert_eq!(m.last(2).unwrap().usage_gb, 2.0);
+    }
+
+    #[test]
     fn prometheus_exposition_has_all_series() {
         let mut m = MetricsStore::new(5, 8);
         m.record(0, &pod_with_usage(0, 2.5, 0.5));
@@ -203,5 +476,98 @@ mod tests {
         assert!(text.contains("container_memory_usage_bytes{pod=\"kripke-0\"} 2500000000"));
         assert!(text.contains("container_memory_rss{pod=\"kripke-0\"} 2000000000"));
         assert!(text.contains("container_memory_swap{pod=\"kripke-0\"} 500000000"));
+        assert!(text.contains("# HELP container_memory_usage_bytes "));
+        assert!(text.contains("# TYPE container_memory_usage_bytes gauge"));
+    }
+
+    #[test]
+    fn prometheus_skips_pods_absent_from_the_live_set() {
+        let mut m = MetricsStore::new(5, 8);
+        m.record(0, &pod_with_usage(0, 1.0, 0.0));
+        m.record(0, &pod_with_usage(1, 9.0, 0.0));
+        let mut names = BTreeMap::new();
+        names.insert(0usize, "live-0".to_string());
+        // pod 1 retired: the caller no longer lists it
+        let text = m.prometheus_text(&names);
+        assert!(text.contains("pod=\"live-0\""));
+        assert!(!text.contains("9000000000"), "retired pod served as a live gauge");
+        assert!(!text.contains("unknown"));
+    }
+
+    #[test]
+    fn prometheus_escapes_label_values() {
+        let mut m = MetricsStore::new(5, 8);
+        m.record(0, &pod_with_usage(3, 1.0, 0.0));
+        let mut names = BTreeMap::new();
+        names.insert(3usize, "we\"ird\\pod\nname".to_string());
+        let text = m.prometheus_text(&names);
+        assert!(text.contains(r#"pod="we\"ird\\pod\nname""#));
+        assert!(!text.contains("pod\nname\""), "raw newline leaked into a label");
+    }
+
+    #[test]
+    fn subscription_set_refcounts_cadences_and_revisions() {
+        let mut s = SubscriptionSet::new();
+        assert!(s.is_empty());
+        assert_eq!(s.next_due(0, 5), None, "empty set never clamps the coast");
+        s.subscribe(1, ScrapeCadence::Grid);
+        s.subscribe(2, ScrapeCadence::EverySecs(60));
+        let r = s.revision();
+        s.subscribe(1, ScrapeCadence::Grid); // same cadence: no-op
+        assert_eq!(s.revision(), r);
+        assert_eq!(s.len(), 2);
+        assert!(s.due(1, 10, 5));
+        assert!(!s.due(1, 3, 5));
+        assert!(s.due(2, 60, 5));
+        assert!(!s.due(2, 10, 5));
+        assert!(s.any_due(10, 5));
+        // next due after t=57: grid fires at 60 too, min is 60
+        assert_eq!(s.next_due(57, 5), Some(60));
+        s.unsubscribe(1);
+        assert_eq!(s.next_due(0, 5), Some(60), "only the oracle cadence remains");
+        // Never == unsubscribe
+        s.subscribe(2, ScrapeCadence::Never);
+        assert!(s.is_empty());
+        assert_eq!(s.next_due(0, 5), None);
+        assert!(!s.unsubscribe(2), "already gone");
+    }
+
+    #[test]
+    fn subscription_cadence_change_rebalances_refcounts() {
+        let mut s = SubscriptionSet::new();
+        s.subscribe(7, ScrapeCadence::Grid);
+        let r = s.revision();
+        s.subscribe(7, ScrapeCadence::EverySecs(30));
+        assert!(s.revision() > r, "cadence change must bump the revision");
+        assert_eq!(s.cadence(7), Some(ScrapeCadence::EverySecs(30)));
+        // the Grid refcount dropped to zero: next_due ignores the grid
+        assert_eq!(s.next_due(0, 5), Some(30));
+    }
+
+    #[test]
+    fn scrape_stats_merge_and_self_exposition() {
+        let cluster_side = ScrapeStats {
+            fleet_pods: 100,
+            subscribed_pods: 3,
+            scrape_passes: 10,
+            pods_visited: 30,
+            samples_recorded: 28,
+            grid_ticks_skipped: 5,
+            ..Default::default()
+        };
+        let informer_side = ScrapeStats {
+            informer_consumers: 2,
+            informer_replays: 40,
+            ..Default::default()
+        };
+        let whole = cluster_side.merged(informer_side);
+        assert_eq!(whole.samples_recorded, 28);
+        assert_eq!(whole.informer_replays, 40);
+        let text = whole.prometheus_text();
+        assert!(text.contains("# TYPE arcv_scrape_samples_recorded_total counter"));
+        assert!(text.contains("arcv_scrape_samples_recorded_total 28"));
+        assert!(text.contains("arcv_informer_replays_total 40"));
+        assert!(text.contains("# HELP arcv_scrape_grid_ticks_skipped_total "));
+        assert!(text.contains("arcv_scrape_fleet_pods 100"));
     }
 }

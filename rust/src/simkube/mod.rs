@@ -28,15 +28,15 @@ pub mod scheduler;
 pub mod swap;
 
 pub use api::{
-    ActionRecord, AdmissionPlugin, AdmissionRequest, ApiClient, ApiError, InformerStats, Outcome,
-    PodView, SyncDelta, Verb,
+    ActionRecord, AdmissionPlugin, AdmissionRequest, ApiClient, ApiError, ConsumerId,
+    InformerStats, Outcome, PodView, SharedInformer, SharedInformerHandle, SyncDelta, Verb,
 };
 pub use clock::{next_multiple, SimClock, TimedEvent};
 pub use cluster::{Advance, AdvanceOpts, Cluster, ClusterConfig};
 pub use kernel::{run_kernel, EventSource, KernelMode, KernelStats};
 pub use events::{Event, EventKind, EventLog};
 pub use kubelet::{Kubelet, KubeletConfig};
-pub use metrics::{MetricsStore, Sample};
+pub use metrics::{MetricsStore, Sample, ScrapeCadence, ScrapeStats, SubscriptionSet};
 pub use node::Node;
 pub use pod::{MemoryProcess, Pod, PodId, PodPhase};
 pub use qos::QosClass;

@@ -151,16 +151,21 @@ fn multi_tenant_colocation_on_one_node() {
 }
 
 /// Prometheus exposition is served with all three container series for a
-/// live pod (the metrics-pipeline contract third parties scrape).
+/// live pod (the metrics-pipeline contract third parties scrape). The pod
+/// is managed by an ARC-V kernel, so it is subscribed on the scrape grid;
+/// the cluster endpoint also serves the scrape-plane counters.
 #[test]
 fn prometheus_endpoint_contract() {
+    use arcv::policy::arcv::ArcvPolicy;
     let mut c = Cluster::single_node(Node::new("w0", 64.0, SwapDevice::hdd(16.0)));
     let id = c.create_pod(
         "kripke-0",
         ResourceSpec::memory_exact(8.0),
         Box::new(build(AppId::Kripke, 1)),
     );
-    run_to_completion(&mut c, &mut arcv::coordinator::Controller::new(), 100);
+    let mut ctl = arcv::coordinator::Controller::new();
+    ctl.manage(id, Box::new(ArcvPolicy::new(8.0, ArcvParams::default())));
+    run_to_completion(&mut c, &mut ctl, 100);
     let mut names = std::collections::BTreeMap::new();
     names.insert(id, "kripke-0".to_string());
     let text = c.metrics.prometheus_text(&names);
@@ -170,5 +175,12 @@ fn prometheus_endpoint_contract() {
         "container_memory_swap",
     ] {
         assert!(text.contains(&format!("{metric}{{pod=\"kripke-0\"}}")), "{metric}");
+        assert!(text.contains(&format!("# TYPE {metric} gauge")), "{metric} TYPE");
     }
+    // the cluster-level endpoint stacks the scrape-plane self-exposition
+    // on top of the per-pod series
+    let full = c.prometheus_text();
+    assert!(full.contains("container_memory_usage_bytes{pod=\"kripke-0\"}"));
+    assert!(full.contains("arcv_scrape_passes_total"));
+    assert!(full.contains("arcv_scrape_subscribed_pods 1"));
 }

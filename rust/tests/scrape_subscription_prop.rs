@@ -1,0 +1,232 @@
+//! Property suite for the subscription metrics plane: sampling only the
+//! subscribed pods, each at its own cadence, must be *losslessly sparse* —
+//! every sample the subscribed sampler records is bit-identical to what a
+//! full every-tick sampler records for the same pod at the same tick, and
+//! it records nothing else. The oracle is a mirrored cluster driven by the
+//! identical churn script with legacy full sampling at a 1 s grid (a
+//! superset of every possible cadence), so any cadence's due ticks are a
+//! subset of the oracle's samples.
+//!
+//! Also pins that the observation plane is *inert*: installing, mutating,
+//! or emptying the subscription set never changes pod state — the two
+//! clusters stay bit-identical in phase and usage throughout.
+//!
+//! Mirrors the `informer_delta_prop.rs` pattern (one seeded churn script,
+//! sparse structure vs dense oracle, state compared tick by tick).
+
+use arcv::scenario::LeakProcess;
+use arcv::simkube::{
+    Cluster, ClusterConfig, MemoryProcess, Node, ResourceSpec, ScrapeCadence, SharedInformer,
+    SubscriptionSet, SwapDevice,
+};
+use arcv::util::prop::{self, require};
+
+/// A flat memory process (LeakProcess with zero leak).
+fn flat(usage_gb: f64, secs: f64) -> Box<dyn MemoryProcess> {
+    Box::new(LeakProcess {
+        base_gb: usage_gb,
+        leak_gb_per_sec: 0.0,
+        lifetime_secs: secs,
+    })
+}
+
+/// A linear ramp — crosses its limit mid-run, so no-swap nodes OOM it.
+fn leak(base_gb: f64, leak_per_sec: f64, secs: f64) -> Box<dyn MemoryProcess> {
+    Box::new(LeakProcess {
+        base_gb,
+        leak_gb_per_sec: leak_per_sec,
+        lifetime_secs: secs,
+    })
+}
+
+fn build_cluster(cap: f64) -> Cluster {
+    Cluster::new(
+        vec![Node::new("w0", cap, SwapDevice::disabled())],
+        ClusterConfig::default(),
+    )
+}
+
+#[test]
+fn subscribed_sampler_matches_full_sampler_restricted_to_due_ticks() {
+    prop::check("scrape-subscriptions-vs-full", 40, |g| {
+        let cap = g.f64(32.0, 128.0);
+        // `a` runs the subscription plane on the default 5 s grid; `b` is
+        // the dense oracle — legacy full sampling, 1 s grid, so it holds a
+        // fresh sample for every Running pod at every tick
+        let mut a = build_cluster(cap);
+        let mut b = build_cluster(cap);
+        a.install_subscriptions(SubscriptionSet::new());
+        b.metrics.period_secs = 1;
+        let grid = a.metrics.period_secs;
+        let mut subs = SubscriptionSet::new();
+        let mut created = 0usize;
+        for _round in 0..30 {
+            match g.usize(0, 7) {
+                0 | 1 => {
+                    // identical arrival on both clusters
+                    let name = format!("p{created}");
+                    let lim = g.f64(1.0, 8.0);
+                    let secs = g.f64(10.0, 90.0);
+                    if g.bool(0.3) {
+                        let slope = lim * g.f64(0.05, 0.3);
+                        a.create_pod(&name, ResourceSpec::memory_exact(lim), leak(lim * 0.6, slope, secs));
+                        b.create_pod(&name, ResourceSpec::memory_exact(lim), leak(lim * 0.6, slope, secs));
+                    } else {
+                        let u = lim * g.f64(0.3, 0.9);
+                        a.create_pod(&name, ResourceSpec::memory_exact(lim), flat(u, secs));
+                        b.create_pod(&name, ResourceSpec::memory_exact(lim), flat(u, secs));
+                    }
+                    created += 1;
+                }
+                2 if created > 0 => {
+                    // (re)subscribe at a random cadence — shared grid or a
+                    // private interval, including off-grid primes
+                    let pod = g.usize(0, created - 1);
+                    let cad = if g.bool(0.4) {
+                        ScrapeCadence::Grid
+                    } else {
+                        ScrapeCadence::EverySecs(g.u64(1, 12))
+                    };
+                    subs.subscribe(pod, cad);
+                    a.install_subscriptions(subs.clone());
+                }
+                3 if created > 0 => {
+                    subs.unsubscribe(g.usize(0, created - 1));
+                    a.install_subscriptions(subs.clone());
+                }
+                4 if created > 0 => {
+                    let pod = g.usize(0, created - 1);
+                    a.kill_pod(pod);
+                    b.kill_pod(pod);
+                }
+                5 if created > 0 => {
+                    let pod = g.usize(0, created - 1);
+                    let gb = g.f64(1.0, 16.0);
+                    a.patch_pod_memory(pod, gb);
+                    b.patch_pod_memory(pod, gb);
+                }
+                6 if created > 0 => {
+                    let pod = g.usize(0, created - 1);
+                    let gb = g.f64(1.0, 16.0);
+                    a.restart_pod(pod, gb);
+                    b.restart_pod(pod, gb);
+                }
+                _ => {}
+            }
+            // step both clusters in lockstep and compare tick by tick
+            for _ in 0..g.u64(1, 10) {
+                a.step();
+                b.step();
+                require(a.now == b.now, "mirrored clocks diverged")?;
+                let t = a.now;
+                for pod in 0..created {
+                    // the observation plane must be inert: pod state is
+                    // bit-identical whether or not anyone subscribes
+                    if a.pod(pod).phase != b.pod(pod).phase {
+                        return Err(format!(
+                            "t={t}: pod {pod} phase diverged — {:?} vs {:?}",
+                            a.pod(pod).phase,
+                            b.pod(pod).phase
+                        ));
+                    }
+                    require(
+                        a.pod(pod).usage.usage_gb == b.pod(pod).usage.usage_gb,
+                        "pod usage diverged between mirrored clusters",
+                    )?;
+                    let due = subs.due(pod, t, grid) && a.pod(pod).is_running();
+                    let last_a = a.metrics.last(pod);
+                    if due {
+                        let Some(sa) = last_a else {
+                            return Err(format!("t={t}: pod {pod} due but never sampled"));
+                        };
+                        require(sa.time == t, "due pod's sample not stamped this tick")?;
+                        let Some(sb) = b.metrics.last(pod) else {
+                            return Err(format!("t={t}: oracle has no sample for pod {pod}"));
+                        };
+                        require(sb.time == t, "oracle must sample every Running pod tick")?;
+                        if sa != sb {
+                            return Err(format!(
+                                "t={t}: pod {pod} sample diverged — {sa:?} vs {sb:?}"
+                            ));
+                        }
+                    } else if let Some(sa) = last_a {
+                        // not subscribed+due+Running: the sparse sampler
+                        // must NOT have recorded anything this tick
+                        require(
+                            sa.time != t,
+                            "sampler recorded a pod that was not subscribed and due",
+                        )?;
+                    }
+                }
+            }
+        }
+        // the plane's own ledger is consistent with what we observed
+        let s = a.scrape_stats();
+        require(
+            s.samples_recorded <= s.pods_visited,
+            "recorded samples cannot exceed visits",
+        )?;
+        require(
+            a.metrics.live_series() <= created,
+            "live series bounded by created pods",
+        )?;
+        Ok(())
+    });
+}
+
+/// Two consumers on one shared informer plane: the plane replays each
+/// watch record once no matter how many consumers ride it, while each
+/// consumer is credited the full stream — the saving the plane exists for.
+#[test]
+fn shared_informer_replays_the_stream_once_for_all_consumers() {
+    prop::check("shared-informer-replay-once", 25, |g| {
+        let mut c = build_cluster(g.f64(32.0, 96.0));
+        let mut plane = SharedInformer::new();
+        let first = plane.register();
+        let second = plane.register();
+        let mut created = 0usize;
+        for _round in 0..20 {
+            match g.usize(0, 4) {
+                0 | 1 => {
+                    let lim = g.f64(1.0, 6.0);
+                    c.create_pod(
+                        &format!("p{created}"),
+                        ResourceSpec::memory_exact(lim),
+                        flat(lim * g.f64(0.3, 0.8), g.f64(5.0, 40.0)),
+                    );
+                    created += 1;
+                }
+                2 if created > 0 => {
+                    c.patch_pod_memory(g.usize(0, created - 1), g.f64(1.0, 8.0));
+                }
+                3 if created > 0 => {
+                    c.kill_pod(g.usize(0, created - 1));
+                }
+                _ => {
+                    c.run_until(g.u64(1, 10), |_| false);
+                }
+            }
+            // one driver syncs physically; the other rides the delta
+            plane.sync(&mut c, first);
+            plane.credit(&c, second);
+        }
+        let head = c.events.revision();
+        // physical replay is bounded by the stream itself (each record
+        // once), while per-consumer credit shows the 2x a pair of private
+        // informers would have paid
+        require(
+            plane.stats().events_replayed <= head,
+            "plane replayed records more than once",
+        )?;
+        require(
+            plane.replays(first) == plane.replays(second),
+            "both consumers must be credited the same stream",
+        )?;
+        require(
+            plane.total_replays() == 2 * plane.replays(first),
+            "total credit is the sum over consumers",
+        )?;
+        require(plane.consumer_count() == 2, "both consumers live")?;
+        Ok(())
+    });
+}
