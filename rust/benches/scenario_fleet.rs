@@ -7,7 +7,11 @@
 //! kernel only) with one swap-thrashing leaker, under {lockstep, serial
 //! event kernel, sharded kernel}, emitting `bench_out/BENCH_scale.json`
 //! (ticks/s + wall-clock per cell, the informer's per-wake delta cost,
-//! and the interned-calibration-table RSS proxy).
+//! and the interned-calibration-table RSS proxy). A final thrash rung
+//! drives parallel stepping regions directly: a fleet where every node
+//! hosts 25 % proof-defeating pods, timed per region thread count with
+//! an FNV fingerprint of the event log per run (the `thrash` block in
+//! `BENCH_scale.json`).
 //!
 //!   cargo bench --bench scenario_fleet
 //!
@@ -22,18 +26,25 @@
 //! non-zero if any pod is stuck Pending at drain, the parallel grid
 //! diverges from the serial one, any kernel flavor diverges from
 //! lockstep on the scale ladder, the sharded kernel is slower than the
-//! serial event kernel there (the fleet-scale regression gate), or the
-//! delta informer relists after its initial LIST. (Per-wake informer
-//! rebuild counts are *reported* in BENCH_scale.json; the controlled
-//! delta-vs-relist cost gate lives in perf_sim's BENCH_informer.)
+//! serial event kernel there (the fleet-scale regression gate), the
+//! delta informer relists after its initial LIST, parallel stepping
+//! regions run slower than serial regions on the thrash rung, or the
+//! event-log hash differs across region thread counts there. (Per-wake
+//! informer rebuild counts are *reported* in BENCH_scale.json; the
+//! controlled delta-vs-relist cost gate lives in perf_sim's
+//! BENCH_informer.)
 
 use arcv::harness::SwapKind;
 use arcv::policy::arcv::ArcvParams;
 use arcv::scenario::{
     outcome_json, outcome_line, run_grid, run_scenario, run_scenario_mode, summarize,
-    summary_line, Arrivals, Fault, ScenarioOutcome, ScenarioPolicy, ScenarioSpec, WorkloadMix,
+    summary_line, Arrivals, Fault, LeakProcess, ScenarioOutcome, ScenarioPolicy, ScenarioSpec,
+    WorkloadMix,
 };
-use arcv::simkube::{Event, InformerStats, KernelMode};
+use arcv::simkube::{
+    AdvanceOpts, Cluster, ClusterConfig, Event, InformerStats, KernelMode, MemoryProcess, Node,
+    ResourceSpec, SubscriptionSet, SwapDevice,
+};
 use arcv::util::json::{arr, num, obj, s, Json};
 use arcv::workloads::{intern_stats, live_tables, AppId};
 use std::time::Instant;
@@ -126,6 +137,79 @@ fn scale_cell(spec: &ScenarioSpec, mode: KernelMode, keep_events: bool) -> Cell 
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Thrash-rung shape: node capacity is `2 GB × pods`, so best-fit packs
+/// exactly this many 2 GB requests per node, in pod-id order.
+const THRASH_PODS_PER_NODE: usize = 100;
+const THRASH_NODES: usize = 100;
+const THRASH_TICKS: u64 = 600;
+
+/// A flat memory process: constant usage, effectively immortal (nothing
+/// on the thrash rung may complete — completions would interrupt regions
+/// and muddy the wall-clock comparison).
+fn flat_process(usage_gb: f64) -> Box<dyn MemoryProcess> {
+    Box::new(LeakProcess {
+        base_gb: usage_gb,
+        leak_gb_per_sec: 0.0,
+        lifetime_secs: 1.0e7,
+    })
+}
+
+/// The thrash-rung fleet: every node hosts 25 % proof-defeating pods
+/// (flat usage parked 25 % over the limit — permanent swap residency and
+/// I/O debt fail the per-pod quiescence proof every tick) alongside 75 %
+/// calm under-limit pods. Every node is hot, so `advance_to` runs one
+/// stepping region after another — the many-simultaneous-regions shape
+/// the shard-local event buffers parallelize. No metrics subscriptions
+/// are installed, so regions always run to their proof ceiling, never to
+/// a scrape tick.
+fn thrash_cluster() -> Cluster {
+    let nodes: Vec<Node> = (0..THRASH_NODES)
+        .map(|i| {
+            Node::new(
+                &format!("thrash{i}"),
+                2.0 * THRASH_PODS_PER_NODE as f64,
+                SwapDevice::hdd(32.0),
+            )
+        })
+        .collect();
+    // shallow metric rings: the rung never scrapes, and 10⁴ pods ×
+    // the default 8192-deep rings would be pure allocation noise
+    let mut c = Cluster::new(
+        nodes,
+        ClusterConfig {
+            metrics_history: 64,
+            ..ClusterConfig::default()
+        },
+    );
+    c.install_subscriptions(SubscriptionSet::new());
+    for i in 0..THRASH_NODES * THRASH_PODS_PER_NODE {
+        let usage = if i % 4 == 0 { 2.5 } else { 1.0 };
+        // create_pod self-places while capacity lasts; requests exactly
+        // fill every node, so nothing may be left Pending
+        c.create_pod(&format!("p{i}"), ResourceSpec::memory_exact(2.0), flat_process(usage));
+    }
+    let pending = c.pods.iter().filter(|p| p.node.is_none()).count();
+    assert_eq!(pending, 0, "thrash fleet must place fully");
+    c
+}
+
+/// FNV-1a over the debug rendering of every event — the event-log
+/// fingerprint BENCH_scale.json records per region thread count.
+fn event_log_hash(events: &[Event]) -> u64 {
+    use std::fmt::Write as _;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut line = String::new();
+    for e in events {
+        line.clear();
+        let _ = write!(line, "{e:?}");
+        for &b in line.as_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        h = (h ^ 0x0a).wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 fn main() {
@@ -373,6 +457,87 @@ fn main() {
             ),
         ]));
     }
+    println!("\n=== thrash rung: parallel stepping regions vs serial regions ===\n");
+    // The rung every other section can't produce: ALL nodes hot at once,
+    // 25 % of the fleet proof-defeating, zero coasts. Shards = 1 is the
+    // serial-region baseline (same region machinery, one worker); the
+    // lockstep run is the ground-truth event-log fingerprint.
+    let mut thrash_rows = Vec::new();
+    let mut thrash_parallel_slow = false;
+    let mut thrash_hash_mismatch = false;
+    let mut thrash_no_regions = false;
+    let mut thrash_not_parallel = false;
+
+    let mut reference = thrash_cluster();
+    let t0 = Instant::now();
+    reference.run_until(THRASH_TICKS, |_| false);
+    let thrash_lockstep_secs = t0.elapsed().as_secs_f64();
+    let thrash_ref_hash = event_log_hash(&reference.events.events);
+    drop(reference);
+
+    let thread_counts: Vec<usize> =
+        [1usize, 2, 4, 8].into_iter().filter(|&t| t <= threads).collect();
+    let mut thrash_serial_secs = 0.0_f64;
+    for &count in &thread_counts {
+        let mut c = thrash_cluster();
+        let opts = AdvanceOpts {
+            event_driven: true,
+            sample_metrics: true,
+            shards: count,
+        };
+        let t0 = Instant::now();
+        while c.now < THRASH_TICKS {
+            c.advance_to(THRASH_TICKS, opts);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let hash = event_log_hash(&c.events.events);
+        let cs = c.coast_stats;
+        if count == 1 {
+            thrash_serial_secs = secs;
+        }
+        let vs_serial = thrash_serial_secs / secs.max(1e-9);
+        if hash != thrash_ref_hash {
+            thrash_hash_mismatch = true;
+        }
+        if cs.regions_entered == 0 {
+            thrash_no_regions = true;
+        }
+        if count >= 2 {
+            // the perf gate: parallel regions must never lose to serial
+            // regions (5 % runner-noise tolerance); and the rung is only
+            // meaningful if the parallel path actually engaged
+            if secs > thrash_serial_secs * 1.05 {
+                thrash_parallel_slow = true;
+            }
+            if cs.region_workers_max < 2 {
+                thrash_not_parallel = true;
+            }
+        }
+        println!(
+            "  shards {count}: {secs:.3}s ({vs_serial:.2}x vs serial regions; lockstep \
+             {thrash_lockstep_secs:.3}s), {} regions, workers mean {:.1} max {}, merge {:.4}s, \
+             events hash {hash:016x} {}",
+            cs.regions_entered,
+            cs.region_workers_mean(),
+            cs.region_workers_max,
+            cs.merge_nanos as f64 / 1e9,
+            if hash == thrash_ref_hash { "(= lockstep)" } else { "(DIVERGED)" },
+        );
+        thrash_rows.push(obj(vec![
+            ("threads", num(count as f64)),
+            ("secs", num(secs)),
+            ("ticks_per_sec", num(THRASH_TICKS as f64 / secs.max(1e-9))),
+            ("speedup_vs_serial_regions", num(vs_serial)),
+            ("event_log_hash", s(&format!("{hash:016x}"))),
+            ("hash_matches_lockstep", Json::Bool(hash == thrash_ref_hash)),
+            ("regions_entered", num(cs.regions_entered as f64)),
+            ("region_exact_pod_ticks", num(cs.region_exact_pod_ticks as f64)),
+            ("region_workers_max", num(cs.region_workers_max as f64)),
+            ("region_workers_mean", num(cs.region_workers_mean())),
+            ("merge_secs", num(cs.merge_nanos as f64 / 1e9)),
+        ]));
+    }
+
     let istats = intern_stats();
     let scale_json = obj(vec![
         ("bench", s("scenario_fleet/scale")),
@@ -381,6 +546,18 @@ fn main() {
         ("intern_hits", num(istats.hits as f64)),
         ("intern_table_builds", num(istats.table_builds as f64)),
         ("rows", arr(scale_rows)),
+        (
+            "thrash",
+            obj(vec![
+                ("pods", num((THRASH_NODES * THRASH_PODS_PER_NODE) as f64)),
+                ("nodes", num(THRASH_NODES as f64)),
+                ("thrasher_frac", num(0.25)),
+                ("sim_ticks", num(THRASH_TICKS as f64)),
+                ("lockstep_secs", num(thrash_lockstep_secs)),
+                ("lockstep_hash", s(&format!("{thrash_ref_hash:016x}"))),
+                ("rows", arr(thrash_rows)),
+            ]),
+        ),
     ]);
     std::fs::create_dir_all("bench_out").ok();
     std::fs::write("bench_out/BENCH_scale.json", scale_json.to_string_pretty())
@@ -449,6 +626,26 @@ fn main() {
     // BENCH_informer; the ladder reports rebuilds-per-wake alongside)
     if informer_relisted {
         eprintln!("FAIL: the delta informer relisted after its initial LIST");
+        std::process::exit(1);
+    }
+    // PR 8 gates: parallel stepping regions. The hash gate is the
+    // determinism contract (shard-buffer merges must reproduce the serial
+    // emission order bit-for-bit at every thread count); the speed gate
+    // is the reason the regions shard at all.
+    if thrash_hash_mismatch {
+        eprintln!("FAIL: event-log hash diverged across region thread counts on the thrash rung");
+        std::process::exit(1);
+    }
+    if thrash_parallel_slow {
+        eprintln!("FAIL: parallel stepping regions slower than serial regions on the thrash rung");
+        std::process::exit(1);
+    }
+    if thrash_no_regions {
+        eprintln!("FAIL: the thrash rung never entered a stepping region");
+        std::process::exit(1);
+    }
+    if thrash_not_parallel {
+        eprintln!("FAIL: the thrash rung never engaged >= 2 region workers at >= 2 shards");
         std::process::exit(1);
     }
 }

@@ -25,7 +25,7 @@
 
 use crate::policy::{Action, NodePolicy, PerPodAdapter, PodAction, VerticalPolicy};
 use crate::simkube::api::{ActionRecord, ApiClient, InformerStats, Verb};
-use crate::simkube::cluster::Cluster;
+use crate::simkube::cluster::{Cluster, CoastStats};
 use crate::simkube::metrics::{ScrapeStats, SubscriptionSet};
 use crate::simkube::pod::PodId;
 
@@ -75,6 +75,15 @@ pub trait Tick {
     /// (the benches and the kernel-equivalence suite read relist/rebuild
     /// counts off this).
     fn informer(&self) -> Option<InformerStats> {
+        None
+    }
+
+    /// Coordinator-side kernel/coast telemetry, if this coordinator runs
+    /// its own auxiliary clusters (none of the built-ins do). The harness
+    /// merges it with the cluster-side [`CoastStats`] — coasted/deferred
+    /// pod ticks plus the parallel-region counters — into the run's
+    /// `RunOutput::coast` block.
+    fn coast(&self) -> Option<CoastStats> {
         None
     }
 }

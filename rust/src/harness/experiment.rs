@@ -9,7 +9,7 @@ use crate::policy::oracle::OraclePolicy;
 use crate::policy::vpa::{UpdateMode, VpaFullPolicy, VpaSimPolicy};
 use crate::simkube::api::{ApiClient, InformerStats, Outcome};
 use crate::simkube::clock::next_multiple;
-use crate::simkube::cluster::{Cluster, ClusterConfig};
+use crate::simkube::cluster::{Cluster, ClusterConfig, CoastStats};
 use crate::simkube::events::Event;
 use crate::simkube::kernel::{run_kernel, EventSource, KernelMode, KernelStats};
 use crate::simkube::metrics::ScrapeStats;
@@ -251,6 +251,10 @@ pub struct RunOutput {
     /// The run's subscription-plane telemetry: cluster-side scrape
     /// counters merged with the controller's informer-side figures.
     pub scrape: ScrapeStats,
+    /// The run's kernel-coast telemetry: coasted/deferred/stepped pod
+    /// ticks plus the parallel stepping-region counters (regions entered,
+    /// exact-pod ticks, worker occupancy, merge time).
+    pub coast: CoastStats,
 }
 
 /// Run one experiment to completion (or budget) on the event-driven
@@ -361,12 +365,16 @@ pub fn run_with_mode(cfg: &ExperimentConfig, kind: PolicyKind, mode: KernelMode)
     let scrape = cluster
         .scrape_stats()
         .merged(controller.scrape().unwrap_or_default());
+    let coast = cluster
+        .coast_stats
+        .merged(controller.coast().unwrap_or_default());
     RunOutput {
         result,
         events: cluster.events.events,
         stats,
         informer: controller.informer().unwrap_or_default(),
         scrape,
+        coast,
     }
 }
 

@@ -11,13 +11,18 @@
 //!   node*, so a swap-thrashing pod steps alone while every
 //!   provably-quiescent neighbor keeps coasting (lazily, integrated in
 //!   batch), and the integration work fans out across worker threads.
+//!   Stepping regions themselves are sharded too: the proof-defeating
+//!   pods are partitioned by node across workers, each worker emits into
+//!   a shard-local event buffer, and the buffers merge back into the
+//!   global [`EventLog`] in the serial emission order (see
+//!   `Cluster::step_region`).
 //!
 //! All three are bit-for-bit identical in `RunResult` + `EventLog`
 //! (`rust/tests/kernel_equivalence.rs`); the scheduling queue below keeps
 //! a requeue pass at O(waiting · log nodes) instead of O(all pods ever).
 
 use super::clock::next_multiple;
-use super::events::{EventKind, EventLog, NODE_EVENT};
+use super::events::{Event, EventKind, EventLog, NODE_EVENT};
 use super::kubelet::{IoState, Kubelet, KubeletConfig};
 use super::metrics::{MetricsStore, ScrapeStats, SubscriptionSet};
 use super::node::Node;
@@ -26,6 +31,9 @@ use super::qos::QosClass;
 use super::resources::ResourceSpec;
 use super::scheduler::{CapacityIndex, OrdF64, Scheduler, Strategy};
 use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex};
+use std::time::Instant;
 
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -62,6 +70,105 @@ pub struct CoastStats {
     pub deferred_pod_ticks: u64,
     /// Pod-ticks advanced by exact per-second kubelet stepping.
     pub stepped_pod_ticks: u64,
+    /// Stepping regions entered (serial or parallel).
+    pub regions_entered: u64,
+    /// Exact per-second pod-ticks spent inside stepping regions — the
+    /// subset of `stepped_pod_ticks` that the region shards carry.
+    pub region_exact_pod_ticks: u64,
+    /// Most shard workers any single region kept busy.
+    pub region_workers_max: u64,
+    /// Σ busy workers across regions; the mean occupancy is
+    /// [`Self::region_workers_mean`].
+    pub region_workers_sum: u64,
+    /// Wall nanoseconds spent merging shard event buffers into the log.
+    /// Machine-dependent diagnostic — never part of any equivalence
+    /// comparison (those are field-level on the deterministic counters).
+    pub merge_nanos: u64,
+}
+
+impl CoastStats {
+    /// Mean busy workers per stepping region (0 with no regions).
+    pub fn region_workers_mean(&self) -> f64 {
+        if self.regions_entered == 0 {
+            0.0
+        } else {
+            self.region_workers_sum as f64 / self.regions_entered as f64
+        }
+    }
+
+    /// Field-wise sum — lets a harness fold cluster-side counters with a
+    /// coordinator-side contribution, mirroring `ScrapeStats::merged`.
+    pub fn merged(mut self, other: CoastStats) -> CoastStats {
+        self.coasted_pod_ticks += other.coasted_pod_ticks;
+        self.deferred_pod_ticks += other.deferred_pod_ticks;
+        self.stepped_pod_ticks += other.stepped_pod_ticks;
+        self.regions_entered += other.regions_entered;
+        self.region_exact_pod_ticks += other.region_exact_pod_ticks;
+        self.region_workers_max = self.region_workers_max.max(other.region_workers_max);
+        self.region_workers_sum += other.region_workers_sum;
+        self.merge_nanos += other.merge_nanos;
+        self
+    }
+
+    /// Prometheus self-exposition of the clock-discipline counters,
+    /// served next to the scrape plane's in [`Cluster::prometheus_text`].
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        let mut emit = |name: &str, kind: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {v}\n"
+            ));
+        };
+        emit(
+            "arcv_kernel_coasted_pod_ticks_total",
+            "counter",
+            "Pod-ticks integrated analytically by cluster-wide coasts.",
+            self.coasted_pod_ticks as f64,
+        );
+        emit(
+            "arcv_kernel_deferred_pod_ticks_total",
+            "counter",
+            "Pod-ticks integrated lazily inside stepping regions.",
+            self.deferred_pod_ticks as f64,
+        );
+        emit(
+            "arcv_kernel_stepped_pod_ticks_total",
+            "counter",
+            "Pod-ticks advanced by exact per-second stepping.",
+            self.stepped_pod_ticks as f64,
+        );
+        emit(
+            "arcv_kernel_regions_entered_total",
+            "counter",
+            "Stepping regions entered by the sharded kernel.",
+            self.regions_entered as f64,
+        );
+        emit(
+            "arcv_kernel_region_exact_pod_ticks_total",
+            "counter",
+            "Exact pod-ticks carried by region shards.",
+            self.region_exact_pod_ticks as f64,
+        );
+        emit(
+            "arcv_kernel_region_workers_max",
+            "gauge",
+            "Most shard workers any single region kept busy.",
+            self.region_workers_max as f64,
+        );
+        emit(
+            "arcv_kernel_region_workers_mean",
+            "gauge",
+            "Mean busy shard workers per region.",
+            self.region_workers_mean(),
+        );
+        emit(
+            "arcv_kernel_region_merge_seconds_total",
+            "counter",
+            "Wall time merging shard event buffers into the log.",
+            self.merge_nanos as f64 / 1e9,
+        );
+        out
+    }
 }
 
 /// One pod's lazy-coast bookkeeping inside a sharded stepping region: its
@@ -73,6 +180,330 @@ struct Deferral {
     anchor: u64,
     v0: f64,
     slope: f64,
+}
+
+/// Raw shared view over the tick-mutable cluster tables, handed to the
+/// stepping-region shard workers (and, with a null `defer`, to the serial
+/// tick wrappers so there is exactly one kubelet/eviction transition
+/// implementation).
+///
+/// # Safety
+///
+/// Soundness rests on the region partition invariant: every pod (with
+/// its `IoState` and `Deferral` slot) is touched only by the worker that
+/// owns the pod's *bound node*, node structs are touched only by their
+/// owner, and a pod→node binding cannot change inside a region — no bind
+/// path runs there (restart expiries are excluded by the region ceiling),
+/// and eviction/completion unbind but leave `pod.node` set, so ownership
+/// never migrates mid-region. The coordinator only dereferences these
+/// pointers while every worker is parked at the tick barrier.
+struct RegionTables {
+    pods: *mut Pod,
+    io: *mut IoState,
+    nodes: *mut Node,
+    /// The region's deferral slots (one per pod); null outside regions —
+    /// the serial tick wrappers never touch it.
+    defer: *mut Option<Deferral>,
+}
+
+unsafe impl Send for RegionTables {}
+unsafe impl Sync for RegionTables {}
+
+#[allow(clippy::mut_from_ref)]
+impl RegionTables {
+    unsafe fn pod(&self, id: PodId) -> &mut Pod {
+        &mut *self.pods.add(id)
+    }
+    unsafe fn pod_ref(&self, id: PodId) -> &Pod {
+        &*self.pods.add(id)
+    }
+    unsafe fn io(&self, id: PodId) -> &mut IoState {
+        &mut *self.io.add(id)
+    }
+    unsafe fn io_ref(&self, id: PodId) -> &IoState {
+        &*self.io.add(id)
+    }
+    unsafe fn node(&self, n: usize) -> &mut Node {
+        &mut *self.nodes.add(n)
+    }
+    unsafe fn node_ref(&self, n: usize) -> &Node {
+        &*self.nodes.add(n)
+    }
+    unsafe fn deferral(&self, id: PodId) -> &mut Option<Deferral> {
+        &mut *self.defer.add(id)
+    }
+}
+
+/// Side effects a region tick defers to region exit. Nothing reads the
+/// scheduler epoch, capacity index, metrics store, or eviction queue
+/// mid-region, so shard workers record what happened instead of touching
+/// those whole-cluster structures, and the coordinator folds the shard
+/// journals after the last tick ([`Cluster::apply_journal`]) in an order
+/// independent of how the work was partitioned.
+#[derive(Debug, Default)]
+struct RegionJournal {
+    sched_epoch_bumps: u64,
+    stepped_pod_ticks: u64,
+    deferred_pod_ticks: u64,
+    /// Completed pods whose metric series must prune.
+    prune: Vec<PodId>,
+    /// Nodes whose capacity-index entry must refresh (reservations
+    /// moved). Deduplicated at apply time; `CapacityIndex::refresh`
+    /// against the final node state is idempotent.
+    refresh: Vec<usize>,
+    /// Pressure-evicted pods for the requeue conversion queue.
+    evicted: Vec<PodId>,
+    /// Whether every dirty pod this shard owns was calm after the tick.
+    dirty_calm: bool,
+}
+
+impl RegionJournal {
+    fn absorb(&mut self, other: &mut RegionJournal) {
+        self.sched_epoch_bumps += other.sched_epoch_bumps;
+        self.stepped_pod_ticks += other.stepped_pod_ticks;
+        self.deferred_pod_ticks += other.deferred_pod_ticks;
+        self.prune.append(&mut other.prune);
+        self.refresh.append(&mut other.refresh);
+        self.evicted.append(&mut other.evicted);
+    }
+}
+
+/// One hot node's region-local stepping state: its exact pods (kept
+/// ascending — same-node pods share the node's swap device, so intra-node
+/// tick order is part of the state contract) plus the incremental
+/// worst-case envelope of its deferred pods (Σ v0, Σ slope at the region
+/// anchor), which replaces the old per-pod re-sum in the per-tick
+/// pressure proof.
+struct HotNode {
+    idx: usize,
+    exact: Vec<PodId>,
+    /// Deferred pods currently folded into the envelope (0 after the
+    /// node materializes).
+    deferred: usize,
+    env_v0: f64,
+    env_slope: f64,
+}
+
+/// One worker's slice of a stepping region: a contiguous ascending run of
+/// hot nodes, shard-local event buffers (kubelet-phase and eviction-phase
+/// kept apart — the deterministic merge orders them differently), and the
+/// shard's journaled side effects.
+struct RegionShard {
+    nodes: Vec<HotNode>,
+    /// The shard's exact pods that failed the cheap calm flags at region
+    /// entry — the pods that forced the region.
+    dirty: Vec<PodId>,
+    kub_buf: Vec<Event>,
+    ev_buf: Vec<Event>,
+    journal: RegionJournal,
+}
+
+/// Cheap instantaneous quiescence flags (no slope probing) — the
+/// re-quiescence tripwire that lets a stepping region end as soon as the
+/// pods that forced it (swap drained, resize synced) calm down.
+/// [`Cluster::pod_is_calm`] delegates here; shard workers call it through
+/// the raw view.
+fn pod_calm(pod: &Pod, io: &IoState) -> bool {
+    if pod.phase != PodPhase::Running {
+        return true; // terminal/pending pods no longer force stepping
+    }
+    io.debt_secs == 0.0
+        && pod.usage.swap_gb == 0.0
+        && pod.pending_resize.is_none()
+        && pod.progress_secs.fract() == 0.0
+        && pod.wall_running_secs > 0
+        && pod.effective_limit_gb.is_finite()
+}
+
+/// One kubelet tick for one pod through the raw region view — the single
+/// implementation behind the lockstep wrapper (`Cluster::kubelet_tick_one`)
+/// and the region shard workers, including the completion →
+/// reservation-release transition (journaled).
+///
+/// # Safety
+///
+/// The caller must own `id` and its bound node per the [`RegionTables`]
+/// partition contract.
+unsafe fn kubelet_tick_core(
+    kubelet: &Kubelet,
+    tb: &RegionTables,
+    now: u64,
+    id: PodId,
+    sink: &mut Vec<Event>,
+    j: &mut RegionJournal,
+) {
+    let pod = tb.pod(id);
+    let node_idx = match pod.node {
+        Some(n) if pod.phase == PodPhase::Running => n,
+        _ => return,
+    };
+    let node = tb.node(node_idx);
+    kubelet.tick_pod(now, pod, tb.io(id), &mut node.swap, sink);
+    // a completed pod releases its reservation (kube GC semantics) and
+    // its sampled series (pruned when the journal lands)
+    if pod.phase == PodPhase::Succeeded {
+        let req = pod.spec.memory_request_gb();
+        node.unbind(id, req);
+        j.sched_epoch_bumps += 1;
+        j.refresh.push(node_idx);
+        j.prune.push(id);
+    }
+    j.stepped_pod_ticks += 1;
+}
+
+/// Node-pressure eviction scan for one node through the raw region view,
+/// in QoS order (BestEffort first), repeating until the node fits —
+/// the single implementation behind [`Cluster::eviction_pass_node`] and
+/// the region shard workers. Evictions land in the shard's eviction
+/// buffer and journal.
+///
+/// # Safety
+///
+/// The caller must own node `n` and every pod bound to it per the
+/// [`RegionTables`] partition contract.
+unsafe fn eviction_pass_core(
+    tb: &RegionTables,
+    now: u64,
+    n: usize,
+    sink: &mut Vec<Event>,
+    j: &mut RegionJournal,
+) {
+    loop {
+        let node = tb.node(n);
+        let rss_sum: f64 = node
+            .pods
+            .iter()
+            .map(|&p| tb.pod_ref(p).usage.rss_gb)
+            .sum();
+        if rss_sum <= node.capacity_gb {
+            break;
+        }
+        // victim: lowest QoS rank, largest RSS
+        let victim = node
+            .pods
+            .iter()
+            .copied()
+            .filter(|&p| tb.pod_ref(p).phase == PodPhase::Running)
+            .min_by(|&a, &b| {
+                let pa = tb.pod_ref(a);
+                let pb = tb.pod_ref(b);
+                pa.qos
+                    .eviction_rank()
+                    .cmp(&pb.qos.eviction_rank())
+                    .then(pb.usage.rss_gb.total_cmp(&pa.usage.rss_gb))
+            });
+        let Some(v) = victim else { break };
+        let vic = tb.pod(v);
+        let qos_rank = vic.qos.eviction_rank();
+        node.swap.page_in(vic.usage.swap_gb);
+        vic.usage = Default::default();
+        vic.phase = PodPhase::Evicted;
+        let req = vic.spec.memory_request_gb();
+        node.unbind(v, req);
+        j.sched_epoch_bumps += 1;
+        j.refresh.push(n);
+        j.evicted.push(v);
+        sink.push(Event {
+            time: now,
+            pod: v,
+            kind: EventKind::Evicted { node: n, qos_rank },
+        });
+    }
+}
+
+/// Whether hot node `hn` provably cannot evict at tick `t`: deferred pods
+/// contribute the node's incremental worst-case envelope
+/// (`Σv0 + Σslope·k`, maintained since region entry instead of re-summed
+/// per pod per tick), exact pods their just-stepped RSS. An upper bound
+/// within capacity means the true Σ rss is too, so the eviction scan is
+/// skipped whole.
+///
+/// # Safety
+///
+/// Caller owns `hn` and its pods per the [`RegionTables`] contract.
+unsafe fn node_pressure_ok(tb: &RegionTables, hn: &HotNode, t: u64, anchor: u64) -> bool {
+    let mut upper = hn.env_v0 + hn.env_slope * (t - anchor) as f64;
+    for &id in &hn.exact {
+        let pod = tb.pod_ref(id);
+        if pod.phase == PodPhase::Running {
+            upper += pod.usage.rss_gb;
+        }
+    }
+    upper <= tb.node_ref(hn.idx).capacity_gb
+}
+
+/// Catch hot node `hn`'s deferred pods up to tick `to` (exact
+/// integration, bit-identical to having stepped them) and fold them into
+/// its exact set — a pressure proof failed and the eviction scan needs
+/// true RSS. Walks the node's pod list in place (the old implementation
+/// cloned it on every failed proof) and zeroes the envelope: every
+/// formerly-deferred pod contributes its stepped RSS from here on.
+///
+/// # Safety
+///
+/// Caller owns `hn` and its pods per the [`RegionTables`] contract.
+unsafe fn materialize_node_core(
+    tb: &RegionTables,
+    hn: &mut HotNode,
+    to: u64,
+    j: &mut RegionJournal,
+) {
+    if hn.deferred == 0 {
+        return;
+    }
+    let node = tb.node_ref(hn.idx);
+    for &id in &node.pods {
+        if let Some(d) = tb.deferral(id).take() {
+            let h = to - d.anchor;
+            j.deferred_pod_ticks += h;
+            if h > 0 {
+                Cluster::integrate_pod(tb.pod(id), h);
+            }
+            if let Err(pos) = hn.exact.binary_search(&id) {
+                hn.exact.insert(pos, id);
+            }
+        }
+    }
+    hn.deferred = 0;
+    hn.env_v0 = 0.0;
+    hn.env_slope = 0.0;
+}
+
+/// One region tick for one shard: kubelet-step every exact pod (per node,
+/// ascending id — the shared swap device makes intra-node order part of
+/// the state contract), then re-prove pressure per hot node, materializing
+/// and evicting through the shard's eviction buffer where a proof fails,
+/// and finally report whether the shard's dirty pods have calmed. Both
+/// the serial region fallback and the parallel workers run exactly this,
+/// so the two paths cannot drift.
+///
+/// # Safety
+///
+/// The caller must own every node in `sh` (and their pods) per the
+/// [`RegionTables`] partition contract.
+unsafe fn region_tick_shard(
+    kubelet: &Kubelet,
+    tb: &RegionTables,
+    now: u64,
+    anchor: u64,
+    sh: &mut RegionShard,
+) {
+    let RegionShard { nodes, dirty, kub_buf, ev_buf, journal } = sh;
+    for hn in nodes.iter() {
+        for &id in &hn.exact {
+            kubelet_tick_core(kubelet, tb, now, id, kub_buf, journal);
+        }
+    }
+    for hn in nodes.iter_mut() {
+        if node_pressure_ok(tb, hn, now, anchor) {
+            continue;
+        }
+        materialize_node_core(tb, hn, now, journal);
+        eviction_pass_core(tb, now, hn.idx, ev_buf, journal);
+    }
+    journal.dirty_calm = dirty
+        .iter()
+        .all(|&id| pod_calm(tb.pod_ref(id), tb.io_ref(id)));
 }
 
 pub struct Cluster {
@@ -119,6 +550,10 @@ pub struct Cluster {
     /// Scrape passes that landed on the sampling grid — the input to the
     /// skipped-grid-tick accounting in [`Self::scrape_stats`].
     grid_scrapes: u64,
+    /// Scratch event buffer the serial tick wrappers route
+    /// [`kubelet_tick_core`]/[`eviction_pass_core`] emission through
+    /// before appending to the log (reused; never allocates per tick).
+    tick_buf: Vec<Event>,
 }
 
 /// How [`Cluster::advance_to`] returned.
@@ -145,6 +580,16 @@ const PAR_MIN_POD_TICKS: u64 = 16_384;
 
 /// Below this many pods, per-node horizon classification stays serial.
 const PAR_MIN_CLASSIFY_PODS: usize = 4_096;
+
+/// Below this much expected exact work (exact pods × region window, in
+/// pod-ticks), a stepping region runs its ticks on the calling thread:
+/// worker spawn + per-tick barrier latency would dominate.
+const PAR_MIN_REGION_POD_TICKS: u64 = 8_192;
+
+/// Target exact pods per region worker — the partitioner never spawns
+/// more workers than `total_exact / this`, so tiny regions stay serial
+/// even at high `shards`.
+const REGION_PODS_PER_WORKER: usize = 128;
 
 /// Options for [`Cluster::advance_to`].
 #[derive(Clone, Copy, Debug)]
@@ -196,6 +641,7 @@ impl Cluster {
             subscriptions: None,
             scrape: ScrapeStats::default(),
             grid_scrapes: 0,
+            tick_buf: Vec::new(),
         }
     }
 
@@ -573,82 +1019,71 @@ impl Cluster {
         }
     }
 
+    /// The raw region view over the tick-mutable tables. The `defer`
+    /// slots are wired in by [`Self::step_region`] only; the serial
+    /// wrappers leave them null (and never touch them).
+    fn tables(&mut self) -> RegionTables {
+        RegionTables {
+            pods: self.pods.as_mut_ptr(),
+            io: self.io.as_mut_ptr(),
+            nodes: self.nodes.as_mut_ptr(),
+            defer: std::ptr::null_mut(),
+        }
+    }
+
+    /// Land one (possibly shard-merged) region journal on the
+    /// whole-cluster structures, in a deterministic order independent of
+    /// how the work was partitioned: capacity-index refreshes ascending
+    /// by node against the *final* node state (refresh is idempotent),
+    /// prunes and eviction-queue inserts ascending by pod.
+    fn apply_journal(&mut self, mut j: RegionJournal) {
+        self.sched_epoch += j.sched_epoch_bumps;
+        self.coast_stats.stepped_pod_ticks += j.stepped_pod_ticks;
+        self.coast_stats.deferred_pod_ticks += j.deferred_pod_ticks;
+        j.refresh.sort_unstable();
+        j.refresh.dedup();
+        for &n in &j.refresh {
+            self.cap_index.refresh(n, &self.nodes[n]);
+        }
+        j.prune.sort_unstable();
+        for &id in &j.prune {
+            self.metrics.prune(id);
+        }
+        j.evicted.sort_unstable();
+        for &v in &j.evicted {
+            self.evicted_queue.insert(v);
+        }
+    }
+
     /// One kubelet tick for one pod (a no-op unless Running and bound),
     /// including the completion → reservation-release transition. The
     /// lockstep loop, the serial fallback, and sharded stepping regions
-    /// all advance pods exclusively through here.
+    /// all advance pods exclusively through [`kubelet_tick_core`]; this
+    /// wrapper runs it against the live log and lands the journal inline.
     fn kubelet_tick_one(&mut self, id: PodId) {
         let now = self.now;
-        let node_idx = match self.pods[id].node {
-            Some(n) if self.pods[id].phase == PodPhase::Running => n,
-            _ => return,
-        };
-        let (pods, io, nodes, events) = (
-            &mut self.pods,
-            &mut self.io,
-            &mut self.nodes,
-            &mut self.events,
-        );
-        self.kubelet.tick_pod(
-            now,
-            &mut pods[id],
-            &mut io[id],
-            &mut nodes[node_idx].swap,
-            events,
-        );
-        // a completed pod releases its reservation (kube GC semantics)
-        // and its sampled series (nothing live scrapes a Succeeded pod)
-        if pods[id].phase == PodPhase::Succeeded {
-            let req = pods[id].spec.memory_request_gb();
-            nodes[node_idx].unbind(id, req);
-            self.sched_epoch += 1;
-            self.cap_index.refresh(node_idx, &nodes[node_idx]);
-            self.metrics.prune(id);
-        }
-        self.coast_stats.stepped_pod_ticks += 1;
+        let tb = self.tables();
+        let mut j = RegionJournal::default();
+        let mut buf = std::mem::take(&mut self.tick_buf);
+        unsafe { kubelet_tick_core(&self.kubelet, &tb, now, id, &mut buf, &mut j) };
+        self.events.events.append(&mut buf);
+        self.tick_buf = buf;
+        self.apply_journal(j);
     }
 
     /// Node-pressure eviction scan for one node, in QoS order (BestEffort
-    /// first), repeating until the node fits. Evicted pods enter the
-    /// requeue conversion queue.
+    /// first), repeating until the node fits — [`eviction_pass_core`]
+    /// against the live log, journal landed inline. Evicted pods enter
+    /// the requeue conversion queue.
     fn eviction_pass_node(&mut self, n: usize) {
         let now = self.now;
-        loop {
-            let rss_sum: f64 = self.nodes[n]
-                .pods
-                .iter()
-                .map(|&p| self.pods[p].usage.rss_gb)
-                .sum();
-            if rss_sum <= self.nodes[n].capacity_gb {
-                break;
-            }
-            // victim: lowest QoS rank, largest RSS
-            let victim = self.nodes[n]
-                .pods
-                .iter()
-                .copied()
-                .filter(|&p| self.pods[p].phase == PodPhase::Running)
-                .min_by(|&a, &b| {
-                    let pa = &self.pods[a];
-                    let pb = &self.pods[b];
-                    pa.qos
-                        .eviction_rank()
-                        .cmp(&pb.qos.eviction_rank())
-                        .then(pb.usage.rss_gb.total_cmp(&pa.usage.rss_gb))
-                });
-            let Some(v) = victim else { break };
-            let qos_rank = self.pods[v].qos.eviction_rank();
-            self.nodes[n].swap.page_in(self.pods[v].usage.swap_gb);
-            self.pods[v].usage = Default::default();
-            self.pods[v].phase = PodPhase::Evicted;
-            let req = self.pods[v].spec.memory_request_gb();
-            self.nodes[n].unbind(v, req);
-            self.sched_epoch += 1;
-            self.cap_index.refresh(n, &self.nodes[n]);
-            self.evicted_queue.insert(v);
-            self.events
-                .push(now, v, EventKind::Evicted { node: n, qos_rank });
-        }
+        let tb = self.tables();
+        let mut j = RegionJournal::default();
+        let mut buf = std::mem::take(&mut self.tick_buf);
+        unsafe { eviction_pass_core(&tb, now, n, &mut buf, &mut j) };
+        self.events.events.append(&mut buf);
+        self.tick_buf = buf;
+        self.apply_journal(j);
     }
 
     /// Advance one second of cluster time.
@@ -770,7 +1205,8 @@ impl Cluster {
 
     /// The full Prometheus exposition a scrape of this cluster would
     /// serve: the container series of every *live* (Running) pod, plus
-    /// the observation plane's own counters.
+    /// the observation plane's own counters and the clock-discipline /
+    /// region telemetry ([`CoastStats`]).
     pub fn prometheus_text(&self) -> String {
         let mut names = std::collections::BTreeMap::new();
         for pod in &self.pods {
@@ -780,6 +1216,7 @@ impl Cluster {
         }
         let mut out = self.metrics.prometheus_text(&names);
         out.push_str(&self.scrape_stats().prometheus_text());
+        out.push_str(&self.coast_stats.prometheus_text());
         out
     }
 
@@ -1070,51 +1507,6 @@ impl Cluster {
         });
     }
 
-    /// Whether node `n` provably cannot evict at tick `t`: exact pods
-    /// contribute their just-stepped RSS, deferred pods their worst-case
-    /// envelope `v0 + slope·k`. An upper bound within capacity means the
-    /// true Σ rss is too, so the eviction scan is skipped whole.
-    fn node_pressure_safe(&self, n: usize, t: u64, defer: &[Option<Deferral>]) -> bool {
-        let node = &self.nodes[n];
-        let mut upper = 0.0;
-        for &id in &node.pods {
-            let pod = &self.pods[id];
-            if pod.phase != PodPhase::Running {
-                continue;
-            }
-            upper += match &defer[id] {
-                Some(d) => d.v0 + d.slope * (t - d.anchor) as f64,
-                None => pod.usage.rss_gb,
-            };
-        }
-        upper <= node.capacity_gb
-    }
-
-    /// Catch one node's deferred pods up to tick `to` (exact integration)
-    /// and move them to the exact set — used when a pressure proof fails
-    /// and the eviction scan needs true RSS values.
-    fn materialize_node(
-        &mut self,
-        n: usize,
-        defer: &mut [Option<Deferral>],
-        exact: &mut Vec<PodId>,
-        to: u64,
-    ) {
-        let ids: Vec<PodId> = self.nodes[n].pods.clone();
-        for id in ids {
-            if let Some(d) = defer[id].take() {
-                let h = to - d.anchor;
-                self.coast_stats.deferred_pod_ticks += h;
-                if h > 0 {
-                    Self::integrate_pod(&mut self.pods[id], h);
-                }
-                if let Err(pos) = exact.binary_search(&id) {
-                    exact.insert(pos, id);
-                }
-            }
-        }
-    }
-
     /// Catch every deferred pod up to tick `to`, in parallel when the
     /// backlog is large. Ends a stepping region: after this, all pod
     /// state is exact at `to`.
@@ -1150,31 +1542,52 @@ impl Cluster {
         });
     }
 
-    /// Cheap instantaneous quiescence flags (no slope probing): the
-    /// re-quiescence tripwire that lets a stepping region end as soon as
-    /// the pods that forced it (swap drained, resize synced) calm down.
+    /// Cheap instantaneous quiescence flags (no slope probing); see
+    /// [`pod_calm`] — one predicate shared with the shard workers.
     fn pod_is_calm(&self, id: PodId) -> bool {
-        let pod = &self.pods[id];
-        if pod.phase != PodPhase::Running {
-            return true; // terminal/pending pods no longer force stepping
-        }
-        self.io[id].debt_secs == 0.0
-            && pod.usage.swap_gb == 0.0
-            && pod.pending_resize.is_none()
-            && pod.progress_secs.fract() == 0.0
-            && pod.wall_running_secs > 0
-            && pod.effective_limit_gb.is_finite()
+        pod_calm(&self.pods[id], &self.io[id])
     }
 
     /// One per-pod-coasting stepping region of the sharded path, covering
-    /// at most `(now, ceiling]`: pods that defeat the quiescence proof
-    /// step per-second (events, evictions, completions exactly as
-    /// lockstep), while every provably-quiescent neighbor — on this node
-    /// or any other — is deferred: untouched until the region ends, then
-    /// integrated in one batch that is bit-identical to having stepped
-    /// it. Node-pressure safety for mixed nodes is re-proven every tick
-    /// from the deferred pods' worst-case envelopes; if a proof fails,
-    /// the node's pods materialize and the real eviction scan runs.
+    /// at most `(now, ceiling]`.
+    ///
+    /// Setup partitions the fleet three ways: pods on cold nodes are
+    /// deferred under their node-level proof, pods on hot nodes (per-node
+    /// horizon < 2) are deferred individually where
+    /// [`Self::pod_defer_window`] holds, and the rest — the pods that
+    /// actually defeat the quiescence proof — step exactly, grouped *per
+    /// hot node* into [`HotNode`] entries. Contiguous ascending runs of
+    /// hot nodes form [`RegionShard`]s, each with its own event buffers
+    /// and side-effect journal. Big regions run their shards concurrently
+    /// under persistent scoped workers — spawned once per region, then
+    /// synchronized per tick by a [`Barrier`] so the spawn cost never
+    /// recurs — while small regions run the *same* shard tick function
+    /// ([`region_tick_shard`]) on the calling thread, so the serial and
+    /// parallel paths cannot drift.
+    ///
+    /// **Deterministic merge.** The serial tick emits kubelet-phase
+    /// events in ascending pod id, then eviction-phase events in
+    /// ascending node. Each pod (and node) lives in exactly one shard, a
+    /// shard ticks its nodes' exact pods in ascending id per node, and
+    /// shards own contiguous ascending node ranges — so a *stable* sort
+    /// of the concatenated kubelet buffers by pod id, followed by the
+    /// eviction buffers in shard order, reconstructs the serial emission
+    /// order exactly, independent of the worker count. The merged tail is
+    /// also what the interrupt check scans, so interrupts fire on the
+    /// same tick in every configuration, and the log's revisions and
+    /// every informer cursor stay bit-identical (`kernel_equivalence.rs`
+    /// is the oracle).
+    ///
+    /// Mid-region no whole-cluster structure is consulted, so shard
+    /// workers journal reservation releases, evictions, prunes, and epoch
+    /// bumps instead of applying them ([`RegionJournal`]); the
+    /// coordinator folds the journals after the last tick — before the
+    /// ceiling scrape, which by the PR 7 contract can only be due at the
+    /// ceiling itself, when every deferred pod has just materialized.
+    /// Node-pressure safety on hot nodes is re-proven every tick from the
+    /// incremental deferred-envelope sums ([`node_pressure_ok`]); where a
+    /// proof fails, the node materializes in place and the real eviction
+    /// scan runs inside its shard.
     fn step_region(
         &mut self,
         ceiling: u64,
@@ -1185,12 +1598,26 @@ impl Cluster {
         let start = self.now;
         let cap = (ceiling - start).min(COAST_PROBE_TICKS);
         let mut defer: Vec<Option<Deferral>> = vec![None; self.pods.len()];
-        let mut exact: Vec<PodId> = Vec::new();
         let hot: Vec<bool> = horizons.iter().map(|&h| h < 2).collect();
+        let mut hot_nodes: Vec<HotNode> = Vec::new();
+        let mut hotpos: Vec<usize> = vec![usize::MAX; self.nodes.len()];
+        for (n, &is_hot) in hot.iter().enumerate() {
+            if is_hot {
+                hotpos[n] = hot_nodes.len();
+                hot_nodes.push(HotNode {
+                    idx: n,
+                    exact: Vec::new(),
+                    deferred: 0,
+                    env_v0: 0.0,
+                    env_slope: 0.0,
+                });
+            }
+        }
         // the region's shared proof window: every deferral below is valid
         // for at least `wstar` ticks, so one region never outlives any
         // pod's (or cold node's) proof
         let mut wstar = cap;
+        let mut total_exact = 0usize;
         for id in 0..self.pods.len() {
             let pod = &self.pods[id];
             if pod.phase != PodPhase::Running {
@@ -1211,68 +1638,202 @@ impl Cluster {
                     Some((w, slope, v0)) => {
                         wstar = wstar.min(w);
                         defer[id] = Some(Deferral { anchor: start, v0, slope });
+                        let hn = &mut hot_nodes[hotpos[n]];
+                        hn.deferred += 1;
+                        hn.env_v0 += v0;
+                        hn.env_slope += slope;
                     }
-                    None => exact.push(id),
+                    None => {
+                        hot_nodes[hotpos[n]].exact.push(id);
+                        total_exact += 1;
+                    }
                 }
             } else {
-                exact.push(id);
+                hot_nodes[hotpos[n]].exact.push(id);
+                total_exact += 1;
             }
         }
-        // the pods that actually forced this region (failed the cheap
-        // flags): once they all calm down, bail out so the outer loop can
-        // try a full coast again
-        let dirty: Vec<PodId> = exact
-            .iter()
-            .copied()
-            .filter(|&id| !self.pod_is_calm(id))
-            .collect();
         let region_end = start + wstar.max(1);
-        loop {
-            self.now += 1;
-            let t = self.now;
-            let seen = self.events.events.len();
-            // restart expiries cannot land inside a sharded window (the
-            // ceiling stops short of the earliest one), so the per-tick
-            // retain scan is provably a no-op and skipped
-            for &id in &exact {
-                self.kubelet_tick_one(id);
-            }
-            for n in 0..self.nodes.len() {
-                if !hot[n] {
-                    continue; // node-level proof: no eviction this region
+        // worker count: capped by the shard budget, the hot-node count
+        // (a node is never split), and the available exact work
+        let workers = shards
+            .min(hot_nodes.len())
+            .min((total_exact / REGION_PODS_PER_WORKER).max(1))
+            .max(1);
+        let parallel = workers >= 2
+            && total_exact as u64 * (region_end - start) >= PAR_MIN_REGION_POD_TICKS;
+        let nshards = if parallel { workers } else { 1 };
+        // contiguous ascending node chunks, balanced by exact-pod count;
+        // each shard's `dirty` set is the pods that actually forced the
+        // region (failed the cheap flags) — once every shard reports its
+        // set calm, bail out so the outer loop can try a full coast again
+        let mut cells: Vec<RegionShard> = Vec::with_capacity(nshards);
+        {
+            let target = total_exact.div_ceil(nshards).max(1);
+            let mut cur: Vec<HotNode> = Vec::new();
+            let mut acc = 0usize;
+            let mk = |nodes: Vec<HotNode>, cluster: &Cluster| -> RegionShard {
+                let dirty = nodes
+                    .iter()
+                    .flat_map(|hn| hn.exact.iter().copied())
+                    .filter(|&id| !cluster.pod_is_calm(id))
+                    .collect();
+                RegionShard {
+                    nodes,
+                    dirty,
+                    kub_buf: Vec::new(),
+                    ev_buf: Vec::new(),
+                    journal: RegionJournal::default(),
                 }
-                if self.node_pressure_safe(n, t, &defer) {
-                    continue;
+            };
+            for hn in hot_nodes {
+                acc += hn.exact.len();
+                cur.push(hn);
+                if acc >= target && cells.len() + 1 < nshards {
+                    cells.push(mk(std::mem::take(&mut cur), self));
+                    acc = 0;
                 }
-                self.materialize_node(n, &mut defer, &mut exact, t);
-                self.eviction_pass_node(n);
             }
-            let interrupted = self.events.events[seen..].iter().any(|e| e.kind.is_interrupt());
-            let at_end = interrupted
-                || t >= region_end
-                || t >= ceiling
-                || (!dirty.is_empty() && dirty.iter().all(|&id| self.pod_is_calm(id)));
-            if at_end {
-                self.materialize_all(&mut defer, t, shards);
+            if !cur.is_empty() || cells.is_empty() {
+                cells.push(mk(cur, self));
             }
-            if sample_metrics && self.sampling_due(t) {
-                // the region ceiling stops at the next due tick, so a due
-                // `t` is the ceiling itself and everyone was just
-                // materialized — the scrape sees exact state, like step()
-                self.scrape_now();
+        }
+        let dirty_any = cells.iter().any(|c| !c.dirty.is_empty());
+        let busy = if parallel {
+            cells
+                .iter()
+                .filter(|c| c.nodes.iter().any(|hn| !hn.exact.is_empty()))
+                .count()
+                .max(1) as u64
+        } else {
+            1
+        };
+        self.coast_stats.regions_entered += 1;
+        self.coast_stats.region_workers_max = self.coast_stats.region_workers_max.max(busy);
+        self.coast_stats.region_workers_sum += busy;
+
+        let tb = RegionTables {
+            pods: self.pods.as_mut_ptr(),
+            io: self.io.as_mut_ptr(),
+            nodes: self.nodes.as_mut_ptr(),
+            defer: defer.as_mut_ptr(),
+        };
+        let (kubelet, events) = (&self.kubelet, &mut self.events);
+        let mut merge_ns = 0u64;
+        let mut t = start;
+        let mut interrupted = false;
+        if !parallel {
+            // serial region: same shard machinery, calling thread
+            let cell = &mut cells[0];
+            loop {
+                t += 1;
+                let seen = events.events.len();
+                // restart expiries cannot land inside a sharded window
+                // (the ceiling stops short of the earliest one), so the
+                // per-tick retain scan is provably a no-op and skipped
+                unsafe { region_tick_shard(kubelet, &tb, t, start, cell) };
+                let m0 = Instant::now();
+                cell.kub_buf.sort_by_key(|e| e.pod); // stable: serial order
+                events.events.append(&mut cell.kub_buf);
+                events.events.append(&mut cell.ev_buf);
+                merge_ns += m0.elapsed().as_nanos() as u64;
+                interrupted = events.events[seen..].iter().any(|e| e.kind.is_interrupt());
+                let at_end = interrupted
+                    || t >= region_end
+                    || t >= ceiling
+                    || (dirty_any && cell.journal.dirty_calm);
+                if at_end {
+                    break;
+                }
             }
-            if interrupted {
-                return Advance::Interrupted;
-            }
-            if at_end {
-                return Advance::Reached; // region done; caller continues
-            }
+        } else {
+            let mcells: Vec<Mutex<RegionShard>> =
+                std::mem::take(&mut cells).into_iter().map(Mutex::new).collect();
+            let barrier = Barrier::new(mcells.len() + 1);
+            let stop = AtomicBool::new(false);
+            let (tb_r, barrier_r, stop_r, cells_r) = (&tb, &barrier, &stop, &mcells);
+            let mut sort_buf: Vec<Event> = Vec::new();
+            std::thread::scope(|scope| {
+                for cell in cells_r {
+                    scope.spawn(move || {
+                        let mut k = 0u64;
+                        loop {
+                            barrier_r.wait(); // tick start
+                            if stop_r.load(Ordering::Acquire) {
+                                break;
+                            }
+                            k += 1;
+                            let mut sh = cell.lock().unwrap();
+                            unsafe { region_tick_shard(kubelet, tb_r, start + k, start, &mut sh) };
+                            drop(sh);
+                            barrier_r.wait(); // tick end
+                        }
+                    });
+                }
+                loop {
+                    t += 1;
+                    barrier_r.wait(); // release tick t to the workers
+                    barrier_r.wait(); // every shard done with tick t
+                    let seen = events.events.len();
+                    let m0 = Instant::now();
+                    sort_buf.clear();
+                    for cell in cells_r {
+                        sort_buf.append(&mut cell.lock().unwrap().kub_buf);
+                    }
+                    sort_buf.sort_by_key(|e| e.pod); // stable: serial order
+                    events.events.append(&mut sort_buf);
+                    for cell in cells_r {
+                        events.events.append(&mut cell.lock().unwrap().ev_buf);
+                    }
+                    merge_ns += m0.elapsed().as_nanos() as u64;
+                    interrupted = events.events[seen..].iter().any(|e| e.kind.is_interrupt());
+                    let at_end = interrupted
+                        || t >= region_end
+                        || t >= ceiling
+                        || (dirty_any
+                            && cells_r.iter().all(|c| c.lock().unwrap().journal.dirty_calm));
+                    if at_end {
+                        stop.store(true, Ordering::Release);
+                        barrier_r.wait(); // wake workers into the stop check
+                        break;
+                    }
+                }
+            });
+            cells = mcells.into_iter().map(|c| c.into_inner().unwrap()).collect();
+        }
+        self.now = t;
+        let mut j = RegionJournal::default();
+        for cell in &mut cells {
+            j.absorb(&mut cell.journal);
+        }
+        self.coast_stats.region_exact_pod_ticks += j.stepped_pod_ticks;
+        self.coast_stats.merge_nanos += merge_ns;
+        self.apply_journal(j);
+        // region exit: everyone still deferred integrates to `t` in batch
+        self.materialize_all(&mut defer, t, shards);
+        if sample_metrics && self.sampling_due(t) {
+            // the region ceiling stops at the next due tick, so a due `t`
+            // is the ceiling itself and everyone was just materialized —
+            // the scrape sees exact state, like step()
+            self.scrape_now();
+        }
+        if interrupted {
+            Advance::Interrupted
+        } else {
+            Advance::Reached
         }
     }
 
     /// The sharded drive loop behind [`Self::advance_to`]: per-node
     /// horizons, whole-cluster parallel coasts when every node is
     /// quiescent, per-pod-coasting stepping regions when any is not.
+    /// Regions themselves shard across workers ([`Self::step_region`]):
+    /// hot nodes partition into contiguous chunks, each worker steps its
+    /// chunk's proof-defeating pods against shard-local event buffers,
+    /// and the buffers merge into the log in the serial emission order —
+    /// so the `shards` knob parallelizes *both* the quiescent fan-out and
+    /// the thrash-heavy regions that used to run single-threaded, with
+    /// bit-identical results at every worker count.
     fn advance_sharded(&mut self, target: u64, opts: AdvanceOpts) -> Advance {
         let shards = opts.shards.max(1);
         while self.now < target {
@@ -1502,6 +2063,10 @@ mod tests {
         assert!(text.contains("# HELP container_memory_rss "));
         assert!(text.contains("arcv_scrape_passes_total 2"));
         assert!(text.contains("arcv_scrape_fleet_pods 1"));
+        // the kernel-coast block rides along (zeros here: lockstep run)
+        assert!(text.contains("# TYPE arcv_kernel_regions_entered_total counter"));
+        assert!(text.contains("arcv_kernel_region_workers_mean 0"));
+        assert!(text.contains("arcv_kernel_region_merge_seconds_total 0"));
     }
 
     #[test]
@@ -1784,6 +2349,17 @@ mod tests {
             s.coast_stats,
             b.coast_stats
         );
+        // region telemetry: the thrash window runs through stepping
+        // regions, and the counters record it
+        assert!(s.coast_stats.regions_entered > 0, "{:?}", s.coast_stats);
+        assert!(
+            s.coast_stats.region_exact_pod_ticks > 0
+                && s.coast_stats.region_exact_pod_ticks <= s.coast_stats.stepped_pod_ticks,
+            "{:?}",
+            s.coast_stats
+        );
+        assert!(s.coast_stats.region_workers_max >= 1, "{:?}", s.coast_stats);
+        assert!(s.coast_stats.region_workers_mean() >= 1.0, "{:?}", s.coast_stats);
     }
 
     #[test]

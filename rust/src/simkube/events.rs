@@ -233,6 +233,28 @@ impl Event {
     }
 }
 
+/// Destination of kubelet/eviction event emission. The cluster's
+/// [`EventLog`] is the canonical sink; sharded stepping regions instead
+/// hand each worker a plain `Vec<Event>` shard buffer and merge the
+/// buffers into the log in the serial emission order afterwards
+/// (`Cluster::step_region`), which is what keeps revisions and informer
+/// cursors bit-identical across thread counts.
+pub trait EventSink {
+    fn push(&mut self, time: u64, pod: PodId, kind: EventKind);
+}
+
+impl EventSink for EventLog {
+    fn push(&mut self, time: u64, pod: PodId, kind: EventKind) {
+        EventLog::push(self, time, pod, kind);
+    }
+}
+
+impl EventSink for Vec<Event> {
+    fn push(&mut self, time: u64, pod: PodId, kind: EventKind) {
+        self.push(Event { time, pod, kind });
+    }
+}
+
 /// Identifier of one registered informer cursor (see
 /// [`EventLog::register_cursor`]).
 pub type CursorId = usize;

@@ -51,9 +51,14 @@ pub enum KernelMode {
     /// computed per node, a thrashing pod steps alone while its
     /// provably-quiescent neighbors integrate lazily (per-pod coasting),
     /// and the integration work fans out across `threads` workers
-    /// (`0` = the machine's available parallelism). Bit-for-bit identical
-    /// to the other modes at every thread count — the equivalence suite
-    /// pins it.
+    /// (`0` = the machine's available parallelism). Stepping regions
+    /// shard too: hot nodes partition into contiguous per-worker chunks,
+    /// each worker ticks its chunk's proof-defeating pods against a
+    /// shard-local event buffer, and the buffers merge back into the
+    /// [`EventLog`](super::events::EventLog) in the exact serial emission
+    /// order (kubelet events ascending pod id, then evictions ascending
+    /// node). Bit-for-bit identical to the other modes at every thread
+    /// count — the equivalence suite pins it.
     Sharded { threads: usize },
 }
 

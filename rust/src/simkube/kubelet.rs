@@ -11,7 +11,7 @@
 //!   draining to swap at disk bandwidth when available);
 //! - account footprint integrals for the harness.
 
-use super::events::{EventKind, EventLog};
+use super::events::{EventKind, EventSink};
 use super::pod::{Pod, PodPhase};
 use super::swap::SwapDevice;
 
@@ -51,14 +51,17 @@ impl Kubelet {
     }
 
     /// Advance one pod by one wall second. Returns `true` while the pod
-    /// stays Running (false on completion/OOM).
-    pub fn tick_pod(
+    /// stays Running (false on completion/OOM). Generic over the event
+    /// destination ([`EventSink`]): the lockstep/serial paths pass the
+    /// cluster's `EventLog` directly, sharded stepping regions a
+    /// shard-local buffer that is merged deterministically afterwards.
+    pub fn tick_pod<S: EventSink>(
         &self,
         now: u64,
         pod: &mut Pod,
         io: &mut IoState,
         swap: &mut SwapDevice,
-        log: &mut EventLog,
+        log: &mut S,
     ) -> bool {
         if pod.phase != PodPhase::Running {
             return false;
@@ -144,13 +147,13 @@ impl Kubelet {
         true
     }
 
-    fn sync_resize(
+    fn sync_resize<S: EventSink>(
         &self,
         now: u64,
         pod: &mut Pod,
         io: &mut IoState,
         swap: &mut SwapDevice,
-        log: &mut EventLog,
+        log: &mut S,
     ) {
         let Some(pr) = pod.pending_resize else {
             return;
@@ -204,6 +207,7 @@ impl Kubelet {
 
 #[cfg(test)]
 mod tests {
+    use super::super::events::EventLog;
     use super::super::pod::testutil::ramp;
     use super::super::pod::{PendingResize, Pod, PodPhase};
     use super::super::resources::ResourceSpec;

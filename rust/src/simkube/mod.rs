@@ -32,9 +32,9 @@ pub use api::{
     InformerStats, Outcome, PodView, SharedInformer, SharedInformerHandle, SyncDelta, Verb,
 };
 pub use clock::{next_multiple, SimClock, TimedEvent};
-pub use cluster::{Advance, AdvanceOpts, Cluster, ClusterConfig};
+pub use cluster::{Advance, AdvanceOpts, Cluster, ClusterConfig, CoastStats};
 pub use kernel::{run_kernel, EventSource, KernelMode, KernelStats};
-pub use events::{Event, EventKind, EventLog};
+pub use events::{Event, EventKind, EventLog, EventSink};
 pub use kubelet::{Kubelet, KubeletConfig};
 pub use metrics::{MetricsStore, Sample, ScrapeCadence, ScrapeStats, SubscriptionSet};
 pub use node::Node;

@@ -1,0 +1,164 @@
+//! Property suite for parallel stepping regions: a sharded event-driven
+//! cluster whose every advance runs through `Cluster::step_region` —
+//! thrashing pods keep the nodes hot, so there is nothing to coast — must
+//! be indistinguishable from the lockstep 1 s reference under randomized
+//! churn (kills, resize patches, restarts, drains, requeues) and **live
+//! log compaction**: auto-compaction enabled with an advancing informer
+//! cursor on both logs, so shard-buffer merges land on a log whose base
+//! revision keeps moving. Same events, same revisions, same pod state,
+//! at a randomized worker count per case.
+
+use arcv::scenario::LeakProcess;
+use arcv::simkube::{
+    AdvanceOpts, Cluster, ClusterConfig, MemoryProcess, Node, ResourceSpec, SwapDevice,
+};
+use arcv::util::prop::{self, require};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A flat memory process (LeakProcess with zero leak): usage is constant
+/// at `usage_gb` for `secs` application-seconds.
+fn flat(usage_gb: f64, secs: f64) -> Box<dyn MemoryProcess> {
+    Box::new(LeakProcess {
+        base_gb: usage_gb,
+        leak_gb_per_sec: 0.0,
+        lifetime_secs: secs,
+    })
+}
+
+fn build_cluster(caps: &[f64], swapped: &[bool]) -> Cluster {
+    let nodes: Vec<Node> = caps
+        .iter()
+        .zip(swapped)
+        .enumerate()
+        .map(|(i, (&c, &sw))| {
+            let dev = if sw { SwapDevice::hdd(c) } else { SwapDevice::disabled() };
+            Node::new(&format!("w{i}"), c, dev)
+        })
+        .collect();
+    Cluster::new(nodes, ClusterConfig::default())
+}
+
+#[test]
+fn parallel_regions_match_lockstep_under_churn_and_live_compaction() {
+    // counted across cases: the workload must actually drive the region
+    // path, not accidentally coast past it
+    let regions = AtomicU64::new(0);
+    prop::check("parallel-regions-vs-lockstep", 60, |g| {
+        let n_nodes = g.usize(2, 5);
+        let caps: Vec<f64> = (0..n_nodes).map(|_| g.f64(12.0, 32.0)).collect();
+        let swapped: Vec<bool> = (0..n_nodes).map(|_| g.bool(0.7)).collect();
+        let shards = *g.pick(&[1usize, 2, 4]);
+        // cluster A is the lockstep reference; cluster B advances through
+        // sharded stepping regions. Both logs compact live behind a
+        // replaying cursor.
+        let mut a = build_cluster(&caps, &swapped);
+        let mut b = build_cluster(&caps, &swapped);
+        let ca = a.events.register_cursor();
+        let cb = b.events.register_cursor();
+        a.events.set_auto_compact(true);
+        b.events.set_auto_compact(true);
+        let opts = AdvanceOpts { event_driven: true, sample_metrics: true, shards };
+        let mut created = 0usize;
+        for round in 0..30 {
+            match g.usize(0, 5) {
+                0 | 1 => {
+                    // arrival: thrashers (flat usage parked above the
+                    // limit: permanent swap residency or an OOM on
+                    // swapless nodes — either way the node stays hot) mixed
+                    // with calm under-limit pods
+                    let name = format!("p{created}");
+                    let req = g.f64(2.0, 8.0);
+                    let usage = if g.bool(0.5) { req * g.f64(1.05, 1.4) } else { req * 0.6 };
+                    let secs = g.f64(20.0, 120.0);
+                    a.create_pod(&name, ResourceSpec::memory_exact(req), flat(usage, secs));
+                    b.create_pod(&name, ResourceSpec::memory_exact(req), flat(usage, secs));
+                    created += 1;
+                }
+                2 if created > 0 => {
+                    let id = g.usize(0, created - 1);
+                    a.kill_pod(id);
+                    b.kill_pod(id);
+                }
+                3 if created > 0 => {
+                    // resize storm: random patches keep `pending_resize`
+                    // set, defeating the per-pod quiescence proof
+                    let id = g.usize(0, created - 1);
+                    let gb = g.f64(1.0, 10.0);
+                    a.patch_pod_memory(id, gb);
+                    b.patch_pod_memory(id, gb);
+                }
+                4 if created > 0 => {
+                    let id = g.usize(0, created - 1);
+                    let gb = g.f64(2.0, 8.0);
+                    a.restart_pod(id, gb);
+                    b.restart_pod(id, gb);
+                }
+                5 => {
+                    let node = g.usize(0, n_nodes - 1);
+                    if g.bool(0.6) {
+                        a.drain_node(node);
+                        b.drain_node(node);
+                    } else {
+                        a.uncordon_node(node);
+                        b.uncordon_node(node);
+                    }
+                }
+                _ => {}
+            }
+            if g.bool(0.7) {
+                let pa = a.schedule_pending();
+                let pb = b.schedule_pending();
+                require(pa == pb, "requeue passes place identically")?;
+            }
+            // advance both to the same tick: A per second, B through
+            // regions (interrupts just re-enter the loop, like the kernel)
+            let ticks = g.u64(3, 25);
+            a.run_until(ticks, |_| false);
+            while b.now < a.now {
+                b.advance_to(a.now, opts);
+            }
+            if a.now != b.now {
+                return Err(format!("round {round}: clocks diverged {} vs {}", a.now, b.now));
+            }
+            let (ra, rb) = (a.events.revision(), b.events.revision());
+            if ra != rb {
+                return Err(format!("round {round}: revisions diverged {ra} vs {rb}"));
+            }
+            if g.bool(0.8) {
+                // the informer replays through the head: identical cursor
+                // motion, so compaction (if it fires) fires identically
+                a.events.advance_cursor(ca, ra);
+                b.events.advance_cursor(cb, rb);
+            }
+        }
+        require(
+            a.events.first_revision() == b.events.first_revision(),
+            "compaction floors must match",
+        )?;
+        require(
+            a.events.events == b.events.events,
+            "retained event logs must be identical",
+        )?;
+        for id in 0..a.pods.len() {
+            let (pa, pb) = (a.pod(id), b.pod(id));
+            if pa.phase != pb.phase
+                || pa.node != pb.node
+                || pa.progress_secs != pb.progress_secs
+                || pa.usage.swap_gb != pb.usage.swap_gb
+                || pa.provisioned_gb_secs != pb.provisioned_gb_secs
+                || pa.used_gb_secs != pb.used_gb_secs
+            {
+                return Err(format!(
+                    "pod {id}: {:?}@{:?} vs {:?}@{:?}",
+                    pa.phase, pa.node, pb.phase, pb.node
+                ));
+            }
+        }
+        regions.fetch_add(b.coast_stats.regions_entered, Ordering::Relaxed);
+        Ok(())
+    });
+    assert!(
+        regions.load(Ordering::Relaxed) > 0,
+        "the churn workload never exercised a stepping region"
+    );
+}
