@@ -3,9 +3,17 @@
 //! fraction of the tick budget (the paper's <3 % overhead claim is about
 //! the real cluster; here we check our own coordinator cost).
 //!
+//! Emits three json artifacts under `bench_out/`: BENCH_kernel (event
+//! kernel vs the 1 s-stepping reference over the Fig 4 sweep),
+//! BENCH_informer (delta replay vs relist per wake + the subscription
+//! scrape plane), and BENCH_decide (the decision plane: scalar per-pod
+//! loop vs the SoA batch, serial and parallel, at 1k/10k/50k managed
+//! pods — gated so the batch is never slower than the scalar loop and
+//! the parallel batch never slower than the serial one).
+//!
 //!   cargo bench --bench perf_sim
 
-use arcv::coordinator::controller::{Controller, Tick};
+use arcv::coordinator::controller::{Controller, DecidePlane, Tick};
 use arcv::coordinator::fleet::FleetController;
 use arcv::harness::{run_with_mode, ExperimentConfig, PolicyKind, RunOutput};
 use arcv::policy::arcv::{ArcvParams, ArcvPolicy, NativeFleet};
@@ -13,7 +21,7 @@ use arcv::simkube::cluster::Cluster;
 use arcv::simkube::node::Node;
 use arcv::simkube::resources::ResourceSpec;
 use arcv::simkube::swap::SwapDevice;
-use arcv::simkube::{ApiClient, KernelMode, ScrapeCadence, SubscriptionSet};
+use arcv::simkube::{ApiClient, Event, KernelMode, ScrapeCadence, SubscriptionSet};
 use arcv::util::bench::bench;
 use arcv::util::json::{arr, num, obj, s, Json};
 use arcv::workloads::{build, AppId};
@@ -65,6 +73,56 @@ fn cluster_with_pods(n_pods: usize) -> (Cluster, Vec<usize>) {
         })
         .collect();
     (c, ids)
+}
+
+/// One decision-plane bench run: `n` ARC-V-managed pods driven at the
+/// controller's declared wake cadence until the sampling windows have
+/// filled and several full-fleet decision passes have run, with the
+/// plane and worker count forced. Returns the controller's own
+/// decide-pass telemetry plus the full event log — the bit-identity
+/// tripwire across planes.
+struct DecideCell {
+    secs: f64,
+    passes: u64,
+    workers: usize,
+    events: Vec<Event>,
+}
+
+fn decide_cell(n: usize, plane: DecidePlane, threads: usize) -> DecideCell {
+    let (mut c, ids) = cluster_with_pods(n);
+    let mut ctl = Controller::new();
+    for &id in &ids {
+        let init = c.pod(id).effective_limit_gb;
+        ctl.manage(id, Box::new(ArcvPolicy::new(init, ArcvParams::default())));
+    }
+    ctl.set_decide_plane(plane);
+    ctl.policy_mut().set_decide_threads(threads);
+    // enough horizon for every pod's sampling window to fill plus
+    // several full-fleet decision intervals
+    let horizon = c.metrics.period_secs * 12 + 5 * 60;
+    // mirror the kernel loop: keep the cluster's sampler aligned with the
+    // declared interest set and wake the controller only at its cadence
+    let mut sub_rev: Option<u64> = None;
+    while c.now < horizon {
+        if let Some(subs) = ctl.subscriptions() {
+            if sub_rev != Some(subs.revision()) {
+                sub_rev = Some(subs.revision());
+                c.install_subscriptions(subs.clone());
+            }
+        }
+        let wake = ctl.next_wake(&c).min(horizon);
+        while c.now < wake {
+            c.step();
+        }
+        ctl.tick(&mut c);
+    }
+    let coast = ctl.coast().unwrap_or_default();
+    DecideCell {
+        secs: coast.decide_nanos as f64 / 1e9,
+        passes: coast.decide_passes,
+        workers: ctl.policy().last_decide_workers(),
+        events: c.events.events,
+    }
 }
 
 fn main() {
@@ -350,6 +408,84 @@ fn main() {
         }
     }
 
+    // ---- the decision-plane gate: scalar loop vs SoA batch per wake --------
+    // Three controllers over identical fleets, each driven at its declared
+    // wake cadence: the legacy scalar plane, the batched plane pinned to
+    // one worker, and the batched plane with auto worker selection. The
+    // measurement is the controller's own decide telemetry — wall time
+    // inside the decide entry point — so informer sync and action
+    // submission can't mask the difference. All three event logs must be
+    // bit-identical: the planes are behaviourally one (the full proof is
+    // rust/tests/kernel_equivalence.rs; this is the bench's tripwire).
+    println!("\n=== decision plane: scalar loop vs SoA batch vs parallel batch, per decide pass ===\n");
+    let mut decide_rows = Vec::new();
+    let mut decide_batched_slow = false;
+    let mut decide_parallel_slow = false;
+    let mut decide_diverged = false;
+    for n in [1_000usize, 10_000, 50_000] {
+        let scalar = decide_cell(n, DecidePlane::Scalar, 0);
+        let serial = decide_cell(n, DecidePlane::Batched, 1);
+        let auto = decide_cell(n, DecidePlane::Batched, 0);
+        let identical = scalar.events == serial.events
+            && scalar.events == auto.events
+            && scalar.passes == serial.passes
+            && scalar.passes == auto.passes;
+        if !identical {
+            decide_diverged = true;
+            eprintln!("MISMATCH: decide planes diverged at {n} pods");
+        }
+        // gates: the batch plane must never lose to the scalar loop, and
+        // auto worker selection must never lose to the pinned-serial
+        // batch (10 % + 2 ms slack for shared-runner noise; below the
+        // parallel threshold auto IS serial, so the second gate is a
+        // pure no-regression tripwire there)
+        if serial.secs > scalar.secs * 1.10 + 2e-3 {
+            decide_batched_slow = true;
+        }
+        if auto.secs > serial.secs * 1.10 + 2e-3 {
+            decide_parallel_slow = true;
+        }
+        let per_pass_ms = |cell: &DecideCell| cell.secs / cell.passes.max(1) as f64 * 1e3;
+        println!(
+            "  {n:>6} pods, {} passes: scalar {:>8.3} ms/pass  batched {:>8.3} ms/pass \
+             ({:.2}x)  parallel {:>8.3} ms/pass ({:.2}x vs serial batch, {} workers) {}",
+            scalar.passes,
+            per_pass_ms(&scalar),
+            per_pass_ms(&serial),
+            scalar.secs / serial.secs.max(1e-12),
+            per_pass_ms(&auto),
+            serial.secs / auto.secs.max(1e-12),
+            auto.workers,
+            if identical { "bit-identical" } else { "DIVERGED" },
+        );
+        decide_rows.push(obj(vec![
+            ("pods", num(n as f64)),
+            ("decide_passes", num(scalar.passes as f64)),
+            ("scalar_secs", num(scalar.secs)),
+            ("batched_serial_secs", num(serial.secs)),
+            ("batched_parallel_secs", num(auto.secs)),
+            ("batched_speedup_vs_scalar", num(scalar.secs / serial.secs.max(1e-12))),
+            ("parallel_speedup_vs_serial_batch", num(serial.secs / auto.secs.max(1e-12))),
+            ("parallel_workers", num(auto.workers as f64)),
+            ("identical", Json::Bool(identical)),
+        ]));
+    }
+    let decide_json = obj(vec![
+        ("bench", s("perf_sim/decide")),
+        (
+            "threads",
+            num(std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1) as f64),
+        ),
+        ("rows", arr(decide_rows)),
+        ("batched_never_slower", Json::Bool(!decide_batched_slow)),
+        ("parallel_never_slower", Json::Bool(!decide_parallel_slow)),
+        ("planes_identical", Json::Bool(!decide_diverged)),
+    ]);
+    std::fs::write("bench_out/BENCH_decide.json", decide_json.to_string_pretty())
+        .expect("write bench_out/BENCH_decide.json");
+    println!("\nBENCH {}", decide_json.to_string_pretty());
+    println!("wrote bench_out/BENCH_decide.json");
+
     let informer_json = obj(vec![
         ("bench", s("perf_sim/informer")),
         ("rows", arr(informer_rows)),
@@ -389,6 +525,22 @@ fn main() {
     }
     if !scrape_sparse_fast {
         eprintln!("FAIL: 1% subscription scrape not measurably below the full pass");
+        std::process::exit(1);
+    }
+    // CI gates: the batched decision plane. Divergence means the SoA
+    // batch is not the bit-identical drop-in it claims to be; the two
+    // speed gates are the reason the plane batches (and parallelizes)
+    // at all — BENCH_decide.json carries the real ratios.
+    if decide_diverged {
+        eprintln!("FAIL: decide planes diverged (scalar vs batched vs parallel batch)");
+        std::process::exit(1);
+    }
+    if decide_batched_slow {
+        eprintln!("FAIL: batched decide pass slower than the scalar loop");
+        std::process::exit(1);
+    }
+    if decide_parallel_slow {
+        eprintln!("FAIL: parallel batched decide slower than the serial batch");
         std::process::exit(1);
     }
 }

@@ -118,6 +118,10 @@ struct Cell {
     /// Distinct calibration-table sets alive while the fleet existed —
     /// the RSS proxy (vs `jobs` pods).
     live_tables: usize,
+    /// Controller decision wakes and the wall time spent inside them —
+    /// the decision-plane cost the ladder records per kernel mode.
+    decide_passes: u64,
+    decide_secs: f64,
 }
 
 fn scale_cell(spec: &ScenarioSpec, mode: KernelMode, keep_events: bool) -> Cell {
@@ -132,6 +136,8 @@ fn scale_cell(spec: &ScenarioSpec, mode: KernelMode, keep_events: bool) -> Cell 
         ticks: run.stats.sim_ticks,
         informer: run.informer,
         live_tables: live,
+        decide_passes: run.coast.decide_passes,
+        decide_secs: run.coast.decide_nanos as f64 / 1e9,
     }
 }
 
@@ -447,6 +453,19 @@ fn main() {
             ("informer_relists", num(sharded.informer.relists as f64)),
             ("informer_views_rebuilt", num(sharded.informer.views_rebuilt as f64)),
             ("informer_rebuilds_per_sync", num(rebuilds_per_sync)),
+            // decision-plane cost per kernel mode: controller decision
+            // wakes and the wall time spent inside them (0.0 = mode not
+            // run on this rung)
+            ("decide_passes", num(sharded.decide_passes as f64)),
+            ("decide_secs_sharded", num(sharded.decide_secs)),
+            (
+                "decide_secs_lockstep",
+                num(lock.as_ref().map(|c| c.decide_secs).unwrap_or(0.0)),
+            ),
+            (
+                "decide_secs_serial_event",
+                num(serial.as_ref().map(|c| c.decide_secs).unwrap_or(0.0)),
+            ),
             // whether cross-kernel equivalence actually ran on this rung:
             // the million rung runs one flavor only, so `identical` would
             // be an unearned claim there — record null instead
@@ -515,11 +534,12 @@ fn main() {
         }
         println!(
             "  shards {count}: {secs:.3}s ({vs_serial:.2}x vs serial regions; lockstep \
-             {thrash_lockstep_secs:.3}s), {} regions, workers mean {:.1} max {}, merge {:.4}s, \
-             events hash {hash:016x} {}",
+             {thrash_lockstep_secs:.3}s), {} regions, workers mean {:.1} max {}, chunk {} \
+             pods/worker, merge {:.4}s, events hash {hash:016x} {}",
             cs.regions_entered,
             cs.region_workers_mean(),
             cs.region_workers_max,
+            cs.region_chunk_pods,
             cs.merge_nanos as f64 / 1e9,
             if hash == thrash_ref_hash { "(= lockstep)" } else { "(DIVERGED)" },
         );
@@ -534,6 +554,9 @@ fn main() {
             ("region_exact_pod_ticks", num(cs.region_exact_pod_ticks as f64)),
             ("region_workers_max", num(cs.region_workers_max as f64)),
             ("region_workers_mean", num(cs.region_workers_mean())),
+            // the adaptive chunk size the occupancy-derived splitter
+            // settled on for this shard count (floor 128)
+            ("region_chunk_pods", num(cs.region_chunk_pods as f64)),
             ("merge_secs", num(cs.merge_nanos as f64 / 1e9)),
         ]));
     }

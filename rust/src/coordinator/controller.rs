@@ -21,9 +21,25 @@
 //! sampling or decision due) costs O(1), not O(pods); that is what keeps
 //! controller wakes cheap at the 10⁵–10⁶-pod ladder rungs.
 //!
+//! **Decision plane.** By default ([`DecidePlane::Batched`]) each wake
+//! assembles one structure-of-arrays [`DecisionBatch`] straight from the
+//! informer's Running index and the metrics due-set — pod ids, the latest
+//! usage/rss/swap/limit sample columns, and phase ages — and drives the
+//! policy through one `observe_batch` + one `decide_batch` call instead
+//! of a virtual call per pod. Policies that don't override the batch
+//! entry points fall back to scalar loops, so the planes are
+//! bit-identical by construction; `PerPodAdapter` evaluates ARC-V
+//! kernels column-wise with per-node groups on scoped workers and merges
+//! the action streams back to ascending pod id, and `FleetPolicy` routes
+//! the same batch through its `DecisionBackend` (native Rust loop or the
+//! XLA engine) — one batch ABI either way. [`DecidePlane::Scalar`] keeps
+//! the legacy per-pod loop as the bit-identity reference;
+//! `kernel_equivalence.rs` pins the two planes to each other across
+//! every policy × kernel mode.
+//!
 //! [`SyncDelta`]: crate::simkube::api::SyncDelta
 
-use crate::policy::{Action, NodePolicy, PerPodAdapter, PodAction, VerticalPolicy};
+use crate::policy::{Action, DecisionBatch, NodePolicy, PerPodAdapter, PodAction, VerticalPolicy};
 use crate::simkube::api::{ActionRecord, ApiClient, InformerStats, Verb};
 use crate::simkube::cluster::{Cluster, CoastStats};
 use crate::simkube::metrics::{ScrapeStats, SubscriptionSet};
@@ -88,10 +104,30 @@ pub trait Tick {
     }
 }
 
+/// Which plane [`Controller::tick`] drives its policy through. Both
+/// planes make the same policy calls on the same data in the same order
+/// (the batch entry points default to scalar loops), so run results are
+/// bit-identical either way — `kernel_equivalence.rs` pins them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DecidePlane {
+    /// Assemble one SoA [`DecisionBatch`] per wake and drive the policy's
+    /// `observe_batch`/`decide_batch` entry points (the default).
+    #[default]
+    Batched,
+    /// The legacy per-pod scalar loop — the bit-identity reference.
+    Scalar,
+}
+
 /// A coordinator driving one node-scoped policy through the API.
 pub struct Controller<P: NodePolicy = PerPodAdapter> {
     client: ApiClient,
     policy: P,
+    plane: DecidePlane,
+    /// Decide passes executed (either plane) — [`Tick::coast`] telemetry.
+    decide_passes: u64,
+    /// Wall nanoseconds inside decide passes (machine-dependent; never
+    /// part of any equivalence comparison).
+    decide_nanos: u64,
     /// (time, pod, recommendation) history for reporting.
     pub rec_log: Vec<(u64, PodId, f64)>,
 }
@@ -102,8 +138,21 @@ impl<P: NodePolicy> Controller<P> {
         Self {
             client: ApiClient::new(),
             policy,
+            plane: DecidePlane::default(),
+            decide_passes: 0,
+            decide_nanos: 0,
             rec_log: Vec::new(),
         }
+    }
+
+    /// Select the decision plane (benches and the equivalence suite force
+    /// each explicitly; results are bit-identical at either setting).
+    pub fn set_decide_plane(&mut self, plane: DecidePlane) {
+        self.plane = plane;
+    }
+
+    pub fn decide_plane(&self) -> DecidePlane {
+        self.plane
     }
 
     pub fn policy(&self) -> &P {
@@ -239,12 +288,42 @@ impl<P: NodePolicy> Tick for Controller<P> {
             }
         }
 
-        // 2. scrape fresh samples into the policy at each pod's due
-        // ticks. Subscription-aware policies are fed exactly the pods
-        // they declared (the `s.time == now` guard drops pods that were
-        // subscribed but not Running, since the sampler never recorded
-        // them); legacy `None` policies keep the old full-grid pass over
-        // the delta-maintained Running index.
+        // 2.+3. observe fresh samples and decide through the selected
+        // plane, then submit highest priority first (the sort is stable
+        // and both planes emit the same action order, so tie-breaking is
+        // plane-independent too).
+        let mut actions = match self.plane {
+            DecidePlane::Scalar => self.tick_scalar(cluster, now),
+            DecidePlane::Batched => self.tick_batched(cluster, now),
+        };
+        actions.sort_by(|a, b| b.priority.cmp(&a.priority));
+        for act in actions {
+            self.apply(cluster, now, act);
+        }
+    }
+
+    fn coast(&self) -> Option<CoastStats> {
+        (self.decide_passes > 0).then(|| CoastStats {
+            decide_passes: self.decide_passes,
+            decide_nanos: self.decide_nanos,
+            ..CoastStats::default()
+        })
+    }
+}
+
+impl<P: NodePolicy> Controller<P> {
+    /// The scalar plane: scrape fresh samples into the policy one virtual
+    /// `observe` call per due pod, then one `decide` over the Running
+    /// views. Kept verbatim as the bit-identity reference the batched
+    /// plane is pinned against.
+    ///
+    /// Subscription-aware policies are fed exactly the pods they declared
+    /// (the `s.time == now` guard drops pods that were subscribed but not
+    /// Running, since the sampler never recorded them); legacy `None`
+    /// policies keep the old full-grid pass over the delta-maintained
+    /// Running index. Interval-gated policies skip the view pass on off
+    /// ticks entirely.
+    fn tick_scalar(&mut self, cluster: &Cluster, now: u64) -> Vec<PodAction> {
         match self.policy.subscriptions() {
             Some(subs) => {
                 let grid = cluster.metrics.period_secs;
@@ -276,21 +355,70 @@ impl<P: NodePolicy> Tick for Controller<P> {
                 }
             }
         }
-
-        // 3. one node-scoped decision batch, highest priority first
-        // (interval-gated policies skip the view pass on off ticks); the
-        // Running views come straight off the index, id order
         if !self.policy.wants_decision(now) {
-            return;
+            return Vec::new();
         }
-        let mut actions = {
+        let t0 = std::time::Instant::now();
+        let actions = {
             let views: Vec<&_> = self.client.running_views().collect();
             self.policy.decide(now, &views)
         };
-        actions.sort_by(|a, b| b.priority.cmp(&a.priority));
-        for act in actions {
-            self.apply(cluster, now, act);
+        self.decide_nanos += t0.elapsed().as_nanos() as u64;
+        self.decide_passes += 1;
+        actions
+    }
+
+    /// The batched plane: assemble one SoA [`DecisionBatch`] for this
+    /// wake — observe rows from the metrics due-set (mirroring the scalar
+    /// due logic row for row), decide rows from the informer's Running
+    /// index with each pod's latest sample and phase age attached — and
+    /// drive the policy's batch entry points once each. Both blocks fill
+    /// lazily (observe only when a scrape is due, decide only when the
+    /// policy wants a decision), so a quiescent wake still costs O(1).
+    fn tick_batched(&mut self, cluster: &Cluster, now: u64) -> Vec<PodAction> {
+        let mut batch = DecisionBatch::new(now);
+        match self.policy.subscriptions() {
+            Some(subs) => {
+                let grid = cluster.metrics.period_secs;
+                if subs.any_due(now, grid) {
+                    for (pod, cad) in subs.iter() {
+                        if !cad.is_due(now, grid) {
+                            continue;
+                        }
+                        if let Some(s) = cluster.metrics.last(pod) {
+                            if s.time == now {
+                                batch.push_observe(pod, &s);
+                            }
+                        }
+                    }
+                }
+            }
+            None => {
+                if cluster.metrics.is_sampling_tick(now) {
+                    for &pod in self.client.running() {
+                        if let Some(s) = cluster.metrics.last(pod) {
+                            if s.time == now {
+                                batch.push_observe(pod, &s);
+                            }
+                        }
+                    }
+                }
+            }
         }
+        if batch.obs_len() > 0 {
+            self.policy.observe_batch(now, &batch);
+        }
+        if !self.policy.wants_decision(now) {
+            return Vec::new();
+        }
+        for view in self.client.running_views() {
+            batch.push_decide(view, cluster.metrics.last(view.id));
+        }
+        let t0 = std::time::Instant::now();
+        let actions = self.policy.decide_batch(now, &batch);
+        self.decide_nanos += t0.elapsed().as_nanos() as u64;
+        self.decide_passes += 1;
+        actions
     }
 }
 

@@ -14,6 +14,6 @@ pub mod fleet;
 pub mod remote;
 
 pub use gang::{Gang, GangSupervisor};
-pub use controller::{run_to_completion, Controller, Tick};
+pub use controller::{run_to_completion, Controller, DecidePlane, Tick};
 pub use fleet::FleetController;
 pub use remote::{run_remote, RemoteController};

@@ -1,7 +1,7 @@
 //! The experiment runner: one (application × policy × environment) run on
 //! the simulator, producing the numbers Fig 4 / Fig 5 / §5 report.
 
-use crate::coordinator::controller::{Controller, Tick};
+use crate::coordinator::controller::{Controller, DecidePlane, Tick};
 use crate::coordinator::fleet::FleetController;
 use crate::policy::arcv::{ArcvParams, ArcvPolicy, DecisionBackend};
 use crate::policy::fixed::FixedPolicy;
@@ -266,6 +266,19 @@ pub fn run(cfg: &ExperimentConfig, kind: PolicyKind) -> RunResult {
 
 /// [`run`] with an explicit kernel mode.
 pub fn run_with_mode(cfg: &ExperimentConfig, kind: PolicyKind, mode: KernelMode) -> RunOutput {
+    run_with_mode_plane(cfg, kind, mode, DecidePlane::default())
+}
+
+/// [`run_with_mode`] with an explicit controller decision plane. The
+/// equivalence suite forces each plane per (policy × mode) cell and
+/// compares `RunResult` + `EventLog` bit for bit; the decide bench forces
+/// them to time the passes against each other.
+pub fn run_with_mode_plane(
+    cfg: &ExperimentConfig,
+    kind: PolicyKind,
+    mode: KernelMode,
+    plane: DecidePlane,
+) -> RunOutput {
     let model = build(cfg.app, cfg.seed);
     let exec_secs = model.exec_secs;
     let max_gb = model.max_gb;
@@ -289,26 +302,31 @@ pub fn run_with_mode(cfg: &ExperimentConfig, kind: PolicyKind, mode: KernelMode)
     let mut controller: Box<dyn Tick> = match kind {
         PolicyKind::ArcvNative(params) => {
             let mut c = Controller::new();
+            c.set_decide_plane(plane);
             c.manage(pod, Box::new(ArcvPolicy::new(initial_gb, params)));
             Box::new(c)
         }
         PolicyKind::ArcvFleet(params, backend) => {
             let mut c = FleetController::from_backend(backend, params);
+            c.set_decide_plane(plane);
             c.manage(pod, initial_gb);
             Box::new(c)
         }
         PolicyKind::VpaSim => {
             let mut c = Controller::new();
+            c.set_decide_plane(plane);
             c.manage(pod, Box::new(VpaSimPolicy::new(initial_gb)));
             Box::new(c)
         }
         PolicyKind::VpaRecommendOnly => {
             let mut c = Controller::new();
+            c.set_decide_plane(plane);
             c.manage(pod, Box::new(VpaFullPolicy::new(UpdateMode::Off)));
             Box::new(c)
         }
         PolicyKind::Fixed => {
             let mut c = Controller::new();
+            c.set_decide_plane(plane);
             c.manage(pod, Box::new(FixedPolicy::new(initial_gb)));
             Box::new(c)
         }
@@ -319,6 +337,7 @@ pub fn run_with_mode(cfg: &ExperimentConfig, kind: PolicyKind, mode: KernelMode)
                 .map(|t| m2.usage_gb(t as f64))
                 .collect();
             let mut c = Controller::new();
+            c.set_decide_plane(plane);
             c.manage(
                 pod,
                 Box::new(OraclePolicy::new(trace, 10, 1.02, 60)),

@@ -5,7 +5,8 @@ pub mod report;
 pub mod sweep;
 
 pub use experiment::{
-    run, run_with_mode, ExperimentConfig, PolicyKind, RunOutput, RunResult, SwapKind,
+    run, run_with_mode, run_with_mode_plane, ExperimentConfig, PolicyKind, RunOutput, RunResult,
+    SwapKind,
 };
 pub use report::{ratio_row, ratio_table, ratios_csv, run_line, RatioRow};
 pub use sweep::{stability_variants, sweep_params, window_variants, SweepPoint};

@@ -15,6 +15,7 @@
 
 use super::params::ArcvParams;
 use super::state::{PodState, STATE_LEN};
+use crate::policy::batch::DecisionBatch;
 use crate::policy::{Action, NodePolicy, PodAction};
 use crate::simkube::api::PodView;
 use crate::simkube::clock::next_multiple;
@@ -23,6 +24,14 @@ use crate::simkube::pod::PodId;
 use crate::util::ring::RingBuffer;
 
 /// A batched ARC-V decision step.
+///
+/// This row-major `step` layout is the one batch ABI the whole decision
+/// plane shares: [`FleetPolicy`] stages the same buffers whether it is
+/// driven through the scalar [`NodePolicy::decide`] or the controller's
+/// batched [`NodePolicy::decide_batch`], and the backend behind it is
+/// interchangeably the native Rust loop ([`NativeFleet`]), the AOT XLA
+/// artifact (`runtime::engine::XlaFleet`), or the feature-gated stub —
+/// the rust and Pallas decision graphs consume identical rows.
 ///
 /// Not `Send`: the XLA backend wraps a PJRT client that is single-threaded
 /// by construction; fleet controllers run on the coordinator thread.
@@ -250,6 +259,41 @@ impl NodePolicy for FleetPolicy {
     }
 
     fn decide(&mut self, now: u64, pods: &[&PodView]) -> Vec<PodAction> {
+        self.decide_present(now, |m_pod| pods.iter().any(|v| v.id == m_pod))
+    }
+
+    /// The controller's batched plane: identical staging and backend
+    /// `step` call, with presence resolved by binary search over the
+    /// batch's sorted Running-index column instead of a linear view scan
+    /// — same eligible set, same emission order, bit-identical output.
+    fn decide_batch(&mut self, now: u64, batch: &DecisionBatch) -> Vec<PodAction> {
+        self.decide_present(now, |m_pod| batch.pods.binary_search(&m_pod).is_ok())
+    }
+
+    fn on_action_rejected(&mut self, _now: u64, act: &PodAction) {
+        // Roll the bookkeeping back so the resize is re-issued on the next
+        // decision tick (the packed state keeps evolving regardless —
+        // same as a per-pod kernel whose patch was refused).
+        if let Some(m) = self.managed.iter_mut().find(|m| m.pod == act.pod) {
+            m.last_rec = m.prev_rec;
+        }
+    }
+
+    fn recommendation_gb(&self, pod: PodId) -> Option<f64> {
+        self.managed.iter().find(|m| m.pod == pod).map(|m| m.last_rec)
+    }
+
+    fn subscriptions(&self) -> Option<&SubscriptionSet> {
+        Some(&self.subs)
+    }
+}
+
+impl FleetPolicy {
+    /// One decision tick: stage every eligible managed pod's window, swap
+    /// and packed state, run one [`DecisionBackend::step`], and emit the
+    /// resize actions — shared by the scalar and batched decide planes,
+    /// which differ only in how `is_present` answers.
+    fn decide_present(&mut self, now: u64, is_present: impl Fn(PodId) -> bool) -> Vec<PodAction> {
         if now < self.last_decision + self.params.decision_interval_secs {
             return Vec::new();
         }
@@ -260,7 +304,7 @@ impl NodePolicy for FleetPolicy {
         self.idx_stage.clear();
         let mut scratch = vec![0.0f64; w];
         for (i, m) in self.managed.iter().enumerate() {
-            let eligible = pods.iter().any(|v| v.id == m.pod)
+            let eligible = is_present(m.pod)
                 && m.started_at
                     .map(|t0| now >= t0 + self.params.init_phase_secs)
                     .unwrap_or(false)
@@ -310,23 +354,6 @@ impl NodePolicy for FleetPolicy {
             }
         }
         actions
-    }
-
-    fn on_action_rejected(&mut self, _now: u64, act: &PodAction) {
-        // Roll the bookkeeping back so the resize is re-issued on the next
-        // decision tick (the packed state keeps evolving regardless —
-        // same as a per-pod kernel whose patch was refused).
-        if let Some(m) = self.managed.iter_mut().find(|m| m.pod == act.pod) {
-            m.last_rec = m.prev_rec;
-        }
-    }
-
-    fn recommendation_gb(&self, pod: PodId) -> Option<f64> {
-        self.managed.iter().find(|m| m.pod == pod).map(|m| m.last_rec)
-    }
-
-    fn subscriptions(&self) -> Option<&SubscriptionSet> {
-        Some(&self.subs)
     }
 }
 

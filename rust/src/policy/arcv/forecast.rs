@@ -16,6 +16,45 @@ pub fn forecast(window: &[f64], horizon_samples: f64) -> f64 {
     slope * t_eval + intercept
 }
 
+/// Column-wise [`forecast`] over an `n×w` row-major window matrix (w ≥ 2),
+/// appending `n` forecasts to `out`. The OLS accumulators (`ybar`, `cov`)
+/// run per row in the same sample order as `linreg`'s scalar loops, and
+/// `tbar`/`var` depend only on `w` — computed once with the identical op
+/// sequence and shared across rows — so every row's forecast is
+/// bit-identical to the scalar path. `horizon[i]` is row `i`'s horizon.
+pub fn forecast_batch(windows: &[f64], n: usize, w: usize, horizon: &[f64], out: &mut Vec<f64>) {
+    assert!(w >= 2 && windows.len() >= n * w && horizon.len() >= n);
+    let nf = w as f64;
+    let tbar = (nf - 1.0) / 2.0;
+    let mut var = 0.0;
+    for j in 0..w {
+        let dt = j as f64 - tbar;
+        var += dt * dt;
+    }
+    let mut ybar = vec![0.0; n];
+    for j in 0..w {
+        for (i, y) in ybar.iter_mut().enumerate() {
+            *y += windows[i * w + j];
+        }
+    }
+    for y in ybar.iter_mut() {
+        *y /= nf;
+    }
+    let mut cov = vec![0.0; n];
+    for j in 0..w {
+        let dt = j as f64 - tbar;
+        for (i, c) in cov.iter_mut().enumerate() {
+            *c += dt * (windows[i * w + j] - ybar[i]);
+        }
+    }
+    out.reserve(n);
+    for i in 0..n {
+        let slope = cov[i] / var;
+        let intercept = ybar[i] - slope * tbar;
+        out.push(slope * ((nf - 1.0) + horizon[i]) + intercept);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -37,6 +76,26 @@ mod tests {
     fn zero_horizon_returns_fit_at_end() {
         let w: Vec<f64> = (0..12).map(|t| 1.0 + 0.5 * t as f64).collect();
         assert!((forecast(&w, 0.0) - w[11]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_forecast_is_bit_identical_to_scalar() {
+        let w = 12;
+        let rows: Vec<Vec<f64>> = (0..7)
+            .map(|i| {
+                (0..w)
+                    .map(|j| (2.0 + i as f64 * 0.73).sqrt() * (1.0 + 0.013 * j as f64).powi(2))
+                    .collect()
+            })
+            .collect();
+        let horizon: Vec<f64> = (0..7).map(|i| 6.0 + i as f64).collect();
+        let flat: Vec<f64> = rows.iter().flatten().copied().collect();
+        let mut out = Vec::new();
+        forecast_batch(&flat, rows.len(), w, &horizon, &mut out);
+        for (i, row) in rows.iter().enumerate() {
+            let scalar = forecast(row, horizon[i]);
+            assert_eq!(out[i].to_bits(), scalar.to_bits(), "row {i}");
+        }
     }
 
     #[test]

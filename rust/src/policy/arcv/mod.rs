@@ -13,7 +13,8 @@ pub mod signals;
 pub mod state;
 
 pub use fleet::{DecisionBackend, FleetPolicy, NativeFleet};
+pub use forecast::forecast_batch;
 pub use native::ArcvPolicy;
 pub use params::{ArcvParams, PARAMS_LEN};
-pub use signals::{detect, Signal, WindowStats};
+pub use signals::{detect, detect_batch, Signal, WindowStats};
 pub use state::{PodState, State, STATE_LEN};

@@ -3,8 +3,9 @@
 //! issuance on top of the core state machine.
 
 use super::params::ArcvParams;
-use super::signals::Signal;
+use super::signals::{Signal, WindowStats};
 use super::state::{PodState, State};
+use crate::policy::batch::{BatchDecide, StagedRow};
 use crate::policy::{Action, VerticalPolicy};
 use crate::simkube::clock::next_multiple;
 use crate::simkube::metrics::Sample;
@@ -121,6 +122,57 @@ impl VerticalPolicy for ArcvPolicy {
             }
         }
         wake
+    }
+
+    fn batch_eval(&mut self) -> Option<&mut dyn BatchDecide> {
+        Some(self)
+    }
+}
+
+/// ARC-V's column-wise decision surface: `stage` replays exactly the
+/// gates of [`VerticalPolicy::decide`] (started, init grace, decision
+/// interval, window full) without touching state, and `commit` performs
+/// exactly its post-gate body — `last_decision`, the state-machine fold
+/// via [`PodState::apply`], the signal log, and the 1e-4 resize
+/// threshold. The signal/forecast math happens between the two, column
+/// -wise across the whole batch, with a per-row FP op sequence identical
+/// to the scalar `detect`/`forecast` calls — that is the whole
+/// bit-identity argument.
+impl BatchDecide for ArcvPolicy {
+    fn window_len(&self) -> usize {
+        self.params.window
+    }
+
+    fn stage(&mut self, now: u64, win: &mut [f64]) -> Option<StagedRow> {
+        let t0 = self.started_at?;
+        if now < t0 + self.params.init_phase_secs {
+            return None;
+        }
+        if now < self.last_decision + self.params.decision_interval_secs {
+            return None;
+        }
+        if self.window.len() < self.params.window {
+            return None;
+        }
+        let n = self.window.copy_last_into(self.params.window, win);
+        debug_assert_eq!(n, self.params.window);
+        Some(StagedRow {
+            swap_gb: self.swap_gb,
+            stability: self.params.stability,
+            horizon_samples: self.params.horizon_samples,
+        })
+    }
+
+    fn commit(&mut self, now: u64, sig: Signal, stats: WindowStats, forecast: f64) -> Action {
+        self.last_decision = now;
+        let prev_rec = self.state.rec;
+        self.state.apply(sig, stats, forecast, self.swap_gb, &self.params);
+        self.signal_log.push((now, sig));
+        if (self.state.rec - prev_rec).abs() / prev_rec.max(1e-9) > 1e-4 {
+            Action::Resize(self.state.rec)
+        } else {
+            Action::None
+        }
     }
 }
 

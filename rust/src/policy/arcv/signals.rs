@@ -84,6 +84,70 @@ pub fn detect(window: &[f64], stability: f64) -> (Signal, WindowStats) {
     )
 }
 
+/// Column-wise [`detect`] over an `n×w` row-major window matrix: one pass
+/// per adjacent-sample pair for the band test, one pass per window
+/// position for the stats, with the pod index innermost. Each row's
+/// floating-point op sequence (comparison operands, min/max/sum
+/// accumulation order) is exactly the scalar `detect`'s, so the results
+/// are bit-identical — the batch layout only changes which pod the next
+/// op belongs to, never the ops a pod sees. `stability[i]` is row `i`'s
+/// band, so rows with heterogeneous params batch together.
+///
+/// Appends `n` entries to `sigs` and `stats`.
+pub fn detect_batch(
+    windows: &[f64],
+    n: usize,
+    w: usize,
+    stability: &[f64],
+    sigs: &mut Vec<Signal>,
+    stats: &mut Vec<WindowStats>,
+) {
+    assert!(w >= 2, "signal detection needs >= 2 samples");
+    assert!(windows.len() >= n * w && stability.len() >= n);
+    let mut dec = vec![false; n];
+    let mut inc = vec![false; n];
+    for j in 0..w - 1 {
+        for (i, (d, c)) in dec.iter_mut().zip(inc.iter_mut()).enumerate() {
+            let a = windows[i * w + j];
+            let b = windows[i * w + j + 1];
+            let rel = (b - a) / a.abs().max(EPS);
+            if rel < -stability[i] {
+                *d = true;
+            } else if rel > stability[i] {
+                *c = true;
+            }
+        }
+    }
+    let mut min = vec![f64::INFINITY; n];
+    let mut max = vec![f64::NEG_INFINITY; n];
+    let mut sum = vec![0.0; n];
+    for j in 0..w {
+        for i in 0..n {
+            let x = windows[i * w + j];
+            min[i] = min[i].min(x);
+            max[i] = max[i].max(x);
+            sum[i] += x;
+        }
+    }
+    sigs.reserve(n);
+    stats.reserve(n);
+    for i in 0..n {
+        sigs.push(if dec[i] {
+            Signal::II
+        } else if inc[i] {
+            Signal::I
+        } else {
+            Signal::None
+        });
+        stats.push(WindowStats {
+            min: min[i],
+            max: max[i],
+            last: windows[i * w + w - 1],
+            mean: sum[i] / w as f64,
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +212,31 @@ mod tests {
     #[should_panic]
     fn tiny_window_panics() {
         detect(&[1.0], 0.02);
+    }
+
+    #[test]
+    fn batch_detect_is_bit_identical_to_scalar() {
+        // awkward irrational-ish values so any FP reordering would show
+        let w = 7;
+        let rows: Vec<Vec<f64>> = (0..9)
+            .map(|i| {
+                (0..w)
+                    .map(|j| (1.0 + i as f64 * 0.37).powf(1.1) + (j as f64 * 0.618).sin() * 0.3)
+                    .collect()
+            })
+            .collect();
+        let stability: Vec<f64> = (0..9).map(|i| 0.01 + 0.005 * (i % 3) as f64).collect();
+        let flat: Vec<f64> = rows.iter().flatten().copied().collect();
+        let mut sigs = Vec::new();
+        let mut stats = Vec::new();
+        detect_batch(&flat, rows.len(), w, &stability, &mut sigs, &mut stats);
+        for (i, row) in rows.iter().enumerate() {
+            let (s, st) = detect(row, stability[i]);
+            assert_eq!(sigs[i], s, "row {i}");
+            assert_eq!(stats[i].min.to_bits(), st.min.to_bits(), "row {i}");
+            assert_eq!(stats[i].max.to_bits(), st.max.to_bits(), "row {i}");
+            assert_eq!(stats[i].last.to_bits(), st.last.to_bits(), "row {i}");
+            assert_eq!(stats[i].mean.to_bits(), st.mean.to_bits(), "row {i}");
+        }
     }
 }

@@ -5,7 +5,7 @@
 
 use super::forecast::forecast;
 use super::params::ArcvParams;
-use super::signals::{detect, Signal};
+use super::signals::{detect, Signal, WindowStats};
 
 pub const STATE_LEN: usize = 6;
 
@@ -101,7 +101,18 @@ impl PodState {
     pub fn step(&mut self, window: &[f64], swap_gb: f64, p: &ArcvParams) -> Signal {
         let (sig, stats) = detect(window, p.stability);
         let fc = forecast(window, p.horizon_samples);
+        self.apply(sig, stats, fc, swap_gb, p);
+        sig
+    }
 
+    /// The post-signal half of [`Self::step`]: fold one already-detected
+    /// `(signal, stats, forecast)` triple into the state machine. The
+    /// batched decision plane computes signals and forecasts column-wise
+    /// across a whole batch (`signals::detect_batch`,
+    /// `forecast::forecast_batch`) and then applies each row through here
+    /// — the floating-point op sequence per pod is identical to the
+    /// scalar `step`, which is what keeps the two planes bit-identical.
+    pub fn apply(&mut self, sig: Signal, stats: WindowStats, fc: f64, swap_gb: f64, p: &ArcvParams) {
         let usage = stats.last;
         let need = usage + swap_gb;
         let gmax_new = self.gmax.max(stats.max);
@@ -185,7 +196,6 @@ impl PodState {
         self.persist = persist_new;
         self.gmax = gmax_new;
         self.rec = rec_new;
-        sig
     }
 }
 

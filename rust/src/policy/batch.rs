@@ -1,0 +1,390 @@
+//! The batched decision plane: structure-of-arrays observe/decide batches
+//! and the parallel per-node evaluation machinery behind
+//! [`NodePolicy::decide_batch`].
+//!
+//! The controller assembles one [`DecisionBatch`] per wake straight from
+//! its informer's Running index and the metrics due-set — pod ids, the
+//! latest usage/rss/swap/limit sample columns, and phase ages — instead
+//! of dispatching one scalar `observe`/`decide` virtual call per pod.
+//! Policies that don't care keep working untouched: the
+//! [`NodePolicy::observe_batch`]/[`NodePolicy::decide_batch`] defaults
+//! loop the scalar methods, which makes the two planes bit-identical by
+//! construction.
+//!
+//! Per-pod kernels opt into column-wise evaluation through
+//! [`BatchDecide`]: `stage` replays the kernel's decide gates and, when
+//! they pass, contributes the kernel's window as one row of a shared
+//! `n×W` matrix; the signal and forecast passes then run once per window
+//! position across all rows ([`detect_batch`], [`forecast_batch`]) and
+//! `commit` folds each row's `(signal, stats, forecast)` back into the
+//! kernel's state machine. Every row's floating-point op sequence is
+//! identical to the scalar path, so the batch is bit-identical — the
+//! kernel-equivalence suite and `decide_batch_prop.rs` pin it.
+//!
+//! Rows are grouped by node and the groups evaluate in parallel under
+//! `std::thread::scope` (kernels of distinct pods are disjoint `&mut`
+//! borrows, and `dyn VerticalPolicy` is `Send` by supertrait). The merge
+//! is deterministic and mirrors PR 8's shard-buffer discipline: each
+//! group emits its actions in ascending pod id, and the merged batch is
+//! re-ordered ascending pod id globally — exactly the scalar loop's
+//! emission order over the sorted entry list.
+
+use super::arcv::{detect_batch, forecast_batch, Signal, WindowStats};
+use super::{Action, NodePolicy, PodAction, VerticalPolicy};
+use crate::simkube::api::PodView;
+use crate::simkube::metrics::Sample;
+use crate::simkube::pod::PodId;
+
+/// Minimum staged rows per scoped decide worker: below this the spawn +
+/// join overhead dominates the ~100 ns/row kernel math, so the evaluator
+/// degrades to the serial path (which is bit-identical anyway — worker
+/// count never touches decision state, only wall time).
+pub const DECIDE_ROWS_PER_WORKER: usize = 1024;
+
+/// One controller wake's observation + decision rows, structure-of-arrays.
+///
+/// Both blocks are filled lazily by the controller (observe rows only
+/// when a scrape is due, decide rows only when the policy wants a
+/// decision), so a quiescent wake still costs O(1).
+///
+/// - The **observe block** mirrors the scalar due-set pass exactly: one
+///   row per subscribed pod whose cadence is due with a sample recorded
+///   at this tick (or, for legacy non-subscribing policies, per Running
+///   pod on a sampling tick), in the scalar visit order.
+/// - The **decide block** is the informer's Running index, ascending pod
+///   id, with each pod's cached view, bound node, phase age, and latest
+///   metrics sample columns (`NaN`/`u64::MAX` when never scraped).
+#[derive(Default)]
+pub struct DecisionBatch<'a> {
+    pub now: u64,
+    // ---- observe block ----
+    pub obs_pods: Vec<PodId>,
+    pub obs_time: Vec<u64>,
+    pub obs_usage_gb: Vec<f64>,
+    pub obs_rss_gb: Vec<f64>,
+    pub obs_swap_gb: Vec<f64>,
+    pub obs_limit_gb: Vec<f64>,
+    // ---- decide block ----
+    pub pods: Vec<PodId>,
+    pub views: Vec<&'a PodView>,
+    /// Bound node per row (`usize::MAX` for the unbound — impossible for
+    /// Running pods, kept total for robustness). Only a parallelization
+    /// hint: the merge order makes grouping invisible to results.
+    pub node: Vec<usize>,
+    pub usage_gb: Vec<f64>,
+    pub rss_gb: Vec<f64>,
+    pub swap_gb: Vec<f64>,
+    pub limit_gb: Vec<f64>,
+    /// Tick of the latest sample per row (`u64::MAX` when never scraped).
+    pub sampled_at: Vec<u64>,
+    /// Ticks since the pod first entered Running.
+    pub phase_age: Vec<u64>,
+}
+
+impl<'a> DecisionBatch<'a> {
+    pub fn new(now: u64) -> Self {
+        Self {
+            now,
+            ..Self::default()
+        }
+    }
+
+    pub fn obs_len(&self) -> usize {
+        self.obs_pods.len()
+    }
+
+    pub fn decide_len(&self) -> usize {
+        self.pods.len()
+    }
+
+    /// Append one observe row (the pod's fresh sample at this tick).
+    pub fn push_observe(&mut self, pod: PodId, s: &Sample) {
+        self.obs_pods.push(pod);
+        self.obs_time.push(s.time);
+        self.obs_usage_gb.push(s.usage_gb);
+        self.obs_rss_gb.push(s.rss_gb);
+        self.obs_swap_gb.push(s.swap_gb);
+        self.obs_limit_gb.push(s.limit_gb);
+    }
+
+    /// Reassemble observe row `i` as the scalar [`Sample`] — what the
+    /// default [`NodePolicy::observe_batch`] loop feeds `observe`.
+    pub fn obs_sample(&self, i: usize) -> Sample {
+        Sample {
+            time: self.obs_time[i],
+            usage_gb: self.obs_usage_gb[i],
+            rss_gb: self.obs_rss_gb[i],
+            swap_gb: self.obs_swap_gb[i],
+            limit_gb: self.obs_limit_gb[i],
+        }
+    }
+
+    /// Append one decide row for a Running view (callers feed views in
+    /// ascending pod id — the Running index order) with the pod's latest
+    /// recorded sample, if any.
+    pub fn push_decide(&mut self, view: &'a PodView, last: Option<Sample>) {
+        self.pods.push(view.id);
+        self.node.push(view.node.unwrap_or(usize::MAX));
+        self.phase_age
+            .push(view.started_at.map(|t| self.now.saturating_sub(t)).unwrap_or(0));
+        match last {
+            Some(s) => {
+                self.usage_gb.push(s.usage_gb);
+                self.rss_gb.push(s.rss_gb);
+                self.swap_gb.push(s.swap_gb);
+                self.limit_gb.push(s.limit_gb);
+                self.sampled_at.push(s.time);
+            }
+            None => {
+                self.usage_gb.push(f64::NAN);
+                self.rss_gb.push(f64::NAN);
+                self.swap_gb.push(f64::NAN);
+                self.limit_gb.push(f64::NAN);
+                self.sampled_at.push(u64::MAX);
+            }
+        }
+        self.views.push(view);
+    }
+}
+
+/// Per-row metadata a kernel contributes when its decide gates pass.
+#[derive(Clone, Copy, Debug)]
+pub struct StagedRow {
+    /// The pod's current swap residency (GB) for the state-machine fold.
+    pub swap_gb: f64,
+    /// The kernel's ± stability band for the signal pass.
+    pub stability: f64,
+    /// The kernel's forecast horizon in sample periods.
+    pub horizon_samples: f64,
+}
+
+/// The column-wise evaluation surface a [`VerticalPolicy`] may expose via
+/// [`VerticalPolicy::batch_eval`]. The contract that keeps the batch
+/// plane bit-identical to the scalar one:
+///
+/// - `stage` must return `None` exactly when `decide(now)` would return
+///   [`Action::None`] without mutating any state (a failed gate), and
+///   must itself mutate nothing in that case. On `Some`, it fills `win`
+///   with the same `window_len()` samples the scalar path would evaluate.
+/// - `commit` must perform exactly the state mutations and produce
+///   exactly the action the scalar `decide` would after its gates pass,
+///   given that the `(sig, stats, forecast)` triple is what the scalar
+///   signal/forecast calls would have computed on `win` (guaranteed by
+///   `detect_batch`/`forecast_batch`).
+pub trait BatchDecide {
+    /// Window length W — rows of one shared matrix must agree on it.
+    fn window_len(&self) -> usize;
+
+    /// Replay the decide gates at `now`; on pass, fill `win` (length
+    /// `window_len()`) and describe the row. No state may change here.
+    fn stage(&mut self, now: u64, win: &mut [f64]) -> Option<StagedRow>;
+
+    /// Fold one columnized `(signal, stats, forecast)` result into the
+    /// kernel and return the action the scalar path would have returned.
+    fn commit(&mut self, now: u64, sig: Signal, stats: WindowStats, forecast: f64) -> Action;
+}
+
+type Entry = (PodId, Box<dyn VerticalPolicy>);
+
+/// How each kernel of a group is evaluated this wake.
+enum Plan {
+    /// No batch surface: the scalar `decide` call, made in emission order.
+    Scalar,
+    /// Batch surface present but a gate failed: the scalar path would
+    /// have returned `Action::None` without touching state — emit nothing.
+    Gated,
+    /// Row `row` of matrix `mat`: commit after the columnized passes.
+    Staged { mat: usize, row: usize },
+}
+
+/// One shared `rows×w` staging matrix plus its columnized results.
+struct Mat {
+    w: usize,
+    rows: usize,
+    windows: Vec<f64>,
+    stability: Vec<f64>,
+    horizon: Vec<f64>,
+    sigs: Vec<Signal>,
+    stats: Vec<WindowStats>,
+    fc: Vec<f64>,
+}
+
+impl Mat {
+    fn new(w: usize) -> Self {
+        Self {
+            w,
+            rows: 0,
+            windows: Vec::new(),
+            stability: Vec::new(),
+            horizon: Vec::new(),
+            sigs: Vec::new(),
+            stats: Vec::new(),
+            fc: Vec::new(),
+        }
+    }
+}
+
+/// Evaluate one node group's kernels (ascending pod id): stage the
+/// batchable rows into shared matrices, run the signal/forecast passes
+/// column-wise, then walk the group once more in order to commit / make
+/// the scalar calls. Emission order is the group's entry order — the
+/// scalar loop's order restricted to this node.
+fn eval_group(now: u64, group: &mut [&mut Entry]) -> Vec<PodAction> {
+    let mut mats: Vec<Mat> = Vec::new();
+    let mut plans: Vec<Plan> = Vec::with_capacity(group.len());
+    for e in group.iter_mut() {
+        let plan = match e.1.batch_eval() {
+            None => Plan::Scalar,
+            Some(b) => {
+                let w = b.window_len();
+                let mi = match mats.iter().position(|m| m.w == w) {
+                    Some(mi) => mi,
+                    None => {
+                        mats.push(Mat::new(w));
+                        mats.len() - 1
+                    }
+                };
+                let m = &mut mats[mi];
+                let start = m.windows.len();
+                m.windows.resize(start + w, 0.0);
+                match b.stage(now, &mut m.windows[start..]) {
+                    None => {
+                        m.windows.truncate(start);
+                        Plan::Gated
+                    }
+                    Some(row_meta) => {
+                        m.stability.push(row_meta.stability);
+                        m.horizon.push(row_meta.horizon_samples);
+                        let row = m.rows;
+                        m.rows += 1;
+                        Plan::Staged { mat: mi, row }
+                    }
+                }
+            }
+        };
+        plans.push(plan);
+    }
+    for m in mats.iter_mut() {
+        if m.rows == 0 {
+            continue;
+        }
+        detect_batch(&m.windows, m.rows, m.w, &m.stability, &mut m.sigs, &mut m.stats);
+        forecast_batch(&m.windows, m.rows, m.w, &m.horizon, &mut m.fc);
+    }
+    let mut out = Vec::new();
+    for (e, plan) in group.iter_mut().zip(&plans) {
+        let act = match plan {
+            Plan::Gated => Action::None,
+            Plan::Scalar => e.1.decide(now),
+            Plan::Staged { mat, row } => {
+                let m = &mats[*mat];
+                let b = e.1.batch_eval().expect("staged kernel lost its batch surface");
+                b.commit(now, m.sigs[*row], m.stats[*row], m.fc[*row])
+            }
+        };
+        match act {
+            Action::None => {}
+            act => out.push(PodAction::new(e.0, act, e.1.name().to_string())),
+        }
+    }
+    out
+}
+
+/// How many scoped workers the group set warrants. `threads` is the
+/// caller's knob: 0 = auto (available parallelism), 1 = forced serial,
+/// N = at most N. Capped by the group count (a group is the smallest
+/// schedulable unit) and by the staged row count so tiny batches stay
+/// serial — mirroring `step_region`'s worker formula.
+fn decide_workers(threads: usize, groups: usize, rows: usize) -> usize {
+    let avail = match threads {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        t => t,
+    };
+    avail.min(groups).min((rows / DECIDE_ROWS_PER_WORKER).max(1)).max(1)
+}
+
+/// The [`PerPodAdapter`](super::PerPodAdapter) batch evaluator: bucket
+/// the present kernels per node, evaluate the groups (in parallel when
+/// the batch is large enough), and merge the per-group action streams
+/// back into the scalar loop's global emission order — ascending pod id.
+///
+/// Returns `(actions, workers_used)`.
+pub(super) fn decide_entries(
+    now: u64,
+    batch: &DecisionBatch,
+    entries: &mut [Entry],
+    threads: usize,
+) -> (Vec<PodAction>, usize) {
+    if entries.is_empty() || batch.pods.is_empty() {
+        return (Vec::new(), 0);
+    }
+    // Bucket per node: entries are sorted by pod id, so each bucket keeps
+    // ascending pod order for free.
+    let mut buckets: std::collections::BTreeMap<usize, Vec<&mut Entry>> =
+        std::collections::BTreeMap::new();
+    let mut rows = 0usize;
+    for e in entries.iter_mut() {
+        let Ok(row) = batch.pods.binary_search(&e.0) else {
+            continue; // not Running this tick: the scalar loop skips too
+        };
+        rows += 1;
+        buckets.entry(batch.node[row]).or_default().push(e);
+    }
+    let mut groups: Vec<Vec<&mut Entry>> = buckets.into_values().collect();
+    let workers = decide_workers(threads, groups.len(), rows);
+    let outs: Vec<Vec<PodAction>> = if workers >= 2 {
+        // contiguous bins of whole node groups, one scoped worker each —
+        // the same chunking discipline as step_region's shard workers
+        let per = groups.len().div_ceil(workers);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = groups
+                .chunks_mut(per)
+                .map(|bin| {
+                    s.spawn(move || {
+                        bin.iter_mut().map(|g| eval_group(now, g)).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("decide worker panicked"))
+                .collect()
+        })
+    } else {
+        groups.iter_mut().map(|g| eval_group(now, g)).collect()
+    };
+    // Deterministic merge: every group stream is ascending by pod and pod
+    // ids are disjoint across groups, so sorting the concatenation by pod
+    // id reproduces the scalar loop's global order exactly — the decide
+    // twin of PR 8's shard-buffer merge.
+    let mut out: Vec<PodAction> = outs.into_iter().flatten().collect();
+    out.sort_by_key(|a| a.pod);
+    (out, workers)
+}
+
+/// The adapter's observe fast path: both the due-set rows and the entry
+/// list are ascending by pod id, so a single merge walk replaces the
+/// per-row binary search of the scalar loop. Same visit order, same
+/// calls — bit-identical to looping [`NodePolicy::observe`].
+pub(super) fn observe_entries(now: u64, batch: &DecisionBatch, entries: &mut [Entry]) {
+    let mut ei = 0usize;
+    let mut prev: Option<PodId> = None;
+    for i in 0..batch.obs_pods.len() {
+        let pod = batch.obs_pods[i];
+        if prev.is_some_and(|p| pod < p) {
+            // out-of-order caller (not the in-tree controller): stay
+            // correct with a point lookup instead of the merge walk
+            if let Ok(j) = entries.binary_search_by_key(&pod, |e| e.0) {
+                entries[j].1.observe(now, &batch.obs_sample(i));
+            }
+            continue;
+        }
+        prev = Some(pod);
+        while ei < entries.len() && entries[ei].0 < pod {
+            ei += 1;
+        }
+        if ei < entries.len() && entries[ei].0 == pod {
+            entries[ei].1.observe(now, &batch.obs_sample(i));
+        }
+    }
+}

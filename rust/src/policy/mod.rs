@@ -25,9 +25,12 @@
 //! - [`oracle`] — clairvoyant lower bound for ablations.
 
 pub mod arcv;
+pub mod batch;
 pub mod fixed;
 pub mod oracle;
 pub mod vpa;
+
+pub use batch::{BatchDecide, DecisionBatch, StagedRow};
 
 use crate::simkube::api::PodView;
 use crate::simkube::metrics::{Sample, ScrapeCadence, SubscriptionSet};
@@ -79,6 +82,17 @@ pub trait VerticalPolicy: Send {
     /// the pod and the kernel coasts past its grid ticks.
     fn scrape_cadence(&self) -> ScrapeCadence {
         ScrapeCadence::Grid
+    }
+
+    /// The kernel's column-wise evaluation surface, if it has one. A
+    /// `Some` lets [`PerPodAdapter::decide_batch`] evaluate this kernel's
+    /// decide pass as one row of a shared batch matrix (signals and
+    /// forecasts computed once per window position across all rows)
+    /// instead of through the scalar [`Self::decide`] call — bit-identical
+    /// by the [`BatchDecide`] contract. The default `None` keeps the
+    /// scalar call; hand-rolled kernels never notice the batch plane.
+    fn batch_eval(&mut self) -> Option<&mut dyn BatchDecide> {
+        None
     }
 }
 
@@ -172,6 +186,32 @@ pub trait NodePolicy {
     /// Returns the batch of actions to submit this tick (possibly empty).
     fn decide(&mut self, now: u64, pods: &[&PodView]) -> Vec<PodAction>;
 
+    /// Batched observe: fold one wake's whole due-set — the observe block
+    /// of a [`DecisionBatch`] — into the policy. The default loops the
+    /// scalar [`Self::observe`] over the rows in order, so the batched
+    /// controller plane is bit-identical for policies that don't override
+    /// it; [`PerPodAdapter`] overrides it with a sorted merge walk.
+    fn observe_batch(&mut self, now: u64, batch: &DecisionBatch) {
+        for i in 0..batch.obs_len() {
+            self.observe(now, batch.obs_pods[i], &batch.obs_sample(i));
+        }
+    }
+
+    /// Batched decide: one call over the decide block of a
+    /// [`DecisionBatch`] (the informer's Running index, ascending pod id,
+    /// with sample and phase-age columns attached). The default delegates
+    /// to the scalar [`Self::decide`] over the batch's views — identical
+    /// by construction. [`PerPodAdapter`] overrides it to evaluate ARC-V
+    /// kernels column-wise and per-node groups in parallel;
+    /// [`arcv::FleetPolicy`] overrides it to route the batch through its
+    /// `DecisionBackend` with index-based presence checks. Implementations
+    /// must emit exactly the action stream their scalar [`Self::decide`]
+    /// would, in the same order — the coordinator's priority sort is
+    /// stable, so emission order is behaviorally significant.
+    fn decide_batch(&mut self, now: u64, batch: &DecisionBatch) -> Vec<PodAction> {
+        self.decide(now, &batch.views)
+    }
+
     /// The coordinator submitted this policy's action and the API refused
     /// it (admission or resourceVersion conflict). Stateful policies roll
     /// back their bookkeeping here so the action is re-issued on a later
@@ -205,6 +245,13 @@ pub struct PerPodAdapter {
     /// honours. Parked (Succeeded) kernels are unsubscribed: a dead pod
     /// must neither be scraped nor cap the kernel's coast ceiling.
     subs: SubscriptionSet,
+    /// Scoped-worker knob for [`Self::decide_batch`]: 0 = auto (available
+    /// parallelism), 1 = forced serial, N = at most N workers. Worker
+    /// count never touches decision state — only wall time — so any
+    /// setting is bit-identical to any other.
+    decide_threads: usize,
+    /// Workers used by the most recent `decide_batch` (diagnostic).
+    last_decide_workers: usize,
 }
 
 impl PerPodAdapter {
@@ -213,7 +260,22 @@ impl PerPodAdapter {
             entries: Vec::new(),
             retired: Vec::new(),
             subs: SubscriptionSet::new(),
+            decide_threads: 0,
+            last_decide_workers: 0,
         }
+    }
+
+    /// Set the scoped-worker cap for [`Self::decide_batch`] (0 = auto,
+    /// 1 = forced serial). Benches force each mode explicitly; results
+    /// are bit-identical at every setting.
+    pub fn set_decide_threads(&mut self, threads: usize) {
+        self.decide_threads = threads;
+    }
+
+    /// Workers the most recent `decide_batch` evaluation used (0 until
+    /// the first batched decide).
+    pub fn last_decide_workers(&self) -> usize {
+        self.last_decide_workers
     }
 
     /// Attach `policy` to `pod`. Managing the same pod twice is last-wins:
@@ -349,6 +411,25 @@ impl NodePolicy for PerPodAdapter {
             }
         }
         out
+    }
+
+    /// The batched decide plane: bucket the present kernels per node,
+    /// evaluate ARC-V (and any [`BatchDecide`]) rows column-wise with the
+    /// node groups on scoped workers, and merge the per-group streams
+    /// back to ascending pod id — exactly the scalar [`Self::decide`]
+    /// emission order, bit for bit.
+    fn decide_batch(&mut self, now: u64, batch: &DecisionBatch) -> Vec<PodAction> {
+        let (out, workers) =
+            batch::decide_entries(now, batch, &mut self.entries, self.decide_threads);
+        self.last_decide_workers = workers;
+        out
+    }
+
+    /// Sorted merge walk over the due-set rows — the same observe calls
+    /// in the same order as the default scalar loop, without the per-row
+    /// binary search.
+    fn observe_batch(&mut self, now: u64, batch: &DecisionBatch) {
+        batch::observe_entries(now, batch, &mut self.entries);
     }
 
     fn recommendation_gb(&self, pod: PodId) -> Option<f64> {

@@ -5,6 +5,12 @@
 //! `xla-runtime` feature; default builds get a same-shape stub whose
 //! constructors fail loudly, so the native decision path (and everything
 //! guarded by `Manifest::discover`) works in any environment.
+//!
+//! Both engines implement `DecisionBackend`, the one batch ABI the whole
+//! decision plane shares: the controller's batched `decide_batch` route
+//! and the legacy scalar `decide` route stage identical row-major buffers
+//! into the same `step` call, so the Rust and Pallas decision graphs
+//! consume the same batches regardless of plane or backend.
 
 pub mod artifacts;
 #[cfg(feature = "xla-runtime")]

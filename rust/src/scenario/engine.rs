@@ -31,8 +31,8 @@ use crate::coordinator::controller::{Controller, Tick};
 use crate::simkube::api::Outcome as ApiOutcome;
 use crate::simkube::kernel::{run_kernel, EventSource, KernelMode, KernelStats};
 use crate::simkube::{
-    ApiClient, Cluster, InformerStats, MemoryProcess, PodId, ResourceSpec, ScrapeStats, SimClock,
-    TimedEvent,
+    ApiClient, Cluster, CoastStats, InformerStats, MemoryProcess, PodId, ResourceSpec, ScrapeStats,
+    SimClock, TimedEvent,
 };
 use crate::util::rng::{hash2, Xoshiro256};
 use crate::workloads::build;
@@ -92,6 +92,12 @@ pub struct ScenarioRun {
     /// wake counts across kernel modes, while the outcome is the
     /// mode-equivalence surface.
     pub scrape: ScrapeStats,
+    /// Kernel-coast + decision-plane telemetry: the cluster's clock-
+    /// discipline counters merged with the controller's decide-pass
+    /// figures (passes and wall time). The wall-time fields are
+    /// machine-dependent diagnostics, so this block — like `scrape` — is
+    /// NOT part of [`ScenarioOutcome`].
+    pub coast: CoastStats,
 }
 
 /// The scenario engine's kernel adapter: arrival + fault events from its
@@ -338,7 +344,10 @@ pub fn run_scenario_mode(
     let scrape = cluster
         .scrape_stats()
         .merged(Tick::scrape(&ctl).unwrap_or_default());
-    ScenarioRun { outcome, jobs: src.jobs, cluster, stats, informer, scrape }
+    let coast = cluster
+        .coast_stats
+        .merged(Tick::coast(&ctl).unwrap_or_default());
+    ScenarioRun { outcome, jobs: src.jobs, cluster, stats, informer, scrape, coast }
 }
 
 #[cfg(test)]

@@ -86,6 +86,11 @@ pub struct PodView {
     pub spec_memory_gb: Option<f64>,
     pub effective_limit_gb: f64,
     pub restarts: u32,
+    /// Tick the pod first entered Running, `None` while still Pending.
+    /// Changes only alongside a phase transition (which always emits a
+    /// watch record), so the replay-maintained cache stays exact; the
+    /// decision plane derives its phase-age column from this.
+    pub started_at: Option<u64>,
 }
 
 /// What one [`ApiClient::sync`] observed, pod ids ascending in every
@@ -400,6 +405,7 @@ impl ApiClient {
             spec_memory_gb: p.spec.memory_limit_gb(),
             effective_limit_gb: p.effective_limit_gb,
             restarts: p.restarts,
+            started_at: p.started_at,
         })
     }
 

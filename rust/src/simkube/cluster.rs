@@ -84,6 +84,19 @@ pub struct CoastStats {
     /// Machine-dependent diagnostic — never part of any equivalence
     /// comparison (those are field-level on the deterministic counters).
     pub merge_nanos: u64,
+    /// Ticks stepped inside regions — the denominator of the measured
+    /// per-tick exact occupancy `region_exact_pod_ticks / region_ticks`
+    /// that the adaptive worker chunk derives from.
+    pub region_ticks: u64,
+    /// Exact pods per shard worker the most recent region targeted (the
+    /// adaptive floor over `REGION_PODS_PER_WORKER`).
+    pub region_chunk_pods: u64,
+    /// Controller decide passes executed (scalar or batched plane).
+    pub decide_passes: u64,
+    /// Wall nanoseconds inside controller decide passes. Machine-dependent
+    /// diagnostic, like `merge_nanos` — never part of any equivalence
+    /// comparison.
+    pub decide_nanos: u64,
 }
 
 impl CoastStats {
@@ -107,17 +120,22 @@ impl CoastStats {
         self.region_workers_max = self.region_workers_max.max(other.region_workers_max);
         self.region_workers_sum += other.region_workers_sum;
         self.merge_nanos += other.merge_nanos;
+        self.region_ticks += other.region_ticks;
+        self.region_chunk_pods = self.region_chunk_pods.max(other.region_chunk_pods);
+        self.decide_passes += other.decide_passes;
+        self.decide_nanos += other.decide_nanos;
         self
     }
 
     /// Prometheus self-exposition of the clock-discipline counters,
     /// served next to the scrape plane's in [`Cluster::prometheus_text`].
     pub fn prometheus_text(&self) -> String {
-        let mut out = String::new();
+        use std::fmt::Write as _;
+        // 12 metrics × (HELP + TYPE + value) ≈ 160 bytes each: one
+        // allocation up front, formatted straight into it
+        let mut out = String::with_capacity(12 * 160);
         let mut emit = |name: &str, kind: &str, help: &str, v: f64| {
-            out.push_str(&format!(
-                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {v}\n"
-            ));
+            let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {v}");
         };
         emit(
             "arcv_kernel_coasted_pod_ticks_total",
@@ -166,6 +184,30 @@ impl CoastStats {
             "counter",
             "Wall time merging shard event buffers into the log.",
             self.merge_nanos as f64 / 1e9,
+        );
+        emit(
+            "arcv_kernel_region_ticks_total",
+            "counter",
+            "Ticks stepped inside regions.",
+            self.region_ticks as f64,
+        );
+        emit(
+            "arcv_kernel_region_chunk_pods",
+            "gauge",
+            "Adaptive exact-pods-per-worker chunk of the most recent region.",
+            self.region_chunk_pods as f64,
+        );
+        emit(
+            "arcv_controller_decide_passes_total",
+            "counter",
+            "Controller decide passes executed.",
+            self.decide_passes as f64,
+        );
+        emit(
+            "arcv_controller_decide_seconds_total",
+            "counter",
+            "Wall time inside controller decide passes.",
+            self.decide_nanos as f64 / 1e9,
         );
         out
     }
@@ -1548,6 +1590,27 @@ impl Cluster {
         pod_calm(&self.pods[id], &self.io[id])
     }
 
+    /// Target exact pods per region shard worker. Starts at the fixed
+    /// [`REGION_PODS_PER_WORKER`] floor and adapts upward from measured
+    /// occupancy: `region_exact_pod_ticks / region_ticks` is the mean
+    /// exact pods a region tick actually steps, and splitting that mean
+    /// across the shard budget yields the chunk that keeps every worker
+    /// at least floor-busy on a typical region — sparse outlier regions
+    /// then stay serial instead of paying the spawn + barrier tax.
+    /// Derived only from the `shards` knob and deterministic counters,
+    /// never from past worker counts: feeding worker counts back (fewer
+    /// workers → bigger chunk → fewer workers) would ratchet a thrashing
+    /// fleet down to serial. Worker count never affects results, only
+    /// wall time.
+    fn region_chunk(&self, shards: usize) -> usize {
+        let s = &self.coast_stats;
+        if s.region_ticks == 0 {
+            return REGION_PODS_PER_WORKER;
+        }
+        let mean = (s.region_exact_pod_ticks / s.region_ticks) as usize;
+        (mean / shards.max(1)).max(REGION_PODS_PER_WORKER)
+    }
+
     /// One per-pod-coasting stepping region of the sharded path, covering
     /// at most `(now, ceiling]`.
     ///
@@ -1655,10 +1718,13 @@ impl Cluster {
         }
         let region_end = start + wstar.max(1);
         // worker count: capped by the shard budget, the hot-node count
-        // (a node is never split), and the available exact work
+        // (a node is never split), and the available exact work — with
+        // the per-worker chunk adapted to measured region occupancy
+        let chunk = self.region_chunk(shards);
+        self.coast_stats.region_chunk_pods = chunk as u64;
         let workers = shards
             .min(hot_nodes.len())
-            .min((total_exact / REGION_PODS_PER_WORKER).max(1))
+            .min((total_exact / chunk).max(1))
             .max(1);
         let parallel = workers >= 2
             && total_exact as u64 * (region_end - start) >= PAR_MIN_REGION_POD_TICKS;
@@ -1807,6 +1873,7 @@ impl Cluster {
             j.absorb(&mut cell.journal);
         }
         self.coast_stats.region_exact_pod_ticks += j.stepped_pod_ticks;
+        self.coast_stats.region_ticks += t - start;
         self.coast_stats.merge_nanos += merge_ns;
         self.apply_journal(j);
         // region exit: everyone still deferred integrates to `t` in batch

@@ -233,7 +233,9 @@ impl ScrapeStats {
             ("arcv_informer_consumers", "gauge", "consumers registered on the shared informer", self.informer_consumers),
             ("arcv_informer_replays_total", "counter", "watch records replayed, summed over consumers", self.informer_replays),
         ];
-        let mut out = String::new();
+        // 8 metrics × (HELP + TYPE + value) ≈ 160 bytes each: size once,
+        // format straight in
+        let mut out = String::with_capacity(rows.len() * 160);
         for (name, kind, help, v) in rows {
             let _ = writeln!(out, "# HELP {name} {help}");
             let _ = writeln!(out, "# TYPE {name} {kind}");
@@ -349,7 +351,12 @@ impl MetricsStore {
     /// skipped rather than served as frozen gauges. Label values are
     /// escaped per the exposition format.
     pub fn prometheus_text(&self, pod_names: &BTreeMap<PodId, String>) -> String {
-        let mut out = String::new();
+        // one allocation sized from the series count: three families, a
+        // ~200-byte header each, and one `metric{pod="…"} value` row of
+        // ~64 bytes + name per live series — a 10⁵-series exposition must
+        // not reallocate-and-copy its way up from empty
+        let per_name: usize = pod_names.values().map(|n| n.len()).sum();
+        let mut out = String::with_capacity(3 * (200 + self.series.len() * 64 + per_name));
         for (metric, help, get) in [
             (
                 "container_memory_usage_bytes",

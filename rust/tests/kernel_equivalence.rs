@@ -10,8 +10,11 @@
 //! `scenario::run_scenario` default to `KernelMode::EventDriven`, and
 //! that makes `KernelMode::Sharded` safe to opt into at fleet scale.
 
-use arcv::harness::{run_with_mode, ExperimentConfig, PolicyKind, RunOutput, SwapKind};
-use arcv::policy::arcv::ArcvParams;
+use arcv::coordinator::DecidePlane;
+use arcv::harness::{
+    run_with_mode, run_with_mode_plane, ExperimentConfig, PolicyKind, RunOutput, SwapKind,
+};
+use arcv::policy::arcv::{ArcvParams, NativeFleet};
 use arcv::scenario::{
     run_scenario_mode, Arrivals, Fault, ScenarioPolicy, ScenarioSpec, WorkloadMix,
 };
@@ -106,6 +109,76 @@ fn nine_apps_times_four_policies_match_bit_for_bit() {
                     &sharded,
                 );
             }
+        }
+    }
+}
+
+/// The kernel modes the decide-plane cells run under (`Sharded {0}`
+/// covers the parallel stepping regions at whatever the machine offers;
+/// per-worker-count coverage is the sharded suite above).
+const PLANE_MODES: [KernelMode; 3] = [
+    KernelMode::Lockstep,
+    KernelMode::EventDriven,
+    KernelMode::Sharded { threads: 0 },
+];
+
+#[test]
+fn decide_planes_match_bit_for_bit_in_every_cell() {
+    // the batched-decision-plane contract: the SoA `decide_batch` route
+    // is a perf refactor, not a behaviour change. Every policy ×
+    // kernel-mode cell must produce the same RunResult (counters AND
+    // float integrals) and the same EventLog with the batch plane forced
+    // as with the scalar per-pod loop.
+    for app in AppId::all() {
+        for i in 0..4 {
+            for mode in PLANE_MODES {
+                let (cfg, kind) = case(app, i);
+                let scalar = run_with_mode_plane(&cfg, kind, mode, DecidePlane::Scalar);
+                let (cfg, kind) = case(app, i);
+                let batched = run_with_mode_plane(&cfg, kind, mode, DecidePlane::Batched);
+                assert_eq!(
+                    scalar.result, batched.result,
+                    "{app}/{} RunResult diverged between decide planes ({mode:?})",
+                    CASE_NAMES[i]
+                );
+                assert_eq!(
+                    scalar.events, batched.events,
+                    "{app}/{} EventLog diverged between decide planes ({mode:?})",
+                    CASE_NAMES[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_decide_planes_match_bit_for_bit() {
+    // the fleet controller routes the same SoA batch through its
+    // DecisionBackend on both planes (one batch ABI); the planes may
+    // only differ in how the due-set reaches the policy, never in state
+    let fleet = |app: AppId| {
+        (
+            ExperimentConfig::arcv_env(app),
+            PolicyKind::ArcvFleet(
+                ArcvParams::default(),
+                Box::new(NativeFleet::new(64, ArcvParams::default().window)),
+            ),
+        )
+    };
+    for app in [AppId::Kripke, AppId::Lulesh, AppId::Bfs] {
+        for mode in PLANE_MODES {
+            let (cfg, kind) = fleet(app);
+            let scalar = run_with_mode_plane(&cfg, kind, mode, DecidePlane::Scalar);
+            let (cfg, kind) = fleet(app);
+            let batched = run_with_mode_plane(&cfg, kind, mode, DecidePlane::Batched);
+            assert_eq!(
+                scalar.result, batched.result,
+                "{app}/arcv-fleet RunResult diverged between decide planes ({mode:?})"
+            );
+            assert_eq!(
+                scalar.events, batched.events,
+                "{app}/arcv-fleet EventLog diverged between decide planes ({mode:?})"
+            );
         }
     }
 }
