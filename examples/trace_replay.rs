@@ -70,7 +70,7 @@ fn main() {
             Ok(()) => println!(
                 "replay [{}]: bit-identical ({} records, outcome match: {})",
                 mode_label(mode),
-                replayed.cluster.events.events.len(),
+                replayed.cluster.events.retained_len(),
                 replayed.outcome == run.outcome,
             ),
             Err(e) => {

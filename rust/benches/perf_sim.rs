@@ -3,13 +3,18 @@
 //! fraction of the tick budget (the paper's <3 % overhead claim is about
 //! the real cluster; here we check our own coordinator cost).
 //!
-//! Emits three json artifacts under `bench_out/`: BENCH_kernel (event
+//! Emits four json artifacts under `bench_out/`: BENCH_kernel (event
 //! kernel vs the 1 s-stepping reference over the Fig 4 sweep),
 //! BENCH_informer (delta replay vs relist per wake + the subscription
-//! scrape plane), and BENCH_decide (the decision plane: scalar per-pod
+//! scrape plane), BENCH_decide (the decision plane: scalar per-pod
 //! loop vs the SoA batch, serial and parallel, at 1k/10k/50k managed
 //! pods — gated so the batch is never slower than the scalar loop and
-//! the parallel batch never slower than the serial one).
+//! the parallel batch never slower than the serial one), and
+//! BENCH_shardlog (the sharded event-log control plane: unified
+//! single-shard log vs the 8-way sharded layout at 1k/10k/100k pods,
+//! per-wake informer sync plus a resize-storm stepping-region phase —
+//! gated so the sharded layout is never slower and the event-stream
+//! FNV fingerprint is identical across shard counts).
 //!
 //!   cargo bench --bench perf_sim
 
@@ -21,7 +26,7 @@ use arcv::simkube::cluster::Cluster;
 use arcv::simkube::node::Node;
 use arcv::simkube::resources::ResourceSpec;
 use arcv::simkube::swap::SwapDevice;
-use arcv::simkube::{ApiClient, Event, KernelMode, ScrapeCadence, SubscriptionSet};
+use arcv::simkube::{AdvanceOpts, ApiClient, Event, KernelMode, ScrapeCadence, SubscriptionSet};
 use arcv::util::bench::bench;
 use arcv::util::json::{arr, num, obj, s, Json};
 use arcv::workloads::{build, AppId};
@@ -121,7 +126,128 @@ fn decide_cell(n: usize, plane: DecidePlane, threads: usize) -> DecideCell {
         secs: coast.decide_nanos as f64 / 1e9,
         passes: coast.decide_passes,
         workers: ctl.policy().last_decide_workers(),
-        events: c.events.events,
+        events: c.events.into_snapshot(),
+    }
+}
+
+/// `cluster_with_pods`, but with the event log laid out over `k` watch
+/// shards — `set_event_shards` requires a virgin log, so the layout is
+/// installed before the first `create_pod` record. `k = 1` is the
+/// unified single-log baseline.
+fn shardlog_cluster(n_pods: usize, k: usize) -> Cluster {
+    let n_nodes = ((n_pods + 15) / 16).max(1);
+    let mut c = Cluster::new(
+        (0..n_nodes)
+            .map(|i| Node::new(&format!("w{i}"), 1024.0, SwapDevice::hdd(256.0)))
+            .collect(),
+        Default::default(),
+    );
+    let k = k.min(n_nodes).max(1);
+    c.set_event_shards((0..n_nodes).map(|node| node * k / n_nodes).collect());
+    let apps = AppId::all();
+    for i in 0..n_pods {
+        let m = build(apps[i % apps.len()], i as u64);
+        let init = m.max_gb * 1.2;
+        c.create_pod(&format!("p{i}"), ResourceSpec::memory_exact(init), Box::new(m));
+    }
+    c
+}
+
+/// FNV-1a over the debug rendering of every retained event — the
+/// cross-layout fingerprint BENCH_shardlog records per shard count
+/// (same algorithm as `rust/tests/kernel_equivalence.rs`).
+fn event_stream_hash(events: &[Event]) -> u64 {
+    use std::fmt::Write as _;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut line = String::new();
+    for e in events {
+        line.clear();
+        let _ = write!(line, "{e:?}");
+        for &b in line.as_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        h = (h ^ 0x0a).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One unified-vs-sharded log cell: the same deterministic workload over
+/// a `k`-shard store, timed in two phases. Phase 1 is the informer path
+/// (per-wake delta sync over the sharded watch plane, with the same
+/// patch trickle as the informer gate). Phase 2 is the region path: a
+/// resize storm keeps `pending_resize` set on a rotating eighth of the
+/// fleet, so `advance_to` runs hot stepping regions whose workers append
+/// straight into their node's shard (k > 1) or hand cell buffers to the
+/// coordinator's serial merge (k = 1) — `merge_nanos` is that
+/// coordinator cost. The final event stream must be bit-identical across
+/// layouts; the hash and revision come back for the gate.
+struct ShardlogCell {
+    shards: usize,
+    sync_secs: f64,
+    region_secs: f64,
+    merge_nanos: u64,
+    regions_entered: u64,
+    hash: u64,
+    revision: u64,
+}
+
+fn shardlog_cell(n: usize, k: usize, threads: usize) -> ShardlogCell {
+    let mut c = shardlog_cluster(n, k);
+    let shards = c.events.shard_count();
+    let mut client = ApiClient::new();
+    client.sync(&mut c); // the initial LIST, paid once by every layout
+    let wakes = if n >= 100_000 { 60u64 } else { 200 };
+    let mut sync_ns = 0.0f64;
+    let mut next_patch = 0usize;
+    for w in 0..wakes {
+        c.step();
+        if w % 4 == 0 {
+            let id = next_patch % n;
+            next_patch += 7;
+            let lim = c.pod(id).effective_limit_gb;
+            if lim.is_finite() {
+                c.patch_pod_memory(id, lim);
+            }
+        }
+        let t0 = Instant::now();
+        let _delta = client.sync(&mut c);
+        sync_ns += t0.elapsed().as_nanos() as f64;
+    }
+    // clear the scrape ceiling so regions run to their proof ceiling, not
+    // to the next full-fleet sampling tick (same as the scenario_fleet
+    // thrash rung) — identical on both layouts, so equivalence holds
+    c.install_subscriptions(SubscriptionSet::new());
+    let opts = AdvanceOpts { event_driven: true, sample_metrics: true, shards: threads };
+    let batch = (n / 8).max(1);
+    let spans = if n >= 100_000 { 10u64 } else { 30 };
+    let mut next = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..spans {
+        for _ in 0..batch {
+            let id = next % n;
+            next += 1;
+            let lim = c.pod(id).effective_limit_gb;
+            if lim.is_finite() {
+                c.patch_pod_memory(id, lim);
+            }
+        }
+        // an 8-tick span: wide enough to clear the window >= 2 floor, hot
+        // enough (the fresh `pending_resize` batch) to force step_region
+        let end = c.now + 8;
+        while c.now < end {
+            c.advance_to(end, opts);
+        }
+    }
+    let region_secs = t0.elapsed().as_secs_f64();
+    let revision = c.events.revision();
+    ShardlogCell {
+        shards,
+        sync_secs: sync_ns * 1e-9,
+        region_secs,
+        merge_nanos: c.coast_stats.merge_nanos,
+        regions_entered: c.coast_stats.regions_entered,
+        hash: event_stream_hash(&c.events.snapshot()),
+        revision,
     }
 }
 
@@ -319,7 +445,7 @@ fn main() {
         if delta_ns > relist_ns * 1.05 {
             informer_slow = true;
         }
-        let retained = c.events.events.len() as u64;
+        let retained = c.events.retained_len() as u64;
         let total = c.events.revision();
         println!(
             "  {n:>6} pods: delta {delta_us:>9.2} us/wake ({} views rebuilt over {wakes} wakes) \
@@ -486,6 +612,96 @@ fn main() {
     println!("\nBENCH {}", decide_json.to_string_pretty());
     println!("wrote bench_out/BENCH_decide.json");
 
+    // ---- the shard-log gate: unified vs sharded watch plane ----------------
+    // The same deterministic workload over a 1-shard (unified, the pre-PR
+    // layout) and an 8-shard event store: per-wake informer sync over
+    // vector cursors, then a resize-storm region phase where workers
+    // append into their own shard instead of handing buffers to the
+    // coordinator's serial merge. The sharded layout must never be slower
+    // and the merged event stream must be bit-identical (same FNV
+    // fingerprint, same head revision) — sharding is a layout change, not
+    // a behavioural one.
+    println!("\n=== event log: unified vs sharded watch plane, sync + region merge ===\n");
+    let shardlog_threads =
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let mut shardlog_rows = Vec::new();
+    let mut shardlog_sync_slow = false;
+    let mut shardlog_region_slow = false;
+    let mut shardlog_hash_diverged = false;
+    let mut shardlog_merge_nanos = (0u64, 0u64); // (unified, sharded) at the top rung
+    for n in [1_000usize, 10_000, 100_000] {
+        let unified = shardlog_cell(n, 1, shardlog_threads);
+        let sharded = shardlog_cell(n, 8, shardlog_threads);
+        let identical =
+            unified.hash == sharded.hash && unified.revision == sharded.revision;
+        if !identical {
+            shardlog_hash_diverged = true;
+            eprintln!("MISMATCH: event stream diverged between 1 and {} shards at {n} pods", sharded.shards);
+        }
+        // gates: the sharded layout must never lose to the unified log on
+        // either path (10 % + 2 ms slack for shared-runner noise)
+        if sharded.sync_secs > unified.sync_secs * 1.10 + 2e-3 {
+            shardlog_sync_slow = true;
+        }
+        if sharded.region_secs > unified.region_secs * 1.10 + 2e-3 {
+            shardlog_region_slow = true;
+        }
+        shardlog_merge_nanos = (unified.merge_nanos, sharded.merge_nanos);
+        println!(
+            "  {n:>6} pods: sync unified {:>8.3} ms  sharded({}) {:>8.3} ms ({:.2}x)  \
+             regions unified {:>8.3} ms (merge {:>7.3} ms)  sharded {:>8.3} ms (merge \
+             {:>7.3} ms)  {}",
+            unified.sync_secs * 1e3,
+            sharded.shards,
+            sharded.sync_secs * 1e3,
+            unified.sync_secs / sharded.sync_secs.max(1e-12),
+            unified.region_secs * 1e3,
+            unified.merge_nanos as f64 / 1e6,
+            sharded.region_secs * 1e3,
+            sharded.merge_nanos as f64 / 1e6,
+            if identical { "bit-identical" } else { "DIVERGED" },
+        );
+        assert!(
+            unified.regions_entered > 0 && sharded.regions_entered > 0,
+            "the resize storm must actually drive stepping regions"
+        );
+        shardlog_rows.push(obj(vec![
+            ("pods", num(n as f64)),
+            ("shards", num(sharded.shards as f64)),
+            ("unified_sync_secs", num(unified.sync_secs)),
+            ("sharded_sync_secs", num(sharded.sync_secs)),
+            ("sync_speedup", num(unified.sync_secs / sharded.sync_secs.max(1e-12))),
+            ("unified_region_secs", num(unified.region_secs)),
+            ("sharded_region_secs", num(sharded.region_secs)),
+            ("region_speedup", num(unified.region_secs / sharded.region_secs.max(1e-12))),
+            ("unified_merge_nanos", num(unified.merge_nanos as f64)),
+            ("sharded_merge_nanos", num(sharded.merge_nanos as f64)),
+            ("regions_entered", num(sharded.regions_entered as f64)),
+            ("event_log_hash", s(&format!("{:016x}", sharded.hash))),
+            ("revision", num(sharded.revision as f64)),
+            ("identical", Json::Bool(identical)),
+        ]));
+    }
+    // the merge claim at the thrash rung (100k pods): with k > 1 shards
+    // region workers flush straight into their shard before the barrier,
+    // so the coordinator's post-barrier merge must shrink (25 % + 2 ms
+    // slack — the json carries the raw nanos either way)
+    let shardlog_merge_regressed =
+        shardlog_merge_nanos.1 as f64 > shardlog_merge_nanos.0 as f64 * 1.25 + 2e6;
+    let shardlog_json = obj(vec![
+        ("bench", s("perf_sim/shardlog")),
+        ("threads", num(shardlog_threads as f64)),
+        ("rows", arr(shardlog_rows)),
+        ("sharded_sync_never_slower", Json::Bool(!shardlog_sync_slow)),
+        ("sharded_regions_never_slower", Json::Bool(!shardlog_region_slow)),
+        ("merge_reduced_at_thrash_rung", Json::Bool(!shardlog_merge_regressed)),
+        ("hash_identical_across_shard_counts", Json::Bool(!shardlog_hash_diverged)),
+    ]);
+    std::fs::write("bench_out/BENCH_shardlog.json", shardlog_json.to_string_pretty())
+        .expect("write bench_out/BENCH_shardlog.json");
+    println!("\nBENCH {}", shardlog_json.to_string_pretty());
+    println!("wrote bench_out/BENCH_shardlog.json");
+
     let informer_json = obj(vec![
         ("bench", s("perf_sim/informer")),
         ("rows", arr(informer_rows)),
@@ -541,6 +757,26 @@ fn main() {
     }
     if decide_parallel_slow {
         eprintln!("FAIL: parallel batched decide slower than the serial batch");
+        std::process::exit(1);
+    }
+    // CI gates: the sharded event-log control plane. Hash divergence means
+    // sharding changed the event stream (it must be a pure layout change);
+    // the speed gates are the reason the log shards at all —
+    // BENCH_shardlog.json carries the real ratios.
+    if shardlog_hash_diverged {
+        eprintln!("FAIL: event-stream FNV hash diverged across shard counts");
+        std::process::exit(1);
+    }
+    if shardlog_sync_slow {
+        eprintln!("FAIL: sharded-log informer sync slower than the unified log");
+        std::process::exit(1);
+    }
+    if shardlog_region_slow {
+        eprintln!("FAIL: sharded-log stepping regions slower than the unified log");
+        std::process::exit(1);
+    }
+    if shardlog_merge_regressed {
+        eprintln!("FAIL: coordinator merge did not shrink under the sharded log at the thrash rung");
         std::process::exit(1);
     }
 }

@@ -9,8 +9,9 @@
 //! (ticks/s + wall-clock per cell, the informer's per-wake delta cost,
 //! and the interned-calibration-table RSS proxy). A final thrash rung
 //! drives parallel stepping regions directly: a fleet where every node
-//! hosts 25 % proof-defeating pods, timed per region thread count with
-//! an FNV fingerprint of the event log per run (the `thrash` block in
+//! hosts 25 % proof-defeating pods, over a 4-way-sharded event store,
+//! timed per region thread count with an FNV fingerprint of the event
+//! log and the per-shard append spread per run (the `thrash` block in
 //! `BENCH_scale.json`).
 //!
 //!   cargo bench --bench scenario_fleet
@@ -132,7 +133,7 @@ fn scale_cell(spec: &ScenarioSpec, mode: KernelMode, keep_events: bool) -> Cell 
     Cell {
         secs,
         outcome: run.outcome,
-        events: if keep_events { run.cluster.events.events } else { Vec::new() },
+        events: if keep_events { run.cluster.events.into_snapshot() } else { Vec::new() },
         ticks: run.stats.sim_ticks,
         informer: run.informer,
         live_tables: live,
@@ -150,6 +151,8 @@ fn env_usize(name: &str, default: usize) -> usize {
 const THRASH_PODS_PER_NODE: usize = 100;
 const THRASH_NODES: usize = 100;
 const THRASH_TICKS: u64 = 600;
+/// Event-log watch shards on the thrash rung (contiguous node chunks).
+const THRASH_EVENT_SHARDS: usize = 4;
 
 /// A flat memory process: constant usage, effectively immortal (nothing
 /// on the thrash rung may complete — completions would interrupt regions
@@ -189,6 +192,10 @@ fn thrash_cluster() -> Cluster {
             ..ClusterConfig::default()
         },
     );
+    // the event store shards 4 ways (contiguous 25-node chunks): region
+    // workers append straight into their nodes' shard, and the rung
+    // records the per-shard append spread alongside the merge time
+    c.set_event_shards((0..THRASH_NODES).map(|n| n * THRASH_EVENT_SHARDS / THRASH_NODES).collect());
     c.install_subscriptions(SubscriptionSet::new());
     for i in 0..THRASH_NODES * THRASH_PODS_PER_NODE {
         let usage = if i % 4 == 0 { 2.5 } else { 1.0 };
@@ -278,7 +285,7 @@ fn main() {
         let event_run = run_scenario_mode(&spec, arcv_policy, 42, KernelMode::EventDriven);
         let kernel_event_secs = t0.elapsed().as_secs_f64();
         kernel_identical = lockstep_run.outcome == event_run.outcome
-            && lockstep_run.cluster.events.events == event_run.cluster.events.events;
+            && lockstep_run.cluster.events.snapshot() == event_run.cluster.events.snapshot();
         kernel_speedup = kernel_lockstep_secs / kernel_event_secs.max(1e-9);
         let ticks = event_run.stats.sim_ticks;
         println!(
@@ -491,7 +498,7 @@ fn main() {
     let t0 = Instant::now();
     reference.run_until(THRASH_TICKS, |_| false);
     let thrash_lockstep_secs = t0.elapsed().as_secs_f64();
-    let thrash_ref_hash = event_log_hash(&reference.events.events);
+    let thrash_ref_hash = event_log_hash(&reference.events.snapshot());
     drop(reference);
 
     let thread_counts: Vec<usize> =
@@ -509,7 +516,8 @@ fn main() {
             c.advance_to(THRASH_TICKS, opts);
         }
         let secs = t0.elapsed().as_secs_f64();
-        let hash = event_log_hash(&c.events.events);
+        let hash = event_log_hash(&c.events.snapshot());
+        let shard_appends = c.events.shard_appends();
         let cs = c.coast_stats;
         if count == 1 {
             thrash_serial_secs = secs;
@@ -535,7 +543,8 @@ fn main() {
         println!(
             "  shards {count}: {secs:.3}s ({vs_serial:.2}x vs serial regions; lockstep \
              {thrash_lockstep_secs:.3}s), {} regions, workers mean {:.1} max {}, chunk {} \
-             pods/worker, merge {:.4}s, events hash {hash:016x} {}",
+             pods/worker, merge {:.4}s, log appends {shard_appends:?}, events hash \
+             {hash:016x} {}",
             cs.regions_entered,
             cs.region_workers_mean(),
             cs.region_workers_max,
@@ -558,6 +567,12 @@ fn main() {
             // settled on for this shard count (floor 128)
             ("region_chunk_pods", num(cs.region_chunk_pods as f64)),
             ("merge_secs", num(cs.merge_nanos as f64 / 1e9)),
+            // per-shard append counts: how evenly the sharded store spread
+            // the rung's record traffic across its watch shards
+            (
+                "shard_appends",
+                arr(shard_appends.iter().map(|&a| num(a as f64)).collect()),
+            ),
         ]));
     }
 
@@ -575,6 +590,7 @@ fn main() {
                 ("pods", num((THRASH_NODES * THRASH_PODS_PER_NODE) as f64)),
                 ("nodes", num(THRASH_NODES as f64)),
                 ("thrasher_frac", num(0.25)),
+                ("event_shards", num(THRASH_EVENT_SHARDS as f64)),
                 ("sim_ticks", num(THRASH_TICKS as f64)),
                 ("lockstep_secs", num(thrash_lockstep_secs)),
                 ("lockstep_hash", s(&format!("{thrash_ref_hash:016x}"))),

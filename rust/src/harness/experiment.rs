@@ -389,7 +389,7 @@ pub fn run_with_mode_plane(
         .merged(controller.coast().unwrap_or_default());
     RunOutput {
         result,
-        events: cluster.events.events,
+        events: cluster.events.into_snapshot(),
         stats,
         informer: controller.informer().unwrap_or_default(),
         scrape,

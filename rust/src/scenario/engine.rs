@@ -400,7 +400,7 @@ mod tests {
         let a = run_scenario(&spec, ScenarioPolicy::Arcv(ArcvParams::default()), 5);
         let b = run_scenario(&spec, ScenarioPolicy::Arcv(ArcvParams::default()), 5);
         assert_eq!(a.outcome, b.outcome);
-        assert_eq!(a.cluster.events.events, b.cluster.events.events);
+        assert_eq!(a.cluster.events.snapshot(), b.cluster.events.snapshot());
     }
 
     #[test]

@@ -302,6 +302,14 @@ pub struct ScenarioSpec {
     /// are preallocated per sampled pod, so 10⁵ pods at the default
     /// 8192-sample depth would pin gigabytes nobody reads.
     pub metrics_history: usize,
+    /// Event-store shard count override. `None` (the default) derives one
+    /// shard per node pool from the pool layout — single-pool specs get
+    /// one shard and are bit-identical to the unsharded store. `Some(k)`
+    /// forces `k` contiguous node chunks instead (benches sweep shard
+    /// counts on single-pool fleets this way). The stream is bit-identical
+    /// at every shard count either way; this only moves the append/replay
+    /// parallelism boundary.
+    pub event_shards: Option<usize>,
 }
 
 impl ScenarioSpec {
@@ -316,11 +324,20 @@ impl ScenarioSpec {
             strategy: Strategy::BestFit,
             max_ticks: 50_000,
             metrics_history: ClusterConfig::default().metrics_history,
+            event_shards: None,
         }
     }
 
     pub fn metrics_history(mut self, metrics_history: usize) -> Self {
         self.metrics_history = metrics_history;
+        self
+    }
+
+    /// Force `k` event-store shards (contiguous node chunks) instead of
+    /// the pool-derived default. `k` is clamped to the node count at
+    /// build time; `k = 0` means "one shard per node".
+    pub fn event_shards(mut self, k: usize) -> Self {
+        self.event_shards = Some(k);
         self
     }
 
@@ -486,9 +503,26 @@ impl ScenarioSpec {
         Ok(())
     }
 
+    /// The node→event-shard map this spec materializes: one shard per
+    /// pool (declaration order — pools expand to contiguous node ranges),
+    /// or `event_shards(k)` contiguous chunks when overridden.
+    pub fn event_shard_map(&self) -> Vec<usize> {
+        let n = self.node_count();
+        if let Some(k) = self.event_shards {
+            let k = if k == 0 { n } else { k.min(n.max(1)) };
+            return (0..n).map(|node| node * k / n.max(1)).collect();
+        }
+        let mut map = Vec::with_capacity(n);
+        for (pool_idx, pool) in self.pools.iter().enumerate() {
+            map.extend(std::iter::repeat(pool_idx).take(pool.count));
+        }
+        map
+    }
+
     /// Materialize the cluster: pools expand to nodes in declaration
     /// order. Swap follows the policy's environment (VPA-sim mirrors the
-    /// paper's no-swap setup).
+    /// paper's no-swap setup). The event store is sharded per
+    /// [`Self::event_shard_map`] before any record exists.
     pub fn build_cluster(&self, policy: &ScenarioPolicy) -> Cluster {
         let mut nodes = Vec::new();
         for pool in &self.pools {
@@ -506,7 +540,9 @@ impl ScenarioSpec {
             metrics_history: self.metrics_history,
             ..ClusterConfig::default()
         };
-        Cluster::new(nodes, config)
+        let mut cluster = Cluster::new(nodes, config);
+        cluster.set_event_shards(self.event_shard_map());
+        cluster
     }
 }
 
@@ -542,6 +578,27 @@ mod tests {
         // the VPA environment strips swap
         let v = spec.build_cluster(&ScenarioPolicy::VpaSim);
         assert!(!v.nodes[0].swap.enabled());
+        // event store sharded per pool: big-{0,1} → shard 0, small-0 → 1
+        assert_eq!(spec.event_shard_map(), vec![0, 0, 1]);
+        assert_eq!(c.events.shard_count(), 2);
+    }
+
+    #[test]
+    fn event_shard_override_chunks_nodes_contiguously() {
+        let spec = ScenarioSpec::new("t")
+            .pool("p", 6, 64.0, SwapKind::Disabled)
+            .jobs(1)
+            .event_shards(3);
+        assert_eq!(spec.event_shard_map(), vec![0, 0, 1, 1, 2, 2]);
+        // k = 0 → one shard per node; k > nodes clamps to nodes
+        assert_eq!(
+            ScenarioSpec::new("t").pool("p", 3, 64.0, SwapKind::Disabled).event_shards(0).event_shard_map(),
+            vec![0, 1, 2]
+        );
+        assert_eq!(
+            ScenarioSpec::new("t").pool("p", 2, 64.0, SwapKind::Disabled).event_shards(9).event_shard_map(),
+            vec![0, 1]
+        );
     }
 
     #[test]

@@ -17,15 +17,24 @@
 //! - every pod carries a `resource_version`; a patch submitted with a
 //!   stale expected version is refused with [`ApiError::Conflict`]
 //!   (optimistic concurrency, the multi-writer safety net);
-//! - a **delta-driven informer**: [`ApiClient::sync`] REPLAYS the watch
-//!   records past its revision cursor and rebuilds only the touched
-//!   [`PodView`]s — list-then-watch, the real informer protocol — and
-//!   returns a structured [`SyncDelta`] (changed / transitioned / retired
-//!   pods) so consumers dispatch off the delta instead of rescanning the
-//!   world. A full relist runs only on the first sync and after a
-//!   watch-cursor gap (`rust/tests/informer_delta_prop.rs` pins replay
-//!   bit-for-bit against the retained full-relist oracle,
-//!   [`ApiClient::sync_relist`]);
+//! - a **delta-driven informer over the sharded watch plane**: the
+//!   cluster's event store is a `ShardedEventLog` (one revisioned log per
+//!   node-pool shard), so the informer's position is a [`VectorCursor`] —
+//!   one replayed-through revision per shard. [`ApiClient::sync`] REPLAYS
+//!   each shard's suffix past its cursor component (in parallel under
+//!   `std::thread::scope` when the backlog is large enough to amortize
+//!   the fan-out) and rebuilds only the touched [`PodView`]s —
+//!   list-then-watch, the real informer protocol — returning a structured
+//!   [`SyncDelta`] (changed / transitioned / retired pods) so consumers
+//!   dispatch off the delta instead of rescanning the world. The touched
+//!   set is order-free (a union of pod ids), so no cross-shard merge runs
+//!   on the sync hot path at all. A full relist runs only on the first
+//!   sync and after a watch-cursor gap on ANY shard; a quiescent wake
+//!   (no shard head moved) allocates nothing
+//!   (`rust/tests/informer_delta_prop.rs` pins replay bit-for-bit against
+//!   the retained full-relist oracle, [`ApiClient::sync_relist`],
+//!   including under per-shard compaction with a laggard pinned on one
+//!   shard);
 //! - **phase indexes** maintained from those deltas: the Running and
 //!   OomKilled sets ([`ApiClient::running`], [`ApiClient::oom_killed`])
 //!   cost O(transitions) to keep current, so a controller wake where
@@ -43,10 +52,16 @@
 //! only via a logged event (the PLEG contract in `events.rs`).
 
 use super::cluster::Cluster;
-use super::events::{CursorId, Event, NODE_EVENT};
+use super::events::{CursorId, Event, VectorCursor, NODE_EVENT};
 use super::pod::{MemoryProcess, PodId, PodPhase, PodUsage};
 use super::qos::QosClass;
 use super::resources::ResourceSpec;
+
+/// Minimum total suffix length (events across all shards) before
+/// [`ApiClient::sync`] fans the per-shard replay scans out to scoped
+/// threads. Below this the scan is memory-bound and the spawn/join cost
+/// dominates; the touched-set union is order-free either way.
+const REPLAY_PAR_MIN_EVENTS: usize = 8192;
 
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum ApiError {
@@ -302,9 +317,15 @@ pub struct ApiClient {
     admission: Vec<Box<dyn AdmissionPlugin>>,
     /// Informer cache, indexed by `PodId`.
     cache: Vec<Option<PodView>>,
-    /// Watch cursor: the event-log revision this informer has replayed
-    /// through (exclusive).
+    /// Scalar watch cursor: the summed event-store revision this informer
+    /// has replayed through (exclusive). Kept alongside the vector cursor
+    /// because `events_replayed` accounting and the public watch surface
+    /// are scalar.
     cursor: u64,
+    /// Vector watch cursor: one replayed-through revision per shard of
+    /// the cluster's `ShardedEventLog`. Empty until the first sync
+    /// relists; thereafter always `shard_count` long.
+    vcursor: VectorCursor,
     /// This informer's registered cursor slot in the cluster's event log
     /// (registered on first sync; pins the log's compaction floor).
     slot: Option<CursorId>,
@@ -337,6 +358,7 @@ impl ApiClient {
             ],
             cache: Vec::new(),
             cursor: 0,
+            vcursor: VectorCursor::default(),
             slot: None,
             running: Vec::new(),
             oom_killed: Vec::new(),
@@ -428,15 +450,17 @@ impl ApiClient {
             .collect()
     }
 
-    /// Watch: retained events at or after revision `cursor`; returns
-    /// (events, next_cursor). A cursor below the log's compaction floor
-    /// is [`ApiError::Expired`] — the kube "too old resourceVersion"
-    /// error: records were compacted away, so a contiguous resume is
-    /// impossible and the caller must relist (which [`Self::sync`] does
-    /// automatically for its own cursor).
+    /// Watch: retained events at or after (scalar) revision `cursor`;
+    /// returns (events, next_cursor). The suffix is served positionally
+    /// over the deterministic cross-shard merge, so a scalar cursor
+    /// remains a valid resume token at any shard count. A cursor below
+    /// the store's compaction floor is [`ApiError::Expired`] — the kube
+    /// "too old resourceVersion" error: records were compacted away, so a
+    /// contiguous resume is impossible and the caller must relist (which
+    /// [`Self::sync`] does automatically for its own cursor).
     pub fn watch(cluster: &Cluster, cursor: u64) -> Result<(Vec<Event>, u64), ApiError> {
-        match cluster.events.since(cursor) {
-            Some(evs) => Ok((evs.to_vec(), cluster.events.revision())),
+        match cluster.events.watch_from(cursor) {
+            Some((evs, head)) => Ok((evs, head)),
             None => Err(ApiError::Expired {
                 cursor,
                 floor: cluster.events.first_revision(),
@@ -516,8 +540,9 @@ impl ApiClient {
             self.refresh_view(cluster, id, &mut delta);
         }
         self.cursor = head;
+        self.vcursor.revs = cluster.events.heads();
         if let Some(slot) = self.slot {
-            cluster.events.advance_cursor(slot, head);
+            cluster.events.advance_cursor_vec(slot, &self.vcursor.revs);
         }
         delta
     }
@@ -549,24 +574,73 @@ impl ApiClient {
             self.slot = Some(cluster.events.register_cursor());
             return self.relist(cluster, head);
         }
-        let touched: Option<Vec<PodId>> = match cluster.events.since(self.cursor) {
-            None => None,
-            Some(tail) => {
-                let mut t: Vec<PodId> = tail
-                    .iter()
-                    .filter(|e| e.pod != NODE_EVENT)
-                    .map(|e| e.pod)
-                    .collect();
-                t.sort_unstable();
-                t.dedup();
-                Some(t)
-            }
-        };
-        let Some(touched) = touched else {
-            // compaction passed the cursor — cannot happen for registered
-            // cursors (they pin the floor), kept as the reconnect path
+        let shards = cluster.events.shard_count();
+        if self.vcursor.revs.len() != shards {
+            // the informer attached before this store was sharded (or was
+            // moved across clusters) — its vector position is meaningless,
+            // so rebuild it through the relist path
             return self.relist(cluster, head);
-        };
+        }
+        let heads = cluster.events.heads();
+        if heads == self.vcursor.revs {
+            // quiescent wake: no shard head moved, so there is nothing to
+            // collect and no Vec to build — advance the registered cursor
+            // (keeps the auto-compaction trigger identical to a non-empty
+            // sync) and return the empty delta
+            self.cursor = head;
+            cluster
+                .events
+                .advance_cursor_vec(self.slot.expect("registered above"), &heads);
+            return SyncDelta::default();
+        }
+        // any shard compacted past our component → contiguous resume is
+        // impossible; cannot happen for registered cursors (they pin each
+        // shard's floor), kept as the reconnect path
+        for s in 0..shards {
+            if self.vcursor.revs[s] < cluster.events.shard(s).first_revision() {
+                return self.relist(cluster, head);
+            }
+        }
+        let suffixes: Vec<&[Event]> = (0..shards)
+            .map(|s| {
+                cluster.events.shard(s).since(self.vcursor.revs[s]).expect("floor checked above")
+            })
+            .collect();
+        let total: usize = suffixes.iter().map(|sl| sl.len()).sum();
+        // the touched set is a UNION of pod ids — order-free — so each
+        // shard's suffix scans independently (no cross-shard merge on the
+        // sync hot path) and in parallel when the backlog is large enough
+        // to amortize the thread fan-out
+        let mut touched: Vec<PodId> = Vec::with_capacity(total);
+        if shards > 1 && total >= REPLAY_PAR_MIN_EVENTS {
+            let parts = std::thread::scope(|scope| {
+                let handles: Vec<_> = suffixes
+                    .iter()
+                    .filter(|sl| !sl.is_empty())
+                    .map(|&sl| {
+                        scope.spawn(move || {
+                            sl.iter()
+                                .filter(|e| e.pod != NODE_EVENT)
+                                .map(|e| e.pod)
+                                .collect::<Vec<PodId>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("replay worker panicked"))
+                    .collect::<Vec<Vec<PodId>>>()
+            });
+            for mut part in parts {
+                touched.append(&mut part);
+            }
+        } else {
+            for sl in &suffixes {
+                touched.extend(sl.iter().filter(|e| e.pod != NODE_EVENT).map(|e| e.pod));
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
         self.stats.events_replayed += head - self.cursor;
         let mut delta = SyncDelta::default();
         if self.cache.len() < cluster.pods.len() {
@@ -577,7 +651,10 @@ impl ApiClient {
             self.refresh_view(cluster, id, &mut delta);
         }
         self.cursor = head;
-        cluster.events.advance_cursor(self.slot.expect("registered above"), head);
+        self.vcursor.revs = heads;
+        cluster
+            .events
+            .advance_cursor_vec(self.slot.expect("registered above"), &self.vcursor.revs);
         delta
     }
 

@@ -12,17 +12,24 @@
 //!   provably-quiescent neighbor keeps coasting (lazily, integrated in
 //!   batch), and the integration work fans out across worker threads.
 //!   Stepping regions themselves are sharded too: the proof-defeating
-//!   pods are partitioned by node across workers, each worker emits into
-//!   a shard-local event buffer, and the buffers merge back into the
-//!   global [`EventLog`] in the serial emission order (see
+//!   pods are partitioned by node across workers, and each worker appends
+//!   its emissions (with order keys) directly into the owning shard of
+//!   the [`ShardedEventLog`] — no per-tick global merge (see
 //!   `Cluster::step_region`).
 //!
-//! All three are bit-for-bit identical in `RunResult` + `EventLog`
-//! (`rust/tests/kernel_equivalence.rs`); the scheduling queue below keeps
-//! a requeue pass at O(waiting · log nodes) instead of O(all pods ever).
+//! The event store is sharded by node pool ([`ShardedEventLog`], PR 10):
+//! every record routes to the shard owning its node, carries a `(phase,
+//! k)` order key, and the global stream order is recovered at read time
+//! by a stable `(time, key)` sort — so all three disciplines stay
+//! bit-for-bit identical in `RunResult` + event stream at every shard
+//! AND thread count (`rust/tests/kernel_equivalence.rs`); the scheduling
+//! queue below keeps a requeue pass at O(waiting · log nodes) instead of
+//! O(all pods ever).
 
 use super::clock::next_multiple;
-use super::events::{Event, EventKind, EventLog, NODE_EVENT};
+use super::events::{
+    eviction_key, kubelet_key, Event, EventKind, EventLog, ShardedEventLog, NODE_EVENT,
+};
 use super::kubelet::{IoState, Kubelet, KubeletConfig};
 use super::metrics::{MetricsStore, ScrapeStats, SubscriptionSet};
 use super::node::Node;
@@ -548,6 +555,41 @@ unsafe fn region_tick_shard(
         .all(|&id| pod_calm(tb.pod_ref(id), tb.io_ref(id)));
 }
 
+/// Route one region cell's tick buffers directly into the owning shard
+/// logs — the per-tick global merge this replaces was the serial wall of
+/// the parallel region path. Kubelet records route by the emitting pod's
+/// bound node (stable mid-region: bindings cannot change inside a
+/// region), evictions by the node embedded in the record; both get their
+/// phase order keys here. Per-shard append order *between* cells is
+/// scheduling-dependent, but every read surface is either order-free
+/// (interrupt totals, informer touched sets, per-shard counts) or
+/// normalized by the stable `(time, key)` merge — and records with equal
+/// keys (same pod, same evicting node) belong to exactly one cell, so
+/// their relative order survives any interleaving.
+///
+/// # Safety
+///
+/// The caller must own the cell's pods per the [`RegionTables`] contract
+/// (routing reads `pod.node` through the raw view).
+unsafe fn flush_cell(
+    tb: &RegionTables,
+    shard_of: impl Fn(usize) -> usize,
+    logs: &[Mutex<&mut EventLog>],
+    cell: &mut RegionShard,
+) {
+    for e in cell.kub_buf.drain(..) {
+        let n = tb.pod_ref(e.pod).node.expect("region-ticked pod is bound");
+        let key = kubelet_key(e.pod);
+        logs[shard_of(n)].lock().unwrap().push_record(e, key);
+    }
+    for e in cell.ev_buf.drain(..) {
+        let EventKind::Evicted { node, .. } = e.kind else {
+            unreachable!("eviction buffers contain only Evicted records")
+        };
+        logs[shard_of(node)].lock().unwrap().push_record(e, eviction_key(node));
+    }
+}
+
 pub struct Cluster {
     pub config: ClusterConfig,
     pub nodes: Vec<Node>,
@@ -558,7 +600,7 @@ pub struct Cluster {
     kubelet: Kubelet,
     scheduler: Scheduler,
     pub metrics: MetricsStore,
-    pub events: EventLog,
+    pub events: ShardedEventLog,
     pub now: u64,
     /// Bumped on every placement-relevant change (bind/unbind, reservation
     /// adjust, cordon, eviction, requeue activity). The event kernel's
@@ -673,7 +715,7 @@ impl Cluster {
             kubelet,
             scheduler,
             metrics,
-            events: EventLog::new(),
+            events: ShardedEventLog::new(),
             now: 0,
             sched_epoch: 0,
             waiting: BTreeSet::new(),
@@ -693,6 +735,17 @@ impl Cluster {
         Self::new(vec![node], ClusterConfig::default())
     }
 
+    /// Install the event-log shard layout: `map[n]` is the shard owning
+    /// node `n` (the scenario engine derives this from the pool layout).
+    /// Must run before any record or informer exists — the builder calls
+    /// it right after `Cluster::new`. Results are bit-identical at every
+    /// shard count; sharding only changes where appends land and how much
+    /// of the control plane can proceed in parallel.
+    pub fn set_event_shards(&mut self, map: Vec<usize>) {
+        assert_eq!(map.len(), self.nodes.len(), "shard map must cover every node");
+        self.events.set_shard_map(map);
+    }
+
     // ------------------------------------------------------------ API-ish --
 
     /// Bind and start a pod on node `n` now, emitting the PLEG pair
@@ -708,8 +761,9 @@ impl Cluster {
         pod.node = Some(n);
         pod.phase = PodPhase::Running;
         pod.started_at.get_or_insert(now);
-        self.events.push(now, id, EventKind::PodScheduled { node: n });
-        self.events.push(now, id, EventKind::PodStarted);
+        let shard = self.events.shard_of(n);
+        self.events.push_serial(now, id, EventKind::PodScheduled { node: n }, shard);
+        self.events.push_serial(now, id, EventKind::PodStarted, shard);
     }
 
     /// Create and schedule a pod. Returns its id; the pod starts Running on
@@ -730,12 +784,14 @@ impl Cluster {
             None => {
                 self.sched_epoch += 1; // a new waiting pod arms the requeue loop
                 self.waiting.insert((OrdF64(request), id));
-                self.events.push(
+                // unbound pod: no owning node yet, shard 0 by convention
+                self.events.push_serial(
                     self.now,
                     id,
                     EventKind::SchedulingFailed {
                         reason: format!("no node fits request of {request} GB"),
                     },
+                    0,
                 );
             }
         }
@@ -776,7 +832,9 @@ impl Cluster {
         if self.waiting.remove(&(OrdF64(old_request), id)) {
             self.waiting.insert((OrdF64(mem_gb), id));
         }
-        self.events.push(now, id, EventKind::ResizeIssued { target_gb: mem_gb });
+        let shard = self.pods[id].node.map_or(0, |n| self.events.shard_of(n));
+        self.events
+            .push_serial(now, id, EventKind::ResizeIssued { target_gb: mem_gb }, shard);
     }
 
     /// Restart a killed pod with a new memory size (the VPA Updater path:
@@ -807,8 +865,9 @@ impl Cluster {
         }
         self.io[id] = IoState::default();
         self.restarting.push((id, ready_at));
+        let shard = self.pods[id].node.map_or(0, |n| self.events.shard_of(n));
         self.events
-            .push(now, id, EventKind::PodRestarted { new_limit_gb: new_mem_gb });
+            .push_serial(now, id, EventKind::PodRestarted { new_limit_gb: new_mem_gb }, shard);
     }
 
     pub fn pod(&self, id: PodId) -> &Pod {
@@ -859,17 +918,19 @@ impl Cluster {
         self.sched_epoch += 1;
         self.nodes[node].cordon();
         let victims: Vec<PodId> = self.nodes[node].pods.clone();
+        let shard = self.events.shard_of(node);
         for &id in &victims {
             let req = self.pods[id].spec.memory_request_gb();
             self.nodes[node].unbind(id, req);
             self.displace(id, node);
-            self.events.push(now, id, EventKind::PodDrained { node });
+            self.events.push_serial(now, id, EventKind::PodDrained { node }, shard);
         }
         self.cap_index.refresh(node, &self.nodes[node]);
-        self.events.push(
+        self.events.push_serial(
             now,
             NODE_EVENT,
             EventKind::NodeDrained { node, displaced: victims.len() },
+            shard,
         );
         victims.len()
     }
@@ -895,7 +956,8 @@ impl Cluster {
         self.nodes[node].unbind(id, req);
         self.cap_index.refresh(node, &self.nodes[node]);
         self.displace(id, node);
-        self.events.push(now, id, EventKind::PodKilled { node });
+        let shard = self.events.shard_of(node);
+        self.events.push_serial(now, id, EventKind::PodKilled { node }, shard);
         true
     }
 
@@ -914,7 +976,8 @@ impl Cluster {
             pod.restarts += 1;
         }
         self.sched_epoch += 1; // converted → next pass may place it
-        self.events.push(now, id, EventKind::PodRequeued);
+        // the fresh container is unbound (node cleared above): shard 0
+        self.events.push_serial(now, id, EventKind::PodRequeued, 0);
         let request = self.pods[id].spec.memory_request_gb();
         self.waiting.insert((OrdF64(request), id));
     }
@@ -936,7 +999,9 @@ impl Cluster {
             self.nodes[n].bind(id, request);
             self.cap_index.refresh(n, &self.nodes[n]);
             self.pods[id].node = Some(n);
-            self.events.push(self.now, id, EventKind::PodScheduled { node: n });
+            let shard = self.events.shard_of(n);
+            self.events
+                .push_serial(self.now, id, EventKind::PodScheduled { node: n }, shard);
             self.restarting
                 .push((id, self.now + self.config.restart_latency_secs));
         } else {
@@ -1056,7 +1121,11 @@ impl Cluster {
             if pod.phase == PodPhase::Pending && pod.node.is_some() {
                 pod.phase = PodPhase::Running;
                 pod.started_at.get_or_insert(now);
-                self.events.push(now, id, EventKind::PodStarted);
+                let n = pod.node.expect("checked above");
+                let shard = self.events.shard_of(n);
+                // phase-0 key: resumes precede this tick's kubelet records
+                // in the merged order, as in the serial emission
+                self.events.push_expiry(now, id, EventKind::PodStarted, shard);
             }
         }
     }
@@ -1104,11 +1173,14 @@ impl Cluster {
     /// wrapper runs it against the live log and lands the journal inline.
     fn kubelet_tick_one(&mut self, id: PodId) {
         let now = self.now;
+        // the emitting pod's bound node owns every record of this tick
+        // (completion unbinds but leaves `pod.node` set)
+        let shard = self.pods[id].node.map_or(0, |n| self.events.shard_of(n));
         let tb = self.tables();
         let mut j = RegionJournal::default();
         let mut buf = std::mem::take(&mut self.tick_buf);
         unsafe { kubelet_tick_core(&self.kubelet, &tb, now, id, &mut buf, &mut j) };
-        self.events.events.append(&mut buf);
+        self.events.append_kubelet(shard, &mut buf);
         self.tick_buf = buf;
         self.apply_journal(j);
     }
@@ -1119,11 +1191,12 @@ impl Cluster {
     /// the requeue conversion queue.
     fn eviction_pass_node(&mut self, n: usize) {
         let now = self.now;
+        let shard = self.events.shard_of(n);
         let tb = self.tables();
         let mut j = RegionJournal::default();
         let mut buf = std::mem::take(&mut self.tick_buf);
         unsafe { eviction_pass_core(&tb, now, n, &mut buf, &mut j) };
-        self.events.events.append(&mut buf);
+        self.events.append_evictions(shard, &mut buf);
         self.tick_buf = buf;
         self.apply_journal(j);
     }
@@ -1147,9 +1220,9 @@ impl Cluster {
     /// tick emitted an event the driver must react to on this exact tick
     /// (see [`EventKind::is_interrupt`]).
     fn step_checked(&mut self) -> bool {
-        let seen = self.events.events.len();
+        let seen = self.events.total_interrupts();
         self.step();
-        self.events.events[seen..].iter().any(|e| e.kind.is_interrupt())
+        self.events.total_interrupts() > seen
     }
 
     // ------------------------------------------------- observation plane --
@@ -1259,6 +1332,36 @@ impl Cluster {
         let mut out = self.metrics.prometheus_text(&names);
         out.push_str(&self.scrape_stats().prometheus_text());
         out.push_str(&self.coast_stats.prometheus_text());
+        out.push_str(&self.log_prometheus_text());
+        out
+    }
+
+    /// The sharded event log's own exposition: per-shard append/retained
+    /// series plus the cumulative read-time merge wall-time, stacked next
+    /// to the `arcv_kernel_*` region telemetry.
+    fn log_prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        let shards = self.events.shard_count();
+        let mut out = String::with_capacity(3 * 200 + shards * 2 * 48);
+        let _ = writeln!(
+            out,
+            "# HELP arcv_log_shard_appends All-time records appended per event-log shard.\n# TYPE arcv_log_shard_appends counter"
+        );
+        for (s, a) in self.events.shard_appends().iter().enumerate() {
+            let _ = writeln!(out, "arcv_log_shard_appends{{shard=\"{s}\"}} {a}");
+        }
+        let _ = writeln!(
+            out,
+            "# HELP arcv_log_shard_len Retained records per event-log shard (post-compaction suffix).\n# TYPE arcv_log_shard_len gauge"
+        );
+        for (s, l) in self.events.shard_lens().iter().enumerate() {
+            let _ = writeln!(out, "arcv_log_shard_len{{shard=\"{s}\"}} {l}");
+        }
+        let _ = writeln!(
+            out,
+            "# HELP arcv_log_merge_seconds_total Wall time spent in read-time cross-shard merges.\n# TYPE arcv_log_merge_seconds_total counter\narcv_log_merge_seconds_total {}",
+            self.events.merge_nanos() as f64 / 1e9
+        );
         out
     }
 
@@ -1628,18 +1731,19 @@ impl Cluster {
     /// ([`region_tick_shard`]) on the calling thread, so the serial and
     /// parallel paths cannot drift.
     ///
-    /// **Deterministic merge.** The serial tick emits kubelet-phase
-    /// events in ascending pod id, then eviction-phase events in
-    /// ascending node. Each pod (and node) lives in exactly one shard, a
-    /// shard ticks its nodes' exact pods in ascending id per node, and
-    /// shards own contiguous ascending node ranges — so a *stable* sort
-    /// of the concatenated kubelet buffers by pod id, followed by the
-    /// eviction buffers in shard order, reconstructs the serial emission
-    /// order exactly, independent of the worker count. The merged tail is
-    /// also what the interrupt check scans, so interrupts fire on the
-    /// same tick in every configuration, and the log's revisions and
-    /// every informer cursor stay bit-identical (`kernel_equivalence.rs`
-    /// is the oracle).
+    /// **Deterministic stream, no merge.** Workers append their tick
+    /// buffers directly into the owning shards of the [`ShardedEventLog`]
+    /// ([`flush_cell`]) — the old per-tick sort-and-append into one
+    /// global log is gone. Kubelet records carry `(phase 1, pod)` keys
+    /// and evictions `(phase 2, node)` keys, so the read-time stable
+    /// `(time, key)` merge reconstructs the serial emission order exactly
+    /// at every worker AND shard count; the interrupt check is an O(1)
+    /// per-shard counter delta instead of a merged-tail scan, so
+    /// interrupts fire on the same tick in every configuration and every
+    /// informer cursor stays bit-identical (`kernel_equivalence.rs` is
+    /// the oracle). Single-shard logs keep the flush on the coordinator
+    /// (every cell would contend on one mutex); multi-shard logs flush
+    /// from the workers, off the serial path.
     ///
     /// Mid-region no whole-cluster structure is consulted, so shard
     /// workers journal reservation releases, evictions, prunes, and epoch
@@ -1784,26 +1888,35 @@ impl Cluster {
             nodes: self.nodes.as_mut_ptr(),
             defer: defer.as_mut_ptr(),
         };
-        let (kubelet, events) = (&self.kubelet, &mut self.events);
+        let kubelet = &self.kubelet;
+        let (shard_logs, node_shard) = self.events.shards_and_map();
+        let multi_shard = shard_logs.len() > 1;
+        let shard_of = |n: usize| node_shard.get(n).copied().unwrap_or(0);
+        // per-shard append handles: workers lock only the shard they are
+        // appending to, so disjoint-pool cells never serialize on a log
+        let mlogs: Vec<Mutex<&mut EventLog>> = shard_logs.iter_mut().map(Mutex::new).collect();
+        let sum_interrupts = |logs: &[Mutex<&mut EventLog>]| -> u64 {
+            logs.iter().map(|l| l.lock().unwrap().interrupts()).sum()
+        };
         let mut merge_ns = 0u64;
         let mut t = start;
         let mut interrupted = false;
+        let mut seen = sum_interrupts(&mlogs);
         if !parallel {
             // serial region: same shard machinery, calling thread
             let cell = &mut cells[0];
             loop {
                 t += 1;
-                let seen = events.events.len();
                 // restart expiries cannot land inside a sharded window
                 // (the ceiling stops short of the earliest one), so the
                 // per-tick retain scan is provably a no-op and skipped
                 unsafe { region_tick_shard(kubelet, &tb, t, start, cell) };
                 let m0 = Instant::now();
-                cell.kub_buf.sort_by_key(|e| e.pod); // stable: serial order
-                events.events.append(&mut cell.kub_buf);
-                events.events.append(&mut cell.ev_buf);
+                unsafe { flush_cell(&tb, shard_of, &mlogs, cell) };
+                let after = sum_interrupts(&mlogs);
                 merge_ns += m0.elapsed().as_nanos() as u64;
-                interrupted = events.events[seen..].iter().any(|e| e.kind.is_interrupt());
+                interrupted = after > seen;
+                seen = after;
                 let at_end = interrupted
                     || t >= region_end
                     || t >= ceiling
@@ -1817,8 +1930,8 @@ impl Cluster {
                 std::mem::take(&mut cells).into_iter().map(Mutex::new).collect();
             let barrier = Barrier::new(mcells.len() + 1);
             let stop = AtomicBool::new(false);
-            let (tb_r, barrier_r, stop_r, cells_r) = (&tb, &barrier, &stop, &mcells);
-            let mut sort_buf: Vec<Event> = Vec::new();
+            let (tb_r, barrier_r, stop_r, cells_r, logs_r) =
+                (&tb, &barrier, &stop, &mcells, &mlogs);
             std::thread::scope(|scope| {
                 for cell in cells_r {
                     scope.spawn(move || {
@@ -1831,6 +1944,11 @@ impl Cluster {
                             k += 1;
                             let mut sh = cell.lock().unwrap();
                             unsafe { region_tick_shard(kubelet, tb_r, start + k, start, &mut sh) };
+                            if multi_shard {
+                                // direct append into the owning shards —
+                                // the eliminated coordinator merge
+                                unsafe { flush_cell(tb_r, shard_of, logs_r, &mut sh) };
+                            }
                             drop(sh);
                             barrier_r.wait(); // tick end
                         }
@@ -1840,19 +1958,21 @@ impl Cluster {
                     t += 1;
                     barrier_r.wait(); // release tick t to the workers
                     barrier_r.wait(); // every shard done with tick t
-                    let seen = events.events.len();
                     let m0 = Instant::now();
-                    sort_buf.clear();
-                    for cell in cells_r {
-                        sort_buf.append(&mut cell.lock().unwrap().kub_buf);
+                    if !multi_shard {
+                        // one shard: every cell targets the same log, so
+                        // the coordinator drains them lock-free instead
+                        // of letting the workers contend on its mutex
+                        for cell in cells_r {
+                            unsafe {
+                                flush_cell(tb_r, shard_of, logs_r, &mut cell.lock().unwrap())
+                            };
+                        }
                     }
-                    sort_buf.sort_by_key(|e| e.pod); // stable: serial order
-                    events.events.append(&mut sort_buf);
-                    for cell in cells_r {
-                        events.events.append(&mut cell.lock().unwrap().ev_buf);
-                    }
+                    let after = sum_interrupts(logs_r);
                     merge_ns += m0.elapsed().as_nanos() as u64;
-                    interrupted = events.events[seen..].iter().any(|e| e.kind.is_interrupt());
+                    interrupted = after > seen;
+                    seen = after;
                     let at_end = interrupted
                         || t >= region_end
                         || t >= ceiling
@@ -1867,6 +1987,7 @@ impl Cluster {
             });
             cells = mcells.into_iter().map(|c| c.into_inner().unwrap()).collect();
         }
+        drop(mlogs);
         self.now = t;
         let mut j = RegionJournal::default();
         for cell in &mut cells {
@@ -2287,7 +2408,7 @@ mod tests {
             b.advance_to(target, opts);
         }
         assert_eq!(a.now, b.now);
-        assert_eq!(a.events.events, b.events.events);
+        assert_eq!(a.events.snapshot(), b.events.snapshot());
         let (x, y) = (a.pod(pa), b.pod(pb));
         assert_eq!(x.phase, y.phase);
         assert_eq!(x.progress_secs, y.progress_secs);
@@ -2318,7 +2439,7 @@ mod tests {
                 b.advance_to(target, opts);
             }
             assert_eq!(a.now, b.now, "shards={shards}");
-            assert_eq!(a.events.events, b.events.events, "shards={shards}");
+            assert_eq!(a.events.snapshot(), b.events.snapshot(), "shards={shards}");
             let (x, y) = (a.pod(pa), b.pod(pb));
             assert_eq!(x.progress_secs, y.progress_secs, "shards={shards}");
             assert_eq!(x.provisioned_gb_secs, y.provisioned_gb_secs, "shards={shards}");
@@ -2343,14 +2464,14 @@ mod tests {
         assert_eq!(outcome, Advance::Interrupted);
         assert_eq!(b.now, oom_tick, "interrupt lands on the legacy OOM tick");
         assert_eq!(b.pod(pb).phase, PodPhase::OomKilled);
-        assert_eq!(a.events.events, b.events.events);
+        assert_eq!(a.events.snapshot(), b.events.snapshot());
         // the sharded path interrupts on the identical tick
         let (mut s, ps) = build();
         let opts = AdvanceOpts { event_driven: true, sample_metrics: true, shards: 2 };
         assert_eq!(s.advance_to(1000, opts), Advance::Interrupted);
         assert_eq!(s.now, oom_tick);
         assert_eq!(s.pod(ps).phase, PodPhase::OomKilled);
-        assert_eq!(a.events.events, s.events.events);
+        assert_eq!(a.events.snapshot(), s.events.snapshot());
     }
 
     #[test]
@@ -2390,14 +2511,14 @@ mod tests {
         // serial event kernel: the thrashing pod defeats every coast
         let (mut b, _, _) = build();
         drive(&mut b, AdvanceOpts { event_driven: true, sample_metrics: true, shards: 0 });
-        assert_eq!(a.events.events, b.events.events);
+        assert_eq!(a.events.snapshot(), b.events.snapshot());
         assert_eq!(b.coast_stats.coasted_pod_ticks, 0, "serial kernel cannot coast here");
         assert_eq!(b.coast_stats.deferred_pod_ticks, 0);
         // sharded kernel: neighbor coasts lazily, results still identical
         let (mut s, ts, qs) = build();
         drive(&mut s, AdvanceOpts { event_driven: true, sample_metrics: true, shards: 2 });
         assert_eq!(a.now, s.now);
-        assert_eq!(a.events.events, s.events.events);
+        assert_eq!(a.events.snapshot(), s.events.snapshot());
         for (x, y) in [(ta, ts), (qa, qs)] {
             assert_eq!(a.pod(x).phase, s.pod(y).phase);
             assert_eq!(a.pod(x).progress_secs, s.pod(y).progress_secs);
@@ -2466,7 +2587,7 @@ mod tests {
             }
             assert_eq!(a.schedule_pending(), b.schedule_pending_scan(), "round {round}");
         }
-        assert_eq!(a.events.events, b.events.events);
+        assert_eq!(a.events.snapshot(), b.events.snapshot());
         for id in 0..a.pods.len() {
             assert_eq!(a.pod(id).phase, b.pod(id).phase, "pod {id}");
             assert_eq!(a.pod(id).node, b.pod(id).node, "pod {id}");

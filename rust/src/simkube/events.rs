@@ -1,15 +1,31 @@
-//! Cluster event log — what `kubectl get events` would show, and what the
-//! harness asserts on (OOM counts, restarts, resize latencies).
+//! Sharded cluster event log — what `kubectl get events` would show, and
+//! what the harness asserts on (OOM counts, restarts, resize latencies).
 //!
 //! Since the delta-driven observation plane (PR 5), entries double as
 //! **replayable watch records**: every event has a *revision* — its
-//! position in the all-time stream, monotonic and stable across
+//! position in its shard's all-time stream, monotonic and stable across
 //! compaction — and informers ([`ApiClient::sync`]) replay only the
 //! records past their cursor instead of relisting the world. Registered
 //! cursors make compaction safe: [`EventLog::compact`] may only drop
 //! records below the minimum live cursor, so no informer can ever miss a
 //! record it has not replayed (a cursor below the retained floor forces a
 //! relist, the kube watch-reconnect semantics).
+//!
+//! Since the sharded control plane (PR 10) the cluster's log is a
+//! [`ShardedEventLog`]: one revisioned [`EventLog`] per shard, with nodes
+//! mapped to shards by the scenario's pool layout (single-pool runs get
+//! exactly one shard and are bit-identical to the unified log). Region
+//! workers append directly to their own shard's log instead of funneling
+//! through a global per-tick merge, and informer positions become
+//! per-shard [`VectorCursor`]s. The **global stream order** is recovered
+//! at read time: every record carries an *order key* — a `(phase, k)`
+//! pair packed into a `u64` — chosen so that sorting the union of the
+//! shards by `(time, key)` reproduces the exact serial emission order
+//! (restart-expiry resumes, then kubelet events ascending pod id, then
+//! evictions ascending node, then coordinator actions in submission
+//! order). Records with equal `(time, key)` are only ever appended
+//! contiguously to a single shard, so the stable merge is deterministic
+//! at every shard and thread count ([`ShardedEventLog::snapshot`]).
 //!
 //! PLEG contract: every pod phase transition emits exactly one event
 //! (`PodScheduled`/`PodStarted`, `PodCompleted`, `OomKilled`, `Evicted`,
@@ -18,8 +34,10 @@
 //! `ResizeIssued` or `PodRestarted`. This is what makes delta replay
 //! exact: a pod without a record since the informer's cursor provably has
 //! an unchanged API-visible state (`rust/tests/informer_delta_prop.rs`
-//! pins replay against the full-relist oracle; `rust/tests/api_surface.rs`
-//! pins the mutation half).
+//! pins replay against the full-relist oracle — including the
+//! vector-cursor property that a laggard pinned on one shard cannot block
+//! compaction of the others; `rust/tests/api_surface.rs` pins the
+//! mutation half).
 //!
 //! [`ApiClient::sync`]: super::api::ApiClient::sync
 
@@ -233,14 +251,45 @@ impl Event {
     }
 }
 
-/// Destination of kubelet/eviction event emission. The cluster's
-/// [`EventLog`] is the canonical sink; sharded stepping regions instead
-/// hand each worker a plain `Vec<Event>` shard buffer and merge the
-/// buffers into the log in the serial emission order afterwards
+/// Destination of kubelet/eviction event emission. Sharded stepping
+/// regions hand each worker a plain `Vec<Event>` buffer; the buffered
+/// records are then routed (with their order keys) to the owning shard's
+/// [`EventLog`] — directly by the worker when the log is multi-shard
 /// (`Cluster::step_region`), which is what keeps revisions and informer
-/// cursors bit-identical across thread counts.
+/// cursors bit-identical across shard and thread counts.
 pub trait EventSink {
     fn push(&mut self, time: u64, pod: PodId, kind: EventKind);
+}
+
+// --------------------------------------------------------- order keys --
+
+/// Order keys pack `(phase, k)` into a `u64` as `phase << 62 | k`. The
+/// four phases mirror the serial emission order inside one tick: restart
+/// expiries resume at the top of `step()`, kubelet ticks run per pod
+/// ascending, the eviction pass runs per node ascending, and coordinator
+/// actions land after the tick. Sorting by `(time, key)` therefore
+/// reproduces the exact unified-log order from any shard layout.
+const PHASE_SHIFT: u32 = 62;
+const PHASE_EXPIRY: u64 = 0;
+const PHASE_KUBELET: u64 = 1 << PHASE_SHIFT;
+const PHASE_EVICTION: u64 = 2 << PHASE_SHIFT;
+const PHASE_SERIAL: u64 = 3 << PHASE_SHIFT;
+
+/// Key of a kubelet-emitted record: phase 1, ordered by pod id (the
+/// lockstep kubelet loop visits pods ascending). Pod ids provably fit in
+/// 62 bits — a pod vector of 2⁶² entries cannot exist.
+pub(crate) fn kubelet_key(pod: PodId) -> u64 {
+    debug_assert!((pod as u64) < (1 << PHASE_SHIFT));
+    PHASE_KUBELET | pod as u64
+}
+
+/// Key of a pressure-eviction record: phase 2, ordered by node (the
+/// lockstep eviction pass visits nodes ascending). Several evictions from
+/// one node share a key; they are emitted contiguously by one worker, so
+/// the stable merge preserves their relative order.
+pub(crate) fn eviction_key(node: usize) -> u64 {
+    debug_assert!((node as u64) < (1 << PHASE_SHIFT));
+    PHASE_EVICTION | node as u64
 }
 
 impl EventSink for EventLog {
@@ -267,10 +316,13 @@ const COMPACT_MIN_DEAD: u64 = 64;
 
 #[derive(Debug, Default)]
 pub struct EventLog {
-    /// The retained suffix of the all-time stream. `events[i]` has
-    /// revision `first_revision() + i`. With compaction disabled (the
+    /// The retained suffix of this shard's all-time stream. `events[i]`
+    /// has revision `first_revision() + i`. With compaction disabled (the
     /// default) this is the whole stream, exactly as before PR 5.
     pub events: Vec<Event>,
+    /// Per-record order keys, parallel to `events` (see [`kubelet_key`]):
+    /// the cross-shard merge sorts by `(time, key)`.
+    keys: Vec<u64>,
     /// Revision of `events[0]` — the number of records compacted away.
     base: u64,
     /// Registered informer cursors: the revision each informer has
@@ -284,6 +336,16 @@ pub struct EventLog {
     /// the harness and the equivalence suites compare whole logs, and the
     /// scenario outcome collector folds the full stream at the end.
     auto_compact: bool,
+    /// Standalone-push sequence (phase-3 keys for logs driven through
+    /// [`Self::push`], e.g. unit tests): preserves append order.
+    seq: u64,
+    /// All-time append count (compaction never decrements) — the
+    /// `arcv_log_shard_appends` telemetry.
+    appends: u64,
+    /// All-time count of [`EventKind::is_interrupt`] records — lets the
+    /// kernel answer "did this tick interrupt?" in O(1) instead of
+    /// rescanning the appended suffix.
+    interrupts: u64,
 }
 
 impl EventLog {
@@ -303,8 +365,63 @@ impl EventLog {
         self.base
     }
 
+    /// Standalone append: phase-3 (serial) order key from this log's own
+    /// sequence, preserving append order under the read-time merge. This
+    /// is the path unit tests and ad-hoc logs use; the cluster routes its
+    /// emissions through [`Self::push_keyed`] with phase-specific keys.
     pub fn push(&mut self, time: u64, pod: PodId, kind: EventKind) {
-        self.events.push(Event { time, pod, kind });
+        let key = PHASE_SERIAL | self.seq;
+        self.seq += 1;
+        self.push_keyed(time, pod, kind, key);
+    }
+
+    /// Append one record with an explicit order key (see [`kubelet_key`]).
+    pub(crate) fn push_keyed(&mut self, time: u64, pod: PodId, kind: EventKind, key: u64) {
+        self.push_record(Event { time, pod, kind }, key);
+    }
+
+    /// Append one already-built record with an explicit order key — the
+    /// region workers' direct-append path.
+    pub(crate) fn push_record(&mut self, e: Event, key: u64) {
+        self.appends += 1;
+        if e.kind.is_interrupt() {
+            self.interrupts += 1;
+        }
+        self.events.push(e);
+        self.keys.push(key);
+    }
+
+    /// Drain `buf` into this log, keying each record via `key_of`.
+    pub(crate) fn extend_keyed(&mut self, buf: &mut Vec<Event>, key_of: impl Fn(&Event) -> u64) {
+        self.keys.reserve(buf.len());
+        self.events.reserve(buf.len());
+        for e in buf.drain(..) {
+            self.appends += 1;
+            if e.kind.is_interrupt() {
+                self.interrupts += 1;
+            }
+            self.keys.push(key_of(&e));
+            self.events.push(e);
+        }
+    }
+
+    /// Retained record count (the suffix [`Self::since`] can serve).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// All-time appends into this shard (never decremented by compaction).
+    pub fn appends(&self) -> u64 {
+        self.appends
+    }
+
+    /// All-time [`EventKind::is_interrupt`] records appended.
+    pub fn interrupts(&self) -> u64 {
+        self.interrupts
     }
 
     /// The records at/after revision `rev`, or `None` when `rev` lies
@@ -385,6 +502,7 @@ impl EventLog {
         let dead = self.compactable() as usize;
         if dead > 0 {
             self.events.drain(..dead);
+            self.keys.drain(..dead.min(self.keys.len()));
             self.base += dead as u64;
         }
         dead
@@ -429,6 +547,351 @@ impl EventLog {
             .iter()
             .enumerate()
             .map(|(i, e)| (self.base + i as u64, e))
+    }
+}
+
+// ------------------------------------------------- sharded control log --
+
+/// Per-shard informer position: `revs[s]` is the revision the informer
+/// has replayed through (exclusive) on shard `s`. The scalar
+/// [`ShardedEventLog::revision`] (the sum of shard heads) stays monotonic
+/// and is what `SyncStats`/`SharedInformer` credit math uses; the vector
+/// is what makes per-shard compaction safe — a laggard pinned on one
+/// shard cannot hold records hostage on the others.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VectorCursor {
+    pub revs: Vec<u64>,
+}
+
+/// The cluster's event store: one revisioned [`EventLog`] per shard, with
+/// nodes mapped to shards by [`Self::set_shard_map`] (the scenario engine
+/// derives the map from the pool layout — single-pool runs get one shard
+/// and behave exactly like the unified log). Emission routes records to
+/// the owning node's shard with an order key; the global stream order is
+/// recovered at read time by the stable `(time, key)` merge
+/// ([`Self::merged_refs`]), so views, transition sets, and event-stream
+/// hashes are bit-identical at every shard count.
+#[derive(Debug)]
+pub struct ShardedEventLog {
+    shards: Vec<EventLog>,
+    /// node → shard. Empty (the default) routes every node to shard 0.
+    node_shard: Vec<usize>,
+    /// Shared monotone sequence keying phase-0 (restart-expiry) and
+    /// phase-3 (coordinator serial) records: submission order is global
+    /// across shards, so the read-time merge reproduces it exactly.
+    seq: u64,
+    /// Cumulative wall-time spent in read-time cross-shard merges
+    /// (`arcv_log_merge_nanos`). Relaxed atomic so `&self` readers
+    /// ([`Self::merged_refs`]) can bill themselves without a lock.
+    merge_nanos: std::sync::atomic::AtomicU64,
+}
+
+impl Default for ShardedEventLog {
+    fn default() -> Self {
+        Self {
+            shards: vec![EventLog::new()],
+            node_shard: Vec::new(),
+            seq: 0,
+            merge_nanos: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+}
+
+impl ShardedEventLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install the node→shard map (shard count = max id + 1). Must run
+    /// before any record or informer exists: revisions are per-shard, so
+    /// re-sharding a live log would invalidate every cursor.
+    pub fn set_shard_map(&mut self, map: Vec<usize>) {
+        assert!(
+            self.shards.iter().all(|s| s.appends == 0 && s.cursors.iter().all(Option::is_none)),
+            "event shards must be configured before any record or informer exists"
+        );
+        let count = map.iter().copied().max().map_or(1, |m| m + 1);
+        self.shards = (0..count).map(|_| EventLog::new()).collect();
+        self.node_shard = map;
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard owning `node` (shard 0 for nodes beyond the map, and for
+    /// everything under the default single-shard layout).
+    pub fn shard_of(&self, node: usize) -> usize {
+        self.node_shard.get(node).copied().unwrap_or(0)
+    }
+
+    pub fn shard(&self, s: usize) -> &EventLog {
+        &self.shards[s]
+    }
+
+    /// Mutable view of every shard — how `Cluster::step_region` workers
+    /// take per-shard `Mutex` handles for direct appends.
+    pub fn shards_mut(&mut self) -> &mut [EventLog] {
+        &mut self.shards
+    }
+
+    /// Split borrow for the region coordinator: mutable shard slice plus
+    /// the (shared) node→shard map, so routing and appending can coexist.
+    pub(crate) fn shards_and_map(&mut self) -> (&mut [EventLog], &[usize]) {
+        (&mut self.shards, &self.node_shard)
+    }
+
+    /// Coordinator-action append (phase 3, global submission order).
+    pub fn push_serial(&mut self, time: u64, pod: PodId, kind: EventKind, shard: usize) {
+        let key = PHASE_SERIAL | self.seq;
+        self.seq += 1;
+        self.shards[shard].push_keyed(time, pod, kind, key);
+    }
+
+    /// Restart-expiry append (phase 0: resumes land before the tick's
+    /// kubelet records in the merged order, as in the serial kernel).
+    pub fn push_expiry(&mut self, time: u64, pod: PodId, kind: EventKind, shard: usize) {
+        let key = PHASE_EXPIRY | self.seq;
+        self.seq += 1;
+        self.shards[shard].push_keyed(time, pod, kind, key);
+    }
+
+    /// Drain a kubelet emission buffer into `shard` (phase 1, keyed by
+    /// pod id — several records for one pod keep their emission order via
+    /// the stable merge).
+    pub fn append_kubelet(&mut self, shard: usize, buf: &mut Vec<Event>) {
+        self.shards[shard].extend_keyed(buf, |e| kubelet_key(e.pod));
+    }
+
+    /// Drain an eviction-pass buffer into `shard` (phase 2, keyed by the
+    /// evicting node — QoS order within a node rides on the stable merge).
+    pub fn append_evictions(&mut self, shard: usize, buf: &mut Vec<Event>) {
+        self.shards[shard].extend_keyed(buf, |e| match e.kind {
+            EventKind::Evicted { node, .. } => eviction_key(node),
+            _ => unreachable!("eviction buffers contain only Evicted records"),
+        });
+    }
+
+    /// Scalar head: the sum of shard heads. Monotonic, identical at every
+    /// shard count (every record lands in exactly one shard), and exactly
+    /// the unified-log revision — which is why `SyncStats::events_replayed`
+    /// and `SharedInformer` delivery credit need no vector awareness.
+    pub fn revision(&self) -> u64 {
+        self.shards.iter().map(EventLog::revision).sum()
+    }
+
+    /// Scalar floor: the sum of shard floors (0 until compaction runs).
+    pub fn first_revision(&self) -> u64 {
+        self.shards.iter().map(EventLog::first_revision).sum()
+    }
+
+    /// Per-shard heads — the vector an informer stores as its cursor
+    /// after a full replay.
+    pub fn heads(&self) -> Vec<u64> {
+        self.shards.iter().map(EventLog::revision).collect()
+    }
+
+    /// Total retained records across shards.
+    pub fn retained_len(&self) -> usize {
+        self.shards.iter().map(EventLog::len).sum()
+    }
+
+    /// Single-shard suffix replay (the unified-log `since`). Multi-shard
+    /// readers use per-shard [`EventLog::since`] via [`Self::shard`] or
+    /// the positional [`Self::watch_from`].
+    pub fn since(&self, rev: u64) -> Option<&[Event]> {
+        debug_assert_eq!(self.shards.len(), 1, "scalar since() is a single-shard surface");
+        self.shards[0].since(rev)
+    }
+
+    /// Positional watch: the merged records at/after global position
+    /// `rev` (an index into the merged stream, offset by the scalar
+    /// floor), plus the scalar head. `None` when `rev` lies below the
+    /// floor — the caller must relist. This is the debug/test surface
+    /// behind `ApiClient::watch`; the sync hot path replays per-shard
+    /// suffixes instead.
+    pub fn watch_from(&self, rev: u64) -> Option<(Vec<Event>, u64)> {
+        let head = self.revision();
+        if self.shards.len() == 1 {
+            return self.shards[0].since(rev).map(|s| (s.to_vec(), head));
+        }
+        let first = self.first_revision();
+        if rev < first {
+            return None;
+        }
+        let skip = (rev - first) as usize;
+        let merged: Vec<Event> = self.merged_refs().into_iter().cloned().collect();
+        Some((merged.into_iter().skip(skip).collect(), head))
+    }
+
+    /// Register an informer cursor on every shard (slots stay aligned
+    /// because registration and release always run through the container).
+    pub fn register_cursor(&mut self) -> CursorId {
+        let mut id = 0;
+        for (i, sh) in self.shards.iter_mut().enumerate() {
+            let slot = sh.register_cursor();
+            if i == 0 {
+                id = slot;
+            } else {
+                debug_assert_eq!(slot, id, "cursor slots must stay aligned across shards");
+            }
+        }
+        id
+    }
+
+    /// Scalar cursor advance — single-shard surface (the unified-log
+    /// `advance_cursor`); vector informers use [`Self::advance_cursor_vec`].
+    pub fn advance_cursor(&mut self, id: CursorId, rev: u64) {
+        debug_assert_eq!(self.shards.len(), 1, "scalar advance_cursor is a single-shard surface");
+        self.shards[0].advance_cursor(id, rev);
+    }
+
+    /// Advance informer `id` to per-shard revisions `revs` (auto-compact
+    /// runs per shard: each shard's floor is governed only by the cursors
+    /// on THAT shard, so a laggard pinned on one shard cannot block the
+    /// others).
+    pub fn advance_cursor_vec(&mut self, id: CursorId, revs: &[u64]) {
+        assert_eq!(revs.len(), self.shards.len());
+        for (sh, &r) in self.shards.iter_mut().zip(revs) {
+            sh.advance_cursor(id, r);
+        }
+    }
+
+    /// Retire informer `id` on every shard. Idempotent.
+    pub fn release_cursor(&mut self, id: CursorId) {
+        for sh in &mut self.shards {
+            sh.release_cursor(id);
+        }
+    }
+
+    /// Enable/disable auto-compaction on every shard.
+    pub fn set_auto_compact(&mut self, on: bool) {
+        for sh in &mut self.shards {
+            sh.set_auto_compact(on);
+        }
+    }
+
+    /// Compact every shard to its own floor; returns total dropped.
+    pub fn compact(&mut self) -> usize {
+        self.shards.iter_mut().map(EventLog::compact).sum()
+    }
+
+    /// The retained records in global stream order: the union of the
+    /// shards stable-sorted by `(time, order key)`. Records with equal
+    /// `(time, key)` are only ever emitted contiguously into one shard
+    /// (multi-records per pod per kubelet tick; multi-evictions per node
+    /// per pass), so the stable sort over the shard concatenation is
+    /// deterministic and identical at every shard, thread, and region
+    /// layout. Wall-time is billed to [`Self::merge_nanos`].
+    pub fn merged_refs(&self) -> Vec<&Event> {
+        let t0 = std::time::Instant::now();
+        let total: usize = self.shards.iter().map(EventLog::len).sum();
+        let mut tagged: Vec<(u64, u64, &Event)> = Vec::with_capacity(total);
+        for sh in &self.shards {
+            debug_assert_eq!(sh.events.len(), sh.keys.len(), "keyless direct append detected");
+            for (e, &k) in sh.events.iter().zip(&sh.keys) {
+                tagged.push((e.time, k, e));
+            }
+        }
+        tagged.sort_by_key(|&(t, k, _)| (t, k));
+        let out: Vec<&Event> = tagged.into_iter().map(|(_, _, e)| e).collect();
+        self.merge_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, std::sync::atomic::Ordering::Relaxed);
+        out
+    }
+
+    /// Owned clone of the merged stream — what equivalence suites hash
+    /// and compare.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.merged_refs().into_iter().cloned().collect()
+    }
+
+    /// Consume the log into the merged stream without cloning records
+    /// (end-of-run outcome collection).
+    pub fn into_snapshot(self) -> Vec<Event> {
+        let total: usize = self.shards.iter().map(EventLog::len).sum();
+        let mut tagged: Vec<(u64, u64, Event)> = Vec::with_capacity(total);
+        for sh in self.shards {
+            for (e, k) in sh.events.into_iter().zip(sh.keys) {
+                tagged.push((e.time, k, e));
+            }
+        }
+        tagged.sort_by_key(|t| (t.0, t.1));
+        tagged.into_iter().map(|t| t.2).collect()
+    }
+
+    /// Merged-order iteration over the retained records.
+    pub fn iter(&self) -> impl Iterator<Item = &Event> {
+        self.merged_refs().into_iter()
+    }
+
+    /// The retained watch records with positional revisions in merged
+    /// order (the loadgen trace surface). With compaction off this is the
+    /// whole all-time stream starting at revision 0.
+    pub fn records(&self) -> impl Iterator<Item = (u64, &Event)> {
+        let base = self.first_revision();
+        self.merged_refs()
+            .into_iter()
+            .enumerate()
+            .map(move |(i, e)| (base + i as u64, e))
+    }
+
+    /// OOM kills for `pod` across all shards (order-free count).
+    pub fn count_ooms(&self, pod: PodId) -> usize {
+        self.shards.iter().map(|s| s.count_ooms(pod)).sum()
+    }
+
+    /// Restarts for `pod` across all shards (order-free count).
+    pub fn count_restarts(&self, pod: PodId) -> usize {
+        self.shards.iter().map(|s| s.count_restarts(pod)).sum()
+    }
+
+    /// Resize latencies for `pod` in merged stream order (a pod's records
+    /// can span shards when it reschedules across pools).
+    pub fn resize_latencies(&self, pod: PodId) -> Vec<u64> {
+        self.merged_refs()
+            .into_iter()
+            .filter(|e| e.pod == pod)
+            .filter_map(|e| match e.kind {
+                EventKind::ResizeApplied { latency_secs, .. } => Some(latency_secs),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All-time interrupt records across shards — O(shards) per call, so
+    /// the kernel's per-tick "did anything interrupt?" check no longer
+    /// rescans appended suffixes.
+    pub fn total_interrupts(&self) -> u64 {
+        self.shards.iter().map(EventLog::interrupts).sum()
+    }
+
+    /// Per-shard all-time append counts (`arcv_log_shard_appends`).
+    pub fn shard_appends(&self) -> Vec<u64> {
+        self.shards.iter().map(EventLog::appends).collect()
+    }
+
+    /// Per-shard retained lengths (`arcv_log_shard_len`).
+    pub fn shard_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(EventLog::len).collect()
+    }
+
+    /// Per-shard retained floors (what the laggard property asserts on).
+    pub fn shard_first_revisions(&self) -> Vec<u64> {
+        self.shards.iter().map(EventLog::first_revision).collect()
+    }
+
+    /// Cumulative read-time merge wall-time in nanoseconds.
+    pub fn merge_nanos(&self) -> u64 {
+        self.merge_nanos.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl EventSink for ShardedEventLog {
+    /// Ad-hoc append (tests, harness helpers): phase-3 key, shard 0. The
+    /// cluster's own emission paths route to the owning node's shard.
+    fn push(&mut self, time: u64, pod: PodId, kind: EventKind) {
+        self.push_serial(time, pod, kind, 0);
     }
 }
 
@@ -606,5 +1069,131 @@ mod tests {
         // concurrent informers, not lifetime registrations
         let reused = log.register_cursor();
         assert!(reused <= 1, "a released slot must be reused, got {reused}");
+    }
+
+    #[test]
+    fn sharded_merge_reproduces_serial_emission_order() {
+        // Two shards (nodes 0→shard 0, 1→shard 1). Emit one tick's worth
+        // of records out of shard order and check the merged stream is
+        // exactly the serial order: expiry, kubelet asc pod, eviction asc
+        // node, then coordinator serials in submission order.
+        let mut log = ShardedEventLog::new();
+        log.set_shard_map(vec![0, 1]);
+        assert_eq!(log.shard_count(), 2);
+        // serial action BEFORE the tick (time 4)
+        log.push_serial(4, 9, EventKind::ResizeIssued { target_gb: 2.0 }, log.shard_of(1));
+        // tick at time 5: shard 1 first (workers race), then shard 0
+        let mut kub1 = vec![
+            Event { time: 5, pod: 3, kind: EventKind::PodStarted },
+            Event { time: 5, pod: 7, kind: EventKind::PodCompleted },
+        ];
+        log.append_kubelet(1, &mut kub1);
+        assert!(kub1.is_empty(), "append drains the buffer");
+        log.push_expiry(5, 8, EventKind::PodStarted, 0);
+        let mut kub0 = vec![Event { time: 5, pod: 2, kind: EventKind::PodStarted }];
+        log.append_kubelet(0, &mut kub0);
+        let mut ev0 = vec![Event {
+            time: 5,
+            pod: 6,
+            kind: EventKind::Evicted { node: 0, qos_rank: 1 },
+        }];
+        log.append_evictions(0, &mut ev0);
+        // post-tick coordinator serials, cross-shard submission order
+        log.push_serial(5, 1, EventKind::PodRequeued, 1);
+        log.push_serial(5, 0, EventKind::PodRequeued, 0);
+        let pods: Vec<PodId> = log.snapshot().iter().map(|e| e.pod).collect();
+        assert_eq!(pods, vec![9, 8, 2, 3, 7, 6, 1, 0]);
+        // scalar surfaces match the unified log
+        assert_eq!(log.revision(), 8);
+        assert_eq!(log.heads(), vec![4, 4]);
+        assert_eq!(log.retained_len(), 8);
+        assert_eq!(log.shard_appends(), vec![4, 4]);
+        // interrupts: PodStarted ×3, PodCompleted, Evicted
+        assert_eq!(log.total_interrupts(), 5);
+    }
+
+    #[test]
+    fn sharded_merge_is_shard_map_invariant() {
+        // The same emission routed through 1 shard and through 3 shards
+        // must produce identical merged streams.
+        let emit = |log: &mut ShardedEventLog| {
+            for t in 0..50u64 {
+                for node in 0..3usize {
+                    let shard = log.shard_of(node);
+                    let mut buf = vec![Event {
+                        time: t,
+                        pod: 10 * node + t as usize % 3,
+                        kind: EventKind::PodStarted,
+                    }];
+                    log.append_kubelet(shard, &mut buf);
+                }
+                if t % 7 == 0 {
+                    log.push_serial(t, 99, EventKind::PodRequeued, log.shard_of(1));
+                }
+            }
+        };
+        let mut uni = ShardedEventLog::new();
+        emit(&mut uni);
+        let mut sharded = ShardedEventLog::new();
+        sharded.set_shard_map(vec![0, 1, 2]);
+        emit(&mut sharded);
+        assert_eq!(uni.snapshot(), sharded.snapshot());
+        assert_eq!(uni.revision(), sharded.revision());
+        let moved = sharded.into_snapshot();
+        assert_eq!(uni.snapshot(), moved, "into_snapshot matches the borrowed merge");
+    }
+
+    #[test]
+    fn vector_cursor_laggard_pins_only_its_own_shard() {
+        let mut log = ShardedEventLog::new();
+        log.set_shard_map(vec![0, 1]);
+        log.set_auto_compact(true);
+        let fast = log.register_cursor();
+        let lag = log.register_cursor();
+        for t in 0..500u64 {
+            for shard in 0..2 {
+                let mut buf = vec![Event { time: t, pod: shard, kind: EventKind::PodStarted }];
+                log.append_kubelet(shard, &mut buf);
+            }
+            let heads = log.heads();
+            log.advance_cursor_vec(fast, &heads);
+            // the laggard never advances past revision 3 on shard 0 but
+            // keeps up on shard 1
+            log.advance_cursor_vec(lag, &[3.min(heads[0]), heads[1]]);
+        }
+        let floors = log.shard_first_revisions();
+        assert_eq!(floors[0], 3, "laggard pins its own shard's floor");
+        assert!(floors[1] > 400, "the other shard compacts freely, floor {}", floors[1]);
+        // per-shard replay: shard 0 still serves the laggard incrementally
+        assert!(log.shard(0).since(3).is_some());
+        assert!(log.shard(1).since(3).is_none(), "shard 1 compacted past 3");
+        // scalar floor is the sum of shard floors
+        assert_eq!(log.first_revision(), floors[0] + floors[1]);
+    }
+
+    #[test]
+    fn watch_from_serves_positional_suffixes() {
+        let mut log = ShardedEventLog::new();
+        log.set_shard_map(vec![0, 1]);
+        for t in 0..10u64 {
+            let shard = (t % 2) as usize;
+            let mut buf = vec![Event { time: t, pod: t as usize, kind: EventKind::PodStarted }];
+            log.append_kubelet(shard, &mut buf);
+        }
+        let (all, head) = log.watch_from(0).unwrap();
+        assert_eq!(head, 10);
+        assert_eq!(all.len(), 10);
+        let (tail, _) = log.watch_from(7).unwrap();
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail, all[7..].to_vec());
+        assert!(log.watch_from(10).unwrap().0.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "before any record")]
+    fn shard_map_rejects_live_logs() {
+        let mut log = ShardedEventLog::new();
+        log.push_serial(0, 0, EventKind::PodStarted, 0);
+        log.set_shard_map(vec![0, 1]);
     }
 }

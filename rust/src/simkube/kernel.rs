@@ -54,11 +54,14 @@ pub enum KernelMode {
     /// (`0` = the machine's available parallelism). Stepping regions
     /// shard too: hot nodes partition into contiguous per-worker chunks,
     /// each worker ticks its chunk's proof-defeating pods against a
-    /// shard-local event buffer, and the buffers merge back into the
-    /// [`EventLog`](super::events::EventLog) in the exact serial emission
-    /// order (kubelet events ascending pod id, then evictions ascending
-    /// node). Bit-for-bit identical to the other modes at every thread
-    /// count — the equivalence suite pins it.
+    /// cell-local event buffer and appends the buffer straight into its
+    /// nodes' shard of the
+    /// [`ShardedEventLog`](super::events::ShardedEventLog) — no global
+    /// serial merge; per-record order keys make every read surface
+    /// reproduce the serial emission order (kubelet events ascending pod
+    /// id, then evictions ascending node). Bit-for-bit identical to the
+    /// other modes at every thread count AND shard count — the
+    /// equivalence suite pins it.
     Sharded { threads: usize },
 }
 
@@ -248,7 +251,7 @@ mod tests {
         let (ca, sa, stats_a) = drive(KernelMode::Lockstep);
         let (cb, sb, stats_b) = drive(KernelMode::EventDriven);
         assert_eq!(ca.now, cb.now);
-        assert_eq!(ca.events.events, cb.events.events);
+        assert_eq!(ca.events.snapshot(), cb.events.snapshot());
         assert_eq!(sa, sb, "sampled series must match tick for tick");
         assert_eq!(stats_a.sim_ticks, stats_b.sim_ticks);
         assert!(
@@ -265,7 +268,7 @@ mod tests {
         for threads in [1usize, 2, 0] {
             let (cb, sb, stats_b) = drive(KernelMode::Sharded { threads });
             assert_eq!(ca.now, cb.now, "threads={threads}");
-            assert_eq!(ca.events.events, cb.events.events, "threads={threads}");
+            assert_eq!(ca.events.snapshot(), cb.events.snapshot(), "threads={threads}");
             assert_eq!(sa, sb, "threads={threads}: sampled series diverged");
             assert!(stats_b.events < 2 * stats_b.sim_ticks);
         }

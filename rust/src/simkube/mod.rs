@@ -34,7 +34,7 @@ pub use api::{
 pub use clock::{next_multiple, SimClock, TimedEvent};
 pub use cluster::{Advance, AdvanceOpts, Cluster, ClusterConfig, CoastStats};
 pub use kernel::{run_kernel, EventSource, KernelMode, KernelStats};
-pub use events::{Event, EventKind, EventLog, EventSink};
+pub use events::{Event, EventKind, EventLog, EventSink, ShardedEventLog, VectorCursor};
 pub use kubelet::{Kubelet, KubeletConfig};
 pub use metrics::{MetricsStore, Sample, ScrapeCadence, ScrapeStats, SubscriptionSet};
 pub use node::Node;

@@ -129,7 +129,7 @@ fn dry_run_leaves_cluster_untouched() {
         .create_pod(&mut c, "a", ResourceSpec::memory_exact(2.0), ramp_process(1.0, 1.0, 100.0))
         .unwrap();
     c.run_until(10, |_| false);
-    let events_before = c.events.events.len();
+    let events_before = c.events.retained_len();
     let rv_before = c.pod(id).resource_version;
     let spec_before = c.pod(id).spec;
 
@@ -151,7 +151,7 @@ fn dry_run_leaves_cluster_untouched() {
     );
 
     assert_eq!(c.pods.len(), 1);
-    assert_eq!(c.events.events.len(), events_before);
+    assert_eq!(c.events.retained_len(), events_before);
     assert_eq!(c.pod(id).resource_version, rv_before);
     assert_eq!(c.pod(id).spec, spec_before);
     assert!(c.pod(id).pending_resize.is_none());

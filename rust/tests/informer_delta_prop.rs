@@ -12,6 +12,12 @@
 //!
 //! Mirrors the `sched_queue_prop.rs` pattern (one seeded churn script,
 //! incremental structure vs linear oracle, state compared pass by pass).
+//!
+//! The sharded-store properties extend the same oracle to vector
+//! cursors: replay over a three-shard event store stays bit-identical
+//! under live per-shard compaction, and a consumer stalled on one shard
+//! pins only that shard's floor — the rest of the store keeps
+//! compacting.
 
 use arcv::scenario::LeakProcess;
 use arcv::simkube::{
@@ -269,10 +275,166 @@ fn compaction_keeps_long_runs_bounded_without_losing_deltas() {
     // the log was compacted (both cursors ride the head), yet revisions
     // kept counting the whole stream
     assert!(
-        (c.events.events.len() as u64) < c.events.revision(),
+        (c.events.retained_len() as u64) < c.events.revision(),
         "retained {} of {} revisions — compaction never ran",
-        c.events.events.len(),
+        c.events.retained_len(),
         c.events.revision()
     );
     assert_eq!(a.informer_stats().relists, 1);
+}
+
+/// Build a 6-node cluster sharded into three 2-node event shards.
+fn build_sharded_cluster(cap: f64) -> Cluster {
+    let nodes: Vec<Node> = (0..6)
+        .map(|i| Node::new(&format!("w{i}"), cap, SwapDevice::disabled()))
+        .collect();
+    let mut c = Cluster::new(nodes, ClusterConfig::default());
+    c.set_event_shards(vec![0, 0, 1, 1, 2, 2]);
+    c.events.set_auto_compact(true);
+    c
+}
+
+#[test]
+fn vector_cursor_replay_matches_oracle_under_sharded_compaction() {
+    // the sharded-store version of the delta-vs-relist property, plus the
+    // vector-cursor compaction claim: a laggard whose backlog lives on
+    // shard 0 pins ONLY shard 0's floor — the other shards keep
+    // compacting underneath it.
+    prop::check("informer-vector-cursor", 40, |g| {
+        let mut c = build_sharded_cluster(32.0);
+        let mut a = ApiClient::new();
+        let mut b = ApiClient::new();
+        let mut lag = ApiClient::new();
+        lag.sync(&mut c); // register the laggard's vector cursor at rev 0
+        let mut created = 0usize;
+        for round in 0..40 {
+            match g.usize(0, 6) {
+                0 | 1 => {
+                    // arrival mix as in the unsharded property: leakers
+                    // (OOM kills) and flats, spread across all shards by
+                    // the scheduler
+                    let name = format!("p{created}");
+                    if g.bool(0.3) {
+                        let lim = g.f64(1.0, 6.0);
+                        c.create_pod(
+                            &name,
+                            ResourceSpec::memory_exact(lim),
+                            leak(lim * 0.6, lim * g.f64(0.1, 0.4), g.f64(20.0, 80.0)),
+                        );
+                    } else {
+                        let req = g.f64(1.0, 12.0);
+                        c.create_pod(
+                            &name,
+                            ResourceSpec::memory_exact(req),
+                            flat(req * g.f64(0.3, 0.9), g.f64(10.0, 80.0)),
+                        );
+                    }
+                    created += 1;
+                }
+                2 => c.run_until(g.u64(1, 15), |_| false),
+                3 if created > 0 => c.kill_pod(g.usize(0, created - 1)),
+                4 if created > 0 => {
+                    c.patch_pod_memory(g.usize(0, created - 1), g.f64(1.0, 12.0));
+                }
+                5 if created > 0 => {
+                    c.restart_pod(g.usize(0, created - 1), g.f64(1.0, 12.0));
+                }
+                6 => {
+                    c.schedule_pending();
+                }
+                _ => {}
+            }
+            if g.bool(0.7) {
+                let da = a.sync(&mut c);
+                let db = b.sync_relist(&mut c);
+                require_informers_equal(round, &c, &a, &b, &da, &db)?;
+            }
+        }
+        // settle, then the laggard catches up: registered vector cursors
+        // pinned every shard's floor at rev 0, so no relist
+        c.run_until(5, |_| false);
+        let da = a.sync(&mut c);
+        let db = b.sync_relist(&mut c);
+        require_informers_equal(99, &c, &a, &b, &da, &db)?;
+        let dl = lag.sync(&mut c);
+        require(
+            !dl.relisted,
+            "registered laggard must replay, never relist (its cursor pins every shard floor)",
+        )?;
+        for id in 0..c.pods.len() {
+            if lag.cached(id) != b.cached(id) {
+                return Err(format!("laggard pod {id} view diverged after catch-up"));
+            }
+        }
+        require(a.informer_stats().relists == 1, "delta informer relists only the LIST")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn laggard_pinned_on_one_shard_does_not_block_other_shards_compaction() {
+    // the per-shard floor claim, driven through real cluster churn: a
+    // consumer whose replay is frozen on shard 0 (a vector cursor held at
+    // its shard-0 component while riding the other heads — the shape a
+    // partition-stalled shard consumer produces) must pin ONLY shard 0.
+    // With the old scalar cursor this pinned the whole log: nothing
+    // anywhere could compact past the laggard's one stuck revision.
+    let mut c = build_sharded_cluster(16.0);
+    let mut fast = ApiClient::new();
+    fast.sync(&mut c); // fast informer rides every head
+    let slot = c.events.register_cursor();
+    // seed a short shard-0 backlog the frozen cursor never replays: empty
+    // equal nodes tie-break to the first index, so 2 GB pods pack node 0
+    for i in 0..4 {
+        let id = c.create_pod(&format!("s0-{i}"), ResourceSpec::memory_exact(2.0), flat(1.0, 4.0));
+        assert_eq!(c.pods[id].node, Some(0), "setup: pod must land on node 0 / shard 0");
+    }
+    c.run_until(6, |_| false); // completions: more shard-0 records
+    fast.sync(&mut c);
+    // long-lived fillers leave exact-fit slack only on nodes 2-5, so the
+    // churn below deterministically lands on shards 1 and 2: 3 GB fits
+    // only node 2/3 slack, 4 GB only the empty tail nodes
+    for (name, gb, want) in
+        [("fill0", 14.0, 0usize), ("fill1", 14.0, 1), ("fill2", 13.0, 2), ("fill3", 13.0, 3)]
+    {
+        let id = c.create_pod(name, ResourceSpec::memory_exact(gb), flat(6.0, 1e9));
+        assert_eq!(c.pods[id].node, Some(want), "setup: filler placement");
+    }
+    fast.sync(&mut c);
+    let frozen0 = 1; // replayed through revision 1 on shard 0, then stalled
+    let heads = c.events.heads();
+    assert!(heads[0] > frozen0, "setup: shard 0 must hold a backlog past the frozen component");
+    c.events.advance_cursor_vec(slot, &[frozen0, heads[1], heads[2]]);
+    let floors_before = c.events.shard_first_revisions();
+    // churn shards 1-2 far past the compaction threshold; the frozen
+    // consumer keeps riding shards 1-2 but never moves on shard 0
+    for i in 0..150 {
+        let a = c.create_pod(&format!("s1-{i}"), ResourceSpec::memory_exact(3.0), flat(1.5, 3.0));
+        assert_eq!(c.events.shard_of(c.pods[a].node.unwrap()), 1, "churn A must hit shard 1");
+        let b = c.create_pod(&format!("s2-{i}"), ResourceSpec::memory_exact(4.0), flat(1.5, 3.0));
+        assert_eq!(c.events.shard_of(c.pods[b].node.unwrap()), 2, "churn B must hit shard 2");
+        c.run_until(5, |_| false); // both complete; capacity retires
+        fast.sync(&mut c);
+        let h = c.events.heads();
+        c.events.advance_cursor_vec(slot, &[frozen0, h[1], h[2]]);
+    }
+    let floors_after = c.events.shard_first_revisions();
+    // shard 0's floor can reach the frozen component but never pass it —
+    // the stalled consumer's suffix is intact and replayable
+    assert!(
+        floors_after[0] <= frozen0,
+        "shard 0 compacted past the frozen cursor ({} > {frozen0})",
+        floors_after[0]
+    );
+    let backlog = c
+        .events
+        .shard(0)
+        .since(frozen0)
+        .expect("the frozen consumer's shard-0 suffix must stay replayable");
+    assert!(!backlog.is_empty(), "setup produced no shard-0 backlog");
+    // the other shards compacted right past the laggard's stall point
+    assert!(
+        floors_after[1] > floors_before[1] && floors_after[2] > floors_before[2],
+        "shards 1 and 2 must keep compacting ({floors_before:?} -> {floors_after:?})"
+    );
 }

@@ -2,9 +2,12 @@
 //! sharded, at every tested worker count — must reproduce the 1 s-tick
 //! reference **bit for bit**: same `RunResult` (counters AND float
 //! integrals: coasts accumulate term-by-term with the same rounding),
-//! same `EventLog` order — on every registered app × the four single-pod
-//! policies, and through the scenario engine's churn paths (arrivals,
-//! faults, drain, kill, leak, requeue) across several seeds.
+//! same event-stream order — on every registered app × the four
+//! single-pod policies, and through the scenario engine's churn paths
+//! (arrivals, faults, drain, kill, leak, requeue) across several seeds.
+//! The sharded event store adds a second axis: every event-shard layout
+//! ({1, 2, pool-derived} node→shard maps) must reproduce the same merged
+//! stream, hash, and informer caches at every thread count.
 //!
 //! This is the contract that lets `harness::run` and
 //! `scenario::run_scenario` default to `KernelMode::EventDriven`, and
@@ -252,8 +255,8 @@ fn scenario_engine_matches_reference_through_churn() {
                     policy.label()
                 );
                 assert_eq!(
-                    reference.cluster.events.events,
-                    run.cluster.events.events,
+                    reference.cluster.events.snapshot(),
+                    run.cluster.events.snapshot(),
                     "{} seed {seed} EventLog diverged ({label})",
                     policy.label()
                 );
@@ -341,14 +344,14 @@ fn region_storm_matches_reference_at_every_thread_count() {
         // nodes; VPA-sim's 0.2× requests may pack tighter, so the spread
         // guarantee is asserted on the Arcv run.)
         if matches!(policy, ScenarioPolicy::Arcv(_)) {
-            let hot = hot_nodes_touched(&reference.cluster.events.events);
+            let hot = hot_nodes_touched(&reference.cluster.events.snapshot());
             assert!(hot.len() >= 8, "storm only heated nodes {hot:?}");
         }
         let event = run_scenario_mode(&spec, policy, 17, KernelMode::EventDriven);
         assert_eq!(reference.outcome, event.outcome, "{}", policy.label());
         assert_eq!(
-            reference.cluster.events.events,
-            event.cluster.events.events,
+            reference.cluster.events.snapshot(),
+            event.cluster.events.snapshot(),
             "{} EventLog diverged (event)",
             policy.label()
         );
@@ -361,8 +364,8 @@ fn region_storm_matches_reference_at_every_thread_count() {
                 policy.label()
             );
             assert_eq!(
-                reference.cluster.events.events,
-                sharded.cluster.events.events,
+                reference.cluster.events.snapshot(),
+                sharded.cluster.events.snapshot(),
                 "{} EventLog diverged (threads={threads})",
                 policy.label()
             );
@@ -377,6 +380,82 @@ fn region_storm_matches_reference_at_every_thread_count() {
                 "{} (threads={threads}): the storm never entered a stepping region: {:?}",
                 policy.label(),
                 sharded.cluster.coast_stats
+            );
+        }
+    }
+}
+
+/// FNV-1a over the debug rendering of every event, in merged stream
+/// order — the same event-stream fingerprint the bench gates use.
+fn event_stream_hash(events: &[arcv::simkube::Event]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for e in events {
+        for b in format!("{e:?}").bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[test]
+fn sharded_log_matches_unified_at_every_shard_and_thread_count() {
+    // the tentpole acceptance pin: the sharded event store is a pure
+    // re-layout. Shard counts {1, 2, pool-derived} × kernel modes
+    // {event, sharded × threads {1, 2, N}} must reproduce the
+    // single-shard lockstep reference bit for bit — stream, hash,
+    // revision, outcome, and the informer caches a fresh full sync
+    // builds from the end state.
+    let policy = ScenarioPolicy::Arcv(ArcvParams::default());
+    let reference =
+        run_scenario_mode(&churn_spec().event_shards(1), policy, 7, KernelMode::Lockstep);
+    let ref_events = reference.cluster.events.snapshot();
+    let ref_hash = event_stream_hash(&ref_events);
+    let mut ref_api = arcv::simkube::ApiClient::new();
+    let mut ref_cluster = reference.cluster;
+    ref_api.sync(&mut ref_cluster);
+    // shard layouts: unified, forced two-chunk, and pool-derived (the
+    // churn spec declares two pools, so the default map is [0, 0, 1])
+    let layouts: [(&str, ScenarioSpec); 3] = [
+        ("1-shard", churn_spec().event_shards(1)),
+        ("2-shard", churn_spec().event_shards(2)),
+        ("pool-shard", churn_spec()),
+    ];
+    for (layout, spec) in layouts {
+        let mut runs = vec![(
+            format!("{layout}/event"),
+            run_scenario_mode(&spec, policy, 7, KernelMode::EventDriven),
+        )];
+        for threads in SHARD_COUNTS {
+            runs.push((
+                format!("{layout}/sharded-{threads}"),
+                run_scenario_mode(&spec, policy, 7, KernelMode::Sharded { threads }),
+            ));
+        }
+        for (label, run) in runs {
+            assert_eq!(reference.outcome, run.outcome, "{label}: outcome diverged");
+            let events = run.cluster.events.snapshot();
+            assert_eq!(ref_events, events, "{label}: event stream diverged");
+            assert_eq!(ref_hash, event_stream_hash(&events), "{label}: stream hash diverged");
+            assert_eq!(
+                ref_cluster.events.revision(),
+                run.cluster.events.revision(),
+                "{label}: revision diverged"
+            );
+            // a fresh informer LISTing the end state sees identical
+            // views and phase indexes
+            let mut api = arcv::simkube::ApiClient::new();
+            let mut cluster = run.cluster;
+            api.sync(&mut cluster);
+            assert!(
+                ref_api.cached_views().eq(api.cached_views()),
+                "{label}: cached views diverged"
+            );
+            assert_eq!(ref_api.running(), api.running(), "{label}: Running index diverged");
+            assert_eq!(
+                ref_api.oom_killed(),
+                api.oom_killed(),
+                "{label}: OomKilled index diverged"
             );
         }
     }
@@ -398,7 +477,7 @@ fn starved_queue_idles_to_the_budget_identically() {
     let reference = run_scenario_mode(&spec, ScenarioPolicy::Fixed, 9, KernelMode::Lockstep);
     let event = run_scenario_mode(&spec, ScenarioPolicy::Fixed, 9, KernelMode::EventDriven);
     assert_eq!(reference.outcome, event.outcome);
-    assert_eq!(reference.cluster.events.events, event.cluster.events.events);
+    assert_eq!(reference.cluster.events.snapshot(), event.cluster.events.snapshot());
     assert_eq!(event.outcome.wall_ticks, 400);
     assert_eq!(event.outcome.stuck_pending, 2);
     for threads in SHARD_COUNTS {
@@ -406,7 +485,7 @@ fn starved_queue_idles_to_the_budget_identically() {
             run_scenario_mode(&spec, ScenarioPolicy::Fixed, 9, KernelMode::Sharded { threads });
         assert_eq!(reference.outcome, sharded.outcome, "threads={threads}");
         assert_eq!(
-            reference.cluster.events.events, sharded.cluster.events.events,
+            reference.cluster.events.snapshot(), sharded.cluster.events.snapshot(),
             "threads={threads}"
         );
     }

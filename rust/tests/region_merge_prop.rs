@@ -50,9 +50,15 @@ fn parallel_regions_match_lockstep_under_churn_and_live_compaction() {
         let shards = *g.pick(&[1usize, 2, 4]);
         // cluster A is the lockstep reference; cluster B advances through
         // sharded stepping regions. Both logs compact live behind a
-        // replaying cursor.
+        // replaying cursor, and both stores carry the SAME randomized
+        // event-shard map — region workers append straight into shards,
+        // lockstep appends serially, and the streams must still agree.
+        let eshards = g.usize(1, 3).min(n_nodes);
+        let emap: Vec<usize> = (0..n_nodes).map(|n| n % eshards).collect();
         let mut a = build_cluster(&caps, &swapped);
         let mut b = build_cluster(&caps, &swapped);
+        a.set_event_shards(emap.clone());
+        b.set_event_shards(emap);
         let ca = a.events.register_cursor();
         let cb = b.events.register_cursor();
         a.events.set_auto_compact(true);
@@ -126,9 +132,12 @@ fn parallel_regions_match_lockstep_under_churn_and_live_compaction() {
             }
             if g.bool(0.8) {
                 // the informer replays through the head: identical cursor
-                // motion, so compaction (if it fires) fires identically
-                a.events.advance_cursor(ca, ra);
-                b.events.advance_cursor(cb, rb);
+                // motion, so compaction (if it fires) fires identically —
+                // per shard, since the cursor is a vector
+                let (ha, hb) = (a.events.heads(), b.events.heads());
+                require(ha == hb, "per-shard heads must match")?;
+                a.events.advance_cursor_vec(ca, &ha);
+                b.events.advance_cursor_vec(cb, &hb);
             }
         }
         require(
@@ -136,7 +145,11 @@ fn parallel_regions_match_lockstep_under_churn_and_live_compaction() {
             "compaction floors must match",
         )?;
         require(
-            a.events.events == b.events.events,
+            a.events.shard_first_revisions() == b.events.shard_first_revisions(),
+            "per-shard compaction floors must match",
+        )?;
+        require(
+            a.events.snapshot() == b.events.snapshot(),
             "retained event logs must be identical",
         )?;
         for id in 0..a.pods.len() {

@@ -121,7 +121,7 @@ fn indexed_queue_is_equivalent_to_linear_scan_under_random_churn() {
         }
         require(a.now == b.now, "clocks agree")?;
         require(
-            a.events.events == b.events.events,
+            a.events.snapshot() == b.events.snapshot(),
             "event logs must be identical",
         )?;
         for id in 0..a.pods.len() {
